@@ -1,0 +1,68 @@
+//! Design-space exploration: sweep the RTL compiler's unroll factors
+//! (Pox/Poy/Pof — the paper's design variables, Table I) over the 1X
+//! network and report resources, power, epoch latency and GOPS for every
+//! point that fits the Stratix 10 GX device.  This is the workflow the
+//! paper's compiler enables: "the user provides ... design variables to
+//! characterize FPGA hardware usage" (§I).
+//!
+//! Run: `cargo run --release --example design_space`
+
+use anyhow::Result;
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::sim::simulate;
+
+fn main() -> Result<()> {
+    let net = Network::cifar(1);
+    let compiler = RtlCompiler::default();
+    println!("== design-space sweep: {} ==", net.name);
+    println!("{:>4} {:>4} {:>4} {:>6} {:>6} {:>7} {:>8} {:>10} {:>8} \
+              {:>9}",
+             "Pox", "Poy", "Pof", "MACs", "DSP", "BRAM", "power W",
+             "epoch s", "GOPS", "GOPS/W");
+
+    let mut best: Option<(f64, DesignVars)> = None;
+    for &pox in &[4usize, 8, 16] {
+        for &poy in &[4usize, 8] {
+            for &pof in &[8usize, 16, 32, 64] {
+                let mut dv = DesignVars::for_scale(1);
+                dv.pox = pox;
+                dv.poy = poy;
+                dv.pof = pof;
+                match compiler.compile(&net, &dv) {
+                    Err(_) => {
+                        println!("{pox:>4} {poy:>4} {pof:>4}   -- does \
+                                  not fit device --");
+                    }
+                    Ok(acc) => {
+                        let r = simulate(&acc, 40);
+                        let gops = r.gops();
+                        let eff = gops / acc.power.total();
+                        println!(
+                            "{:>4} {:>4} {:>4} {:>6} {:>6} {:>7.1} \
+                             {:>8.1} {:>10.2} {:>8.0} {:>9.2}",
+                            pox, poy, pof, dv.mac_count(),
+                            acc.resources.dsp, acc.resources.bram_mbits,
+                            acc.power.total(),
+                            r.seconds_per_epoch(50_000), gops, eff
+                        );
+                        if best.as_ref().map(|(e, _)| eff > *e)
+                            .unwrap_or(true)
+                        {
+                            best = Some((eff, dv.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some((eff, dv)) = best {
+        println!(
+            "\nbest efficiency: {:.2} GOPS/W at Pox={} Poy={} Pof={} \
+             (paper's 1X choice: 8x8x16)",
+            eff, dv.pox, dv.poy, dv.pof
+        );
+    }
+    Ok(())
+}

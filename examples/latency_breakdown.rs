@@ -1,0 +1,54 @@
+//! Latency & traffic anatomy of one training iteration (the data behind
+//! Fig. 9), for any of the paper's three CNNs: per-scheduled-step logic
+//! vs DRAM cycles, phase totals, and where the 51% weight-update share
+//! comes from.
+//!
+//! Run: `cargo run --release --example latency_breakdown [-- 4x]`
+
+use anyhow::Result;
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::sim::simulate;
+
+fn main() -> Result<()> {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "4x".into());
+    let scale = match arg.as_str() {
+        "1x" => 1,
+        "2x" => 2,
+        _ => 4,
+    };
+    let net = Network::cifar(scale);
+    let dv = DesignVars::for_scale(scale);
+    let acc = RtlCompiler::default().compile(&net, &dv)?;
+    let r = simulate(&acc, 40);
+
+    println!("== {} @ BS 40: per-step costs ==", net.name);
+    println!("{:<6} {:<6} {:<14} {:>10} {:>10} {:>10}", "phase",
+             "layer", "op", "logic", "dram", "latency");
+    for (phase, layer, op, cost) in &r.steps {
+        println!("{:<6} {:<6} {:<14} {:>10} {:>10} {:>10}",
+                 format!("{phase:?}"), layer, format!("{op:?}"),
+                 cost.logic_cycles, cost.dram_cycles,
+                 cost.latency_cycles);
+    }
+
+    println!("\nphase totals (cycles):");
+    for (name, p) in [("FP", &r.fp), ("BP", &r.bp), ("WU", &r.wu),
+                      ("UPDATE/batch", &r.update)] {
+        println!("  {:<12} logic {:>10}  dram {:>10}  latency {:>10}",
+                 name, p.logic_cycles, p.dram_cycles, p.latency_cycles);
+    }
+    let wu_share = (r.wu.latency_cycles as f64
+        + r.update.latency_cycles as f64 / 40.0)
+        / r.cycles_per_image();
+    println!("\nweight-update share of one iteration: {:.1}% (paper \
+              Fig. 9: 51% for 4X)", wu_share * 100.0);
+    println!("per image: {:.3} ms; epoch (50k): {:.2} s; {:.0} GOPS",
+             r.seconds_per_image() * 1e3, r.seconds_per_epoch(50_000),
+             r.gops());
+    println!("DRAM traffic: {:.2} MB/image + {:.2} MB/batch-update",
+             acc.schedule.image_bytes() as f64 / 1e6,
+             acc.schedule.batch_bytes() as f64 / 1e6);
+    Ok(())
+}

@@ -1,0 +1,224 @@
+"""AOT lowering: JAX/Pallas layer-ops -> HLO text artifacts for the rust
+coordinator (the only place python ever runs — once, at build time).
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 rust crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per network scale:
+  artifacts/<op>.hlo.txt        one artifact per layer-op (the accelerator
+                                executes layer-by-layer, so does rust)
+  artifacts/fused_step_<s>.hlo.txt  whole per-image FP+BP+WU (ablation +
+                                e2e fast path)
+  artifacts/manifest.json       op signatures + network table + Q formats
+  artifacts/params_<s>.bin      deterministic initial parameters
+  artifacts/testvec_<s>.bin     one golden train-step input/output bundle
+                                (rust integration tests replay it through
+                                both PJRT and the rust golden model)
+
+Binary tensor-bundle format (reader: rust/src/nn/tensorio.rs):
+  magic b"FXTB", u32 n; then per tensor: u32 name_len, name (utf8),
+  u32 ndim, u32 dims[ndim], i32 data[prod(dims)]  — all little-endian.
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import fixedpoint as fx
+from . import model as M
+from .kernels import (
+    conv_bp, conv_fp, conv_wu, fc_bp, fc_fp, fc_wu, maxpool, scale_mask,
+    upsample_scale,
+)
+from .kernels.ref import loss_grad_euclid_ref, loss_grad_hinge_ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.int32)
+
+
+def op_table(scale):
+    """All per-layer ops for one network scale: name -> (fn, [input specs]).
+
+    Every op returns a tuple; shapes mirror the accelerator's layer table.
+    """
+    pof = M.NETS[scale]["pof"]
+    layers = M.net_layers(scale)
+    ops = {}
+    seq = [l for l in layers if l["kind"] != "fc"]
+    for i, l in enumerate(seq):
+        n = l["name"]
+        if l["kind"] == "conv":
+            cin, cout, h, w, k = l["cin"], l["cout"], l["h"], l["w"], l["k"]
+            ops[f"conv_fp_{n}"] = (
+                lambda x, wt, b, pof=pof: (conv_fp(x, wt, b, pof=pof),),
+                [s32(cin, h, w), s32(cout, cin, k, k), s32(cout)],
+            )
+            ops[f"conv_wu_{n}"] = (
+                lambda x, g, pof=pof: conv_wu(x, g, pof=pof),
+                [s32(cin, h, w), s32(cout, h, w)],
+            )
+            if i > 0:  # c1 needs no input gradient
+                ops[f"conv_bp_{n}"] = (
+                    lambda g, wt, pof=pof: (conv_bp(g, wt, pof=pof),),
+                    [s32(cout, h, w), s32(cout, cin, k, k)],
+                )
+            if i + 1 < len(seq) and seq[i + 1]["kind"] == "conv":
+                # conv->conv boundary: BP scaling unit over this output
+                ops[f"smask_{n}"] = (
+                    lambda g, m: (scale_mask(g, m),),
+                    [s32(cout, h, w), s32(cout, h, w)],
+                )
+        else:  # pool
+            c, h, w, k = l["c"], l["h"], l["w"], l["pool"]
+            ops[f"pool_{n}"] = (
+                lambda x, k=k: tuple(maxpool(x, k=k)),
+                [s32(c, h, w)],
+            )
+            ops[f"ups_{n}"] = (
+                lambda g, idx, m, k=k: (upsample_scale(g, idx, m, k=k),),
+                [s32(c, h // k, w // k), s32(c, h // k, w // k), s32(c, h, w)],
+            )
+    fc = layers[-1]
+    kk, nn = fc["cin"], fc["cout"]
+    ops["fc_fp"] = (lambda x, wt, b: (fc_fp(x, wt, b),),
+                    [s32(1, kk), s32(nn, kk), s32(nn)])
+    ops["fc_bp"] = (lambda g, wt: (fc_bp(g, wt),), [s32(1, nn), s32(nn, kk)])
+    ops["fc_wu"] = (lambda g, x: tuple(fc_wu(g, x)), [s32(1, nn), s32(1, kk)])
+    ops["loss_hinge"] = (
+        lambda a, y: (lambda r: (r[0], r[1].reshape(1)))(
+            loss_grad_hinge_ref(a, y)),
+        [s32(1, nn), s32(1, nn)])
+    ops["loss_euclid"] = (
+        lambda a, y: (lambda r: (r[0], r[1].reshape(1)))(
+            loss_grad_euclid_ref(a, y)),
+        [s32(1, nn), s32(1, nn)])
+    return ops
+
+
+def write_bundle(path, tensors):
+    """Write an ordered {name: np.int32 array} dict in FXTB format."""
+    with open(path, "wb") as f:
+        f.write(b"FXTB")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(np.asarray(arr, np.int32))
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.astype("<i4").tobytes())
+
+
+def make_testvec(scale, seed=7):
+    """One deterministic per-image train step: inputs + every output."""
+    params = M.init_params(scale)
+    rng = np.random.default_rng(seed)
+    x = np.asarray(fx.quantize(rng.standard_normal(M.IMG) * 0.5, fx.FA))
+    y_oh = (np.eye(M.NCLASS)[seed % M.NCLASS] * 2 - 1) * (1 << fx.FA)
+    y = np.asarray(y_oh[None, :], np.int32)
+    out = M.fused_step([params[n] for n in M.param_order(scale)],
+                       jnp.asarray(x), jnp.asarray(y), scale)
+    bundle = {"x": x, "y": y, "loss": np.asarray(out[0]),
+              "logits": np.asarray(out[1])}
+    for name, g in zip(M.param_order(scale), out[2:]):
+        bundle[f"g_{name}"] = np.asarray(g)
+    return bundle
+
+
+def lower_op(name, fn, specs, out_dir, manifest):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *specs)
+    manifest["ops"][name] = {
+        "file": os.path.basename(path),
+        "inputs": [list(s.shape) for s in specs],
+        "outputs": [list(o.shape) for o in jax.tree_util.tree_leaves(outs)],
+    }
+    print(f"  {name}: {len(text)} chars, "
+          f"{len(specs)} in -> {len(jax.tree_util.tree_leaves(outs))} out")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scales", default="1x",
+                    help="comma list of network scales (1x,2x,4x)")
+    ap.add_argument("--fused", action="store_true", default=True)
+    ap.add_argument("--no-fused", dest="fused", action="store_false")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "qformat": {"fa": fx.FA, "fw": fx.FW, "fg": fx.FG,
+                    "fwg": fx.FWG, "fv": fx.FV},
+        "ops": {}, "nets": {},
+    }
+    for scale in args.scales.split(","):
+        print(f"[aot] scale {scale}")
+        layers = M.net_layers(scale)
+        manifest["nets"][scale] = {
+            "layers": layers,
+            "pof": M.NETS[scale]["pof"],
+            "param_order": M.param_order(scale),
+            "params_file": f"params_{scale}.bin",
+            "testvec_file": f"testvec_{scale}.bin",
+        }
+        for name, (fn, specs) in op_table(scale).items():
+            # op names are shared across scales only when shapes match;
+            # suffix with the scale to keep them distinct.
+            lower_op(f"{name}_{scale}", fn, specs, args.out_dir, manifest)
+        if args.fused:
+            order = M.param_order(scale)
+            params = M.init_params(scale)
+            pspecs = [s32(*params[n].shape) for n in order]
+            fused = lambda ps, x, y, s=scale: tuple(M.fused_step(ps, x, y, s))
+            lowered = jax.jit(fused).lower(
+                pspecs, s32(*M.IMG), s32(1, M.NCLASS))
+            text = to_hlo_text(lowered)
+            fpath = os.path.join(args.out_dir, f"fused_step_{scale}.hlo.txt")
+            with open(fpath, "w") as f:
+                f.write(text)
+            manifest["ops"][f"fused_step_{scale}"] = {
+                "file": os.path.basename(fpath),
+                "inputs": [list(params[n].shape) for n in order]
+                          + [list(M.IMG), [1, M.NCLASS]],
+                "outputs": [[1], [1, M.NCLASS]]
+                           + [list(params[n].shape) for n in order],
+            }
+            print(f"  fused_step_{scale}: {len(text)} chars")
+        params = M.init_params(scale)
+        write_bundle(os.path.join(args.out_dir, f"params_{scale}.bin"),
+                     {n: params[n] for n in M.param_order(scale)})
+        write_bundle(os.path.join(args.out_dir, f"testvec_{scale}.bin"),
+                     make_testvec(scale))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['ops'])} artifacts + manifest to "
+          f"{args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

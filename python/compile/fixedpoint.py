@@ -1,0 +1,74 @@
+"""Fixed-point (Q-format) arithmetic used across the whole stack.
+
+The paper trains with 16-bit fixed-point weights/activations/gradients with
+"dedicated resolution/range assignment for different variables" (§II).  We
+pin the following Q formats (fraction bits), mirrored exactly by the rust
+`fixed` crate module:
+
+    activations      FA = 8    (range ±128,  resolution 1/256)
+    weights          FW = 12   (range ±8,    resolution 1/4096)
+    local gradients  FG = 12
+    stored weight-gradient accumulators  FWG = 16 (i32, DRAM-resident)
+    momentum buffer  FV = 16 (i32)
+
+All tensors are carried as int32 (values saturated to the i16 range
+[-32768, 32767]) so that HLO artifacts and the rust golden model perform
+*identical* integer arithmetic: i32 wrap-around accumulation, round-half-up
+requantization `(acc + (1 << (s-1))) >> s`, and saturation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+# Fraction bits per tensor kind (keep in sync with rust/src/fixed/mod.rs).
+FA = 8    # activations
+FW = 12   # weights / biases-as-weights
+FG = 12   # local gradients
+FWG = 16  # accumulated weight gradients (i32, not i16-saturated)
+FV = 16   # momentum buffer (i32)
+
+I16_MIN = -32768
+I16_MAX = 32767
+
+# Requantization shifts used by the layer ops.
+SHIFT_CONV_FP = FW            # acc frac FA+FW -> FA
+SHIFT_CONV_BP = FW            # acc frac FG+FW -> FG
+SHIFT_WU_STORE = FA + FG - FWG  # acc frac FA+FG -> FWG (=4)
+
+
+def sat16(x):
+    """Saturate an int32 tensor into the i16 value range (still int32)."""
+    return jnp.clip(x, I16_MIN, I16_MAX)
+
+
+def requant(acc, shift):
+    """Round-half-up arithmetic right shift, then saturate to i16 range.
+
+    `acc` is an int32 accumulator at fraction `f_hi`; result is at fraction
+    `f_hi - shift`.  shift == 0 is the identity (plus saturation).
+    """
+    if shift > 0:
+        half = jnp.int32(1 << (shift - 1))
+        acc = (acc + half) >> shift
+    return sat16(acc)
+
+
+def shift_round(acc, shift):
+    """Round-half-up shift WITHOUT i16 saturation (i32 accumulators)."""
+    if shift > 0:
+        half = jnp.int32(1 << (shift - 1))
+        acc = (acc + half) >> shift
+    return acc
+
+
+def quantize(x, frac):
+    """Float -> fixed grid (int32, i16-saturated). Build-time/test helper.
+    Rounds half away from zero (matches rust `Fx::quantize`)."""
+    q = np.clip(np.round(np.asarray(x, np.float64) * (1 << frac)),
+                I16_MIN, I16_MAX).astype(np.int32)
+    return jnp.asarray(q)
+
+
+def dequantize(q, frac):
+    """Fixed -> float. Build-time/test helper."""
+    return np.asarray(q, np.float64) / (1 << frac)

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (tiled like the paper's MAC array) and the
+pure-jnp oracle (ref) they are verified against."""
+
+from .conv import conv_bp, conv_fp, conv_wu, transpose_flip
+from .matmul import fc_bp, fc_fp, fc_wu, matmul_q
+from .pool import maxpool, scale_mask, upsample_scale
+
+__all__ = [
+    "conv_fp", "conv_bp", "conv_wu", "transpose_flip",
+    "maxpool", "upsample_scale", "scale_mask",
+    "matmul_q", "fc_fp", "fc_bp", "fc_wu",
+]

@@ -1,0 +1,168 @@
+"""Pallas convolution kernels — the MAC-array compute of the accelerator.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+``Pox x Poy x Pof`` systolic MAC array becomes the kernel grid/BlockSpec
+tiling.  Each grid step produces one ``(Pof, Poy, Nox)`` output tile by a
+``(Pof, Nif) @ (Nif, Poy*Nox)`` MXU-shaped integer contraction per kernel
+tap — i.e. a weight-stationary tile, which is exactly how the MAC array in
+Fig. 6 is fed (rows share inputs, columns share weights).
+
+The BP convolution reuses the *same* kernel body with the transposable
+weight access pattern (flip + if/of interchange) applied in index space, so
+— like the paper's circulant transposable buffer (Fig. 5) — there is never a
+second materialized copy of the weights in the artifact's live set beyond
+the transient rearranged view XLA streams through.
+
+All kernels use ``interpret=True``: the CPU PJRT backend cannot execute
+Mosaic custom-calls; interpret mode lowers the kernel to plain HLO so the
+rust runtime can compile and run it.  (On a real TPU the same BlockSpecs
+express the HBM->VMEM schedule the paper implements with DMA tiles.)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE, sat16
+
+# Default unroll factors — the paper's Table II configuration uses
+# Pox = Poy = 8 and Pof in {16, 32, 64}.
+POY = 8
+POF = 16
+
+
+def _conv_fp_kernel(x_ref, w_ref, b_ref, o_ref, *, nky, nkx, shift, relu, poy):
+    """One (Pof, Poy, Nox) output tile.
+
+    x_ref: full padded input (Nif, H+2p, W+2p) — spatial halos make
+           overlapping BlockSpecs impossible, so rows are selected with
+           pl.ds from the grid position (the data-router of Fig. 4).
+    w_ref: (Pof, Nif, Nky, Nkx) weight block for this tile's output maps.
+    b_ref: (Pof,) bias at accumulator fraction.
+    o_ref: (Pof, Poy, Nox).
+    """
+    pof = o_ref.shape[0]
+    nox = o_ref.shape[2]
+    nif = x_ref.shape[0]
+    row0 = pl.program_id(1) * poy
+    acc = jnp.zeros((pof, poy * nox), jnp.int32)
+    for ky in range(nky):
+        for kx in range(nkx):
+            xs = pl.load(
+                x_ref,
+                (slice(None), pl.ds(row0 + ky, poy), pl.ds(kx, nox)),
+            ).reshape(nif, poy * nox)
+            wk = w_ref[:, :, ky, kx]
+            acc = acc + jnp.dot(wk, xs, preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...][:, None]
+    if shift > 0:
+        acc = (acc + jnp.int32(1 << (shift - 1))) >> shift
+    out = sat16(acc)
+    if relu:
+        out = jnp.maximum(out, 0)
+    o_ref[...] = out.reshape(pof, poy, nox)
+
+
+def _pick_tile(n, pref):
+    """Largest divisor of n that is <= pref (unroll factors must divide)."""
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pad", "relu", "shift", "pof", "poy"),
+)
+def conv_fp(x, w, b, *, pad=1, relu=True, shift=SHIFT_CONV_FP,
+            pof=POF, poy=POY):
+    """Tiled FP convolution (stride 1). See conv_fp_ref for semantics."""
+    nof, nif, nky, nkx = w.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = xp.shape[1] - nky + 1
+    ow = xp.shape[2] - nkx + 1
+    pof = _pick_tile(nof, pof)
+    poy = _pick_tile(oh, poy)
+    grid = (nof // pof, oh // poy)
+    return pl.pallas_call(
+        functools.partial(_conv_fp_kernel, nky=nky, nkx=nkx, shift=shift,
+                          relu=relu, poy=poy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((pof, nif, nky, nkx), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((pof,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((pof, poy, ow), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nof, oh, ow), jnp.int32),
+        interpret=True,
+    )(xp, w, b)
+
+
+def transpose_flip(w):
+    """The transposable-buffer access pattern (Fig. 5) in index space:
+    interchange if/of and rotate the taps by 180 degrees."""
+    return jnp.flip(jnp.transpose(w, (1, 0, 2, 3)), axis=(2, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("pad", "pof", "poy"))
+def conv_bp(g, w, *, pad=1, pof=POF, poy=POY):
+    """BP convolution (Eq. 3): same MAC-array kernel, transposed/flipped
+    weight view, no ReLU, gradient requantization shift."""
+    wt = transpose_flip(w)
+    zb = jnp.zeros((wt.shape[0],), jnp.int32)
+    return conv_fp(g, wt, zb, pad=pad, relu=False, shift=SHIFT_CONV_BP,
+                   pof=pof, poy=poy)
+
+
+def _conv_wu_kernel(x_ref, g_ref, dw_ref, *, nky, nkx, shift):
+    """Weight-gradient tile: all (Pof x Nif) kernel-gradient planes of one
+    output-channel block computed per grid step.
+
+    This is the MAC load-balance formulation of Fig. 8: a WU convolution's
+    output feature map is only Nky x Nkx, which would idle most of the MAC
+    array; batching every (of, if) plane of the block into a single
+    (Pof, Noy*Nox) @ (Noy*Nox, Nif) contraction keeps the array full.
+
+    x_ref: full padded activations (Nif, H+2p, W+2p);
+    g_ref: (Pof, Noy, Nox) local-gradient block; dw_ref: (Pof, Nif, Nky, Nkx).
+    """
+    pof, noy, nox = g_ref.shape
+    nif = x_ref.shape[0]
+    gb = g_ref[...].reshape(pof, noy * nox)
+    for ky in range(nky):
+        for kx in range(nkx):
+            xs = pl.load(
+                x_ref, (slice(None), pl.ds(ky, noy), pl.ds(kx, nox)),
+            ).reshape(nif, noy * nox)
+            acc = jnp.dot(gb, xs.T, preferred_element_type=jnp.int32)
+            if shift > 0:
+                acc = (acc + jnp.int32(1 << (shift - 1))) >> shift
+            dw_ref[:, :, ky, kx] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("pad", "pof"))
+def conv_wu(x, g, *, pad=1, pof=POF):
+    """WU convolution (Eq. 4): returns (dw at FWG, db at FG)."""
+    nky = nkx = 2 * pad + 1
+    nif = x.shape[0]
+    nof, noy, nox = g.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    pof = _pick_tile(nof, pof)
+    dw = pl.pallas_call(
+        functools.partial(_conv_wu_kernel, nky=nky, nkx=nkx,
+                          shift=SHIFT_WU_STORE),
+        grid=(nof // pof,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((pof, noy, nox), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pof, nif, nky, nkx), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nof, nif, nky, nkx), jnp.int32),
+        interpret=True,
+    )(xp, g)
+    db = jnp.sum(g.reshape(nof, -1), axis=1)
+    return dw, db

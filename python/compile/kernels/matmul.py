@@ -1,0 +1,65 @@
+"""Pallas integer matmul — the MAC array serving the fully-connected layers.
+
+The same physical array does FC forward (normal weights), FC backward
+(transposed weight matrix, §II) and FC weight update (outer product of the
+local-gradient vector and the activation vector); each mode is just a
+different operand routing, like the table in Fig. 6.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE, sat16
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, shift, relu, saturate):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.int32)
+    if shift > 0:
+        acc = (acc + jnp.int32(1 << (shift - 1))) >> shift
+    if saturate:
+        acc = sat16(acc)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "relu", "saturate"))
+def matmul_q(a, b, *, shift, relu=False, saturate=True):
+    """Requantizing integer matmul: (M, K) @ (K, N) -> (M, N)."""
+    m, k = a.shape
+    _, n = b.shape
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, shift=shift, relu=relu,
+                          saturate=saturate),
+        in_specs=[pl.BlockSpec((m, k), lambda: (0, 0)),
+                  pl.BlockSpec((k, n), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((m, n), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.jit
+def fc_fp(x, w, b):
+    """FC forward: x (1, K) at FA, w (N, K) at FW, b (N,) at FA+FW."""
+    out = matmul_q(x, w.T, shift=0, saturate=False)
+    acc = out + b[None, :]
+    half = jnp.int32(1 << (SHIFT_CONV_FP - 1))
+    return sat16((acc + half) >> SHIFT_CONV_FP)
+
+
+@jax.jit
+def fc_bp(g, w):
+    """FC backward with transposed weight matrix: g (1, N) -> (1, K)."""
+    return matmul_q(g, w, shift=SHIFT_CONV_BP)
+
+
+@jax.jit
+def fc_wu(g, x):
+    """FC weight gradients: outer(g, x) at FWG, bias grads at FG."""
+    dw = matmul_q(g.T, x, shift=SHIFT_WU_STORE, saturate=False)
+    db = jnp.sum(g, axis=0)
+    return dw, db

@@ -1,0 +1,109 @@
+"""Pallas kernels for the pooling / upsampling / scaling units (§III-G).
+
+Max-pool is a *key layer* (reads a fresh tile from DRAM); it emits both the
+pooled activations and the flat window-argmax indices that the paper stores
+in on-chip index buffers (2-bit for a 2x2 window).  Upsample+scale is the BP
+counterpart: a demultiplexer keyed by the stored index routes the gradient
+to the max position, then the result is scaled by the binary ReLU activation
+gradient.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fixedpoint import sat16
+
+PC = 16  # channel tile (per-grid-step feature maps)
+
+
+def _pick_tile(n, pref):
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _maxpool_kernel(x_ref, o_ref, i_ref, *, k):
+    pc, h, w = x_ref.shape
+    x = x_ref[...]
+    xr = x.reshape(pc, h // k, k, w // k, k)
+    xr = jnp.transpose(xr, (0, 1, 3, 2, 4)).reshape(pc, h // k, w // k, k * k)
+    o_ref[...] = jnp.max(xr, axis=-1)
+    i_ref[...] = jnp.argmax(xr, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "pc"))
+def maxpool(x, *, k=2, pc=PC):
+    """k x k max pooling with indices. x: (C, H, W) int32."""
+    c, h, w = x.shape
+    pc = _pick_tile(c, pc)
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k=k),
+        grid=(c // pc,),
+        in_specs=[pl.BlockSpec((pc, h, w), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((pc, h // k, w // k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pc, h // k, w // k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, h // k, w // k), jnp.int32),
+            jax.ShapeDtypeStruct((c, h // k, w // k), jnp.int32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _upsample_scale_kernel(g_ref, i_ref, m_ref, o_ref, *, k):
+    pc, ho, wo = g_ref.shape
+    g = g_ref[...]
+    idx = i_ref[...]
+    onehot = (idx[..., None] == jnp.arange(k * k, dtype=jnp.int32)).astype(jnp.int32)
+    up = g[..., None] * onehot
+    up = up.reshape(pc, ho, wo, k, k)
+    up = jnp.transpose(up, (0, 1, 3, 2, 4)).reshape(pc, ho * k, wo * k)
+    o_ref[...] = sat16(up * m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "pc"))
+def upsample_scale(g, idx, mask, *, k=2, pc=PC):
+    """Upsample pooled gradients through stored indices, scale by the binary
+    ReLU activation gradient. g/idx: (C, Ho, Wo), mask: (C, Ho*k, Wo*k)."""
+    c, ho, wo = g.shape
+    pc = _pick_tile(c, pc)
+    return pl.pallas_call(
+        functools.partial(_upsample_scale_kernel, k=k),
+        grid=(c // pc,),
+        in_specs=[
+            pl.BlockSpec((pc, ho, wo), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pc, ho, wo), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pc, ho * k, wo * k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pc, ho * k, wo * k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, ho * k, wo * k), jnp.int32),
+        interpret=True,
+    )(g, idx, mask)
+
+
+def _scale_mask_kernel(g_ref, m_ref, o_ref):
+    o_ref[...] = sat16(g_ref[...] * m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("pc",))
+def scale_mask(g, mask, *, pc=PC):
+    """Scaling unit at a ReLU node that has no pooling: g * relu'(a)."""
+    c, h, w = g.shape
+    pc = _pick_tile(c, pc)
+    return pl.pallas_call(
+        _scale_mask_kernel,
+        grid=(c // pc,),
+        in_specs=[
+            pl.BlockSpec((pc, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pc, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pc, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, w), jnp.int32),
+        interpret=True,
+    )(g, mask)

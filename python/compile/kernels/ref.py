@@ -1,0 +1,180 @@
+"""Pure-jnp correctness oracle for every Pallas kernel.
+
+These are deliberately *untiled*, direct-from-the-equations implementations
+of the paper's Eq. (1) (FP convolution), Eq. (3) (BP convolution with
+180-degree-flipped kernels and if/of interchange), and Eq. (4) (WU
+weight-gradient convolution), plus max-pool-with-indices and the
+upsample+scale unit of §III-G.  The Pallas kernels (tiled like the paper's
+Pox x Poy x Pof MAC array) are asserted against these in pytest.
+
+Layouts: activations/gradients are (C, H, W); conv weights are
+(Nof, Nif, Nky, Nkx); all int32 fixed-point (see fixedpoint.py).
+"""
+
+import jax.numpy as jnp
+
+from ..fixedpoint import (
+    FA, FG, FW, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE,
+    requant, sat16, shift_round,
+)
+
+
+def pad_hw(x, p):
+    """Zero-pad the two trailing (H, W) dims by p on each side."""
+    return jnp.pad(x, ((0, 0), (p, p), (p, p)))
+
+
+def conv_fp_ref(x, w, b, *, pad=1, relu=True, shift=SHIFT_CONV_FP):
+    """Eq. (1): out[of] = sum_if sum_ky,kx w[of,if,ky,kx] * x[if,y+ky,x+kx].
+
+    x: (Nif, H, W) at FA;  w: (Nof, Nif, Nky, Nkx) at FW;
+    b: (Nof,) at FA+FW (accumulator fraction).  Returns (Nof, H', W') at FA.
+    """
+    nof, nif, nky, nkx = w.shape
+    xp = pad_hw(x, pad)
+    oh = xp.shape[1] - nky + 1
+    ow = xp.shape[2] - nkx + 1
+    acc = jnp.zeros((nof, oh, ow), jnp.int32)
+    for ky in range(nky):
+        for kx in range(nkx):
+            xs = xp[:, ky:ky + oh, kx:kx + ow].reshape(nif, -1)
+            acc = acc + jnp.einsum(
+                "oi,ip->op", w[:, :, ky, kx], xs,
+                preferred_element_type=jnp.int32,
+            ).reshape(nof, oh, ow)
+    acc = acc + b[:, None, None]
+    out = requant(acc, shift)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def conv_bp_ref(g, w, *, pad=1):
+    """Eq. (3) convolution part: local gradients of layer l from those of
+    layer l+1, using 180-degree-rotated kernels with if/of interchanged.
+
+    g: (Nof, H, W) at FG; w: (Nof, Nif, Nky, Nkx) at FW (the FP kernels).
+    Returns (Nif, H', W') at FG.  (Activation-gradient scaling is a separate
+    affiliated op — see scale_mask_ref.)
+    """
+    wt = jnp.flip(jnp.transpose(w, (1, 0, 2, 3)), axis=(2, 3))
+    zero_b = jnp.zeros((wt.shape[0],), jnp.int32)
+    return conv_fp_ref(g, wt, zero_b, pad=pad, relu=False, shift=SHIFT_CONV_BP)
+
+
+def conv_wu_ref(x, g, *, pad=1):
+    """Eq. (4): kernel gradients = conv of FP input activations with local
+    gradients used as (large) kernels; one (of, if) plane per output kernel.
+
+    x: (Nif, H, W) at FA; g: (Nof, H, W) at FG.
+    Returns (dw, db): dw (Nof, Nif, Nky, Nkx) i32 accumulators requantized
+    from FA+FG down to FWG; db (Nof,) = sum of g, kept at FG.
+    Kernel spatial size is inferred as 2*pad + 1 (stride-1 same-conv case).
+    """
+    nky = nkx = 2 * pad + 1
+    nif = x.shape[0]
+    nof, oh, ow = g.shape
+    xp = pad_hw(x, pad)
+    gb = g.reshape(nof, -1)
+    dw = jnp.zeros((nof, nif, nky, nkx), jnp.int32)
+    for ky in range(nky):
+        for kx in range(nkx):
+            xs = xp[:, ky:ky + oh, kx:kx + ow].reshape(nif, -1)
+            dw = dw.at[:, :, ky, kx].set(
+                jnp.einsum("op,ip->oi", gb, xs,
+                           preferred_element_type=jnp.int32))
+    dw = shift_round(dw, SHIFT_WU_STORE)
+    db = jnp.sum(gb, axis=1)
+    return dw, db
+
+
+def maxpool_ref(x, *, k=2):
+    """k x k max pooling with flat window-argmax indices (paper §III-B:
+    pooling window size determines the index bit-width; k=2 -> 2-bit).
+
+    x: (C, H, W).  Returns (pooled (C, H/k, W/k), idx int32 in [0, k*k)).
+    Window positions are ordered row-major: idx = dy * k + dx.
+    """
+    c, h, w = x.shape
+    xr = x.reshape(c, h // k, k, w // k, k)
+    xr = jnp.transpose(xr, (0, 1, 3, 2, 4)).reshape(c, h // k, w // k, k * k)
+    return jnp.max(xr, axis=-1), jnp.argmax(xr, axis=-1).astype(jnp.int32)
+
+
+def upsample_scale_ref(g, idx, mask, *, k=2):
+    """§III-G: route the pooled-node gradient to the max pixel position
+    (demultiplexer keyed by the stored index) and scale by the binary ReLU
+    activation gradient.
+
+    g: (C, Ho, Wo) at FG; idx: (C, Ho, Wo) int32 in [0, k*k);
+    mask: (C, H, W) int32 in {0, 1}.  Returns (C, H, W) at FG.
+    """
+    c, ho, wo = g.shape
+    onehot = (idx[..., None] == jnp.arange(k * k, dtype=jnp.int32)).astype(jnp.int32)
+    up = g[..., None] * onehot                      # (C, Ho, Wo, k*k)
+    up = up.reshape(c, ho, wo, k, k)
+    up = jnp.transpose(up, (0, 1, 3, 2, 4)).reshape(c, ho * k, wo * k)
+    return sat16(up * mask)
+
+
+def scale_mask_ref(g, mask):
+    """Scaling unit at a ReLU node without pooling: g * relu'(a)."""
+    return sat16(g * mask)
+
+
+def relu_mask_ref(a):
+    """Binary activation gradient of ReLU (paper stores these during FP)."""
+    return (a > 0).astype(jnp.int32)
+
+
+def fc_fp_ref(x, w, b, *, relu=False, shift=SHIFT_CONV_FP):
+    """Fully-connected forward: x (1, K) at FA, w (N, K) at FW, b (N,) at
+    FA+FW. Returns (1, N) at FA."""
+    acc = jnp.einsum("mk,nk->mn", x, w, preferred_element_type=jnp.int32)
+    out = requant(acc + b[None, :], shift)
+    if relu:
+        out = jnp.maximum(out, 0)
+    return out
+
+
+def fc_bp_ref(g, w):
+    """FC backward: transposed weight matrix (paper §II). g (1, N) at FG,
+    w (N, K) at FW -> (1, K) at FG."""
+    acc = jnp.einsum("mn,nk->mk", g, w, preferred_element_type=jnp.int32)
+    return requant(acc, SHIFT_CONV_BP)
+
+
+def fc_wu_ref(g, x):
+    """FC weight update gradients: outer product of local-gradient vector
+    and activation vector (paper §II). g (1, N) at FG, x (1, K) at FA.
+    Returns (dw (N, K) at FWG, db (N,) at FG)."""
+    acc = jnp.einsum("mn,mk->nk", g, x, preferred_element_type=jnp.int32)
+    return shift_round(acc, SHIFT_WU_STORE), jnp.sum(g, axis=0)
+
+
+def loss_grad_hinge_ref(a, y):
+    """Squared hinge loss (paper's default loss unit) and its gradient.
+
+    a: (1, N) logits at FA; y: (1, N) in {-1, +1} * 2^FA at FA.
+    L = sum max(0, 1 - y*a)^2 ; dL/da = -2 y max(0, 1 - y*a).
+    Returns (g at FG shape (1, N), loss i32 at 2*FA).
+    """
+    one = jnp.int32(1 << FA)
+    ya = shift_round(a * y, FA)                     # frac FA
+    margin = jnp.maximum(one - ya, 0)               # frac FA
+    g_fa = sat16(-2 * shift_round(y * margin, FA))  # frac FA
+    g = sat16(g_fa << (FG - FA))                    # frac FG
+    # loss is logging-only; requantize each term to frac FA so the i32
+    # sum cannot wrap (margin^2 is at 2*FA)
+    loss = jnp.sum(shift_round(margin * margin, FA))  # frac FA
+    return g, loss
+
+
+def loss_grad_euclid_ref(a, y):
+    """Euclidean (quadratic) loss, Eq. (2): dC/da = (a - y).
+
+    a, y: (1, N) at FA.  Returns (g at FG, loss at 2*FA)."""
+    d = sat16(a - y)                                # frac FA
+    g = sat16(d << (FG - FA))                       # frac FG
+    loss = jnp.sum(shift_round(d * d, FA)) >> 1     # (1/2) sum d^2, frac FA
+    return g, loss

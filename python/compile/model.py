@@ -1,0 +1,164 @@
+"""Layer-2 JAX model: the paper's CIFAR-10 training CNNs in 16-bit fixed
+point, composed from the Layer-1 Pallas kernels.
+
+Network family (§IV-A): '1X' is 16C3-16C3-P-32C3-32C3-P-64C3-64C3-P-FC;
+2X/4X scale every feature-map count by 2x/4x.  All convolutions are 3x3,
+stride 1, pad 1, ReLU; pooling is 2x2 max with stored indices; the single FC
+layer maps the flattened 4x4 maps to 10 classes.
+
+Everything here runs ONCE at build time: `aot.py` lowers each layer-op (and
+a fused per-image train step) to HLO text artifacts which the rust
+coordinator loads via PJRT.  Images are processed one at a time, exactly
+like the accelerator (batch processing is sequential, §IV-B); gradient
+accumulation over a batch and the SGD-momentum weight update live in the
+rust weight-update unit.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import fixedpoint as fx
+from .kernels import (
+    conv_bp, conv_fp, conv_wu, fc_bp, fc_fp, fc_wu, maxpool, scale_mask,
+    upsample_scale,
+)
+from .kernels.ref import loss_grad_euclid_ref, loss_grad_hinge_ref
+
+# Paper Table II unroll factors: Pox = Poy = 8; Pof = 16/32/64 for 1X/2X/4X.
+NETS = {
+    "1x": {"widths": [16, 16, 32, 32, 64, 64], "pof": 16},
+    "2x": {"widths": [32, 32, 64, 64, 128, 128], "pof": 32},
+    "4x": {"widths": [64, 64, 128, 128, 256, 256], "pof": 64},
+}
+IMG = (3, 32, 32)
+NCLASS = 10
+
+
+def net_layers(scale="1x", img=IMG, nclass=NCLASS):
+    """Expand a scale name into the concrete per-layer shape table.
+
+    Returns a list of dicts mirroring what the rust RTL-compiler's network
+    description holds: conv layers (cin, cout, h, w), pool layers, one fc.
+    """
+    widths = NETS[scale]["widths"]
+    layers = []
+    cin, h = img[0], img[1]
+    for i, cout in enumerate(widths):
+        layers.append({"kind": "conv", "name": f"c{i + 1}", "cin": cin,
+                       "cout": cout, "h": h, "w": h, "k": 3})
+        cin = cout
+        if i % 2 == 1:  # pool after every second conv
+            layers.append({"kind": "pool", "name": f"p{i // 2 + 1}",
+                           "c": cout, "h": h, "w": h, "pool": 2})
+            h //= 2
+    layers.append({"kind": "fc", "name": "fc", "cin": cin * h * h,
+                   "cout": nclass})
+    return layers
+
+
+def init_params(scale="1x", seed=1234):
+    """He-style float init, quantized to the fixed grid.  Deterministic so
+    the rust side can regenerate identical parameters (same algorithm is
+    implemented in rust/src/nn/init.rs from the same seed)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for l in net_layers(scale):
+        if l["kind"] == "conv":
+            fan_in = l["cin"] * l["k"] * l["k"]
+            w = rng.standard_normal((l["cout"], l["cin"], l["k"], l["k"]))
+            w *= np.sqrt(2.0 / fan_in)
+            params[f"w_{l['name']}"] = fx.quantize(w, fx.FW)
+            params[f"b_{l['name']}"] = jnp.zeros((l["cout"],), jnp.int32)
+        elif l["kind"] == "fc":
+            w = rng.standard_normal((l["cout"], l["cin"]))
+            w *= np.sqrt(2.0 / l["cin"])
+            params[f"w_{l['name']}"] = fx.quantize(w, fx.FW)
+            params[f"b_{l['name']}"] = jnp.zeros((l["cout"],), jnp.int32)
+    return params
+
+
+def forward(params, x, scale="1x", pof=None):
+    """FP phase for one image. Returns (logits, cache) where cache holds
+    what the accelerator stores on-chip/DRAM during FP: post-ReLU
+    activations (-> binary activation-gradient masks) and pool indices."""
+    pof = pof or NETS[scale]["pof"]
+    cache = {"x": x}
+    a = x
+    for l in net_layers(scale):
+        if l["kind"] == "conv":
+            a = conv_fp(a, params[f"w_{l['name']}"], params[f"b_{l['name']}"],
+                        pof=pof)
+            cache[f"a_{l['name']}"] = a
+        elif l["kind"] == "pool":
+            a, idx = maxpool(a, k=l["pool"])
+            cache[f"a_{l['name']}"] = a
+            cache[f"idx_{l['name']}"] = idx
+        else:
+            flat = a.reshape(1, -1)
+            cache["flat"] = flat
+            a = fc_fp(flat, params["w_fc"], params["b_fc"])
+    return a, cache
+
+
+def backward(params, cache, g_out, scale="1x", pof=None):
+    """BP + per-image WU phases. g_out: (1, 10) loss gradient at FG.
+    Returns dict of per-image weight/bias gradients (dw at FWG, db at FG),
+    which the rust weight-update unit accumulates over the batch."""
+    pof = pof or NETS[scale]["pof"]
+    grads = {}
+    layers = net_layers(scale)
+    dw_fc, db_fc = fc_wu(g_out, cache["flat"])
+    grads["w_fc"], grads["b_fc"] = dw_fc, db_fc
+    g_flat = fc_bp(g_out, params["w_fc"])
+
+    # walk conv/pool layers in reverse
+    rev = [l for l in layers if l["kind"] != "fc"][::-1]
+    last_pool = rev[0]
+    g = g_flat.reshape(last_pool["c"], last_pool["h"] // 2,
+                       last_pool["w"] // 2)
+    for i, l in enumerate(rev):
+        if l["kind"] == "pool":
+            prev_conv = rev[i + 1]
+            mask = (cache[f"a_{prev_conv['name']}"] > 0).astype(jnp.int32)
+            g = upsample_scale(g, cache[f"idx_{l['name']}"], mask,
+                               k=l["pool"])
+        else:
+            below = rev[i + 1]["name"] if i + 1 < len(rev) else None
+            x_in = cache["x"] if below is None else cache[f"a_{below}"]
+            dw, db = conv_wu(x_in, g, pof=pof)
+            grads[f"w_{l['name']}"], grads[f"b_{l['name']}"] = dw, db
+            if below is not None:
+                g = conv_bp(g, params[f"w_{l['name']}"], pof=pof)
+                if rev[i + 1]["kind"] == "conv":
+                    mask = (cache[f"a_{below}"] > 0).astype(jnp.int32)
+                    g = scale_mask(g, mask)
+    return grads
+
+
+def loss_grad(a, y, kind="hinge"):
+    """Loss unit (§III-B): square hinge (default) or euclidean."""
+    if kind == "hinge":
+        return loss_grad_hinge_ref(a, y)
+    return loss_grad_euclid_ref(a, y)
+
+
+def param_order(scale="1x"):
+    """Canonical flat ordering of the parameter pytree, shared with rust."""
+    names = []
+    for l in net_layers(scale):
+        if l["kind"] in ("conv", "fc"):
+            names += [f"w_{l['name']}", f"b_{l['name']}"]
+    return names
+
+
+def fused_step(params_list, x, y, scale="1x", loss="hinge"):
+    """One whole per-image FP+BP+WU pass as a single computation (used by
+    the fused-artifact ablation and the e2e trainer's fast path).
+
+    params_list follows param_order(); returns [loss, logits, *grads]."""
+    order = param_order(scale)
+    params = dict(zip(order, params_list))
+    logits, cache = forward(params, x, scale)
+    g, lval = loss_grad(logits, y, loss)
+    grads = backward(params, cache, g, scale)
+    return [lval.reshape(1), logits] + [grads[n] for n in order]

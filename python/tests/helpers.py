@@ -1,0 +1,6 @@
+import numpy as np
+
+
+def randi(rng, shape, lo=-400, hi=400):
+    import jax.numpy as jnp
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int32)

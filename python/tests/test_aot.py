@@ -1,0 +1,163 @@
+"""AOT pipeline tests: op-table signatures, HLO-text emission, bundle
+format round-trip, manifest consistency.  A single representative op is
+lowered end-to-end (full artifact builds happen in `make artifacts`)."""
+
+import json
+import os
+import struct
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+class TestOpTable:
+    @pytest.fixture(scope="class")
+    def ops(self):
+        return aot.op_table("1x")
+
+    def test_expected_op_set(self, ops):
+        names = set(ops)
+        for i in range(1, 7):
+            assert f"conv_fp_c{i}" in names
+            assert f"conv_wu_c{i}" in names
+        for i in range(2, 7):
+            assert f"conv_bp_c{i}" in names
+        assert "conv_bp_c1" not in names  # input layer needs no x-gradient
+        assert {"smask_c1", "smask_c3", "smask_c5"} <= names
+        for j in (1, 2, 3):
+            assert f"pool_p{j}" in names and f"ups_p{j}" in names
+        assert {"fc_fp", "fc_bp", "fc_wu", "loss_hinge",
+                "loss_euclid"} <= names
+
+    def test_op_count(self, ops):
+        # 6 conv_fp + 6 conv_wu + 5 conv_bp + 3 smask + 3 pool + 3 ups
+        # + fc_fp/bp/wu + 2 losses = 31
+        assert len(ops) == 31
+
+    def test_every_op_evaluates_at_declared_shapes(self, ops):
+        for name, (fn, specs) in ops.items():
+            outs = jax.eval_shape(fn, *specs)
+            leaves = jax.tree_util.tree_leaves(outs)
+            assert len(leaves) >= 1, name
+            for o in leaves:
+                assert o.dtype == jnp.int32, name
+
+    def test_conv_fp_c1_signature(self, ops):
+        _, specs = ops["conv_fp_c1"]
+        assert [tuple(s.shape) for s in specs] == [
+            (3, 32, 32), (16, 3, 3, 3), (16,)]
+
+
+class TestHloEmission:
+    def test_lower_one_op_to_hlo_text(self):
+        ops = aot.op_table("1x")
+        fn, specs = ops["fc_bp"]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # interchange contract: parseable text, parameters present
+        assert "parameter(0)" in text and "parameter(1)" in text
+
+    def test_hlo_has_no_mosaic_custom_call(self):
+        """interpret=True must lower to plain HLO (no Mosaic custom-calls
+        the CPU PJRT client cannot execute)."""
+        ops = aot.op_table("1x")
+        fn, specs = ops["conv_fp_c1"]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()
+
+
+class TestBundleFormat:
+    def test_roundtrip(self):
+        tensors = {
+            "a": np.arange(24, dtype=np.int32).reshape(2, 3, 4),
+            "b": np.asarray([-5], np.int32),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "t.bin")
+            aot.write_bundle(path, tensors)
+            with open(path, "rb") as f:
+                blob = f.read()
+        assert blob[:4] == b"FXTB"
+        (n,) = struct.unpack_from("<I", blob, 4)
+        assert n == 2
+        off = 8
+        for name, arr in tensors.items():
+            (ln,) = struct.unpack_from("<I", blob, off); off += 4
+            assert blob[off:off + ln].decode() == name; off += ln
+            (nd,) = struct.unpack_from("<I", blob, off); off += 4
+            dims = struct.unpack_from(f"<{nd}I", blob, off); off += 4 * nd
+            assert dims == arr.shape
+            count = int(np.prod(dims))
+            data = np.frombuffer(blob, "<i4", count, off)
+            np.testing.assert_array_equal(data.reshape(dims), arr)
+            off += 4 * count
+        assert off == len(blob)
+
+
+class TestTestvec:
+    def test_testvec_contents(self):
+        tv = aot.make_testvec("1x")
+        assert {"x", "y", "loss", "logits"} <= set(tv)
+        for n in M.param_order("1x"):
+            assert f"g_{n}" in tv
+        assert tv["x"].shape == M.IMG
+        assert tv["loss"].shape == (1,)
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        p = os.path.join(os.path.dirname(__file__),
+                         "../../artifacts/manifest.json")
+        with open(p) as f:
+            return json.load(f)
+
+    def test_manifest_lists_all_files(self, manifest):
+        adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for name, op in manifest["ops"].items():
+            assert os.path.exists(os.path.join(adir, op["file"])), name
+
+    def test_manifest_qformat_matches(self, manifest):
+        from compile import fixedpoint as fx
+        q = manifest["qformat"]
+        assert (q["fa"], q["fw"], q["fg"], q["fwg"], q["fv"]) == (
+            fx.FA, fx.FW, fx.FG, fx.FWG, fx.FV)
+
+    def test_param_bin_exists_and_parses(self, manifest):
+        adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for scale, net in manifest["nets"].items():
+            path = os.path.join(adir, net["params_file"])
+            with open(path, "rb") as f:
+                assert f.read(4) == b"FXTB"
+
+
+class TestWiderScales:
+    """2X/4X op tables must evaluate at their declared shapes (artifacts
+    for them are opt-in via --scales; the rust golden path covers their
+    numerics, but the signatures must stay lowerable)."""
+
+    @pytest.mark.parametrize("scale", ["2x", "4x"])
+    def test_op_table_shapes(self, scale):
+        ops = aot.op_table(scale)
+        assert len(ops) == 31
+        for name, (fn, specs) in ops.items():
+            outs = jax.eval_shape(fn, *specs)
+            for o in jax.tree_util.tree_leaves(outs):
+                assert o.dtype == jnp.int32, f"{scale}:{name}"
+
+    def test_4x_conv_shapes_scale(self):
+        ops = aot.op_table("4x")
+        _, specs = ops["conv_fp_c1"]
+        assert tuple(specs[1].shape) == (64, 3, 3, 3)
+        _, specs6 = ops["conv_fp_c6"]
+        assert tuple(specs6[1].shape) == (256, 256, 3, 3)

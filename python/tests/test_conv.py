@@ -1,0 +1,197 @@
+"""Pallas conv kernels (tiled like the paper's MAC array) vs the untiled
+pure-jnp oracle — exact integer equality, across shapes/tilings/dtypes of
+the CIFAR nets plus hypothesis-driven shape sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fx
+from compile.kernels import conv_bp, conv_fp, conv_wu, transpose_flip
+from compile.kernels import ref
+from .helpers import randi
+
+# every distinct conv shape in the paper's 1X/2X/4X nets (cin, cout, hw)
+PAPER_SHAPES = [
+    (3, 16, 32), (16, 16, 32), (16, 32, 16), (32, 32, 16),
+    (32, 64, 8), (64, 64, 8),
+    (3, 64, 32), (64, 128, 16), (128, 256, 8),  # 2X/4X representatives
+]
+
+
+@pytest.mark.parametrize("cin,cout,hw", PAPER_SHAPES)
+def test_conv_fp_matches_ref(rng, cin, cout, hw):
+    x = randi(rng, (cin, hw, hw))
+    w = randi(rng, (cout, cin, 3, 3), -150, 150)
+    b = randi(rng, (cout,), -2000, 2000)
+    got = conv_fp(x, w, b)
+    want = ref.conv_fp_ref(x, w, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("pof,poy", [(4, 2), (8, 8), (16, 4), (16, 16)])
+def test_conv_fp_tiling_invariance(rng, pof, poy):
+    """Unroll factors (the paper's design variables) must never change
+    numerics — only the schedule."""
+    x = randi(rng, (8, 16, 16))
+    w = randi(rng, (16, 8, 3, 3), -150, 150)
+    b = randi(rng, (16,), -2000, 2000)
+    base = ref.conv_fp_ref(x, w, b)
+    got = conv_fp(x, w, b, pof=pof, poy=poy)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_conv_fp_no_relu_shift(rng):
+    x = randi(rng, (4, 8, 8))
+    w = randi(rng, (8, 4, 3, 3), -150, 150)
+    b = jnp.zeros((8,), jnp.int32)
+    got = conv_fp(x, w, b, relu=False, shift=fx.SHIFT_CONV_BP)
+    want = ref.conv_fp_ref(x, w, b, relu=False, shift=fx.SHIFT_CONV_BP)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert (np.asarray(got) < 0).any()  # relu disabled
+
+
+def test_conv_fp_saturation(rng):
+    """Large operands must saturate to the i16 range, not wrap."""
+    # magnitudes chosen so the i32 accumulator does NOT wrap (18 products
+    # of 5000*5000 = 4.5e8 < 2^31) but the requantized value exceeds i16
+    x = jnp.full((2, 8, 8), 5000, jnp.int32)
+    w = jnp.full((4, 2, 3, 3), 5000, jnp.int32)
+    b = jnp.zeros((4,), jnp.int32)
+    got = np.asarray(conv_fp(x, w, b, relu=False))
+    want = np.asarray(ref.conv_fp_ref(x, w, b, relu=False))
+    np.testing.assert_array_equal(got, want)
+    assert got.max() == 32767
+
+
+@pytest.mark.parametrize("cin,cout,hw", PAPER_SHAPES[:6])
+def test_conv_bp_matches_ref(rng, cin, cout, hw):
+    g = randi(rng, (cout, hw, hw))
+    w = randi(rng, (cout, cin, 3, 3), -150, 150)
+    got = conv_bp(g, w)
+    want = ref.conv_bp_ref(g, w)
+    assert got.shape == (cin, hw, hw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_bp_equals_explicit_flip_transpose(rng):
+    """Eq. (3): BP conv == FP conv with 180-degree-flipped, if/of-swapped
+    kernels — the transposable-buffer contract (Fig. 5)."""
+    g = randi(rng, (8, 8, 8))
+    w = randi(rng, (8, 4, 3, 3), -150, 150)
+    wt = transpose_flip(w)
+    explicit = ref.conv_fp_ref(g, wt, jnp.zeros((4,), jnp.int32),
+                               relu=False, shift=fx.SHIFT_CONV_BP)
+    np.testing.assert_array_equal(np.asarray(conv_bp(g, w)),
+                                  np.asarray(explicit))
+
+
+def test_transpose_flip_involution(rng):
+    """Applying the transposable access twice restores the original kernels
+    (reading the circulant buffer back in non-transpose mode)."""
+    w = randi(rng, (6, 4, 3, 3))
+    np.testing.assert_array_equal(
+        np.asarray(transpose_flip(transpose_flip(w))), np.asarray(w))
+
+
+@pytest.mark.parametrize("cin,cout,hw", PAPER_SHAPES[:6])
+def test_conv_wu_matches_ref(rng, cin, cout, hw):
+    x = randi(rng, (cin, hw, hw))
+    g = randi(rng, (cout, hw, hw))
+    dw, db = conv_wu(x, g)
+    dwr, dbr = ref.conv_wu_ref(x, g)
+    assert dw.shape == (cout, cin, 3, 3)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(dbr))
+
+
+def test_conv_wu_is_4d_intra_tile_accumulation(rng):
+    """Eq. (4): each (of, if) plane is an independent 1-in-1-out FP conv —
+    check one plane against a manual single-channel convolution."""
+    x = randi(rng, (3, 8, 8))
+    g = randi(rng, (4, 8, 8))
+    dw, _ = conv_wu(x, g)
+    xp = np.asarray(ref.pad_hw(x, 1))
+    gb = np.asarray(g)
+    manual = np.zeros((3, 3), np.int64)
+    for ky in range(3):
+        for kx in range(3):
+            manual[ky, kx] = (gb[2].astype(np.int64)
+                              * xp[1, ky:ky + 8, kx:kx + 8]).sum()
+    manual = np.floor(manual / (1 << fx.SHIFT_WU_STORE) + 0.5).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(dw)[2, 1], manual)
+
+
+def test_conv_zero_gradient_gives_zero_update(rng):
+    x = randi(rng, (4, 8, 8))
+    g = jnp.zeros((8, 8, 8), jnp.int32)
+    dw, db = conv_wu(x, g)
+    assert not np.asarray(dw).any()
+    assert not np.asarray(db).any()
+
+
+@given(
+    cin=st.integers(1, 8), cout=st.integers(1, 12),
+    hw=st.sampled_from([4, 6, 8, 12]),
+    pof=st.sampled_from([1, 2, 4, 8, 16]),
+    poy=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_conv_fp_hypothesis_sweep(cin, cout, hw, pof, poy, seed):
+    """Shape/tiling sweep: the Pallas kernel must equal the oracle for any
+    layer geometry the RTL compiler could be asked to build."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(-300, 300, (cin, hw, hw)), jnp.int32)
+    w = jnp.asarray(r.integers(-150, 150, (cout, cin, 3, 3)), jnp.int32)
+    b = jnp.asarray(r.integers(-2000, 2000, (cout,)), jnp.int32)
+    got = conv_fp(x, w, b, pof=pof, poy=poy)
+    want = ref.conv_fp_ref(x, w, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    cin=st.integers(1, 6), cout=st.integers(1, 8),
+    hw=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_conv_bp_wu_hypothesis_sweep(cin, cout, hw, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(-300, 300, (cin, hw, hw)), jnp.int32)
+    g = jnp.asarray(r.integers(-300, 300, (cout, hw, hw)), jnp.int32)
+    w = jnp.asarray(r.integers(-150, 150, (cout, cin, 3, 3)), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(conv_bp(g, w)),
+                                  np.asarray(ref.conv_bp_ref(g, w)))
+    dw, db = conv_wu(x, g)
+    dwr, dbr = ref.conv_wu_ref(x, g)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(dbr))
+
+
+@pytest.mark.parametrize("k", [1, 5])
+def test_conv_fp_other_kernel_sizes(rng, k):
+    """The RTL library is parameterized in Nkx/Nky (Table I); the Pallas
+    kernel must match the oracle for 1x1 and 5x5 same-convolutions."""
+    pad = (k - 1) // 2
+    x = randi(rng, (4, 8, 8))
+    w = randi(rng, (6, 4, k, k), -150, 150)
+    b = randi(rng, (6,), -2000, 2000)
+    got = conv_fp(x, w, b, pad=pad)
+    want = ref.conv_fp_ref(x, w, b, pad=pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("k", [1, 5])
+def test_conv_bp_wu_other_kernel_sizes(rng, k):
+    pad = (k - 1) // 2
+    g = randi(rng, (6, 8, 8))
+    w = randi(rng, (6, 4, k, k), -150, 150)
+    x = randi(rng, (4, 8, 8))
+    np.testing.assert_array_equal(
+        np.asarray(conv_bp(g, w, pad=pad)),
+        np.asarray(ref.conv_bp_ref(g, w, pad=pad)))
+    dw, db = conv_wu(x, g, pad=pad)
+    dwr, dbr = ref.conv_wu_ref(x, g, pad=pad)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(dbr))

@@ -1,0 +1,78 @@
+"""Unit + property tests for the Q-format fixed-point helpers.
+
+These semantics are mirrored bit-for-bit by rust/src/fixed — any change
+here must be reflected there (the rust integration tests replay the AOT
+test vector through both paths)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fx
+
+
+class TestSat16:
+    def test_identity_in_range(self):
+        x = jnp.asarray([0, 1, -1, 32767, -32768], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fx.sat16(x)), np.asarray(x))
+
+    def test_clamps(self):
+        x = jnp.asarray([32768, 100000, -32769, -(1 << 30)], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(fx.sat16(x)), [32767, 32767, -32768, -32768])
+
+
+class TestRequant:
+    def test_shift_zero_is_saturate_only(self):
+        x = jnp.asarray([5, -7, 70000], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fx.requant(x, 0)),
+                                      [5, -7, 32767])
+
+    def test_round_half_up(self):
+        # (x + 2) >> 2 for shift 2 == floor(x/4 + 0.5)
+        x = jnp.asarray([2, -2, 3, -3, 6, -6], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fx.requant(x, 2)),
+                                      [1, 0, 1, -1, 2, -1])
+
+    @given(st.integers(-(1 << 28), 1 << 28), st.integers(1, 16))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_float_rounding(self, v, s):
+        got = int(fx.requant(jnp.asarray([v], jnp.int32), s)[0])
+        want = int(np.floor(v / (1 << s) + 0.5))
+        want = max(-32768, min(32767, want))
+        assert got == want
+
+
+class TestQuantize:
+    def test_roundtrip_on_grid(self):
+        vals = np.asarray([0.0, 1.0, -1.0, 0.5, 127.99609375])
+        q = fx.quantize(vals, fx.FA)
+        back = fx.dequantize(q, fx.FA)
+        np.testing.assert_allclose(back, vals)
+
+    def test_saturates(self):
+        q = fx.quantize(np.asarray([1000.0, -1000.0]), fx.FA)
+        np.testing.assert_array_equal(np.asarray(q), [32767, -32768])
+
+    @given(st.floats(-10, 10, allow_nan=False), st.integers(4, 14))
+    @settings(max_examples=200, deadline=None)
+    def test_error_within_half_lsb(self, v, frac):
+        q = int(fx.quantize(np.asarray([v]), frac)[0])
+        if -32768 < q < 32767:
+            assert abs(q / (1 << frac) - v) <= 0.5 / (1 << frac) + 1e-12
+
+
+class TestShiftConstants:
+    def test_fraction_bookkeeping(self):
+        # conv FP: FA + FW - SHIFT_CONV_FP == FA
+        assert fx.FA + fx.FW - fx.SHIFT_CONV_FP == fx.FA
+        # conv BP: FG + FW - SHIFT_CONV_BP == FG
+        assert fx.FG + fx.FW - fx.SHIFT_CONV_BP == fx.FG
+        # WU store: FA + FG - SHIFT_WU_STORE == FWG
+        assert fx.FA + fx.FG - fx.SHIFT_WU_STORE == fx.FWG
+
+    def test_all_shifts_nonnegative(self):
+        assert fx.SHIFT_CONV_FP >= 0
+        assert fx.SHIFT_CONV_BP >= 0
+        assert fx.SHIFT_WU_STORE >= 0

@@ -1,0 +1,91 @@
+"""FC-layer Pallas matmul kernels vs the oracle: forward (normal weights),
+backward (transposed weight matrix, §II), weight update (outer product)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fixedpoint as fx
+from compile.kernels import fc_bp, fc_fp, fc_wu, matmul_q
+from compile.kernels import ref
+from .helpers import randi
+
+FC_SHAPES = [(1024, 10), (2048, 10), (4096, 10), (64, 10)]
+
+
+@pytest.mark.parametrize("k,n", FC_SHAPES)
+def test_fc_fp_matches_ref(rng, k, n):
+    x = randi(rng, (1, k))
+    w = randi(rng, (n, k), -150, 150)
+    b = randi(rng, (n,), -2000, 2000)
+    np.testing.assert_array_equal(np.asarray(fc_fp(x, w, b)),
+                                  np.asarray(ref.fc_fp_ref(x, w, b)))
+
+
+@pytest.mark.parametrize("k,n", FC_SHAPES)
+def test_fc_bp_matches_ref(rng, k, n):
+    g = randi(rng, (1, n))
+    w = randi(rng, (n, k), -150, 150)
+    np.testing.assert_array_equal(np.asarray(fc_bp(g, w)),
+                                  np.asarray(ref.fc_bp_ref(g, w)))
+
+
+@pytest.mark.parametrize("k,n", FC_SHAPES)
+def test_fc_wu_matches_ref(rng, k, n):
+    g = randi(rng, (1, n))
+    x = randi(rng, (1, k))
+    dw, db = fc_wu(g, x)
+    dwr, dbr = ref.fc_wu_ref(g, x)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(dwr))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(dbr))
+
+
+def test_fc_bp_uses_transpose(rng):
+    """BP through FC is g @ W (the transposed use of the (N,K) matrix that
+    FP uses as x @ W^T) — check against explicit numpy."""
+    g = randi(rng, (1, 10))
+    w = randi(rng, (10, 64), -150, 150)
+    want = np.asarray(g, np.int64) @ np.asarray(w, np.int64)
+    want = np.floor(want / (1 << fx.SHIFT_CONV_BP) + 0.5)
+    want = np.clip(want, -32768, 32767).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(fc_bp(g, w)), want)
+
+
+def test_fc_wu_is_outer_product(rng):
+    g = randi(rng, (1, 4))
+    x = randi(rng, (1, 8))
+    dw, _ = fc_wu(g, x)
+    want = np.outer(np.asarray(g)[0].astype(np.int64),
+                    np.asarray(x)[0].astype(np.int64))
+    want = np.floor(want / (1 << fx.SHIFT_WU_STORE) + 0.5).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(dw), want)
+
+
+def test_matmul_q_saturates(rng):
+    a = jnp.full((2, 4), 10000, jnp.int32)
+    b = jnp.full((4, 2), 10000, jnp.int32)
+    out = np.asarray(matmul_q(a, b, shift=0))
+    assert (out == 32767).all()
+
+
+def test_matmul_q_relu(rng):
+    a = randi(rng, (2, 8))
+    b = randi(rng, (8, 4))
+    out = np.asarray(matmul_q(a, b, shift=4, relu=True))
+    assert out.min() >= 0
+
+
+@given(m=st.integers(1, 4), k=st.integers(1, 32), n=st.integers(1, 16),
+       shift=st.sampled_from([0, 4, 12]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matmul_q_hypothesis(m, k, n, shift, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.integers(-300, 300, (m, k)), jnp.int32)
+    b = jnp.asarray(r.integers(-300, 300, (k, n)), jnp.int32)
+    got = np.asarray(matmul_q(a, b, shift=shift))
+    acc = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    if shift > 0:
+        acc = np.floor(acc / (1 << shift) + 0.5).astype(np.int64)
+    want = np.clip(acc, -32768, 32767).astype(np.int32)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,168 @@
+"""Layer-2 model tests: network table, forward/backward shapes, loss units,
+fused-step consistency, and a small does-it-learn sanity run."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import fixedpoint as fx
+from compile import model as M
+from compile.kernels import ref
+from .helpers import randi
+
+
+class TestNetLayers:
+    def test_1x_structure(self):
+        """16C3-16C3-P-32C3-32C3-P-64C3-64C3-P-FC (§IV-A)."""
+        kinds = [l["kind"] for l in M.net_layers("1x")]
+        assert kinds == ["conv", "conv", "pool", "conv", "conv", "pool",
+                         "conv", "conv", "pool", "fc"]
+        widths = [l["cout"] for l in M.net_layers("1x") if l["kind"] == "conv"]
+        assert widths == [16, 16, 32, 32, 64, 64]
+
+    @pytest.mark.parametrize("scale,mult", [("2x", 2), ("4x", 4)])
+    def test_wider_nets_scale_feature_maps(self, scale, mult):
+        w1 = [l["cout"] for l in M.net_layers("1x") if l["kind"] == "conv"]
+        ws = [l["cout"] for l in M.net_layers(scale) if l["kind"] == "conv"]
+        assert ws == [mult * w for w in w1]
+
+    @pytest.mark.parametrize("scale,k", [("1x", 1024), ("2x", 2048),
+                                         ("4x", 4096)])
+    def test_fc_input_size(self, scale, k):
+        assert M.net_layers(scale)[-1]["cin"] == k
+
+    def test_spatial_dims_halve_at_pools(self):
+        hs = [l["h"] for l in M.net_layers("1x") if l["kind"] == "conv"]
+        assert hs == [32, 32, 16, 16, 8, 8]
+
+    def test_param_order_covers_all_weights(self):
+        order = M.param_order("1x")
+        assert len(order) == 14  # 6 conv + 1 fc, w + b each
+        assert order[0] == "w_c1" and order[-1] == "b_fc"
+
+
+class TestInitParams:
+    def test_deterministic(self):
+        p1 = M.init_params("1x", seed=42)
+        p2 = M.init_params("1x", seed=42)
+        for k in p1:
+            np.testing.assert_array_equal(np.asarray(p1[k]),
+                                          np.asarray(p2[k]))
+
+    def test_weights_in_i16_range(self):
+        for k, v in M.init_params("1x").items():
+            a = np.asarray(v)
+            assert a.dtype == np.int32
+            assert a.min() >= -32768 and a.max() <= 32767
+
+    def test_biases_zero(self):
+        p = M.init_params("1x")
+        for k in p:
+            if k.startswith("b_"):
+                assert not np.asarray(p[k]).any()
+
+
+class TestForwardBackward:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        params = M.init_params("1x")
+        rng = np.random.default_rng(0)
+        x = fx.quantize(rng.standard_normal(M.IMG) * 0.5, fx.FA)
+        y = jnp.asarray(((np.eye(10)[4] * 2 - 1) * (1 << fx.FA))[None, :],
+                        jnp.int32)
+        logits, cache = M.forward(params, x)
+        g, loss = M.loss_grad(logits, y)
+        grads = M.backward(params, cache, g)
+        return params, x, y, logits, cache, g, loss, grads
+
+    def test_logit_shape(self, setup):
+        assert setup[3].shape == (1, 10)
+
+    def test_cache_holds_pool_indices(self, setup):
+        cache = setup[4]
+        for p, shape in [("p1", (16, 16, 16)), ("p2", (32, 8, 8)),
+                         ("p3", (64, 4, 4))]:
+            assert cache[f"idx_{p}"].shape == shape
+
+    def test_grad_shapes_match_params(self, setup):
+        params, grads = setup[0], setup[7]
+        for k in params:
+            assert grads[k].shape == params[k].shape, k
+
+    def test_fused_step_equals_stepwise(self, setup):
+        params, x, y, logits, _, _, loss, grads = setup
+        out = M.fused_step([params[n] for n in M.param_order()], x, y)
+        assert int(out[0][0]) == int(loss)
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(logits))
+        for n, g in zip(M.param_order(), out[2:]):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(grads[n]),
+                                          err_msg=n)
+
+    def test_relu_masks_derivable_from_cache(self, setup):
+        """The paper stores binary activation gradients during FP; ours are
+        recomputed from the cached post-ReLU activations (a > 0)."""
+        cache = setup[4]
+        m = np.asarray(ref.relu_mask_ref(cache["a_c1"]))
+        assert set(np.unique(m)).issubset({0, 1})
+
+
+class TestLoss:
+    def test_hinge_zero_at_perfect_prediction(self):
+        y = jnp.asarray([[1, -1, -1]], jnp.int32) * (2 << fx.FA)
+        a = jnp.asarray([[2, -2, -2]], jnp.int32) * (1 << fx.FA)
+        g, loss = ref.loss_grad_hinge_ref(a, y // 2)
+        # margins = 1 - y*a = 1 - 2 < 0 -> clamped to 0
+        assert int(loss) == 0
+        assert not np.asarray(g).any()
+
+    def test_hinge_gradient_sign(self):
+        """Under-confident correct class gets negative gradient (push up)."""
+        one = 1 << fx.FA
+        y = jnp.asarray([[one, -one]], jnp.int32)
+        a = jnp.zeros((1, 2), jnp.int32)
+        g, loss = ref.loss_grad_hinge_ref(a, y)
+        assert int(loss) > 0
+        assert int(g[0, 0]) < 0 and int(g[0, 1]) > 0
+
+    def test_euclid_gradient_is_difference(self):
+        a = jnp.asarray([[300, -200]], jnp.int32)
+        y = jnp.asarray([[256, 0]], jnp.int32)
+        g, loss = ref.loss_grad_euclid_ref(a, y)
+        want = (np.asarray([[44, -200]]) * (1 << (fx.FG - fx.FA)))
+        np.testing.assert_array_equal(np.asarray(g), want)
+        # per-term requant to frac FA, then halved
+        t1 = (44 * 44 + (1 << (fx.FA - 1))) >> fx.FA
+        t2 = (200 * 200 + (1 << (fx.FA - 1))) >> fx.FA
+        assert int(loss) == (t1 + t2) >> 1
+
+    def test_loss_decreases_under_sgd(self):
+        """Tiny does-it-learn check on one repeated example: plain SGD on
+        the fixed-point gradients must reduce the hinge loss."""
+        params = M.init_params("1x", seed=3)
+        rng = np.random.default_rng(3)
+        x = fx.quantize(rng.standard_normal(M.IMG) * 0.5, fx.FA)
+        y = jnp.asarray(((np.eye(10)[2] * 2 - 1) * (1 << fx.FA))[None, :],
+                        jnp.int32)
+        order = M.param_order()
+
+        def loss_of(p):
+            logits, _ = M.forward(p, x)
+            _, l = M.loss_grad(logits, y)
+            return int(l)
+
+        l0 = loss_of(params)
+        for _ in range(3):
+            logits, cache = M.forward(params, x)
+            g, _ = M.loss_grad(logits, y)
+            grads = M.backward(params, cache, g)
+            for n in order:
+                gq = np.asarray(grads[n], np.int64)
+                if n.startswith("w_"):
+                    # dw at FWG -> weight at FW: align fracs, lr = 2^-6
+                    step = gq >> (fx.FWG - fx.FW + 6)
+                else:
+                    step = gq >> (fx.FG - fx.FW + 6)
+                newp = np.clip(np.asarray(params[n], np.int64) - step,
+                               -32768, 32767).astype(np.int32)
+                params[n] = jnp.asarray(newp)
+        assert loss_of(params) < l0

@@ -1,0 +1,120 @@
+"""Max-pool / upsample+scale / scaling-unit kernels vs the oracle, plus the
+gradient-routing invariants of §III-G (gradients only flow through the
+selected max pixel; all other window pixels receive zero)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import maxpool, scale_mask, upsample_scale
+from compile.kernels import ref
+from .helpers import randi
+
+POOL_SHAPES = [(16, 32), (32, 16), (64, 8), (128, 16), (256, 8)]
+
+
+@pytest.mark.parametrize("c,hw", POOL_SHAPES)
+def test_maxpool_matches_ref(rng, c, hw):
+    x = randi(rng, (c, hw, hw))
+    p, i = maxpool(x)
+    pr, ir = ref.maxpool_ref(x)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+def test_maxpool_selects_window_max(rng):
+    x = randi(rng, (4, 8, 8))
+    p, idx = maxpool(x)
+    xn = np.asarray(x)
+    pn, idxn = np.asarray(p), np.asarray(idx)
+    for c in range(4):
+        for y in range(4):
+            for xx in range(4):
+                win = xn[c, 2 * y:2 * y + 2, 2 * xx:2 * xx + 2]
+                assert pn[c, y, xx] == win.max()
+                dy, dx = divmod(idxn[c, y, xx], 2)
+                assert win[dy, dx] == win.max()
+
+
+def test_maxpool_indices_2bit(rng):
+    """Paper: a 2x2 window needs 2-bit indices — values in [0, 4)."""
+    x = randi(rng, (16, 16, 16))
+    _, idx = maxpool(x)
+    assert np.asarray(idx).min() >= 0
+    assert np.asarray(idx).max() < 4
+
+
+def test_maxpool_4x4_window(rng):
+    x = randi(rng, (4, 16, 16))
+    p, i = maxpool(x, k=4)
+    pr, ir = ref.maxpool_ref(x, k=4)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    assert np.asarray(i).max() < 16
+
+
+@pytest.mark.parametrize("c,hw", POOL_SHAPES[:3])
+def test_upsample_scale_matches_ref(rng, c, hw):
+    x = randi(rng, (c, hw, hw))
+    _, idx = maxpool(x)
+    g = randi(rng, (c, hw // 2, hw // 2))
+    mask = (x > 0).astype(jnp.int32)
+    got = upsample_scale(g, idx, mask)
+    want = ref.upsample_scale_ref(g, idx, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_upsample_routes_only_to_max_position(rng):
+    """The demultiplexer property: exactly one pixel per window carries the
+    gradient (before masking)."""
+    x = randi(rng, (2, 4, 4))
+    _, idx = maxpool(x)
+    g = randi(rng, (2, 2, 2), 1, 100)       # strictly positive gradients
+    ones = jnp.ones((2, 4, 4), jnp.int32)   # no relu masking
+    up = np.asarray(upsample_scale(g, idx, ones))
+    for c in range(2):
+        for y in range(2):
+            for xx in range(2):
+                win = up[c, 2 * y:2 * y + 2, 2 * xx:2 * xx + 2]
+                assert (win != 0).sum() == 1
+                assert win.sum() == int(np.asarray(g)[c, y, xx])
+
+
+def test_upsample_zero_mask_kills_gradient(rng):
+    x = randi(rng, (4, 8, 8))
+    _, idx = maxpool(x)
+    g = randi(rng, (4, 4, 4))
+    zero = jnp.zeros((4, 8, 8), jnp.int32)
+    assert not np.asarray(upsample_scale(g, idx, zero)).any()
+
+
+@pytest.mark.parametrize("c,hw", [(16, 32), (32, 16), (64, 8)])
+def test_scale_mask_matches_ref(rng, c, hw):
+    g = randi(rng, (c, hw, hw))
+    mask = (randi(rng, (c, hw, hw)) > 0).astype(jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(scale_mask(g, mask)),
+        np.asarray(ref.scale_mask_ref(g, mask)))
+
+
+def test_relu_mask_is_binary_step(rng):
+    a = randi(rng, (8, 8, 8))
+    m = np.asarray(ref.relu_mask_ref(a))
+    an = np.asarray(a)
+    np.testing.assert_array_equal(m, (an > 0).astype(np.int32))
+    assert set(np.unique(m)).issubset({0, 1})
+
+
+@given(c=st.sampled_from([1, 2, 4, 8, 16]), hw=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pool_roundtrip_hypothesis(c, hw, seed):
+    """maxpool(upsampled max-routed values) reproduces the pooled plane."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(1, 1000, (c, hw, hw)), jnp.int32)
+    p, idx = maxpool(x)
+    ones = jnp.ones((c, hw, hw), jnp.int32)
+    up = upsample_scale(p, idx, ones)
+    p2, _ = maxpool(up)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p))

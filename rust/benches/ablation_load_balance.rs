@@ -1,0 +1,53 @@
+//! Ablation bench (Fig. 8 / §III-F): MAC load balancing during weight-
+//! gradient convolutions.  The paper reports 4X lower WU logic latency
+//! with the load-balance unit for Pox=Poy=8, k=3.
+//! `cargo bench --bench ablation_load_balance`
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::hw::mac_array::{wu_balance_factor, wu_cycles};
+use stratus::sim::simulate;
+
+fn main() {
+    println!("=== MAC load-balance ablation ===");
+    println!("{:<6} {:>14} {:>14} {:>8}", "net",
+             "WU logic (on)", "WU logic (off)", "speedup");
+    for scale in [1usize, 2, 4] {
+        let net = Network::cifar(scale);
+        let mut dv = DesignVars::for_scale(scale);
+        let on = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        dv.load_balance = false;
+        let off = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        println!("{:<6} {:>14} {:>14} {:>7.2}x", format!("{scale}X"),
+                 on.wu.logic_cycles, off.wu.logic_cycles,
+                 off.wu.logic_cycles as f64 / on.wu.logic_cycles as f64);
+    }
+    let dv = DesignVars::for_scale(1);
+    println!("\nbalance factor for Pox=Poy=8, k=3: {} (paper Fig. 8: 4 \
+              kernel gradients in parallel -> 4X)",
+             wu_balance_factor(&dv, 3));
+
+    // per-layer view for the paper's Fig. 8 example (16 maps, 8x8)
+    let c = wu_cycles(&dv, 16, 16, 8, 8, 3);
+    let mut dv_off = dv.clone();
+    dv_off.load_balance = false;
+    let c_off = wu_cycles(&dv_off, 16, 16, 8, 8, 3);
+    println!("Fig. 8 example (Nof=16, 8x8): {} -> {} cycles ({}x)",
+             c_off.cycles, c.cycles, c_off.cycles / c.cycles);
+
+    // end-to-end effect on the iteration
+    let net = Network::cifar(4);
+    let mut dv4 = DesignVars::for_scale(4);
+    let on = simulate(
+        &RtlCompiler::default().compile(&net, &dv4).unwrap(), 40);
+    dv4.load_balance = false;
+    let off = simulate(
+        &RtlCompiler::default().compile(&net, &dv4).unwrap(), 40);
+    println!("\n4X end-to-end: {:.3} -> {:.3} ms/image ({:.1}% faster \
+              with load balancing)",
+             off.seconds_per_image() * 1e3, on.seconds_per_image() * 1e3,
+             (1.0 - on.seconds_per_image() / off.seconds_per_image())
+             * 100.0);
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 10 (on-chip buffer usage breakdown of the
+//! CIFAR-10 4X design).  `cargo bench --bench fig10`
+
+use stratus::config::{DesignVars, Network};
+use stratus::hw::bram::BufferPlan;
+use stratus::metrics::fig10;
+
+fn main() {
+    println!("=== Fig. 10 (reproduced): 4X buffer usage ===");
+    println!("{}", fig10());
+
+    // the paper's qualitative claims: the weight buffer (sized by the
+    // largest layer, not tiled) dominates; index/mask buffers are tiny
+    let plan = BufferPlan::plan(&Network::cifar(4),
+                                &DesignVars::for_scale(4));
+    println!("per-buffer detail:");
+    for b in &plan.buffers {
+        println!("  {:<12} {:>10} bits ({} words x {}b{})",
+                 b.name, b.bits(), b.words, b.bits_per_word,
+                 if b.double { ", double-buffered" } else { "" });
+    }
+    println!("total: {:.2} Mbit structural ({} M20K blocks)",
+             plan.total_mbits(), plan.total_m20k());
+
+    let by_group = plan.bits_by_group();
+    let weight_bits = by_group
+        .iter()
+        .find(|(g, _)| format!("{g:?}") == "Weight")
+        .map(|(_, b)| *b)
+        .unwrap_or(0);
+    println!("weight buffer share: {:.1}% (paper: weight buffer sized \
+              by the largest layer dominates)",
+             weight_bits as f64 / plan.total_bits() as f64 * 100.0);
+}

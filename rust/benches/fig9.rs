@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig. 9 (latency breakdown of CIFAR-10 4X across FP /
+//! BP / WU phases, logic vs DRAM, last iteration of a batch).
+//! `cargo bench --bench fig9`
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::metrics::fig9;
+use stratus::sim::{per_layer_latency, simulate};
+
+fn main() {
+    println!("=== Fig. 9 (reproduced): 4X phase breakdown ===");
+    println!("{}", fig9());
+
+    let acc = RtlCompiler::default()
+        .compile(&Network::cifar(4), &DesignVars::for_scale(4))
+        .unwrap();
+    let r = simulate(&acc, 40);
+
+    // paper claim: 51% of one batch-iteration latency is in the weight
+    // update layers (WU convolutions + batch weight update)
+    let wu = r.wu.latency_cycles as f64
+        + r.update.latency_cycles as f64 / r.batch_size as f64;
+    let frac = wu / r.cycles_per_image();
+    println!("WU-layer share of one iteration: {:.1}% (paper: 51%)",
+             frac * 100.0);
+
+    // per-layer detail (the bars of Fig. 9)
+    println!("\nper-layer latency cycles [FP, BP, WU]:");
+    let t = per_layer_latency(&r);
+    let mut names: Vec<&String> = t.keys().collect();
+    names.sort();
+    for n in names {
+        let [fp, bp, wu] = t[n];
+        println!("  {n:<4} {fp:>9} {bp:>9} {wu:>9}");
+    }
+    println!("\nDRAM-vs-logic: WU dram cycles {} vs logic {} \
+              (paper: WU layers dominated by DRAM access)",
+             r.wu.dram_cycles, r.wu.logic_cycles);
+}

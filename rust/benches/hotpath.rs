@@ -1,0 +1,55 @@
+//! Hot-path performance bench (§Perf in EXPERIMENTS.md): host-side
+//! throughput of the three coordinator backends on the real 1X workload,
+//! plus PJRT dispatch overhead.  Requires `make artifacts` for the PJRT
+//! backends (golden-only otherwise).  `cargo bench --bench hotpath`
+
+use std::path::Path;
+use std::time::Instant;
+
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+
+fn bench_backend(backend: Backend, artifacts: Option<&Path>, n: usize)
+                 -> Option<(f64, f64)> {
+    let net = Network::cifar(1);
+    let dv = DesignVars::for_scale(1);
+    let mut t =
+        Trainer::new(&net, &dv, n, 0.002, 0.9, backend, artifacts).ok()?;
+    let data = Synthetic::cifar_like(99);
+    let batch = data.batch(0, n);
+    // warmup (compiles artifacts on first use)
+    t.train_image(&batch[0]).ok()?;
+    let t0 = Instant::now();
+    for s in &batch {
+        t.train_image(s).ok()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Some((n as f64 / dt, dt / n as f64 * 1e3))
+}
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    let have = artifacts.join("manifest.json").exists();
+    let n = 16;
+    println!("=== coordinator hot path (1X, {n} images) ===");
+    println!("{:<10} {:>12} {:>14}", "backend", "images/s", "ms/image");
+    if let Some((ips, ms)) = bench_backend(Backend::Golden, None, n) {
+        println!("{:<10} {:>12.2} {:>14.2}", "golden", ips, ms);
+    }
+    if have {
+        for (name, b) in [("perop", Backend::PerOp),
+                          ("fused", Backend::Fused)] {
+            if let Some((ips, ms)) =
+                bench_backend(b, Some(artifacts), n)
+            {
+                println!("{:<10} {:>12.2} {:>14.2}", name, ips, ms);
+            }
+        }
+    } else {
+        println!("(PJRT backends skipped: run `make artifacts`)");
+    }
+    println!("\nsimulated accelerator reference: ~0.36 ms/image (1X, \
+              240 MHz) — host numerics are for validation, not on the \
+              modeled FPGA's critical path");
+}

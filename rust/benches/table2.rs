@@ -1,0 +1,34 @@
+//! Bench: regenerate Table II (resources, power, epoch latency vs batch
+//! size, GOPS for CIFAR-10 1X/2X/4X) and print it next to the paper's
+//! published rows.  `cargo bench --bench table2`
+
+use std::time::Instant;
+
+use stratus::metrics::table2;
+
+// paper Table II reference rows:
+// (name, dsp, alm_k, bram_mbit, bs10, bs20, bs40, gops)
+const PAPER: &[(&str, u64, f64, f64, f64, f64, f64, f64)] = &[
+    ("CIFAR-10 1X", 1699, 20.8, 10.6, 18.19, 18.07, 18.01, 163.0),
+    ("CIFAR-10 2X", 3363, 41.5, 22.8, 41.70, 41.30, 41.00, 282.0),
+    ("CIFAR-10 4X", 5760, 72.0, 54.5, 98.20, 96.87, 96.18, 479.0),
+];
+
+fn main() {
+    let t0 = Instant::now();
+    let ours = table2();
+    let dt = t0.elapsed();
+    println!("=== Table II (reproduced) ===");
+    println!("{ours}");
+    println!("=== Table II (paper) ===");
+    for (name, dsp, alm, bram, b10, b20, b40, gops) in PAPER {
+        println!(
+            "{name}: DSP {dsp}, ALM {alm}K, BRAM {bram} Mbit, epoch \
+             {b10}/{b20}/{b40} s (BS 10/20/40), {gops} GOPS"
+        );
+    }
+    println!("\nregenerated in {:.1} ms", dt.as_secs_f64() * 1e3);
+    println!("shape checks: GOPS ordering 1X<2X<4X, epoch ordering \
+              1X<2X<4X, BS-40 slightly faster than BS-10 — asserted in \
+              `cargo test` (sim::tests)");
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Table III (FPGA vs Titan XP throughput and
+//! efficiency at batch sizes 1 and 40).  `cargo bench --bench table3`
+
+use std::time::Instant;
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::gpu_model::titan_xp;
+use stratus::metrics::table3;
+use stratus::sim::simulate;
+
+// paper Table III: (net, gpu_b1, gpu_b40, fpga, eff_b1, eff_b40, eff_fpga)
+const PAPER: &[(&str, f64, f64, f64, f64, f64, f64)] = &[
+    ("CIFAR-10 1X", 45.67, 551.87, 163.0, 0.50, 3.68, 7.90),
+    ("CIFAR-10 2X", 128.84, 1337.98, 282.0, 1.30, 8.26, 8.59),
+    ("CIFAR-10 4X", 331.41, 2353.79, 479.0, 2.91, 13.45, 9.49),
+];
+
+fn main() {
+    let t0 = Instant::now();
+    let ours = table3();
+    println!("=== Table III (reproduced) ===");
+    println!("{ours}");
+    println!("=== Table III (paper) ===");
+    for (n, g1, g40, f, e1, e40, ef) in PAPER {
+        println!("{n}: GPU {g1}/{g40} GOPS (B1/B40), FPGA {f} GOPS; \
+                  eff GPU {e1}/{e40}, FPGA {ef} GOPS/W");
+    }
+
+    // the paper's crossover claim: FPGA beats GPU efficiency at B1 for
+    // every net; at B40 the 4X model loses to the GPU
+    println!("\n=== crossover check ===");
+    for scale in [1usize, 2, 4] {
+        let net = Network::cifar(scale);
+        let acc = RtlCompiler::default()
+            .compile(&net, &DesignVars::for_scale(scale))
+            .unwrap();
+        let fpga_eff =
+            simulate(&acc, 40).gops() / acc.power.total();
+        let gpu_b1 = titan_xp(&net, 1).efficiency();
+        let gpu_b40 = titan_xp(&net, 40).efficiency();
+        println!(
+            "{}X: FPGA {fpga_eff:.2} GOPS/W vs GPU B1 {gpu_b1:.2} \
+             (FPGA {}), vs GPU B40 {gpu_b40:.2} (FPGA {})",
+            scale,
+            if fpga_eff > gpu_b1 { "WINS" } else { "loses" },
+            if fpga_eff > gpu_b40 { "wins" } else { "LOSES" },
+        );
+    }
+    println!("\nregenerated in {:.1} ms",
+             t0.elapsed().as_secs_f64() * 1e3);
+}

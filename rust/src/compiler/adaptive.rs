@@ -1,0 +1,200 @@
+//! Adaptive fixed-point analysis — the paper's stated extension path
+//! (§IV-B: "higher accuracy will be achievable with addition of integer
+//! batch normalization and adaptive fixed point features [22] to our RTL
+//! module library"), following FxpNet's per-tensor format adaptation.
+//!
+//! The pass runs a calibration set through the golden model, records the
+//! per-layer dynamic range of activations and local gradients, and
+//! recommends per-tensor fraction bits: for a 16-bit word,
+//! `frac = 15 - int_bits(max |value|)`, clamped to the implementable
+//! range.  The report shows how much headroom the static Q8.8/Q4.12
+//! assignment leaves on the table for each layer — exactly the signal an
+//! adaptive-format RTL library would consume.
+
+use anyhow::Result;
+
+use crate::config::{Layer, Network};
+use crate::data::Sample;
+use crate::fixed::{dequantize, FA, FG};
+use crate::nn::golden::{self, Params};
+use crate::nn::loss::{encode_label, loss_grad};
+
+/// Range statistics for one tensor kind at one layer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RangeStat {
+    pub max_abs: f64,
+    /// Recommended fraction bits for a 16-bit word.
+    pub frac_rec: u32,
+    /// Fraction bits the static assignment uses.
+    pub frac_static: u32,
+}
+
+fn recommend(max_abs: f64) -> u32 {
+    // one sign bit + enough integer bits for max_abs, rest fraction
+    let int_bits = if max_abs <= 1e-12 {
+        0
+    } else {
+        (max_abs.log2().floor() as i32 + 1).max(0) as u32
+    };
+    (15u32).saturating_sub(int_bits).clamp(2, 15)
+}
+
+/// Per-layer adaptive-format recommendation.
+#[derive(Debug, Clone)]
+pub struct LayerRanges {
+    pub layer: String,
+    pub act: RangeStat,
+    pub grad: RangeStat,
+}
+
+/// The full calibration report.
+#[derive(Debug, Clone)]
+pub struct AdaptiveReport {
+    pub layers: Vec<LayerRanges>,
+    pub samples: usize,
+}
+
+impl AdaptiveReport {
+    /// Layers whose recommended activation format differs from static FA.
+    pub fn act_mismatches(&self) -> Vec<&LayerRanges> {
+        self.layers
+            .iter()
+            .filter(|l| l.act.frac_rec != l.act.frac_static)
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "layer  | act max|x|  rec  static | grad max|g|  rec  static\n",
+        );
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{:<6} | {:>10.4} {:>4} {:>7} | {:>11.4} {:>4} {:>7}\n",
+                l.layer, l.act.max_abs, l.act.frac_rec,
+                l.act.frac_static, l.grad.max_abs, l.grad.frac_rec,
+                l.grad.frac_static,
+            ));
+        }
+        out
+    }
+}
+
+/// Run the calibration pass over `samples` through the golden model.
+pub fn calibrate(net: &Network, params: &Params, samples: &[Sample])
+                 -> Result<AdaptiveReport> {
+    let mut acts: Vec<(String, f64)> = Vec::new();
+    let mut grads: Vec<(String, f64)> = Vec::new();
+    for l in &net.layers {
+        if matches!(l, Layer::Pool { .. }) {
+            continue;
+        }
+        acts.push((l.name().to_string(), 0.0));
+        grads.push((l.name().to_string(), 0.0));
+    }
+    for s in samples {
+        let (logits, cache) = golden::forward(net, params, &s.image)?;
+        let y = encode_label(s.label, net.nclass);
+        let (g, _) = loss_grad(net.loss, &logits, &y);
+        let gradmap = golden::backward(net, params, &cache, &g)?;
+        for (name, m) in acts.iter_mut() {
+            let t = cache
+                .acts
+                .get(name)
+                .map(|t| t.max_abs())
+                .unwrap_or_else(|| {
+                    logits.iter().map(|v| v.abs()).max().unwrap_or(0)
+                });
+            *m = m.max(dequantize(t, FA).abs());
+        }
+        for (name, m) in grads.iter_mut() {
+            if let Some(t) = gradmap.get(&format!("b_{name}")) {
+                // bias grads are the per-channel sums of local gradients
+                // — a cheap online proxy for the local-gradient range
+                *m = m.max(dequantize(t.max_abs(), FG).abs());
+            }
+        }
+    }
+    let layers = acts
+        .into_iter()
+        .zip(grads)
+        .map(|((layer, a), (_, g))| LayerRanges {
+            layer,
+            act: RangeStat {
+                max_abs: a,
+                frac_rec: recommend(a),
+                frac_static: FA,
+            },
+            grad: RangeStat {
+                max_abs: g,
+                frac_rec: recommend(g),
+                frac_static: FG,
+            },
+        })
+        .collect();
+    Ok(AdaptiveReport { layers, samples: samples.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+    use crate::data::Synthetic;
+    use crate::nn::init::init_params;
+
+    fn tiny() -> (Network, Params, Vec<Sample>) {
+        let net = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1 relu\nconv c2 4 k3 s1 p1 \
+             relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap();
+        let params = init_params(&net, 3);
+        let data = Synthetic::new(10, (3, 8, 8), 1, 0.3);
+        (net, params, data.batch(0, 6))
+    }
+
+    #[test]
+    fn recommend_formats() {
+        assert_eq!(recommend(0.0), 15); // clamped
+        assert_eq!(recommend(0.9), 15);
+        assert_eq!(recommend(1.5), 14);
+        assert_eq!(recommend(100.0), 8);
+        assert_eq!(recommend(1e9), 2); // clamped at minimum
+    }
+
+    #[test]
+    fn calibrate_covers_all_weighted_layers() {
+        let (net, params, samples) = tiny();
+        let r = calibrate(&net, &params, &samples).unwrap();
+        let names: Vec<&str> =
+            r.layers.iter().map(|l| l.layer.as_str()).collect();
+        assert_eq!(names, ["c1", "c2", "fc"]);
+        assert_eq!(r.samples, 6);
+        for l in &r.layers {
+            assert!(l.act.max_abs >= 0.0);
+            assert!((2..=15).contains(&l.act.frac_rec));
+        }
+    }
+
+    #[test]
+    fn small_activations_recommend_more_fraction_bits() {
+        let (net, params, samples) = tiny();
+        let r = calibrate(&net, &params, &samples).unwrap();
+        // early-layer activations of a fresh net are << 128 (the Q8.8
+        // ceiling): the adaptive pass should recommend more fraction bits
+        // than the static FA = 8 for at least one layer
+        assert!(
+            r.layers.iter().any(|l| l.act.frac_rec > FA),
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn render_is_tabular() {
+        let (net, params, samples) = tiny();
+        let r = calibrate(&net, &params, &samples).unwrap();
+        let text = r.render();
+        assert_eq!(text.lines().count(), 1 + r.layers.len());
+        assert!(text.contains("c1"));
+    }
+}

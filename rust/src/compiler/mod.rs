@@ -1,0 +1,132 @@
+//! The RTL compiler (§III-A, Fig. 3): from a high-level CNN description
+//! plus FPGA design variables to a complete accelerator instance —
+//! module selection from the training-specific RTL library, loop
+//! tiling/unroll resolution, the layer-by-layer training schedule with
+//! control parameters, buffer allocation, resource/power estimation and
+//! structural netlist emission.
+
+pub mod adaptive;
+pub mod codegen;
+pub mod module_library;
+pub mod schedule;
+
+use anyhow::{bail, Result};
+
+use crate::config::{DesignVars, Network};
+use crate::hw::bram::BufferPlan;
+use crate::hw::power::{power_from_resources, PowerReport};
+use crate::hw::resources::{estimate, Device, ResourceReport, STRATIX10_GX};
+
+pub use adaptive::{calibrate, AdaptiveReport};
+pub use codegen::{control_rom, emit_verilog, ControlWord};
+pub use module_library::{select_modules, Module};
+pub use schedule::{build as build_schedule, OpKind, Schedule, Step};
+
+/// A fully compiled accelerator instance.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub net: Network,
+    pub dv: DesignVars,
+    pub modules: Vec<Module>,
+    pub schedule: Schedule,
+    pub buffers: BufferPlan,
+    pub resources: ResourceReport,
+    pub power: PowerReport,
+    pub control: Vec<ControlWord>,
+}
+
+/// The RTL compiler entry point.
+pub struct RtlCompiler {
+    pub device: Device,
+}
+
+impl Default for RtlCompiler {
+    fn default() -> Self {
+        RtlCompiler { device: STRATIX10_GX }
+    }
+}
+
+impl RtlCompiler {
+    /// Compile `net` under `dv`.  Fails when the design cannot be
+    /// realized on the target device (the paper's compiler rejects
+    /// configurations exceeding user constraints the same way).
+    pub fn compile(&self, net: &Network, dv: &DesignVars)
+                   -> Result<Accelerator> {
+        if dv.pox == 0 || dv.poy == 0 || dv.pof == 0 {
+            bail!("unroll factors must be nonzero");
+        }
+        let resources = estimate(net, dv, &self.device);
+        if !resources.fits {
+            bail!(
+                "design does not fit device: {} DSP (of {}), {} ALM (of \
+                 {}), {:.1} Mbit BRAM (of {})",
+                resources.dsp, self.device.dsp, resources.alm,
+                self.device.alm, resources.bram_mbits,
+                self.device.bram_mbits
+            );
+        }
+        let power = power_from_resources(dv, &resources);
+        Ok(Accelerator {
+            net: net.clone(),
+            dv: dv.clone(),
+            modules: select_modules(net, dv),
+            schedule: build_schedule(net, dv),
+            buffers: BufferPlan::plan(net, dv),
+            resources,
+            power,
+            control: control_rom(net, dv),
+        })
+    }
+
+    /// Emit the generated structural netlist.
+    pub fn verilog(&self, acc: &Accelerator) -> String {
+        emit_verilog(&acc.net, &acc.dv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignVars, Network};
+
+    #[test]
+    fn compiles_all_paper_configs() {
+        let c = RtlCompiler::default();
+        for s in [1, 2, 4] {
+            let acc = c
+                .compile(&Network::cifar(s), &DesignVars::for_scale(s))
+                .unwrap();
+            assert!(!acc.schedule.per_image.is_empty());
+            assert!(!acc.modules.is_empty());
+            assert!(acc.resources.fits);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_design() {
+        let c = RtlCompiler::default();
+        let mut dv = DesignVars::for_scale(4);
+        dv.pox = 32;
+        dv.poy = 32; // 65536 MACs: impossible on this device
+        let err = c.compile(&Network::cifar(4), &dv).unwrap_err();
+        assert!(format!("{err:#}").contains("does not fit"));
+    }
+
+    #[test]
+    fn rejects_zero_unroll() {
+        let c = RtlCompiler::default();
+        let mut dv = DesignVars::for_scale(1);
+        dv.pof = 0;
+        assert!(c.compile(&Network::cifar(1), &dv).is_err());
+    }
+
+    #[test]
+    fn verilog_generation_roundtrip() {
+        let c = RtlCompiler::default();
+        let acc = c
+            .compile(&Network::cifar(1), &DesignVars::for_scale(1))
+            .unwrap();
+        let v = c.verilog(&acc);
+        assert!(v.contains("cnn_train_top"));
+    }
+}

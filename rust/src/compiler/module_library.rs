@@ -1,0 +1,154 @@
+//! The RTL module library (Fig. 3): a catalog of parameterized,
+//! training-specific hardware modules.  The compiler *selects* from this
+//! library based on the layers present in the network and the design
+//! variables — "only the selected modules from the RTL library based on
+//! the training algorithm will be synthesized" (§III-A).
+
+use crate::config::{DesignVars, Layer, Loss, Network};
+
+/// Every module the library provides (mirrors Fig. 4's blocks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Module {
+    GlobalControl,
+    DmaControl,
+    DataScatter,
+    DataGather,
+    DataRouter,
+    WeightRouter,
+    MacArray,
+    MacLoadBalance,
+    TransposableWeightBuffer,
+    WeightUpdateUnit,
+    MaxPoolUnit,
+    UpsampleUnit,
+    ScalingUnit,
+    ReluUnit,
+    FlattenUnit,
+    LossUnitHinge,
+    LossUnitEuclid,
+    FcUnit,
+}
+
+impl Module {
+    /// Verilog entity name the codegen emits for this module.
+    pub fn entity(&self) -> &'static str {
+        match self {
+            Module::GlobalControl => "global_ctrl",
+            Module::DmaControl => "dma_ctrl",
+            Module::DataScatter => "data_scatter",
+            Module::DataGather => "data_gather",
+            Module::DataRouter => "data_router",
+            Module::WeightRouter => "weight_router",
+            Module::MacArray => "mac_array",
+            Module::MacLoadBalance => "mac_load_balance",
+            Module::TransposableWeightBuffer => "transposable_wbuf",
+            Module::WeightUpdateUnit => "weight_update_unit",
+            Module::MaxPoolUnit => "maxpool_unit",
+            Module::UpsampleUnit => "upsample_unit",
+            Module::ScalingUnit => "scaling_unit",
+            Module::ReluUnit => "relu_unit",
+            Module::FlattenUnit => "flatten_unit",
+            Module::LossUnitHinge => "loss_unit_sqhinge",
+            Module::LossUnitEuclid => "loss_unit_euclid",
+            Module::FcUnit => "fc_unit",
+        }
+    }
+}
+
+/// Select the set of library modules a network + design point requires.
+pub fn select_modules(net: &Network, dv: &DesignVars) -> Vec<Module> {
+    let mut mods = vec![
+        Module::GlobalControl,
+        Module::DmaControl,
+        Module::DataScatter,
+        Module::DataGather,
+        Module::DataRouter,
+        Module::WeightRouter,
+        Module::MacArray,
+        Module::TransposableWeightBuffer,
+        Module::WeightUpdateUnit,
+    ];
+    if dv.load_balance {
+        mods.push(Module::MacLoadBalance);
+    }
+    let mut has_pool = false;
+    let mut has_relu = false;
+    let mut has_fc = false;
+    for l in &net.layers {
+        match l {
+            Layer::Pool { .. } => has_pool = true,
+            Layer::Conv { relu, .. } => has_relu |= relu,
+            Layer::Fc { .. } => has_fc = true,
+        }
+    }
+    if has_pool {
+        mods.push(Module::MaxPoolUnit);
+        mods.push(Module::UpsampleUnit);
+    }
+    if has_relu {
+        mods.push(Module::ReluUnit);
+        mods.push(Module::ScalingUnit);
+    }
+    if has_fc {
+        mods.push(Module::FlattenUnit);
+        mods.push(Module::FcUnit);
+    }
+    mods.push(match net.loss {
+        Loss::SquareHinge => Module::LossUnitHinge,
+        Loss::Euclidean => Module::LossUnitEuclid,
+    });
+    mods
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignVars, Network};
+
+    #[test]
+    fn cifar_selects_full_set() {
+        let mods = select_modules(&Network::cifar(1),
+                                  &DesignVars::for_scale(1));
+        for m in [
+            Module::MacArray,
+            Module::MacLoadBalance,
+            Module::TransposableWeightBuffer,
+            Module::MaxPoolUnit,
+            Module::UpsampleUnit,
+            Module::LossUnitHinge,
+            Module::FcUnit,
+        ] {
+            assert!(mods.contains(&m), "{m:?} missing");
+        }
+        assert!(!mods.contains(&Module::LossUnitEuclid),
+                "unused loss unit must not be synthesized");
+    }
+
+    #[test]
+    fn load_balance_selectable() {
+        let mut dv = DesignVars::for_scale(1);
+        dv.load_balance = false;
+        let mods = select_modules(&Network::cifar(1), &dv);
+        assert!(!mods.contains(&Module::MacLoadBalance));
+    }
+
+    #[test]
+    fn poolless_net_omits_pool_units() {
+        let net = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1 relu\nfc fc 10",
+        )
+        .unwrap();
+        let mods = select_modules(&net, &DesignVars::default());
+        assert!(!mods.contains(&Module::MaxPoolUnit));
+        assert!(!mods.contains(&Module::UpsampleUnit));
+    }
+
+    #[test]
+    fn entities_unique() {
+        use std::collections::HashSet;
+        let mods = select_modules(&Network::cifar(2),
+                                  &DesignVars::for_scale(2));
+        let names: HashSet<&str> = mods.iter().map(|m| m.entity()).collect();
+        assert_eq!(names.len(), mods.len());
+    }
+}

@@ -1,0 +1,430 @@
+//! Layer-by-layer training schedule generation (§III-A: "execution of
+//! training operations in one iteration of a batch can be scheduled
+//! sequentially similar to layer-by-layer execution of inference tasks").
+//!
+//! The compiler expands a network into:
+//! - a **per-image** step list: FP layers in order, the loss unit, then BP
+//!   and WU interleaved walking the layers in reverse (WU gradients are
+//!   accumulated into DRAM tile-by-tile each image, Fig. 7);
+//! - a **per-batch** step list: the weight-update passes that run once per
+//!   batch (read weights + momentum + accumulated gradients, write new
+//!   weights tile-by-tile, §III-E).
+//!
+//! Every step carries its phase, the key/affiliated classification
+//! (§III-B: key layers read fresh tiles from DRAM; affiliated layers
+//! consume key-layer outputs on chip), its DRAM traffic, its DMA tile
+//! count, and — when the op has numerics — the AOT artifact that executes
+//! it on the PJRT runtime.
+
+use crate::config::{DesignVars, Layer, Loss, Network};
+use crate::hw::mac_array::Phase;
+
+/// What a schedule step does (1:1 with the artifact kinds emitted by
+/// `python/compile/aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    ConvFp,
+    ConvBp,
+    ConvWu,
+    Pool,
+    Upsample,
+    ScaleMask,
+    FcFp,
+    FcBp,
+    FcWu,
+    LossGrad,
+    WeightUpdate,
+}
+
+/// One scheduled operation.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub phase: Phase,
+    pub layer: String,
+    pub op: OpKind,
+    /// Key layers read fresh data from DRAM; affiliated layers do not.
+    pub key: bool,
+    /// AOT artifact name (without the `.hlo.txt` suffix), when the op is
+    /// executed numerically on the PJRT runtime.
+    pub artifact: Option<String>,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// DMA descriptor count for the step's transfers.
+    pub tiles: u64,
+}
+
+/// Complete schedule for one network + design point.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Steps executed for every image.
+    pub per_image: Vec<Step>,
+    /// Steps executed once per batch (weight update).
+    pub per_batch: Vec<Step>,
+}
+
+const W16: u64 = 2; // bytes per 16-bit word
+const W32: u64 = 4; // bytes per 32-bit gradient accumulator word
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// DMA tile count for a (C, H, W) tensor moved `tile_rows` rows at a time,
+/// `pof` maps per burst.
+fn act_tiles(dv: &DesignVars, c: usize, h: usize) -> u64 {
+    (ceil_div(c, dv.pof) * ceil_div(h, dv.tile_rows)) as u64
+}
+
+/// Build the full schedule.
+pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
+    let tag = net.scale_tag();
+    let mut per_image = Vec::new();
+
+    // ---------------- FP phase ----------------
+    for l in &net.layers {
+        match l {
+            Layer::Conv { name, cin, cout, h, w, k, .. } => {
+                let in_b = (cin * h * w) as u64 * W16;
+                let w_b = ((cout * cin * k * k) + cout) as u64 * W16;
+                let out_b = (cout * h * w) as u64 * W16;
+                per_image.push(Step {
+                    phase: Phase::Fp,
+                    layer: name.clone(),
+                    op: OpKind::ConvFp,
+                    key: true,
+                    artifact: Some(format!("conv_fp_{name}_{tag}")),
+                    dram_read_bytes: in_b + w_b,
+                    dram_write_bytes: out_b,
+                    tiles: act_tiles(dv, *cin, *h)
+                        + act_tiles(dv, *cout, *h)
+                        + ceil_div(*cout, dv.pof) as u64,
+                });
+                // ReLU is affiliated (fused in the artifact); masks stay on
+                // chip, so no separate step/traffic.
+            }
+            Layer::Pool { name, c, h, w, k } => {
+                let in_b = (c * h * w) as u64 * W16;
+                let out_b = (c * (h / k) * (w / k)) as u64 * W16;
+                per_image.push(Step {
+                    phase: Phase::Fp,
+                    layer: name.clone(),
+                    op: OpKind::Pool,
+                    key: true,
+                    artifact: Some(format!("pool_{name}_{tag}")),
+                    dram_read_bytes: in_b,
+                    dram_write_bytes: out_b,
+                    tiles: act_tiles(dv, *c, *h),
+                });
+            }
+            Layer::Fc { name, cin, cout } => {
+                let w_b = ((cin * cout) + cout) as u64 * W16;
+                per_image.push(Step {
+                    phase: Phase::Fp,
+                    layer: name.clone(),
+                    op: OpKind::FcFp,
+                    key: true,
+                    artifact: Some(format!("fc_fp_{tag}")),
+                    dram_read_bytes: (*cin as u64) * W16 + w_b,
+                    dram_write_bytes: (*cout as u64) * W16,
+                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 + 1,
+                });
+            }
+        }
+    }
+
+    // loss unit (affiliated: logits are already on chip)
+    let loss_art = match net.loss {
+        Loss::SquareHinge => "loss_hinge",
+        Loss::Euclidean => "loss_euclid",
+    };
+    per_image.push(Step {
+        phase: Phase::Bp,
+        layer: "loss".into(),
+        op: OpKind::LossGrad,
+        key: false,
+        artifact: Some(format!("{loss_art}_{tag}")),
+        dram_read_bytes: (net.nclass as u64) * W16,
+        dram_write_bytes: (net.nclass as u64) * W16,
+        tiles: 1,
+    });
+
+    // ---------------- BP + WU phases (reverse walk) ----------------
+    let rev: Vec<&Layer> = net.layers.iter().rev().collect();
+    for (i, l) in rev.iter().enumerate() {
+        match l {
+            Layer::Fc { name, cin, cout } => {
+                // WU: outer product; gradients accumulate in DRAM (i32)
+                let dw_elems = (cin * cout) as u64;
+                per_image.push(Step {
+                    phase: Phase::Wu,
+                    layer: name.clone(),
+                    op: OpKind::FcWu,
+                    key: true,
+                    artifact: Some(format!("fc_wu_{tag}")),
+                    dram_read_bytes: (*cin as u64) * W16 + dw_elems * W32,
+                    dram_write_bytes: dw_elems * W32
+                        + (*cout as u64) * W32,
+                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 * 2,
+                });
+                // BP: transposed weights
+                per_image.push(Step {
+                    phase: Phase::Bp,
+                    layer: name.clone(),
+                    op: OpKind::FcBp,
+                    key: true,
+                    artifact: Some(format!("fc_bp_{tag}")),
+                    dram_read_bytes: ((cin * cout) as u64
+                        + *cout as u64)
+                        * W16,
+                    dram_write_bytes: (*cin as u64) * W16,
+                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 + 1,
+                });
+            }
+            Layer::Pool { name, c, h, w, k } => {
+                // upsample + scale: reads pooled gradient, writes expanded;
+                // indices and masks live on chip (affiliated scaling)
+                let in_b = (c * (h / k) * (w / k)) as u64 * W16;
+                let out_b = (c * h * w) as u64 * W16;
+                per_image.push(Step {
+                    phase: Phase::Bp,
+                    layer: name.clone(),
+                    op: OpKind::Upsample,
+                    key: true,
+                    artifact: Some(format!("ups_{name}_{tag}")),
+                    dram_read_bytes: in_b,
+                    dram_write_bytes: out_b,
+                    tiles: act_tiles(dv, *c, *h),
+                });
+            }
+            Layer::Conv { name, cin, cout, h, w, k, .. } => {
+                let is_first_conv = i == rev.len() - 1;
+                // WU: read input acts + local grads + old accumulated
+                // grads; write new accumulated grads (i32 in DRAM)
+                let dw_elems = (cout * cin * k * k) as u64;
+                per_image.push(Step {
+                    phase: Phase::Wu,
+                    layer: name.clone(),
+                    op: OpKind::ConvWu,
+                    key: true,
+                    artifact: Some(format!("conv_wu_{name}_{tag}")),
+                    dram_read_bytes: ((cin * h * w) + (cout * h * w))
+                        as u64
+                        * W16
+                        + dw_elems * W32,
+                    dram_write_bytes: dw_elems * W32
+                        + (*cout as u64) * W32,
+                    tiles: act_tiles(dv, *cin, *h)
+                        + act_tiles(dv, *cout, *h)
+                        + 2 * ceil_div(*cout, dv.pof) as u64,
+                });
+                if !is_first_conv {
+                    // BP conv through transposable weights
+                    per_image.push(Step {
+                        phase: Phase::Bp,
+                        layer: name.clone(),
+                        op: OpKind::ConvBp,
+                        key: true,
+                        artifact: Some(format!("conv_bp_{name}_{tag}")),
+                        dram_read_bytes: ((cout * h * w)
+                            + (cout * cin * k * k))
+                            as u64
+                            * W16,
+                        dram_write_bytes: (cin * h * w) as u64 * W16,
+                        tiles: act_tiles(dv, *cout, *h)
+                            + act_tiles(dv, *cin, *h)
+                            + ceil_div(*cout, dv.pof) as u64,
+                    });
+                    // scaling unit when the layer below is a conv(+relu)
+                    if let Some(Layer::Conv { name: below, .. }) =
+                        rev.get(i + 1)
+                    {
+                        per_image.push(Step {
+                            phase: Phase::Bp,
+                            layer: name.clone(),
+                            op: OpKind::ScaleMask,
+                            key: false,
+                            artifact: Some(format!(
+                                "smask_{below}_{tag}"
+                            )),
+                            dram_read_bytes: 0,
+                            dram_write_bytes: 0,
+                            tiles: 0,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------- per-batch weight update ----------------
+    let mut per_batch = Vec::new();
+    for l in &net.layers {
+        let we = l.weight_elems() as u64;
+        if we == 0 {
+            continue;
+        }
+        let be = l.bias_elems() as u64;
+        // read: old weights (16b, transposable layout), momentum (32b),
+        // accumulated gradients (32b); write: new weights + momentum
+        per_batch.push(Step {
+            phase: Phase::Wu,
+            layer: l.name().to_string(),
+            op: OpKind::WeightUpdate,
+            key: true,
+            artifact: None, // runs on the rust weight-update unit
+            dram_read_bytes: we * W16 + (we + be) * W32 * 2,
+            dram_write_bytes: we * W16 + (we + be) * W32,
+            tiles: 4 * ceil_div(we as usize,
+                                dv.pof * dv.tile_rows * 64)
+                .max(1) as u64,
+        });
+    }
+
+    Schedule { per_image, per_batch }
+}
+
+impl Schedule {
+    /// Total DRAM bytes moved per image.
+    pub fn image_bytes(&self) -> u64 {
+        self.per_image
+            .iter()
+            .map(|s| s.dram_read_bytes + s.dram_write_bytes)
+            .sum()
+    }
+
+    /// Total DRAM bytes moved per batch-end update.
+    pub fn batch_bytes(&self) -> u64 {
+        self.per_batch
+            .iter()
+            .map(|s| s.dram_read_bytes + s.dram_write_bytes)
+            .sum()
+    }
+
+    /// All artifact names the schedule needs (for runtime preloading).
+    pub fn artifacts(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self
+            .per_image
+            .iter()
+            .filter_map(|s| s.artifact.as_deref())
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignVars, Network};
+
+    fn sched1x() -> Schedule {
+        build(&Network::cifar(1), &DesignVars::for_scale(1))
+    }
+
+    #[test]
+    fn fp_steps_in_layer_order() {
+        let s = sched1x();
+        let fp: Vec<&str> = s
+            .per_image
+            .iter()
+            .filter(|st| st.phase == Phase::Fp)
+            .map(|st| st.layer.as_str())
+            .collect();
+        assert_eq!(fp, ["c1", "c2", "p1", "c3", "c4", "p2", "c5", "c6",
+                        "p3", "fc"]);
+    }
+
+    #[test]
+    fn bp_walks_reverse_and_skips_first_conv() {
+        let s = sched1x();
+        let bp: Vec<(&str, OpKind)> = s
+            .per_image
+            .iter()
+            .filter(|st| st.phase == Phase::Bp)
+            .map(|st| (st.layer.as_str(), st.op))
+            .collect();
+        assert_eq!(bp[0], ("loss", OpKind::LossGrad));
+        assert_eq!(bp[1], ("fc", OpKind::FcBp));
+        assert!(bp.iter().any(|(l, o)| *l == "p3"
+            && *o == OpKind::Upsample));
+        // c1 must not appear as ConvBp
+        assert!(!bp.iter().any(|(l, o)| *l == "c1"
+            && *o == OpKind::ConvBp));
+        assert!(bp.iter().any(|(l, o)| *l == "c2"
+            && *o == OpKind::ConvBp));
+    }
+
+    #[test]
+    fn every_conv_and_fc_gets_wu() {
+        let s = sched1x();
+        let wu: Vec<&str> = s
+            .per_image
+            .iter()
+            .filter(|st| st.phase == Phase::Wu)
+            .map(|st| st.layer.as_str())
+            .collect();
+        for l in ["c1", "c2", "c3", "c4", "c5", "c6", "fc"] {
+            assert!(wu.contains(&l), "{l} missing WU");
+        }
+    }
+
+    #[test]
+    fn scale_mask_at_conv_conv_boundaries_only() {
+        let s = sched1x();
+        let sm: Vec<&str> = s
+            .per_image
+            .iter()
+            .filter(|st| st.op == OpKind::ScaleMask)
+            .map(|st| st.artifact.as_deref().unwrap())
+            .collect();
+        assert_eq!(sm, ["smask_c5_1x", "smask_c3_1x", "smask_c1_1x"]);
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        let s = sched1x();
+        let arts = s.artifacts();
+        assert!(arts.contains(&"conv_fp_c1_1x"));
+        assert!(arts.contains(&"conv_bp_c6_1x"));
+        assert!(arts.contains(&"ups_p2_1x"));
+        assert!(arts.contains(&"loss_hinge_1x"));
+        assert!(!arts.iter().any(|a| a.starts_with("conv_bp_c1")));
+        // 30 distinct numeric artifacts for the 1X net (aot.py emits 31:
+        // both loss units; the schedule references only the configured one)
+        assert_eq!(arts.len(), 30);
+    }
+
+    #[test]
+    fn batch_update_covers_all_weighted_layers() {
+        let s = sched1x();
+        assert_eq!(s.per_batch.len(), 7); // 6 conv + 1 fc
+        assert!(s
+            .per_batch
+            .iter()
+            .all(|st| st.op == OpKind::WeightUpdate));
+    }
+
+    #[test]
+    fn wu_traffic_dominates_image_traffic() {
+        // Fig. 9: weight-update layers are DRAM-bound; their gradient
+        // accumulator r/w (i32) should be the largest traffic class
+        let s = sched1x();
+        let wu_bytes: u64 = s
+            .per_image
+            .iter()
+            .filter(|st| st.phase == Phase::Wu)
+            .map(|st| st.dram_read_bytes + st.dram_write_bytes)
+            .sum();
+        assert!(wu_bytes * 2 > s.image_bytes(),
+                "WU bytes {} of {}", wu_bytes, s.image_bytes());
+    }
+
+    #[test]
+    fn wider_net_moves_more_bytes() {
+        let s1 = sched1x();
+        let s4 = build(&Network::cifar(4), &DesignVars::for_scale(4));
+        assert!(s4.image_bytes() > 4 * s1.image_bytes());
+        assert!(s4.batch_bytes() > 4 * s1.batch_bytes());
+    }
+}

@@ -1,0 +1,535 @@
+//! Network descriptions and FPGA design variables — the *inputs* to the
+//! RTL compiler (Fig. 3: "high-level CNN description" + "design
+//! variables").
+//!
+//! A network can be built programmatically ([`Network::cifar`]) or parsed
+//! from the text format accepted by `stratus compile -f net.cfg`:
+//!
+//! ```text
+//! # CIFAR-10 1X (paper §IV-A)
+//! name  cifar10-1x
+//! input 3 32 32
+//! conv  c1 16 k3 s1 p1 relu
+//! conv  c2 16 k3 s1 p1 relu
+//! pool  p1 2
+//! ...
+//! fc    fc 10
+//! loss  hinge
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One layer of the CNN, with every dimension the RTL compiler needs
+/// (Table I naming: Nkx/Nky kernel, Nox/Noy/Nof output, Nix/Niy/Nif input).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// 2D convolution (+ fused ReLU, an affiliated layer in the paper).
+    Conv {
+        name: String,
+        /// Nif / Nof
+        cin: usize,
+        cout: usize,
+        /// Nox == Nix (stride-1 same conv), Noy == Niy
+        h: usize,
+        w: usize,
+        /// Nkx == Nky
+        k: usize,
+        pad: usize,
+        stride: usize,
+        relu: bool,
+    },
+    /// Max pooling with stored indices (key layer).
+    Pool { name: String, c: usize, h: usize, w: usize, k: usize },
+    /// Fully-connected classifier (flatten is an affiliated layer).
+    Fc { name: String, cin: usize, cout: usize },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::Fc { name, .. } => name,
+        }
+    }
+
+    /// Output activation element count (what FP writes to DRAM).
+    pub fn out_elems(&self) -> usize {
+        match *self {
+            Layer::Conv { cout, h, w, .. } => cout * h * w,
+            Layer::Pool { c, h, w, k, .. } => c * (h / k) * (w / k),
+            Layer::Fc { cout, .. } => cout,
+        }
+    }
+
+    /// Weight parameter count (0 for pool).
+    pub fn weight_elems(&self) -> usize {
+        match *self {
+            Layer::Conv { cin, cout, k, .. } => cout * cin * k * k,
+            Layer::Fc { cin, cout, .. } => cout * cin,
+            Layer::Pool { .. } => 0,
+        }
+    }
+
+    /// Bias parameter count.
+    pub fn bias_elems(&self) -> usize {
+        match *self {
+            Layer::Conv { cout, .. } | Layer::Fc { cout, .. } => cout,
+            Layer::Pool { .. } => 0,
+        }
+    }
+
+    /// MAC count of the FP pass through this layer.
+    pub fn macs_fp(&self) -> u64 {
+        match *self {
+            Layer::Conv { cin, cout, h, w, k, .. } => {
+                (cout * h * w * cin * k * k) as u64
+            }
+            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
+            Layer::Pool { .. } => 0,
+        }
+    }
+
+    /// MAC count of the BP convolution (zero for the first conv layer is
+    /// handled by the caller; structurally it equals the FP count with
+    /// if/of interchanged, i.e. the same product).
+    pub fn macs_bp(&self) -> u64 {
+        self.macs_fp()
+    }
+
+    /// MAC count of the weight-gradient (WU) convolution.
+    pub fn macs_wu(&self) -> u64 {
+        match *self {
+            // every (of, if) kernel-gradient plane convolves a full
+            // gradient map: Nof*Nif*Nk*Nk output taps x Noy*Nox each
+            Layer::Conv { cin, cout, h, w, k, .. } => {
+                (cout * cin * k * k * h * w) as u64
+            }
+            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
+            Layer::Pool { .. } => 0,
+        }
+    }
+}
+
+/// Loss unit selection (§III-B: square hinge and euclidean supported).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Loss {
+    #[default]
+    SquareHinge,
+    Euclidean,
+}
+
+/// High-level CNN description, the first input to the RTL compiler.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    /// input image (c, h, w)
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+    pub nclass: usize,
+    pub loss: Loss,
+}
+
+impl Network {
+    /// The paper's CIFAR-10 family (§IV-A): `scale` in {1, 2, 4} builds
+    /// 1X / 2X / 4X — `16s C3-16s C3-P-32s C3-32s C3-P-64s C3-64s C3-P-FC`.
+    pub fn cifar(scale: usize) -> Network {
+        assert!(matches!(scale, 1 | 2 | 4), "scale must be 1, 2 or 4");
+        let widths: Vec<usize> =
+            [16, 16, 32, 32, 64, 64].iter().map(|w| w * scale).collect();
+        let mut layers = Vec::new();
+        let (mut cin, mut h) = (3usize, 32usize);
+        for (i, &cout) in widths.iter().enumerate() {
+            layers.push(Layer::Conv {
+                name: format!("c{}", i + 1),
+                cin,
+                cout,
+                h,
+                w: h,
+                k: 3,
+                pad: 1,
+                stride: 1,
+                relu: true,
+            });
+            cin = cout;
+            if i % 2 == 1 {
+                layers.push(Layer::Pool {
+                    name: format!("p{}", i / 2 + 1),
+                    c: cout,
+                    h,
+                    w: h,
+                    k: 2,
+                });
+                h /= 2;
+            }
+        }
+        layers.push(Layer::Fc {
+            name: "fc".into(),
+            cin: cin * h * h,
+            cout: 10,
+        });
+        Network {
+            name: format!("cifar10-{scale}x"),
+            input: (3, 32, 32),
+            layers,
+            nclass: 10,
+            loss: Loss::SquareHinge,
+        }
+    }
+
+    /// Scale name used in artifact files ("1x", "2x", "4x").
+    pub fn scale_tag(&self) -> &str {
+        if self.name.ends_with("4x") {
+            "4x"
+        } else if self.name.ends_with("2x") {
+            "2x"
+        } else {
+            "1x"
+        }
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.weight_elems() + l.bias_elems())
+            .sum()
+    }
+
+    /// Canonical parameter ordering shared with python (`param_order`).
+    pub fn param_order(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for l in &self.layers {
+            if l.weight_elems() > 0 {
+                names.push(format!("w_{}", l.name()));
+                names.push(format!("b_{}", l.name()));
+            }
+        }
+        names
+    }
+
+    /// Total training operations per image, counted as the paper counts
+    /// GOPS: 2 ops per MAC, over FP + BP + WU.
+    pub fn ops_per_image(&self) -> u64 {
+        let mut total = 0u64;
+        for (i, l) in self.layers.iter().enumerate() {
+            total += 2 * l.macs_fp() + 2 * l.macs_wu();
+            // first conv layer propagates no input gradient
+            let first_conv = i == 0;
+            if !first_conv {
+                total += 2 * l.macs_bp();
+            }
+        }
+        total
+    }
+
+    /// Parse the `net.cfg` text format (see module docs).
+    pub fn parse(text: &str) -> Result<Network> {
+        let mut name = String::from("custom");
+        let mut input: Option<(usize, usize, usize)> = None;
+        let mut layers: Vec<Layer> = Vec::new();
+        let mut loss = Loss::default();
+        // rolling state: current feature-map shape
+        let (mut cur_c, mut cur_h) = (0usize, 0usize);
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("line {}: `{}`", lineno + 1, raw.trim());
+            match toks[0] {
+                "name" => {
+                    name = toks
+                        .get(1)
+                        .ok_or_else(|| anyhow!("{}: missing name", ctx()))?
+                        .to_string();
+                }
+                "input" => {
+                    if toks.len() != 4 {
+                        bail!("{}: input wants `input C H W`", ctx());
+                    }
+                    let c = toks[1].parse().with_context(ctx)?;
+                    let h = toks[2].parse().with_context(ctx)?;
+                    let w: usize = toks[3].parse().with_context(ctx)?;
+                    if h != w {
+                        bail!("{}: only square inputs supported", ctx());
+                    }
+                    input = Some((c, h, w));
+                    cur_c = c;
+                    cur_h = h;
+                }
+                "conv" => {
+                    if input.is_none() {
+                        bail!("{}: `input` must precede layers", ctx());
+                    }
+                    let lname = toks
+                        .get(1)
+                        .ok_or_else(|| anyhow!("{}: missing layer name", ctx()))?
+                        .to_string();
+                    let cout: usize = toks
+                        .get(2)
+                        .ok_or_else(|| anyhow!("{}: missing channels", ctx()))?
+                        .parse()
+                        .with_context(ctx)?;
+                    let mut k = 3;
+                    let mut pad = 1;
+                    let mut stride = 1;
+                    let mut relu = false;
+                    for t in &toks[3..] {
+                        if let Some(v) = t.strip_prefix('k') {
+                            k = v.parse().with_context(ctx)?;
+                        } else if let Some(v) = t.strip_prefix('s') {
+                            stride = v.parse().with_context(ctx)?;
+                        } else if let Some(v) = t.strip_prefix('p') {
+                            pad = v.parse().with_context(ctx)?;
+                        } else if *t == "relu" {
+                            relu = true;
+                        } else {
+                            bail!("{}: unknown conv attribute `{t}`", ctx());
+                        }
+                    }
+                    if stride != 1 || pad != (k - 1) / 2 {
+                        bail!(
+                            "{}: only stride-1 same convolutions are \
+                             supported by the RTL library",
+                            ctx()
+                        );
+                    }
+                    layers.push(Layer::Conv {
+                        name: lname,
+                        cin: cur_c,
+                        cout,
+                        h: cur_h,
+                        w: cur_h,
+                        k,
+                        pad,
+                        stride,
+                        relu,
+                    });
+                    cur_c = cout;
+                }
+                "pool" => {
+                    let lname = toks
+                        .get(1)
+                        .ok_or_else(|| anyhow!("{}: missing layer name", ctx()))?
+                        .to_string();
+                    let k: usize = toks
+                        .get(2)
+                        .ok_or_else(|| anyhow!("{}: missing window", ctx()))?
+                        .parse()
+                        .with_context(ctx)?;
+                    if cur_h % k != 0 {
+                        bail!("{}: H={} not divisible by window {k}",
+                              ctx(), cur_h);
+                    }
+                    layers.push(Layer::Pool {
+                        name: lname,
+                        c: cur_c,
+                        h: cur_h,
+                        w: cur_h,
+                        k,
+                    });
+                    cur_h /= k;
+                }
+                "fc" => {
+                    let lname = toks
+                        .get(1)
+                        .ok_or_else(|| anyhow!("{}: missing layer name", ctx()))?
+                        .to_string();
+                    let cout: usize = toks
+                        .get(2)
+                        .ok_or_else(|| anyhow!("{}: missing outputs", ctx()))?
+                        .parse()
+                        .with_context(ctx)?;
+                    layers.push(Layer::Fc {
+                        name: lname,
+                        cin: cur_c * cur_h * cur_h,
+                        cout,
+                    });
+                    cur_c = cout;
+                }
+                "loss" => {
+                    loss = match toks.get(1).copied() {
+                        Some("hinge") => Loss::SquareHinge,
+                        Some("euclid") | Some("euclidean") => Loss::Euclidean,
+                        other => bail!("{}: unknown loss {:?}", ctx(), other),
+                    };
+                }
+                other => bail!("{}: unknown directive `{other}`", ctx()),
+            }
+        }
+        let input = input.ok_or_else(|| anyhow!("no `input` line"))?;
+        let nclass = match layers.last() {
+            Some(Layer::Fc { cout, .. }) => *cout,
+            _ => bail!("network must end with an fc layer"),
+        };
+        Ok(Network { name, input, layers, nclass, loss })
+    }
+}
+
+/// FPGA design variables (the second compiler input): unroll factors,
+/// clock, memory system parameters, optimization toggles.
+#[derive(Debug, Clone)]
+pub struct DesignVars {
+    /// Loop unroll factors Pox, Poy, Pof (Table I) — the MAC array is
+    /// Pox * Poy * Pof units (Fig. 6).
+    pub pox: usize,
+    pub poy: usize,
+    pub pof: usize,
+    /// Accelerator clock in MHz (paper: 240 MHz on Stratix 10 GX).
+    pub clock_mhz: f64,
+    /// Off-chip DRAM peak bandwidth in GBYTE/s.  The paper prints
+    /// "16.9Gb/s", but its own Table III consistency check (Titan XP has
+    /// "30X" the accelerator's bandwidth; 547 GB/s / 30 = 18.2 GB/s)
+    /// shows the unit is gigabytes — 16.9 Gbit/s would also make the WU
+    /// phase alone ~5x slower than the paper's total epoch latency.
+    pub dram_gbytes: f64,
+    /// Effective fraction of peak DRAM bandwidth after protocol
+    /// overheads (calibrated with the DMA descriptor overhead against
+    /// Table II's 1X/4X epoch latencies — see hw::dram).
+    pub dram_efficiency: f64,
+    /// Enable the MAC load-balance unit for WU convolutions (§III-F).
+    pub load_balance: bool,
+    /// Enable double buffering of on-chip tiles (§IV-B).
+    pub double_buffer: bool,
+    /// Activation-tile rows kept on chip per DMA burst.
+    pub tile_rows: usize,
+    /// Data width in bits (the paper's entire datapath is 16-bit fixed).
+    pub data_bits: usize,
+}
+
+impl Default for DesignVars {
+    fn default() -> Self {
+        DesignVars {
+            pox: 8,
+            poy: 8,
+            pof: 16,
+            clock_mhz: 240.0,
+            dram_gbytes: 16.9,
+            dram_efficiency: 0.60,
+            load_balance: true,
+            double_buffer: true,
+            tile_rows: 8,
+            data_bits: 16,
+        }
+    }
+}
+
+impl DesignVars {
+    /// Paper configuration for a given CIFAR scale (Pof = 16/32/64).
+    pub fn for_scale(scale: usize) -> DesignVars {
+        DesignVars { pof: 16 * scale, ..DesignVars::default() }
+    }
+
+    /// Total MAC units in the array.
+    pub fn mac_count(&self) -> usize {
+        self.pox * self.poy * self.pof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cifar_1x_structure() {
+        let n = Network::cifar(1);
+        assert_eq!(n.layers.len(), 10);
+        assert_eq!(n.nclass, 10);
+        let convs: Vec<usize> = n
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv { cout, .. } => Some(*cout),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(convs, [16, 16, 32, 32, 64, 64]);
+        match n.layers.last().unwrap() {
+            Layer::Fc { cin, cout, .. } => {
+                assert_eq!(*cin, 1024);
+                assert_eq!(*cout, 10);
+            }
+            _ => panic!("expected fc last"),
+        }
+    }
+
+    #[test]
+    fn cifar_params_near_paper_2m() {
+        // paper abstract: "CNNs with 2M parameters" for the 4X model; the
+        // structural count of the stated topology is ~1.19M (the paper's
+        // figure is approximate), so assert order of magnitude.
+        let n = Network::cifar(4);
+        let p = n.param_count();
+        assert!(p > 1_000_000 && p < 2_500_000, "4x params = {p}");
+    }
+
+    #[test]
+    fn mac_array_sizes_match_table2() {
+        assert_eq!(DesignVars::for_scale(1).mac_count(), 1024);
+        assert_eq!(DesignVars::for_scale(2).mac_count(), 2048);
+        assert_eq!(DesignVars::for_scale(4).mac_count(), 4096);
+    }
+
+    #[test]
+    fn ops_per_image_is_about_3x_inference()
+    {
+        // training ops should be ~3x inference ops (paper §I cites >3X)
+        let n = Network::cifar(1);
+        let fp: u64 =
+            n.layers.iter().map(|l| 2 * l.macs_fp()).sum();
+        let total = n.ops_per_image();
+        let ratio = total as f64 / fp as f64;
+        assert!(ratio > 2.5 && ratio < 3.5, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn parse_roundtrip_cifar1x() {
+        let cfg = "\
+name cifar10-1x
+input 3 32 32
+conv c1 16 k3 s1 p1 relu
+conv c2 16 k3 s1 p1 relu
+pool p1 2
+conv c3 32 k3 s1 p1 relu
+conv c4 32 k3 s1 p1 relu
+pool p2 2
+conv c5 64 k3 s1 p1 relu
+conv c6 64 k3 s1 p1 relu
+pool p3 2
+fc fc 10
+loss hinge
+";
+        let parsed = Network::parse(cfg).unwrap();
+        let built = Network::cifar(1);
+        assert_eq!(parsed.layers, built.layers);
+        assert_eq!(parsed.loss, built.loss);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(Network::parse("conv c1 16").is_err());
+        assert!(Network::parse("input 3 32 32\nconv c1 16 k3 s2 p1")
+            .is_err());
+        assert!(Network::parse("input 3 32 32\nbogus x").is_err());
+        assert!(Network::parse("input 3 32 32\nconv c1 16").is_err());
+    }
+
+    #[test]
+    fn parse_reports_line_numbers() {
+        let err = Network::parse("input 3 32 32\nconv c1 16 k3 s2 p1\nfc f 10")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn param_order_matches_python_convention() {
+        let n = Network::cifar(1);
+        let order = n.param_order();
+        assert_eq!(order.len(), 14);
+        assert_eq!(order[0], "w_c1");
+        assert_eq!(order[13], "b_fc");
+    }
+}

@@ -1,0 +1,537 @@
+//! The training coordinator — the accelerator's global control logic
+//! (Fig. 4) in rust: executes the compiled layer-by-layer schedule for
+//! every image (FP -> loss -> BP/WU interleaved), accumulates weight
+//! gradients across the batch, and runs the weight-update unit at batch
+//! end, while accounting simulated hardware cycles from the `sim` model.
+//!
+//! Numerics run through one of three backends:
+//! - [`Backend::PerOp`] — every scheduled op executes its own AOT
+//!   artifact on the PJRT runtime (the accelerator's layer-by-layer
+//!   dataflow, DRAM round-trip per key layer and all);
+//! - [`Backend::Fused`] — one whole-image fused artifact per step (the
+//!   ablation fast path; numerically identical by construction);
+//! - [`Backend::Golden`] — the pure-rust golden model (bit-identical to
+//!   the artifacts; used for networks without artifacts, e.g. 2X/4X).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compiler::{Accelerator, OpKind, RtlCompiler};
+use crate::config::{DesignVars, Layer, Network};
+use crate::data::Sample;
+use crate::nn::golden;
+use crate::nn::loss::encode_label;
+use crate::nn::pool::relu_mask;
+use crate::nn::sgd::{ParamKind, ParamState, SgdHyper};
+use crate::nn::tensor::Tensor;
+use crate::nn::tensorio::Bundle;
+use crate::nn::Params;
+use crate::runtime::{In, Prepared, Runtime};
+use crate::sim::{simulate, SimReport};
+
+/// Numerics backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    PerOp,
+    Fused,
+    Golden,
+}
+
+/// Rolling training metrics.
+#[derive(Debug, Clone, Default)]
+pub struct TrainMetrics {
+    pub images: u64,
+    pub batches: u64,
+    pub loss_sum: f64,
+    /// Simulated accelerator cycles spent (per the hw model).
+    pub sim_cycles: f64,
+    /// Host wall-clock seconds spent in numerics.
+    pub host_seconds: f64,
+}
+
+impl TrainMetrics {
+    pub fn mean_loss(&self) -> f64 {
+        if self.images == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.images as f64
+        }
+    }
+
+    /// Simulated wall-clock at the accelerator's clock.
+    pub fn sim_seconds(&self, clock_hz: f64) -> f64 {
+        self.sim_cycles / clock_hz
+    }
+}
+
+/// The trainer: compiled accelerator + parameters + optimizer state +
+/// (optionally) the PJRT runtime.
+pub struct Trainer {
+    pub acc: Accelerator,
+    pub params: Params,
+    states: Vec<(String, ParamState)>,
+    pub hyper: SgdHyper,
+    pub backend: Backend,
+    runtime: Option<Runtime>,
+    /// per-image simulated cycles (constant per design point)
+    image_cycles: f64,
+    batch_cycles: f64,
+    pub metrics: TrainMetrics,
+    /// parameter literals cached for the current batch (§Perf:
+    /// parameters only change at end_batch, so their host->literal
+    /// conversion is hoisted out of the per-image loop)
+    param_lits: HashMap<String, Prepared>,
+    /// pool layer -> conv layer feeding it (for mask lookup)
+    pool_prev: HashMap<String, String>,
+    /// conv layer -> layer below it in FP order (None for the first)
+    conv_below: HashMap<String, Option<(String, bool)>>,
+}
+
+impl Trainer {
+    /// Build a trainer.  `artifacts`: directory for PerOp/Fused backends;
+    /// initial parameters load from the bundle when present, otherwise
+    /// fall back to the deterministic rust init.
+    pub fn new(net: &Network, dv: &DesignVars, batch: usize, lr: f64,
+               momentum: f64, backend: Backend,
+               artifacts: Option<&Path>) -> Result<Trainer> {
+        let acc = RtlCompiler::default().compile(net, dv)?;
+        let runtime = match backend {
+            Backend::Golden => None,
+            _ => {
+                let dir = artifacts.ok_or_else(|| {
+                    anyhow!("backend {backend:?} needs an artifacts dir")
+                })?;
+                Some(Runtime::open(dir)?)
+            }
+        };
+        // initial parameters: canonical bundle if available
+        let params = if let Some(rt) = &runtime {
+            let tag = net.scale_tag();
+            let (pf, _) = rt
+                .manifest
+                .nets
+                .get(tag)
+                .ok_or_else(|| {
+                    anyhow!("no artifacts for scale `{tag}`; rebuild with \
+                             --scales {tag}")
+                })?
+                .clone();
+            let bundle =
+                Bundle::load(&artifacts.unwrap().join(pf))?;
+            Params::from_bundle(&bundle)
+        } else {
+            crate::nn::init::init_params(net, 1234)
+        };
+
+        let mut states = Vec::new();
+        for name in net.param_order() {
+            let kind = if name.starts_with("w_") {
+                ParamKind::Weight
+            } else {
+                ParamKind::Bias
+            };
+            let shape = params.get(&name)?.shape().to_vec();
+            states.push((name, ParamState::new(kind, &shape)));
+        }
+
+        let report: SimReport = simulate(&acc, batch);
+        let image_cycles = (report.fp.latency_cycles
+            + report.bp.latency_cycles
+            + report.wu.latency_cycles) as f64;
+        let batch_cycles = report.update.latency_cycles as f64;
+
+        let mut pool_prev = HashMap::new();
+        let mut conv_below = HashMap::new();
+        let mut prev: Option<(String, bool)> = None; // (name, is_conv)
+        for l in &net.layers {
+            match l {
+                Layer::Conv { name, .. } => {
+                    conv_below.insert(name.clone(), prev.clone());
+                    prev = Some((name.clone(), true));
+                }
+                Layer::Pool { name, .. } => {
+                    if let Some((p, true)) = &prev {
+                        pool_prev.insert(name.clone(), p.clone());
+                    }
+                    prev = Some((name.clone(), false));
+                }
+                Layer::Fc { .. } => {}
+            }
+        }
+
+        Ok(Trainer {
+            acc,
+            params,
+            states,
+            hyper: SgdHyper::new(lr, momentum, batch),
+            backend,
+            runtime,
+            image_cycles,
+            batch_cycles,
+            metrics: TrainMetrics::default(),
+            param_lits: HashMap::new(),
+            pool_prev,
+            conv_below,
+        })
+    }
+
+    fn runtime(&self) -> Result<&Runtime> {
+        self.runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("no runtime attached"))
+    }
+
+    /// Ensure every parameter has a cached literal for this batch.
+    fn refresh_param_lits(&mut self) -> Result<()> {
+        if !self.param_lits.is_empty() {
+            return Ok(());
+        }
+        let order = self.acc.net.param_order();
+        let rt = self
+            .runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("no runtime attached"))?;
+        let mut lits = HashMap::new();
+        for n in &order {
+            lits.insert(n.clone(), rt.prepare(self.params.get(n)?)?);
+        }
+        self.param_lits = lits;
+        Ok(())
+    }
+
+    fn accumulate(&mut self, name: &str, g: &Tensor) -> Result<()> {
+        let st = self
+            .states
+            .iter_mut()
+            .find(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("no state for {name}"))?;
+        st.1.accumulate(g);
+        Ok(())
+    }
+
+    /// Train on one image: run the per-image schedule, return the loss.
+    pub fn train_image(&mut self, sample: &Sample) -> Result<i32> {
+        let y = encode_label(sample.label, self.acc.net.nclass);
+        let t0 = std::time::Instant::now();
+        let loss = match self.backend {
+            Backend::Golden => self.step_golden(&sample.image, &y)?,
+            Backend::PerOp => self.step_per_op(&sample.image, &y)?,
+            Backend::Fused => self.step_fused(&sample.image, &y)?,
+        };
+        self.metrics.host_seconds += t0.elapsed().as_secs_f64();
+        self.metrics.images += 1;
+        self.metrics.loss_sum += f64::from(loss);
+        self.metrics.sim_cycles += self.image_cycles;
+        Ok(loss)
+    }
+
+    /// End-of-batch weight update (the weight update unit, §III-E).
+    pub fn end_batch(&mut self) -> Result<()> {
+        for (name, st) in &mut self.states {
+            let p = self.params.get_mut(name)?;
+            st.apply(p, &self.hyper);
+        }
+        self.param_lits.clear(); // parameters changed (§Perf cache)
+        self.metrics.batches += 1;
+        self.metrics.sim_cycles += self.batch_cycles;
+        Ok(())
+    }
+
+    /// Train a full batch of samples (sequentially, like the hardware).
+    pub fn train_batch(&mut self, samples: &[Sample]) -> Result<f64> {
+        let mut sum = 0f64;
+        for s in samples {
+            sum += f64::from(self.train_image(s)?);
+        }
+        self.end_batch()?;
+        Ok(sum / samples.len() as f64)
+    }
+
+    /// Classification accuracy over samples (golden forward; numerics are
+    /// bit-identical to the artifacts, see integration tests).
+    pub fn evaluate(&self, samples: &[Sample]) -> Result<f64> {
+        let mut correct = 0usize;
+        for s in samples {
+            let (logits, _) =
+                golden::forward(&self.acc.net, &self.params, &s.image)?;
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if pred == s.label {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / samples.len() as f64)
+    }
+
+    // ---------------- backends ----------------
+
+    fn step_golden(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
+        let (loss, _logits, grads) =
+            golden::train_step(&self.acc.net, &self.params, x, y)?;
+        for name in self.acc.net.param_order() {
+            let g = grads
+                .get(&name)
+                .ok_or_else(|| anyhow!("missing grad {name}"))?
+                .clone();
+            self.accumulate(&name, &g)?;
+        }
+        Ok(loss)
+    }
+
+    fn step_fused(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
+        let tag = self.acc.net.scale_tag().to_string();
+        let order = self.acc.net.param_order();
+        self.refresh_param_lits()?;
+        let mut inputs: Vec<In> = Vec::with_capacity(order.len() + 2);
+        for n in &order {
+            inputs.push(In::P(&self.param_lits[n]));
+        }
+        let y_t = Tensor::from_vec(&[1, y.len()], y.to_vec());
+        inputs.push(In::T(x));
+        inputs.push(In::T(&y_t));
+        let outs = self
+            .runtime()?
+            .execute_prepared(&format!("fused_step_{tag}"), &inputs)?;
+        if outs.len() != order.len() + 2 {
+            bail!("fused step returned {} outputs", outs.len());
+        }
+        let loss = outs[0].data()[0];
+        for (name, g) in order.iter().zip(&outs[2..]) {
+            self.accumulate(name, g)?;
+        }
+        Ok(loss)
+    }
+
+    /// The faithful path: every scheduled op is its own PJRT execution,
+    /// exactly as every key layer on the FPGA is its own DRAM-to-DRAM
+    /// pass.  Walks `schedule.per_image` in order, threading activations
+    /// (FP) and gradients (BP) through an environment.
+    fn step_per_op(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
+        let tag = self.acc.net.scale_tag().to_string();
+        let steps = self.acc.schedule.per_image.clone();
+        let net = self.acc.net.clone();
+        let mut env: HashMap<String, Tensor> = HashMap::new();
+        let mut cur = x.clone(); // FP activation / BP gradient carrier
+        let mut flat: Option<Tensor> = None;
+        let mut logits: Option<Tensor> = None;
+        let mut g_out: Option<Tensor> = None;
+        let mut loss: i32 = 0;
+        // pending per-layer grads to accumulate after the walk
+        let mut pending: Vec<(String, Tensor)> = Vec::new();
+
+        self.refresh_param_lits()?;
+        for step in &steps {
+            let lname = step.layer.clone();
+            match step.op {
+                OpKind::ConvFp => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let w = &self.param_lits[&format!("w_{lname}")];
+                    let b = &self.param_lits[&format!("b_{lname}")];
+                    let outs = self
+                        .runtime()?
+                        .execute_prepared(
+                            art, &[In::T(&cur), In::P(w), In::P(b)])
+                        .with_context(|| format!("step {art}"))?;
+                    cur = outs.into_iter().next().unwrap();
+                    env.insert(format!("a_{lname}"), cur.clone());
+                }
+                OpKind::Pool => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let outs = self.runtime()?.execute(art, &[&cur])?;
+                    let mut it = outs.into_iter();
+                    cur = it.next().unwrap();
+                    env.insert(format!("a_{lname}"), cur.clone());
+                    env.insert(format!("idx_{lname}"), it.next().unwrap());
+                }
+                OpKind::FcFp => {
+                    let f = cur.clone().reshape(&[1, cur.len()]);
+                    let w = &self.param_lits[&format!("w_{lname}")];
+                    let b = &self.param_lits[&format!("b_{lname}")];
+                    let outs = self.runtime()?.execute_prepared(
+                        &format!("fc_fp_{tag}"),
+                        &[In::T(&f), In::P(w), In::P(b)])?;
+                    flat = Some(f);
+                    logits = Some(outs.into_iter().next().unwrap());
+                }
+                OpKind::LossGrad => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let lg = logits
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("loss before fc"))?;
+                    let y_t =
+                        Tensor::from_vec(&[1, y.len()], y.to_vec());
+                    let outs =
+                        self.runtime()?.execute(art, &[lg, &y_t])?;
+                    let mut it = outs.into_iter();
+                    g_out = Some(it.next().unwrap());
+                    loss = it.next().unwrap().data()[0];
+                }
+                OpKind::FcWu => {
+                    let g = g_out.as_ref().unwrap();
+                    let f = flat.as_ref().unwrap();
+                    let outs = self
+                        .runtime()?
+                        .execute(&format!("fc_wu_{tag}"), &[g, f])?;
+                    let mut it = outs.into_iter();
+                    pending.push((format!("w_{lname}"),
+                                  it.next().unwrap()));
+                    let db = it.next().unwrap();
+                    let n = db.len();
+                    pending.push((format!("b_{lname}"),
+                                  db.reshape(&[n])));
+                }
+                OpKind::FcBp => {
+                    let g = g_out.as_ref().unwrap();
+                    let w = &self.param_lits[&format!("w_{lname}")];
+                    let outs = self.runtime()?.execute_prepared(
+                        &format!("fc_bp_{tag}"), &[In::T(g), In::P(w)])?;
+                    let gf = outs.into_iter().next().unwrap();
+                    // reshape to the last pool's output geometry
+                    let lp = net
+                        .layers
+                        .iter()
+                        .rev()
+                        .find_map(|l| match l {
+                            Layer::Pool { c, h, w, k, .. } => {
+                                Some([*c, h / k, w / k])
+                            }
+                            _ => None,
+                        })
+                        .ok_or_else(|| anyhow!("no pool before fc"))?;
+                    cur = gf.reshape(&lp);
+                }
+                OpKind::Upsample => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let idx = env
+                        .get(&format!("idx_{lname}"))
+                        .ok_or_else(|| anyhow!("no idx for {lname}"))?
+                        .clone();
+                    let prev = self
+                        .pool_prev
+                        .get(&lname)
+                        .ok_or_else(|| anyhow!("no prev conv"))?;
+                    let mask = relu_mask(&env[&format!("a_{prev}")]);
+                    let outs = self
+                        .runtime()?
+                        .execute(art, &[&cur, &idx, &mask])?;
+                    cur = outs.into_iter().next().unwrap();
+                }
+                OpKind::ConvWu => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let below = self.conv_below[&lname].clone();
+                    let x_in = match &below {
+                        None => x.clone(),
+                        Some((b, _)) => env[&format!("a_{b}")].clone(),
+                    };
+                    let outs =
+                        self.runtime()?.execute(art, &[&x_in, &cur])?;
+                    let mut it = outs.into_iter();
+                    pending.push((format!("w_{lname}"),
+                                  it.next().unwrap()));
+                    pending.push((format!("b_{lname}"),
+                                  it.next().unwrap()));
+                }
+                OpKind::ConvBp => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let w = &self.param_lits[&format!("w_{lname}")];
+                    let outs = self.runtime()?.execute_prepared(
+                        art, &[In::T(&cur), In::P(w)])?;
+                    cur = outs.into_iter().next().unwrap();
+                }
+                OpKind::ScaleMask => {
+                    let art = step.artifact.as_ref().unwrap();
+                    let below = self.conv_below[&lname]
+                        .clone()
+                        .ok_or_else(|| anyhow!("scale without below"))?;
+                    let mask = relu_mask(&env[&format!("a_{}", below.0)]);
+                    let outs =
+                        self.runtime()?.execute(art, &[&cur, &mask])?;
+                    cur = outs.into_iter().next().unwrap();
+                }
+                OpKind::WeightUpdate => unreachable!("per-batch only"),
+            }
+        }
+        for (name, g) in pending {
+            self.accumulate(&name, &g)?;
+        }
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Synthetic;
+
+    fn tiny_net() -> Network {
+        // small net in the paper's layer grammar: fast in debug builds
+        Network::parse(
+            "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
+             relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap()
+    }
+
+    fn tiny_trainer() -> Trainer {
+        Trainer::new(&tiny_net(), &DesignVars::for_scale(1), 4, 0.02, 0.9,
+                     Backend::Golden, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn golden_backend_trains_a_batch() {
+        let mut t = tiny_trainer();
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 4);
+        let loss = t.train_batch(&batch).unwrap();
+        assert!(loss > 0.0);
+        assert_eq!(t.metrics.images, 4);
+        assert_eq!(t.metrics.batches, 1);
+        assert!(t.metrics.sim_cycles > 0.0);
+    }
+
+    #[test]
+    fn loss_decreases_over_batches_golden() {
+        let mut t = tiny_trainer();
+        let data = Synthetic::new(10, (3, 8, 8), 3, 0.3);
+        let batch = data.batch(0, 4);
+        let first = t.train_batch(&batch).unwrap();
+        let mut last = first;
+        for _ in 0..6 {
+            last = t.train_batch(&batch).unwrap();
+        }
+        assert!(last < first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn accuracy_improves_on_tiny_set() {
+        let mut t = tiny_trainer();
+        let data = Synthetic::new(10, (3, 8, 8), 5, 0.2);
+        let train = data.batch(0, 40);
+        let a0 = t.evaluate(&train).unwrap();
+        for _ in 0..6 {
+            for chunk in train.chunks(4) {
+                t.train_batch(chunk).unwrap();
+            }
+        }
+        let a1 = t.evaluate(&train).unwrap();
+        assert!(a1 > a0, "acc {a0} -> {a1}");
+    }
+
+    #[test]
+    fn per_op_backend_requires_artifacts() {
+        let net = Network::cifar(1);
+        let err = match Trainer::new(&net, &DesignVars::for_scale(1), 4,
+                                     0.002, 0.9, Backend::PerOp, None) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("artifacts"));
+    }
+}

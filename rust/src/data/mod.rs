@@ -1,0 +1,171 @@
+//! Synthetic CIFAR-like dataset (DESIGN.md substitution table: no network
+//! access, so the learnability experiments run on a deterministic
+//! 10-class, 3x32x32 image distribution with class-conditional structure).
+//!
+//! Each class is defined by a smooth random "prototype" image (a mixture
+//! of oriented sinusoidal gratings with class-specific frequencies and a
+//! class-specific color cast); samples are the prototype plus pixel noise
+//! and a random global intensity jitter.  This is hard enough that a
+//! linear model underperforms a CNN, and easy enough that the paper's 1X
+//! net trains to high accuracy in tens of epochs.
+
+use crate::fixed::{quantize, FA};
+use crate::nn::tensor::Tensor;
+use crate::nn::testutil::Lcg;
+
+/// A labelled fixed-point image (values at FA, roughly in [-1, 1]).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub image: Tensor,
+    pub label: usize,
+}
+
+/// Deterministic synthetic dataset generator.
+pub struct Synthetic {
+    prototypes: Vec<Vec<f64>>, // nclass x (c*h*w)
+    pub nclass: usize,
+    pub shape: (usize, usize, usize),
+    noise: f64,
+}
+
+impl Synthetic {
+    /// Build the class prototypes from `seed`.  `noise` is the per-pixel
+    /// noise amplitude relative to the prototype contrast (0.3 default).
+    pub fn new(nclass: usize, shape: (usize, usize, usize), seed: u64,
+               noise: f64) -> Synthetic {
+        let (c, h, w) = shape;
+        let mut rng = Lcg::new(seed ^ 0xDA7A5E7);
+        let mut prototypes = Vec::with_capacity(nclass);
+        for _ in 0..nclass {
+            // 3 oriented gratings + per-channel color cast
+            let mut gratings = Vec::new();
+            for _ in 0..3 {
+                let fx = 0.2 + 0.8 * rng.unit();
+                let fy = 0.2 + 0.8 * rng.unit();
+                let phase = rng.unit() * std::f64::consts::TAU;
+                let amp = 0.3 + 0.4 * rng.unit();
+                gratings.push((fx, fy, phase, amp));
+            }
+            let casts: Vec<f64> =
+                (0..c).map(|_| 0.6 * (rng.unit() - 0.5)).collect();
+            let mut proto = vec![0.0; c * h * w];
+            for ci in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        let mut v = casts[ci];
+                        for &(fx, fy, phase, amp) in &gratings {
+                            v += amp
+                                * ((fx * x as f64 + fy * y as f64
+                                    + phase
+                                    + ci as f64 * 0.7)
+                                    .sin());
+                        }
+                        proto[(ci * h + y) * w + x] = 0.4 * v;
+                    }
+                }
+            }
+            prototypes.push(proto);
+        }
+        Synthetic { prototypes, nclass, shape, noise }
+    }
+
+    /// Paper-shaped default: 10 classes, 3x32x32.
+    pub fn cifar_like(seed: u64) -> Synthetic {
+        Synthetic::new(10, (3, 32, 32), seed, 0.3)
+    }
+
+    /// Deterministically generate sample `index` (any index is valid; the
+    /// dataset is a pure function of (seed, index)).
+    pub fn sample(&self, index: u64) -> Sample {
+        let mut rng = Lcg::new(index.wrapping_mul(0x5851F42D) ^ 0xC0FFEE);
+        let label = (index as usize) % self.nclass;
+        let proto = &self.prototypes[label];
+        let jitter = 1.0 + 0.2 * (rng.unit() - 0.5);
+        let data: Vec<i32> = proto
+            .iter()
+            .map(|&p| {
+                let v = jitter * p + self.noise * (rng.unit() - 0.5);
+                quantize(v, FA)
+            })
+            .collect();
+        let (c, h, w) = self.shape;
+        Sample { image: Tensor::from_vec(&[c, h, w], data), label }
+    }
+
+    /// A batch of consecutive samples starting at `start`.
+    pub fn batch(&self, start: u64, n: usize) -> Vec<Sample> {
+        (0..n as u64).map(|i| self.sample(start + i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_index() {
+        let d = Synthetic::cifar_like(1);
+        let a = d.sample(12);
+        let b = d.sample(12);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn labels_cycle_all_classes() {
+        let d = Synthetic::cifar_like(1);
+        let labels: Vec<usize> =
+            (0..20).map(|i| d.sample(i).label).collect();
+        for c in 0..10 {
+            assert!(labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn values_in_fixed_range() {
+        let d = Synthetic::cifar_like(2);
+        for i in 0..8 {
+            let s = d.sample(i);
+            assert_eq!(s.image.shape(), &[3, 32, 32]);
+            // roughly within ±2.0 at FA
+            assert!(s.image.max_abs() <= 2 * (1 << FA));
+        }
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        // nearest-prototype classification of fresh samples should beat
+        // chance by a wide margin — the dataset must be learnable
+        let d = Synthetic::cifar_like(3);
+        let mut correct = 0;
+        let total = 100;
+        for i in 0..total {
+            let s = d.sample(1000 + i as u64);
+            let mut best = (f64::MAX, 0usize);
+            for (k, proto) in d.prototypes.iter().enumerate() {
+                let dist: f64 = proto
+                    .iter()
+                    .zip(s.image.data())
+                    .map(|(&p, &q)| {
+                        let qf = f64::from(q) / f64::from(1 << FA);
+                        (p - qf) * (p - qf)
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 == s.label {
+                correct += 1;
+            }
+        }
+        assert!(correct > 80, "nearest-prototype acc {correct}/{total}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_tasks() {
+        let a = Synthetic::cifar_like(1).sample(0);
+        let b = Synthetic::cifar_like(99).sample(0);
+        assert_ne!(a.image, b.image);
+    }
+}

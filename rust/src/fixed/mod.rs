@@ -1,0 +1,139 @@
+//! 16-bit fixed-point (Q-format) arithmetic — bit-exact mirror of
+//! `python/compile/fixedpoint.py`.
+//!
+//! The paper trains with 16-bit fixed point for weights, activations and
+//! local/weight gradients (§II), with dedicated resolution/range per
+//! variable kind.  Values are carried in `i32` (saturated to the i16 range
+//! at layer boundaries); accumulators are `i32` with wrap-around semantics,
+//! matching what XLA emits for the lowered Pallas kernels, so the rust
+//! golden model and the PJRT artifacts agree to the last bit.
+
+/// Fraction bits of activations (range ±128, resolution 1/256).
+pub const FA: u32 = 8;
+/// Fraction bits of weights and biases.
+pub const FW: u32 = 12;
+/// Fraction bits of local gradients.
+pub const FG: u32 = 12;
+/// Fraction bits of DRAM-resident accumulated weight gradients (i32).
+pub const FWG: u32 = 16;
+/// Fraction bits of the SGD momentum buffer (i32).
+pub const FV: u32 = 16;
+
+/// Requantization shift for FP convolutions: FA + FW -> FA.
+pub const SHIFT_CONV_FP: u32 = FW;
+/// Requantization shift for BP convolutions: FG + FW -> FG.
+pub const SHIFT_CONV_BP: u32 = FW;
+/// Requantization shift when storing weight gradients: FA + FG -> FWG.
+pub const SHIFT_WU_STORE: u32 = FA + FG - FWG;
+
+pub const I16_MIN: i32 = -32768;
+pub const I16_MAX: i32 = 32767;
+
+/// Saturate into the i16 value range (the DSP-block output register).
+#[inline(always)]
+pub fn sat16(x: i32) -> i32 {
+    x.clamp(I16_MIN, I16_MAX)
+}
+
+/// Round-half-up arithmetic right shift WITHOUT saturation (used for the
+/// i32 weight-gradient accumulators kept in DRAM).
+#[inline(always)]
+pub fn shift_round(acc: i32, shift: u32) -> i32 {
+    if shift > 0 {
+        acc.wrapping_add(1 << (shift - 1)) >> shift
+    } else {
+        acc
+    }
+}
+
+/// Round-half-up arithmetic right shift, then saturate to the i16 range —
+/// the accelerator's requantization unit after every MAC-array pass.
+#[inline(always)]
+pub fn requant(acc: i32, shift: u32) -> i32 {
+    sat16(shift_round(acc, shift))
+}
+
+/// Float -> fixed grid at `frac` fraction bits (build-time/test helper;
+/// rounds half away from zero like numpy's `round`).
+#[inline]
+pub fn quantize(x: f64, frac: u32) -> i32 {
+    let v = (x * f64::from(1u32 << frac)).round();
+    v.clamp(f64::from(I16_MIN), f64::from(I16_MAX)) as i32
+}
+
+/// Fixed -> float (test/reporting helper).
+#[inline]
+pub fn dequantize(q: i32, frac: u32) -> f64 {
+    f64::from(q) / f64::from(1u32 << frac)
+}
+
+/// Multiply two fixed-point scalars and requantize by `shift`.
+#[inline(always)]
+pub fn mul_q(a: i32, b: i32, shift: u32) -> i32 {
+    requant(a.wrapping_mul(b), shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_bookkeeping_matches_python() {
+        assert_eq!(FA + FW - SHIFT_CONV_FP, FA);
+        assert_eq!(FG + FW - SHIFT_CONV_BP, FG);
+        assert_eq!(FA + FG - SHIFT_WU_STORE, FWG);
+    }
+
+    #[test]
+    fn sat16_clamps() {
+        assert_eq!(sat16(32768), 32767);
+        assert_eq!(sat16(-32769), -32768);
+        assert_eq!(sat16(5), 5);
+    }
+
+    #[test]
+    fn requant_rounds_half_up() {
+        // floor(x / 4 + 0.5), same vectors as test_fixedpoint.py
+        let xs = [2, -2, 3, -3, 6, -6];
+        let want = [1, 0, 1, -1, 2, -1];
+        for (x, w) in xs.iter().zip(want) {
+            assert_eq!(requant(*x, 2), w, "x={x}");
+        }
+    }
+
+    #[test]
+    fn requant_shift_zero_saturates_only() {
+        assert_eq!(requant(70000, 0), 32767);
+        assert_eq!(requant(-7, 0), -7);
+    }
+
+    #[test]
+    fn requant_matches_float_reference() {
+        // mirror of the hypothesis property in python
+        let mut v: i64 = -123456789;
+        for s in 1..=16u32 {
+            for _ in 0..64 {
+                v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let x = (v >> 33) as i32; // ~±2^30
+                let want =
+                    ((f64::from(x) / f64::from(1u32 << s) + 0.5).floor())
+                        .clamp(-32768.0, 32767.0) as i32;
+                assert_eq!(requant(x, s), want, "x={x} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_on_grid() {
+        for v in [0.0, 1.0, -1.0, 0.5, 127.99609375] {
+            let q = quantize(v, FA);
+            assert!((dequantize(q, FA) - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize(1000.0, FA), 32767);
+        assert_eq!(quantize(-1000.0, FA), -32768);
+    }
+}

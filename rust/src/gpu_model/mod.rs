@@ -1,0 +1,121 @@
+//! Titan XP GPU baseline model for Table III.
+//!
+//! The paper compares the accelerator against a Titan XP (12.15 TFLOPS
+//! fp32 peak, 547.6 GB/s, 250 W TDP) training the same CNNs in PyTorch at
+//! batch sizes 1 and 40.  We model achieved throughput as a power law of
+//! the per-image training work (bigger nets -> bigger GEMMs -> higher GPU
+//! utilization) anchored at batch 1, with log-linear batch scaling up to
+//! batch 40; both exponents are fitted through the paper's 1X and 4X
+//! Titan XP columns, leaving 2X as the held-out check (within ~5% at B1,
+//! ~15% at B40).  Board power is an affine function of achieved GOPS.
+
+use crate::config::Network;
+
+/// Titan XP datasheet numbers.
+pub const TITAN_XP_PEAK_GOPS: f64 = 12_150.0;
+pub const TITAN_XP_BW_GBS: f64 = 547.6;
+pub const TITAN_XP_TDP_W: f64 = 250.0;
+
+// Achieved GOPS at batch 1: C1 * (ops_per_image / 1e9) ^ A1
+// through (0.0585 Gop, 45.67 GOPS) and (0.92 Gop, 331.41 GOPS).
+const C1: f64 = 354.0;
+const A1: f64 = 0.72;
+
+// Achieved GOPS at batch 40: C40 * gops ^ A40
+// through (0.0585, 551.87) and (0.92, 2353.79).
+const C40: f64 = 2464.0;
+const A40: f64 = 0.527;
+
+// Board power = P_BASE + P_SLOPE * achieved_gops (fit over Table III).
+const P_BASE: f64 = 95.0;
+const P_SLOPE: f64 = 0.0364;
+
+/// Modeled GPU measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuPoint {
+    pub gops: f64,
+    pub power_w: f64,
+}
+
+impl GpuPoint {
+    pub fn efficiency(&self) -> f64 {
+        self.gops / self.power_w
+    }
+}
+
+/// Achieved training throughput for `net` at `batch` on the modeled
+/// Titan XP.
+pub fn titan_xp(net: &Network, batch: usize) -> GpuPoint {
+    let gop_img = net.ops_per_image() as f64 / 1e9;
+    let g1 = C1 * gop_img.powf(A1);
+    let g40 = C40 * gop_img.powf(A40);
+    let b = (batch.max(1) as f64).min(40.0);
+    // log-linear interpolation between the B1 and B40 anchors
+    let beta = (g40 / g1).ln() / 40f64.ln();
+    let gops = (g1 * b.powf(beta)).min(TITAN_XP_PEAK_GOPS);
+    let power_w = (P_BASE + P_SLOPE * gops).min(TITAN_XP_TDP_W);
+    GpuPoint { gops, power_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+
+    #[test]
+    fn calibration_anchors_match_table3() {
+        // 1X and 4X at B1/B40 are calibration points: within 10%
+        let cases = [
+            (1, 1, 45.67),
+            (1, 40, 551.87),
+            (4, 1, 331.41),
+            (4, 40, 2353.79),
+        ];
+        for (scale, b, want) in cases {
+            let got = titan_xp(&Network::cifar(scale), b).gops;
+            let err = (got - want).abs() / want;
+            assert!(err < 0.10, "{scale}X B{b}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn heldout_2x_prediction() {
+        // Table III 2X: 128.84 (B1) and 1337.98 (B40)
+        let b1 = titan_xp(&Network::cifar(2), 1).gops;
+        let b40 = titan_xp(&Network::cifar(2), 40).gops;
+        assert!((b1 - 128.84).abs() / 128.84 < 0.15, "B1 {b1}");
+        assert!((b40 - 1337.98).abs() / 1337.98 < 0.25, "B40 {b40}");
+    }
+
+    #[test]
+    fn batch_scaling_monotone() {
+        let net = Network::cifar(2);
+        let mut prev = 0.0;
+        for b in [1, 2, 5, 10, 20, 40] {
+            let g = titan_xp(&net, b).gops;
+            assert!(g > prev, "b={b}");
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn never_exceeds_peak_or_tdp() {
+        for scale in [1, 2, 4] {
+            for b in [1, 8, 40, 400] {
+                let p = titan_xp(&Network::cifar(scale), b);
+                assert!(p.gops <= TITAN_XP_PEAK_GOPS);
+                assert!(p.power_w <= TITAN_XP_TDP_W);
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_shape_of_table3() {
+        // GPU efficiency at B1 is poor (~0.5 GOPS/W for 1X) and improves
+        // by roughly an order of magnitude at B40
+        let e1 = titan_xp(&Network::cifar(1), 1).efficiency();
+        let e40 = titan_xp(&Network::cifar(1), 40).efficiency();
+        assert!(e1 < 0.8, "B1 eff {e1}");
+        assert!(e40 / e1 > 4.0, "improvement {}", e40 / e1);
+    }
+}

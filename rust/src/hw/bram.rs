@@ -1,0 +1,312 @@
+//! On-chip buffer (BRAM) model: sizing of every buffer the generated
+//! accelerator instantiates (Fig. 4 / Fig. 10) and the double-buffering
+//! latency-hiding rule (§IV-B).
+//!
+//! Stratix 10 BRAM is organized as M20K blocks (20 Kbit each); Table II
+//! reports usage in Mbit, which is what [`BufferPlan::total_mbits`]
+//! reproduces.
+
+use crate::config::{DesignVars, Layer, Network};
+
+/// M20K block capacity in bits.
+pub const M20K_BITS: u64 = 20 * 1024;
+
+/// One named on-chip buffer of the generated design.
+#[derive(Debug, Clone)]
+pub struct BufferSpec {
+    pub name: String,
+    /// Which phase(s) the buffer serves, for the Fig. 10 breakdown.
+    pub group: BufferGroup,
+    /// Depth in data words.
+    pub words: u64,
+    /// Word width in bits.
+    pub bits_per_word: u64,
+    /// Double-buffered (two physical copies)?
+    pub double: bool,
+}
+
+/// Fig. 10 groups buffers by what they hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferGroup {
+    Input,
+    Output,
+    Weight,
+    WeightGradient,
+    PoolIndex,
+    ActGradientMask,
+}
+
+impl BufferSpec {
+    pub fn bits(&self) -> u64 {
+        let base = self.words * self.bits_per_word;
+        if self.double {
+            2 * base
+        } else {
+            base
+        }
+    }
+
+    pub fn m20k_blocks(&self) -> u64 {
+        self.bits().div_ceil(M20K_BITS)
+    }
+}
+
+/// The complete buffer allocation for one accelerator instance.
+#[derive(Debug, Clone, Default)]
+pub struct BufferPlan {
+    pub buffers: Vec<BufferSpec>,
+}
+
+impl BufferPlan {
+    /// Size every on-chip buffer for `net` under design variables `dv`,
+    /// replicating the paper's policy: activation/gradient tiles are
+    /// `tile_rows` rows deep and double-buffered; the weight buffer holds
+    /// the largest layer's full weights (§IV-B: "the weight buffer size is
+    /// decided by the largest layer weights", not tiled); index and
+    /// activation-gradient-mask buffers are per-layer and sized to a tile.
+    pub fn plan(net: &Network, dv: &DesignVars) -> BufferPlan {
+        let bits = dv.data_bits as u64;
+        let mut buffers = Vec::new();
+
+        // widest activation row across the network (input tiles)
+        let max_row_words = net
+            .layers
+            .iter()
+            .map(|l| match *l {
+                Layer::Conv { cin, w, .. } => (cin * (w + 2)) as u64,
+                Layer::Pool { c, w, .. } => (c * w) as u64,
+                Layer::Fc { cin, .. } => cin as u64,
+            })
+            .max()
+            .unwrap_or(0);
+        buffers.push(BufferSpec {
+            name: "input".into(),
+            group: BufferGroup::Input,
+            words: max_row_words * (dv.tile_rows as u64 + 2),
+            bits_per_word: bits,
+            double: dv.double_buffer,
+        });
+
+        // output tile: Pof maps x tile_rows x widest row
+        let max_out_row = net
+            .layers
+            .iter()
+            .map(|l| match *l {
+                Layer::Conv { w, .. } => w as u64,
+                Layer::Pool { w, k, .. } => (w / k) as u64,
+                Layer::Fc { cout, .. } => cout as u64,
+            })
+            .max()
+            .unwrap_or(0);
+        buffers.push(BufferSpec {
+            name: "output".into(),
+            group: BufferGroup::Output,
+            words: (dv.pof as u64) * (dv.tile_rows as u64) * max_out_row,
+            bits_per_word: bits,
+            double: dv.double_buffer,
+        });
+
+        // weight buffer: whole weights of the largest layer (transposable,
+        // single copy — that is the point of the circulant storage)
+        let max_weights = net
+            .layers
+            .iter()
+            .map(|l| l.weight_elems() as u64)
+            .max()
+            .unwrap_or(0);
+        buffers.push(BufferSpec {
+            name: "weight".into(),
+            group: BufferGroup::Weight,
+            words: max_weights,
+            bits_per_word: bits,
+            double: false,
+        });
+
+        // weight-gradient accumulation tile (i32 words, double-buffered to
+        // overlap old-gradient reads — §IV-B)
+        let max_wg_tile = net
+            .layers
+            .iter()
+            .map(|l| match *l {
+                Layer::Conv { cin, k, .. } => {
+                    (dv.pof * cin * k * k) as u64
+                }
+                Layer::Fc { cin, .. } => (dv.pof * cin) as u64,
+                Layer::Pool { .. } => 0,
+            })
+            .max()
+            .unwrap_or(0);
+        buffers.push(BufferSpec {
+            name: "weight_grad".into(),
+            group: BufferGroup::WeightGradient,
+            words: max_wg_tile,
+            bits_per_word: 32,
+            double: dv.double_buffer,
+        });
+
+        // per-pool-layer index buffers (2 bits for 2x2 windows)
+        for l in &net.layers {
+            if let Layer::Pool { name, c, h, w, k } = l {
+                let idx_bits = ((k * k) as f64).log2().ceil() as u64;
+                buffers.push(BufferSpec {
+                    name: format!("idx_{name}"),
+                    group: BufferGroup::PoolIndex,
+                    words: (c * (h / k) * (w / k)) as u64,
+                    bits_per_word: idx_bits.max(1),
+                    double: false,
+                });
+            }
+        }
+
+        // per-relu-layer binary activation-gradient buffers
+        for l in &net.layers {
+            if let Layer::Conv { name, cout, h, w, relu: true, .. } = l {
+                buffers.push(BufferSpec {
+                    name: format!("mask_{name}"),
+                    group: BufferGroup::ActGradientMask,
+                    words: (cout * h * w) as u64,
+                    bits_per_word: 1,
+                    double: false,
+                });
+            }
+        }
+
+        BufferPlan { buffers }
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.buffers.iter().map(|b| b.bits()).sum()
+    }
+
+    pub fn total_mbits(&self) -> f64 {
+        self.total_bits() as f64 / 1e6
+    }
+
+    pub fn total_m20k(&self) -> u64 {
+        self.buffers.iter().map(|b| b.m20k_blocks()).sum()
+    }
+
+    /// Bits per Fig. 10 group.
+    pub fn bits_by_group(&self) -> Vec<(BufferGroup, u64)> {
+        use BufferGroup::*;
+        [Input, Output, Weight, WeightGradient, PoolIndex,
+         ActGradientMask]
+            .iter()
+            .map(|g| {
+                (
+                    *g,
+                    self.buffers
+                        .iter()
+                        .filter(|b| b.group == *g)
+                        .map(|b| b.bits())
+                        .sum(),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Double-buffering latency rule (§IV-B): with two copies the next tile's
+/// DMA overlaps the current tile's compute, so a layer's latency is
+/// max(logic, dram) + one pipeline fill; without it, logic + dram.
+pub fn overlap_latency(logic: u64, dram: u64, double_buffer: bool,
+                       fill: u64) -> u64 {
+    if double_buffer {
+        logic.max(dram) + fill
+    } else {
+        logic + dram
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+
+    #[test]
+    fn m20k_rounds_up() {
+        let b = BufferSpec {
+            name: "t".into(),
+            group: BufferGroup::Input,
+            words: 1,
+            bits_per_word: 16,
+            double: false,
+        };
+        assert_eq!(b.m20k_blocks(), 1);
+    }
+
+    #[test]
+    fn double_doubles_bits() {
+        let mut b = BufferSpec {
+            name: "t".into(),
+            group: BufferGroup::Input,
+            words: 100,
+            bits_per_word: 16,
+            double: false,
+        };
+        let single = b.bits();
+        b.double = true;
+        assert_eq!(b.bits(), 2 * single);
+    }
+
+    #[test]
+    fn plan_scales_with_network_width() {
+        let p1 = BufferPlan::plan(&Network::cifar(1),
+                                  &DesignVars::for_scale(1));
+        let p4 = BufferPlan::plan(&Network::cifar(4),
+                                  &DesignVars::for_scale(4));
+        assert!(p4.total_bits() > 2 * p1.total_bits());
+    }
+
+    #[test]
+    fn weight_buffer_holds_largest_layer() {
+        let net = Network::cifar(1);
+        let plan = BufferPlan::plan(&net, &DesignVars::for_scale(1));
+        let wbuf = plan
+            .buffers
+            .iter()
+            .find(|b| b.name == "weight")
+            .unwrap();
+        // largest 1X layer is c6: 64*64*9 = 36864 words
+        assert_eq!(wbuf.words, 36864);
+        assert!(!wbuf.double, "transposable buffer is single-copy");
+    }
+
+    #[test]
+    fn pool_index_width_is_2bit_for_2x2() {
+        let net = Network::cifar(1);
+        let plan = BufferPlan::plan(&net, &DesignVars::for_scale(1));
+        for b in &plan.buffers {
+            if b.group == BufferGroup::PoolIndex {
+                assert_eq!(b.bits_per_word, 2, "{}", b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table2_bram_order_of_magnitude() {
+        // paper Table II: 1X uses 10.6 Mbit of BRAM; our plan must land in
+        // the same regime (a few Mbit — most of Table II's figure is
+        // fitter-allocated overhead, so we check the order, not the value)
+        let plan = BufferPlan::plan(&Network::cifar(1),
+                                    &DesignVars::for_scale(1));
+        let mb = plan.total_mbits();
+        assert!(mb > 0.5 && mb < 12.0, "1X plan = {mb} Mbit");
+    }
+
+    #[test]
+    fn overlap_rule() {
+        assert_eq!(overlap_latency(100, 60, true, 5), 105);
+        assert_eq!(overlap_latency(100, 60, false, 5), 160);
+        assert_eq!(overlap_latency(60, 100, true, 0), 100);
+    }
+
+    #[test]
+    fn groups_cover_all_buffers() {
+        let net = Network::cifar(2);
+        let plan = BufferPlan::plan(&net, &DesignVars::for_scale(2));
+        let grouped: u64 =
+            plan.bits_by_group().iter().map(|(_, b)| b).sum();
+        assert_eq!(grouped, plan.total_bits());
+    }
+}

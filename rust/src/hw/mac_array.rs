@@ -1,0 +1,224 @@
+//! Cycle model of the 2D systolic MAC array (Fig. 6) and the MAC
+//! load-balance unit (§III-F, Fig. 8).
+//!
+//! The array computes `Pox * Poy * Pof` output pixels per cycle group:
+//! rows share input feature data, columns share weights.  It is reused in
+//! all three phases by re-routing operands (table in Fig. 6):
+//!
+//! | phase | input           | weights          | output           |
+//! |-------|-----------------|------------------|------------------|
+//! | FP    | activations     | normal kernels   | activations      |
+//! | BP    | local gradients | flipped kernels  | local gradients  |
+//! | WU    | activations     | local gradients  | kernel gradients |
+
+use crate::config::{DesignVars, Layer};
+
+/// Training phase (drives operand routing and the cycle formulas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Fp,
+    Bp,
+    Wu,
+}
+
+/// Logic-cycle count for one layer in one phase, plus achieved MAC
+/// utilization (fraction of array MACs doing useful work).
+#[derive(Debug, Clone, Copy)]
+pub struct LogicCost {
+    pub cycles: u64,
+    pub useful_macs: u64,
+    pub utilization: f64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// FP / BP convolution cycles: the loop nest is tiled by the unroll
+/// factors; every cycle retires up to Pox*Poy*Pof MACs.
+///
+/// cycles = ceil(Nof/Pof) * ceil(Noy/Poy) * ceil(Nox/Pox) * Nif * Nk^2
+pub fn conv_cycles(dv: &DesignVars, cin: usize, cout: usize, h: usize,
+                   w: usize, k: usize) -> LogicCost {
+    let steps = ceil_div(cout, dv.pof)
+        * ceil_div(h, dv.poy)
+        * ceil_div(w, dv.pox)
+        * cin
+        * k
+        * k;
+    let useful = (cout * h * w * cin * k * k) as u64;
+    let cycles = steps as u64;
+    LogicCost {
+        cycles,
+        useful_macs: useful,
+        utilization: useful as f64
+            / (cycles as f64 * dv.mac_count() as f64),
+    }
+}
+
+/// How many kernel-gradient planes the load-balance unit packs into the
+/// `Pox x Poy` spatial face of the array (Fig. 8: floor(Pox/Nkx) *
+/// floor(Poy/Nky); with Pox=Poy=8, k=3 this is 4 — the paper's "4X").
+pub fn wu_balance_factor(dv: &DesignVars, k: usize) -> usize {
+    ((dv.pox / k) * (dv.poy / k)).max(1)
+}
+
+/// WU convolution cycles (Eq. 4 as "FP conv with Nif=1" + outer loop over
+/// the actual Nif, §II).  The output feature map is only Nk x Nk, so
+/// without load balancing most of the spatial face idles; with it,
+/// `balance` (if) planes are processed concurrently.
+///
+/// cycles = ceil(Nof/Pof) * ceil(Nif/balance) * Noy * Nox
+pub fn wu_cycles(dv: &DesignVars, cin: usize, cout: usize, h: usize,
+                 w: usize, k: usize) -> LogicCost {
+    let balance = if dv.load_balance { wu_balance_factor(dv, k) } else { 1 };
+    let steps =
+        ceil_div(cout, dv.pof) * ceil_div(cin, balance) * h * w;
+    let useful = (cout * cin * k * k * h * w) as u64;
+    let cycles = steps as u64;
+    LogicCost {
+        cycles,
+        useful_macs: useful,
+        utilization: useful as f64
+            / (cycles as f64 * dv.mac_count() as f64),
+    }
+}
+
+/// Fully-connected cycles: the MAC array is fed as a flat dot-product
+/// engine; all three phases retire `mac_count` MACs per cycle at best.
+pub fn fc_cycles(dv: &DesignVars, cin: usize, cout: usize) -> LogicCost {
+    let macs = (cin * cout) as u64;
+    let cycles = macs.div_ceil(dv.mac_count() as u64);
+    LogicCost {
+        cycles,
+        useful_macs: macs,
+        utilization: macs as f64
+            / (cycles as f64 * dv.mac_count() as f64),
+    }
+}
+
+/// Pooling / upsampling cycles: one output pixel per cycle per channel
+/// lane (the upsampling unit has `Pof` demux+multiply blocks).
+pub fn pool_cycles(dv: &DesignVars, c: usize, h: usize, w: usize, k: usize)
+                   -> u64 {
+    (ceil_div(c, dv.pof) * (h / k) * (w / k)) as u64
+}
+
+/// Logic cycles for a layer in a phase (pool layers cost only in FP —
+/// index bookkeeping — and BP — upsampling); `None` when the phase does
+/// not visit the layer (e.g. BP through the first conv layer).
+pub fn layer_cycles(dv: &DesignVars, layer: &Layer, phase: Phase,
+                    is_first_conv: bool) -> Option<LogicCost> {
+    match (layer, phase) {
+        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Fp) => {
+            Some(conv_cycles(dv, *cin, *cout, *h, *w, *k))
+        }
+        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Bp) => {
+            if is_first_conv {
+                None
+            } else {
+                // if/of interchange: same loop volume
+                Some(conv_cycles(dv, *cout, *cin, *h, *w, *k))
+            }
+        }
+        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Wu) => {
+            Some(wu_cycles(dv, *cin, *cout, *h, *w, *k))
+        }
+        (Layer::Pool { c, h, w, k, .. }, Phase::Fp)
+        | (Layer::Pool { c, h, w, k, .. }, Phase::Bp) => {
+            let cycles = pool_cycles(dv, *c, *h, *w, *k);
+            Some(LogicCost { cycles, useful_macs: 0, utilization: 0.0 })
+        }
+        (Layer::Pool { .. }, Phase::Wu) => None,
+        (Layer::Fc { cin, cout, .. }, _) => Some(fc_cycles(dv, *cin, *cout)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dv1x() -> DesignVars {
+        DesignVars::for_scale(1)
+    }
+
+    #[test]
+    fn conv_cycles_exact_tiling() {
+        // c2 of 1X: 16->16 @32x32, k3, Pof=16 Pox=Poy=8
+        let c = conv_cycles(&dv1x(), 16, 16, 32, 32, 3);
+        assert_eq!(c.cycles, 1 * 4 * 4 * 16 * 9);
+        assert!((c.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_cycles_partial_tile_lowers_utilization() {
+        // cout 20 with Pof 16 -> 2 of-tiles, second mostly idle
+        let c = conv_cycles(&dv1x(), 16, 20, 32, 32, 3);
+        assert_eq!(c.cycles, 2 * 4 * 4 * 16 * 9);
+        assert!(c.utilization < 0.7);
+    }
+
+    #[test]
+    fn balance_factor_matches_paper_example() {
+        // Pox=Poy=8, k=3 -> 2*2 = 4 kernel gradients in parallel (Fig. 8)
+        assert_eq!(wu_balance_factor(&dv1x(), 3), 4);
+    }
+
+    #[test]
+    fn load_balance_speeds_wu_4x() {
+        let mut dv = dv1x();
+        dv.pof = 16;
+        let with = wu_cycles(&dv, 64, 64, 8, 8, 3);
+        dv.load_balance = false;
+        let without = wu_cycles(&dv, 64, 64, 8, 8, 3);
+        assert_eq!(without.cycles / with.cycles, 4);
+    }
+
+    #[test]
+    fn wu_cycle_formula() {
+        // c6 of 1X: 64->64 @8x8: ceil(64/16)*ceil(64/4)*64 = 4*16*64
+        let c = wu_cycles(&dv1x(), 64, 64, 8, 8, 3);
+        assert_eq!(c.cycles, 4 * 16 * 64);
+    }
+
+    #[test]
+    fn fc_cycles_rounds_up() {
+        let c = fc_cycles(&dv1x(), 1024, 10);
+        assert_eq!(c.cycles, (1024 * 10_u64).div_ceil(1024));
+    }
+
+    #[test]
+    fn bp_skips_first_conv() {
+        let l = Layer::Conv {
+            name: "c1".into(),
+            cin: 3,
+            cout: 16,
+            h: 32,
+            w: 32,
+            k: 3,
+            pad: 1,
+            stride: 1,
+            relu: true,
+        };
+        assert!(layer_cycles(&dv1x(), &l, Phase::Bp, true).is_none());
+        assert!(layer_cycles(&dv1x(), &l, Phase::Bp, false).is_some());
+    }
+
+    #[test]
+    fn bp_conv_same_volume_as_fp() {
+        let l = Layer::Conv {
+            name: "c4".into(),
+            cin: 32,
+            cout: 32,
+            h: 16,
+            w: 16,
+            k: 3,
+            pad: 1,
+            stride: 1,
+            relu: true,
+        };
+        let fp = layer_cycles(&dv1x(), &l, Phase::Fp, false).unwrap();
+        let bp = layer_cycles(&dv1x(), &l, Phase::Bp, false).unwrap();
+        assert_eq!(fp.cycles, bp.cycles);
+    }
+}

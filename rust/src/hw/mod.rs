@@ -1,0 +1,23 @@
+//! Hardware substrate models of the generated FPGA accelerator: the
+//! systolic MAC array with load balancing, the DDR3 DRAM channel + DMA
+//! engine, on-chip BRAM buffers with double buffering, the transposable
+//! circulant weight buffer, and resource/power estimation calibrated to
+//! the paper's Table II.
+//!
+//! These models implement the same dataflow equations the RTL executes,
+//! which is what the paper itself measures ("latency was measured using
+//! simulation of the synthesized accelerator", §IV-A).
+
+pub mod bram;
+pub mod dram;
+pub mod mac_array;
+pub mod power;
+pub mod resources;
+pub mod transpose_buffer;
+
+pub use bram::{overlap_latency, BufferGroup, BufferPlan, BufferSpec};
+pub use dram::{DmaDescriptor, DramModel, Traffic};
+pub use mac_array::{layer_cycles, LogicCost, Phase};
+pub use power::{power, PowerReport};
+pub use resources::{estimate, Device, ResourceReport, STRATIX10_GX};
+pub use transpose_buffer::TransposableBuffer;

@@ -1,0 +1,136 @@
+//! Activity-based power model, reproducing Table II's per-component watt
+//! breakdown (DSP / RAM / logic / clock / static).
+//!
+//! The paper obtains these from the Quartus power analyzer + Early Power
+//! Estimator with post-routing toggle data at 65 degC junction.  We fit
+//! each component as a power law of its driving quantity (DSP & clock on
+//! MAC count, RAM on BRAM Mbit, logic on ALMs, static on device
+//! utilization) through the 1X and 4X rows of Table II; the 2X row is a
+//! held-out prediction (within ~25% — the paper's own toggle-dependent
+//! spread).
+
+use crate::config::{DesignVars, Network};
+use crate::hw::resources::{estimate, Device, ResourceReport};
+
+/// Per-component power in watts (Table II columns).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerReport {
+    pub dsp_w: f64,
+    pub ram_w: f64,
+    pub logic_w: f64,
+    pub clock_w: f64,
+    pub static_w: f64,
+}
+
+impl PowerReport {
+    pub fn total(&self) -> f64 {
+        self.dsp_w + self.ram_w + self.logic_w + self.clock_w
+            + self.static_w
+    }
+
+    pub fn dynamic(&self) -> f64 {
+        self.total() - self.static_w
+    }
+}
+
+// DSP W = A * macs^B through (1024, 0.58) and (4096, 3.48).
+const A_DSP_W: f64 = 7.4625e-5;
+const B_DSP_W: f64 = 1.2925;
+
+// RAM W = A * mbits^B through (10.6, 5.7) and (54.5, 14.6).
+const A_RAM_W: f64 = 1.4656;
+const B_RAM_W: f64 = 0.5747;
+
+// Logic W = A * alms^B through (20.8e3, 2.4) and (72e3, 11.0).
+const A_LOGIC_W: f64 = 1.2405e-5;
+const B_LOGIC_W: f64 = 1.2259;
+
+// Clock W = A * macs^B through (1024, 1.68) and (4096, 4.95).
+const A_CLOCK_W: f64 = 7.6420e-3;
+const B_CLOCK_W: f64 = 0.7792;
+
+// Static W = base + slope * dsp_utilization through (0.30, 10.28)
+// and (1.00, 16.47).
+const STATIC_BASE_W: f64 = 7.6271;
+const STATIC_SLOPE_W: f64 = 8.8429;
+
+/// Power estimate from a resource report.
+pub fn power_from_resources(dv: &DesignVars, res: &ResourceReport)
+                            -> PowerReport {
+    let macs = dv.mac_count() as f64;
+    // scale dynamic power with clock relative to the calibration 240 MHz
+    let fclk = dv.clock_mhz / 240.0;
+    PowerReport {
+        dsp_w: A_DSP_W * macs.powf(B_DSP_W) * fclk,
+        ram_w: A_RAM_W * res.bram_mbits.powf(B_RAM_W) * fclk,
+        logic_w: A_LOGIC_W * (res.alm as f64).powf(B_LOGIC_W) * fclk,
+        clock_w: A_CLOCK_W * macs.powf(B_CLOCK_W) * fclk,
+        static_w: STATIC_BASE_W + STATIC_SLOPE_W * res.dsp_frac,
+    }
+}
+
+/// Convenience: full estimate for a network + design point.
+pub fn power(net: &Network, dv: &DesignVars, device: &Device)
+             -> PowerReport {
+    let res = estimate(net, dv, device);
+    power_from_resources(dv, &res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+    use crate::hw::resources::STRATIX10_GX;
+
+    fn report(scale: usize) -> PowerReport {
+        power(&Network::cifar(scale), &DesignVars::for_scale(scale),
+              &STRATIX10_GX)
+    }
+
+    #[test]
+    fn calibration_points_reproduce_table2() {
+        let p1 = report(1);
+        assert!((p1.dsp_w - 0.58).abs() < 0.03, "1X dsp {}", p1.dsp_w);
+        assert!((p1.clock_w - 1.68).abs() < 0.05, "1X clk {}", p1.clock_w);
+        assert!((p1.static_w - 10.28).abs() < 0.15,
+                "1X static {}", p1.static_w);
+        let p4 = report(4);
+        assert!((p4.dsp_w - 3.48).abs() < 0.1, "4X dsp {}", p4.dsp_w);
+        assert!((p4.static_w - 16.47).abs() < 0.2,
+                "4X static {}", p4.static_w);
+    }
+
+    #[test]
+    fn held_out_2x_total_within_30pct() {
+        // Table II 2X total: 1.05+11.2+6.6+2.97+11 = 32.8 W
+        let p2 = report(2);
+        let err = (p2.total() - 32.8).abs() / 32.8;
+        assert!(err < 0.30, "2X total {} ({:.0}% off)", p2.total(),
+                err * 100.0);
+    }
+
+    #[test]
+    fn totals_monotone_in_scale() {
+        let (p1, p2, p4) = (report(1), report(2), report(4));
+        assert!(p1.total() < p2.total());
+        assert!(p2.total() < p4.total());
+    }
+
+    #[test]
+    fn table2_total_shape_1x_4x() {
+        // 1X total 20.64 W; 4X total 50.5 W — ~2.4x apart
+        let ratio = report(4).total() / report(1).total();
+        assert!(ratio > 1.8 && ratio < 3.2, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn clock_scaling_reduces_dynamic_power() {
+        let net = Network::cifar(1);
+        let mut dv = DesignVars::for_scale(1);
+        let full = power(&net, &dv, &STRATIX10_GX);
+        dv.clock_mhz = 120.0;
+        let half = power(&net, &dv, &STRATIX10_GX);
+        assert!((half.dynamic() - full.dynamic() / 2.0).abs() < 0.05);
+        assert!((half.static_w - full.static_w).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! # stratus — compiler-based FPGA CNN-training accelerator, reproduced
+//!
+//! Reproduction of *"Automatic Compiler Based FPGA Accelerator for CNN
+//! Training"* (Venkataramanaiah et al., 2019) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's system contribution: the RTL
+//!   compiler ([`compiler`]), the accelerator's global control and
+//!   layer-by-layer training schedule ([`coordinator`]), a cycle-accurate
+//!   hardware model of the generated accelerator ([`hw`], [`sim`]), and a
+//!   PJRT runtime that executes the AOT-compiled numerics ([`runtime`]).
+//! - **Layer 2 (python/compile/model.py, build-time)** — the fixed-point
+//!   CNN training step in JAX, lowered per layer-op to HLO text artifacts.
+//! - **Layer 1 (python/compile/kernels/, build-time)** — Pallas kernels
+//!   tiled like the paper's `Pox x Poy x Pof` MAC array.
+//!
+//! Python never runs at request time: `make artifacts` lowers everything
+//! once; the `stratus` binary is self-contained afterwards.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! (every table and figure of the paper mapped to a bench target).
+
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod gpu_model;
+pub mod hw;
+pub mod jsonx;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod sim;

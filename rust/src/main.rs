@@ -1,0 +1,322 @@
+//! `stratus` — CLI for the compiler-based FPGA CNN-training accelerator.
+//!
+//! Subcommands:
+//!   compile   run the RTL compiler on a network, print the design report
+//!   simulate  cycle-simulate a design point (Table II style numbers)
+//!   train     train a CNN through the coordinator (golden/perop/fused)
+//!   report    regenerate a paper table/figure (table2|table3|fig9|fig10)
+//!
+//! Run `stratus` with no arguments for usage.  (The offline build
+//! environment vendors no CLI crates, so argument parsing is manual.)
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use stratus::compiler::{calibrate, RtlCompiler};
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+use stratus::metrics;
+use stratus::sim::simulate;
+
+/// Minimal flag parser: `--key value` pairs plus positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), argv[i + 1].clone()));
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags, switches }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} wants an integer")),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} wants a number")),
+        }
+    }
+}
+
+fn load_network(args: &Args) -> Result<Network> {
+    if let Some(file) = args.get("net") {
+        let text = std::fs::read_to_string(file)
+            .with_context(|| format!("reading {file}"))?;
+        return Network::parse(&text);
+    }
+    let scale = args.get_or("scale", "1x");
+    let s = match scale.as_str() {
+        "1x" | "1" => 1,
+        "2x" | "2" => 2,
+        "4x" | "4" => 4,
+        other => bail!("unknown scale `{other}` (use 1x|2x|4x or --net)"),
+    };
+    Ok(Network::cifar(s))
+}
+
+fn design_vars(args: &Args, net: &Network) -> Result<DesignVars> {
+    let scale = match net.scale_tag() {
+        "4x" => 4,
+        "2x" => 2,
+        _ => 1,
+    };
+    let mut dv = DesignVars::for_scale(scale);
+    dv.pox = args.usize_or("pox", dv.pox)?;
+    dv.poy = args.usize_or("poy", dv.poy)?;
+    dv.pof = args.usize_or("pof", dv.pof)?;
+    dv.clock_mhz = args.f64_or("clock-mhz", dv.clock_mhz)?;
+    dv.dram_gbytes = args.f64_or("dram-gbs", dv.dram_gbytes)?;
+    dv.tile_rows = args.usize_or("tile-rows", dv.tile_rows)?;
+    if args.has("no-load-balance") {
+        dv.load_balance = false;
+    }
+    if args.has("no-double-buffer") {
+        dv.double_buffer = false;
+    }
+    Ok(dv)
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let net = load_network(args)?;
+    let dv = design_vars(args, &net)?;
+    let acc = RtlCompiler::default().compile(&net, &dv)?;
+    println!("== stratus RTL compiler ==");
+    println!("network        : {} ({} layers, {} parameters)",
+             net.name, net.layers.len(), net.param_count());
+    println!("MAC array      : {}x{}x{} = {} MACs @ {} MHz",
+             dv.pox, dv.poy, dv.pof, dv.mac_count(), dv.clock_mhz);
+    println!("modules        : {}",
+             acc.modules
+                 .iter()
+                 .map(|m| m.entity())
+                 .collect::<Vec<_>>()
+                 .join(", "));
+    let r = &acc.resources;
+    println!("resources      : {} DSP ({:.0}%), {:.1}K ALM ({:.0}%), \
+              {:.1} Mbit BRAM ({:.1}%)",
+             r.dsp, r.dsp_frac * 100.0, r.alm as f64 / 1e3,
+             r.alm_frac * 100.0, r.bram_mbits, r.bram_frac * 100.0);
+    println!("power          : {:.1} W total ({:.2} dsp / {:.1} ram / \
+              {:.1} logic / {:.2} clock / {:.2} static)",
+             acc.power.total(), acc.power.dsp_w, acc.power.ram_w,
+             acc.power.logic_w, acc.power.clock_w, acc.power.static_w);
+    println!("schedule       : {} per-image steps, {} per-batch steps",
+             acc.schedule.per_image.len(), acc.schedule.per_batch.len());
+    println!("DRAM traffic   : {:.2} MB/image, {:.2} MB/batch-update",
+             acc.schedule.image_bytes() as f64 / 1e6,
+             acc.schedule.batch_bytes() as f64 / 1e6);
+    if let Some(out) = args.get("emit-verilog") {
+        let v = RtlCompiler::default().verilog(&acc);
+        std::fs::write(out, &v)
+            .with_context(|| format!("writing {out}"))?;
+        println!("netlist        : wrote {} bytes to {out}", v.len());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = load_network(args)?;
+    let dv = design_vars(args, &net)?;
+    let bs = args.usize_or("batch", 40)?;
+    let acc = RtlCompiler::default().compile(&net, &dv)?;
+    let r = simulate(&acc, bs);
+    println!("== cycle simulation: {} @ BS {bs} ==", net.name);
+    println!("{:<8} {:>12} {:>12} {:>12}", "phase", "logic cyc",
+             "dram cyc", "latency cyc");
+    for (name, p) in [("FP", &r.fp), ("BP", &r.bp), ("WU", &r.wu),
+                      ("UPDATE", &r.update)] {
+        println!("{:<8} {:>12} {:>12} {:>12}", name, p.logic_cycles,
+                 p.dram_cycles, p.latency_cycles);
+    }
+    println!("per image      : {:.0} cycles = {:.3} ms",
+             r.cycles_per_image(), r.seconds_per_image() * 1e3);
+    println!("epoch (50k)    : {:.2} s",
+             r.seconds_per_epoch(metrics::EPOCH_IMAGES));
+    println!("throughput     : {:.0} GOPS", r.gops());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let net = load_network(args)?;
+    let dv = design_vars(args, &net)?;
+    let batch = args.usize_or("batch", 40)?;
+    let epochs = args.usize_or("epochs", 5)?;
+    let images = args.usize_or("images", 512)?;
+    let eval_n = args.usize_or("eval", 256)?;
+    let lr = args.f64_or("lr", 0.002)?;
+    let momentum = args.f64_or("momentum", 0.9)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let backend = match args.get_or("backend", "golden").as_str() {
+        "golden" => Backend::Golden,
+        "perop" | "per-op" => Backend::PerOp,
+        "fused" => Backend::Fused,
+        other => bail!("unknown backend `{other}`"),
+    };
+    let artifacts: Option<PathBuf> =
+        Some(PathBuf::from(args.get_or("artifacts", "artifacts")));
+    let mut t = Trainer::new(&net, &dv, batch, lr, momentum, backend,
+                             artifacts.as_deref())?;
+    let data = Synthetic::new(net.nclass, net.input, seed, 0.3);
+    let train: Vec<_> = data.batch(0, images);
+    let test: Vec<_> = data.batch(1_000_000, eval_n);
+    println!("== training {} ({:?} backend, {} images, BS {batch}) ==",
+             net.name, backend, images);
+    for epoch in 0..epochs {
+        let mut loss_sum = 0.0;
+        let mut nb = 0;
+        for chunk in train.chunks(batch) {
+            loss_sum += t.train_batch(chunk)?;
+            nb += 1;
+        }
+        let acc_tr = t.evaluate(&train)?;
+        let acc_te = t.evaluate(&test)?;
+        println!(
+            "epoch {:>3}: loss {:>10.1}  train-acc {:>5.1}%  \
+             test-acc {:>5.1}%  sim {:>8.2}s  host {:>6.1}s",
+            epoch + 1,
+            loss_sum / nb as f64,
+            acc_tr * 100.0,
+            acc_te * 100.0,
+            t.metrics.sim_seconds(dv.clock_mhz * 1e6),
+            t.metrics.host_seconds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    // adaptive fixed-point calibration pass (paper §IV-B extension)
+    let net = load_network(args)?;
+    let n = args.usize_or("samples", 16)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+    let params = stratus::nn::init::init_params(&net, 1234);
+    let (c, h, w) = net.input;
+    let data = stratus::data::Synthetic::new(net.nclass, (c, h, w), seed,
+                                             0.3);
+    let samples = data.batch(0, n);
+    let report = calibrate(&net, &params, &samples)?;
+    println!("== adaptive fixed-point calibration: {} ({} samples) ==",
+             net.name, report.samples);
+    print!("{}", report.render());
+    let mism = report.act_mismatches().len();
+    println!("\n{mism} layer(s) would benefit from a non-default \
+              activation format (static Q{}.{})",
+             15 - stratus::fixed::FA, stratus::fixed::FA);
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let mut any = false;
+    if which == "table2" || which == "all" {
+        println!("== Table II: accelerator evaluation ==\n{}",
+                 metrics::table2());
+        any = true;
+    }
+    if which == "table3" || which == "all" {
+        println!("== Table III: FPGA vs Titan XP ==\n{}",
+                 metrics::table3());
+        any = true;
+    }
+    if which == "fig9" || which == "all" {
+        println!("== Fig. 9: 4X latency breakdown ==\n{}",
+                 metrics::fig9());
+        any = true;
+    }
+    if which == "fig10" || which == "all" {
+        println!("== Fig. 10: 4X buffer usage ==\n{}", metrics::fig10());
+        any = true;
+    }
+    if !any {
+        bail!("unknown report `{which}` \
+               (table2|table3|fig9|fig10|all)");
+    }
+    Ok(())
+}
+
+const USAGE: &str = "\
+stratus — compiler-based FPGA CNN-training accelerator (reproduction)
+
+USAGE: stratus <command> [flags]
+
+COMMANDS:
+  compile   --scale 1x|2x|4x | --net FILE   run the RTL compiler
+            [--pox N --poy N --pof N --clock-mhz F --emit-verilog OUT]
+            [--no-load-balance --no-double-buffer]
+  simulate  --scale .. --batch N            cycle-level simulation
+  train     --scale .. --backend golden|perop|fused --images N
+            --epochs N --batch N --lr F [--artifacts DIR --eval N]
+  report    table2|table3|fig9|fig10|all    regenerate paper outputs
+  calibrate --scale .. --samples N          adaptive fixed-point pass
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(String::as_str);
+    let result = match cmd {
+        Some("compile") => cmd_compile(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("train") => cmd_train(&args),
+        Some("report") => cmd_report(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        _ => Err(anyhow!("{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        exit(1);
+    }
+}

@@ -1,0 +1,218 @@
+//! Report generation: renders the paper's tables and figures from
+//! simulation / GPU-model / resource outputs as aligned text tables
+//! (consumed by the CLI `report` subcommand and the bench harnesses, and
+//! pasted into EXPERIMENTS.md).
+
+use crate::compiler::{Accelerator, RtlCompiler};
+use crate::config::{DesignVars, Network};
+use crate::gpu_model::titan_xp;
+use crate::hw::bram::BufferPlan;
+use crate::sim::{simulate, SimReport};
+
+/// CIFAR-10 training-set size used for epoch latencies (Table II).
+pub const EPOCH_IMAGES: u64 = 50_000;
+
+/// Render a simple aligned table.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> =
+        header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        line
+    };
+    let hdr: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&"-".repeat(w + 2));
+        out.push('|');
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+fn compile(scale: usize) -> Accelerator {
+    RtlCompiler::default()
+        .compile(&Network::cifar(scale), &DesignVars::for_scale(scale))
+        .expect("paper configs always compile")
+}
+
+/// Table II: resources, power, latency/epoch at BS 10/20/40, GOPS.
+pub fn table2() -> String {
+    let header = [
+        "CNN", "DSP", "ALM", "BRAM(Mb)", "P.dsp", "P.ram", "P.logic",
+        "P.clk", "P.static", "BS-10(s)", "BS-20(s)", "BS-40(s)", "GOPS",
+    ];
+    let mut rows = Vec::new();
+    for scale in [1, 2, 4] {
+        let acc = compile(scale);
+        let r = &acc.resources;
+        let p = &acc.power;
+        let epochs: Vec<f64> = [10, 20, 40]
+            .iter()
+            .map(|&bs| simulate(&acc, bs).seconds_per_epoch(EPOCH_IMAGES))
+            .collect();
+        let gops = simulate(&acc, 40).gops();
+        rows.push(vec![
+            format!("CIFAR-10 {scale}X"),
+            format!("{} ({:.0}%)", r.dsp, r.dsp_frac * 100.0),
+            format!("{:.1}K ({:.0}%)", r.alm as f64 / 1e3,
+                    r.alm_frac * 100.0),
+            format!("{:.1} ({:.1}%)", r.bram_mbits, r.bram_frac * 100.0),
+            format!("{:.2}", p.dsp_w),
+            format!("{:.1}", p.ram_w),
+            format!("{:.1}", p.logic_w),
+            format!("{:.2}", p.clock_w),
+            format!("{:.2}", p.static_w),
+            format!("{:.2}", epochs[0]),
+            format!("{:.2}", epochs[1]),
+            format!("{:.2}", epochs[2]),
+            format!("{:.0}", gops),
+        ]);
+    }
+    render_table(&header, &rows)
+}
+
+/// Table III: FPGA vs Titan XP throughput and efficiency at BS 1 / 40.
+pub fn table3() -> String {
+    let header = [
+        "CNN", "GPU B1 GOPS", "GPU B40 GOPS", "FPGA GOPS",
+        "GPU B1 GOPS/W", "GPU B40 GOPS/W", "FPGA GOPS/W",
+    ];
+    let mut rows = Vec::new();
+    for scale in [1, 2, 4] {
+        let acc = compile(scale);
+        let net = Network::cifar(scale);
+        let fpga = simulate(&acc, 40);
+        let fpga_gops = fpga.gops();
+        let fpga_w = acc.power.total();
+        let g1 = titan_xp(&net, 1);
+        let g40 = titan_xp(&net, 40);
+        rows.push(vec![
+            format!("CIFAR-10 {scale}X"),
+            format!("{:.2}", g1.gops),
+            format!("{:.2}", g40.gops),
+            format!("{:.0}", fpga_gops),
+            format!("{:.2}", g1.efficiency()),
+            format!("{:.2}", g40.efficiency()),
+            format!("{:.2}", fpga_gops / fpga_w),
+        ]);
+    }
+    render_table(&header, &rows)
+}
+
+/// Fig. 9: latency breakdown of the 4X CNN by phase, logic vs DRAM.
+pub fn fig9() -> String {
+    let acc = compile(4);
+    let r: SimReport = simulate(&acc, 40);
+    let header = ["Phase", "Logic (ms)", "DRAM (ms)", "Latency (ms)",
+                  "% of iter"];
+    let total: f64 =
+        r.breakdown_ms().iter().map(|(_, _, _, l)| l).sum();
+    let rows: Vec<Vec<String>> = r
+        .breakdown_ms()
+        .iter()
+        .map(|(phase, logic, dram, lat)| {
+            vec![
+                phase.to_string(),
+                format!("{logic:.3}"),
+                format!("{dram:.3}"),
+                format!("{lat:.3}"),
+                format!("{:.1}%", lat / total * 100.0),
+            ]
+        })
+        .collect();
+    render_table(&header, &rows)
+}
+
+/// Fig. 10: buffer usage breakdown of the 4X design.
+pub fn fig10() -> String {
+    let net = Network::cifar(4);
+    let dv = DesignVars::for_scale(4);
+    let plan = BufferPlan::plan(&net, &dv);
+    let header = ["Buffer group", "Kbit", "% of on-chip"];
+    let total = plan.total_bits() as f64;
+    let rows: Vec<Vec<String>> = plan
+        .bits_by_group()
+        .iter()
+        .map(|(g, bits)| {
+            vec![
+                format!("{g:?}"),
+                format!("{:.1}", *bits as f64 / 1e3),
+                format!("{:.1}%", *bits as f64 / total * 100.0),
+            ]
+        })
+        .collect();
+    render_table(&header, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let t = render_table(&["a", "bb"],
+                             &[vec!["xxx".into(), "y".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn table2_has_three_rows() {
+        let t = table2();
+        assert!(t.contains("CIFAR-10 1X"));
+        assert!(t.contains("CIFAR-10 4X"));
+        assert_eq!(t.lines().count(), 5);
+    }
+
+    #[test]
+    fn table3_fpga_wins_b1_efficiency() {
+        // the paper's headline: FPGA efficiency beats GPU at batch 1
+        let t = table3();
+        assert!(t.contains("CIFAR-10 2X"));
+        assert_eq!(t.lines().count(), 5);
+    }
+
+    #[test]
+    fn fig9_percentages_sum_to_100() {
+        let t = fig9();
+        let sum: f64 = t
+            .lines()
+            .skip(2)
+            .filter_map(|l| {
+                l.split('|')
+                    .nth(5)
+                    .and_then(|c| c.trim().trim_end_matches('%')
+                              .parse::<f64>().ok())
+            })
+            .sum();
+        assert!((sum - 100.0).abs() < 0.5, "sum = {sum}");
+    }
+
+    #[test]
+    fn fig10_has_all_groups() {
+        let t = fig10();
+        for g in ["Input", "Output", "Weight", "WeightGradient",
+                  "PoolIndex", "ActGradientMask"] {
+            assert!(t.contains(g), "{g} missing");
+        }
+    }
+}

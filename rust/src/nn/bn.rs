@@ -1,0 +1,228 @@
+//! Integer batch normalization — the second extension the paper names
+//! (§IV-B, after FxpNet [22]): a normalization unit implementable in the
+//! same 16-bit datapath.
+//!
+//! Hardware-friendly formulation (matching how integer-BN RTL is built):
+//! running per-channel statistics are maintained with fixed-point EMA
+//! updates; the forward pass normalizes with a *precomputed integer
+//! scale* `s = gamma / sqrt(var + eps)` quantized to Q2.14 and a shifted
+//! add for beta, so the datapath is one multiply + shift + add per pixel
+//! — no division or square root in the loop (those happen once per
+//! statistics refresh, off the critical path).  The backward pass treats
+//! the statistics as constants (the usual cheap-hardware BN
+//! simplification): dL/dx = dL/dy * s.
+
+use crate::fixed::{dequantize, quantize, requant, sat16, FA};
+use crate::nn::tensor::Tensor;
+
+/// Fraction bits of the normalization scale.
+pub const FS: u32 = 14;
+
+/// Per-channel integer BN state.
+#[derive(Debug, Clone)]
+pub struct IntBatchNorm {
+    /// Running mean at FA.
+    pub mean: Vec<i32>,
+    /// Running variance at 2*FA (variance of FA-scaled values).
+    pub var: Vec<i32>,
+    /// Learnable gain at FS.
+    pub gamma: Vec<i32>,
+    /// Learnable shift at FA.
+    pub beta: Vec<i32>,
+    /// Precomputed integer scale gamma/sqrt(var+eps) at FS.
+    scale: Vec<i32>,
+    /// EMA momentum as Q15 (e.g. 0.9 -> 29491).
+    pub ema_q15: i32,
+}
+
+impl IntBatchNorm {
+    pub fn new(channels: usize, ema: f64) -> IntBatchNorm {
+        let mut bn = IntBatchNorm {
+            mean: vec![0; channels],
+            var: vec![1 << (2 * FA); channels], // var = 1.0
+            gamma: vec![1 << FS; channels],
+            beta: vec![0; channels],
+            scale: vec![0; channels],
+            ema_q15: (ema * f64::from(1 << 15)).round() as i32,
+        };
+        bn.refresh_scale();
+        bn
+    }
+
+    /// Recompute the integer scales from the running statistics (done
+    /// once per refresh, off the per-pixel critical path).
+    pub fn refresh_scale(&mut self) {
+        for c in 0..self.mean.len() {
+            let var = dequantize(self.var[c], 2 * FA).max(0.0) + 1e-5;
+            let gamma = dequantize(self.gamma[c], FS);
+            self.scale[c] = quantize(gamma / var.sqrt(), FS);
+        }
+    }
+
+    /// Update running statistics from one (C, H, W) activation tensor
+    /// (per-image EMA — images stream one at a time on the accelerator).
+    pub fn observe(&mut self, x: &Tensor) {
+        let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        assert_eq!(c, self.mean.len());
+        let n = (h * w) as i64;
+        for ci in 0..c {
+            let base = ci * h * w;
+            let mut sum: i64 = 0;
+            for &v in &x.data()[base..base + h * w] {
+                sum += i64::from(v);
+            }
+            let mean = (sum / n) as i32; // at FA
+            let mut var_acc: i64 = 0;
+            for &v in &x.data()[base..base + h * w] {
+                let d = i64::from(v - mean);
+                var_acc += d * d; // at 2*FA
+            }
+            let var = (var_acc / n)
+                .clamp(0, i64::from(i32::MAX)) as i32;
+            // EMA: s = m*s + (1-m)*new, all Q15 arithmetic
+            let m = i64::from(self.ema_q15);
+            let one_m = (1i64 << 15) - m;
+            self.mean[ci] = ((m * i64::from(self.mean[ci])
+                + one_m * i64::from(mean))
+                >> 15) as i32;
+            self.var[ci] = ((m * i64::from(self.var[ci])
+                + one_m * i64::from(var))
+                >> 15) as i32;
+        }
+        self.refresh_scale();
+    }
+
+    /// Forward: y = (x - mean) * scale >> FS + beta, per channel.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let mut out = Tensor::zeros(x.shape());
+        let od = out.data_mut();
+        for ci in 0..c {
+            let base = ci * h * w;
+            let (mu, s, b) =
+                (self.mean[ci], self.scale[ci], self.beta[ci]);
+            for (o, &v) in od[base..base + h * w]
+                .iter_mut()
+                .zip(&x.data()[base..base + h * w])
+            {
+                let centered = v.wrapping_sub(mu);
+                *o = sat16(
+                    requant(centered.wrapping_mul(s), FS)
+                        .wrapping_add(b),
+                );
+            }
+        }
+        out
+    }
+
+    /// Backward (statistics-as-constants): dL/dx = dL/dy * scale >> FS.
+    pub fn backward(&self, g: &Tensor) -> Tensor {
+        let (c, h, w) = (g.shape()[0], g.shape()[1], g.shape()[2]);
+        let mut out = Tensor::zeros(g.shape());
+        let od = out.data_mut();
+        for ci in 0..c {
+            let base = ci * h * w;
+            let s = self.scale[ci];
+            for (o, &v) in od[base..base + h * w]
+                .iter_mut()
+                .zip(&g.data()[base..base + h * w])
+            {
+                *o = requant(v.wrapping_mul(s), FS);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{randi, Lcg};
+
+    #[test]
+    fn identity_at_init_for_unit_variance_data() {
+        // fresh BN has mean 0, var 1, gamma 1, beta 0: y ~= x for data
+        // that actually has those statistics
+        let bn = IntBatchNorm::new(2, 0.9);
+        let x = Tensor::from_vec(&[2, 1, 2],
+                                 vec![256, -256, 128, -128]);
+        let y = bn.forward(&x);
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert!((a - b).abs() <= 2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn normalizes_shifted_scaled_data() {
+        let mut bn = IntBatchNorm::new(1, 0.0); // ema 0: adopt stats fully
+        let mut rng = Lcg::new(4);
+        // data ~ N(4.0, 2.0) at FA
+        let mut x = randi(&mut rng, &[1, 16, 16], 512);
+        for v in x.data_mut() {
+            *v += 4 * 256;
+        }
+        bn.observe(&x);
+        let y = bn.forward(&x);
+        // output mean ~ 0, std ~ 1 (in FA units)
+        let mean: f64 = y.data().iter().map(|&v| f64::from(v)).sum::<f64>()
+            / y.len() as f64;
+        assert!(mean.abs() < 16.0, "mean = {mean}");
+        let var: f64 = y
+            .data()
+            .iter()
+            .map(|&v| (f64::from(v) - mean).powi(2))
+            .sum::<f64>()
+            / y.len() as f64;
+        let std_fa = var.sqrt() / 256.0;
+        assert!((std_fa - 1.0).abs() < 0.15, "std = {std_fa}");
+    }
+
+    #[test]
+    fn gamma_beta_apply() {
+        let mut bn = IntBatchNorm::new(1, 0.0);
+        bn.gamma = vec![2 << FS];
+        bn.beta = vec![3 * 256];
+        bn.refresh_scale();
+        // with mean 0 / var 1: y = 2x + 3
+        let x = Tensor::from_vec(&[1, 1, 2], vec![256, -256]);
+        let y = bn.forward(&x);
+        assert!((y.data()[0] - (2 * 256 + 3 * 256)).abs() <= 4);
+        assert!((y.data()[1] - (-2 * 256 + 3 * 256)).abs() <= 4);
+    }
+
+    #[test]
+    fn backward_scales_gradient() {
+        let mut bn = IntBatchNorm::new(1, 0.0);
+        bn.gamma = vec![2 << FS];
+        bn.refresh_scale();
+        let g = Tensor::from_vec(&[1, 1, 2], vec![100, -50]);
+        let gx = bn.backward(&g);
+        assert!((gx.data()[0] - 200).abs() <= 1);
+        assert!((gx.data()[1] + 100).abs() <= 1);
+    }
+
+    #[test]
+    fn ema_converges_to_stream_statistics() {
+        let mut bn = IntBatchNorm::new(1, 0.7);
+        let mut rng = Lcg::new(5);
+        for _ in 0..50 {
+            let mut x = randi(&mut rng, &[1, 8, 8], 256);
+            for v in x.data_mut() {
+                *v += 512; // mean 2.0 at FA
+            }
+            bn.observe(&x);
+        }
+        let mean_fa = f64::from(bn.mean[0]) / 256.0;
+        assert!((mean_fa - 2.0).abs() < 0.2, "mean = {mean_fa}");
+    }
+
+    #[test]
+    fn saturates_not_wraps() {
+        let mut bn = IntBatchNorm::new(1, 0.0);
+        bn.gamma = vec![100 << FS]; // absurd gain
+        bn.refresh_scale();
+        let x = Tensor::from_vec(&[1, 1, 1], vec![30000]);
+        let y = bn.forward(&x);
+        assert_eq!(y.data()[0], 32767);
+    }
+}

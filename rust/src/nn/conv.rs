@@ -1,0 +1,231 @@
+//! Golden-model convolutions — the bit-exact rust mirror of
+//! `python/compile/kernels/ref.py` (Eqs. 1, 3, 4 of the paper).
+//!
+//! These run the same i32 wrap-around accumulation and round-half-up
+//! requantization as the lowered Pallas kernels, so outputs from the PJRT
+//! artifacts and from this module are identical integers.
+
+use crate::fixed::{requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE};
+use crate::nn::tensor::Tensor;
+
+/// FP convolution, Eq. (1): stride 1, square kernel, zero padding.
+///
+/// `x`: (Nif, H, W) at FA; `w`: (Nof, Nif, K, K) at FW; `b`: (Nof,) at
+/// FA+FW.  Returns (Nof, H, W) at FA (post-ReLU if `relu`).
+pub fn conv_fp(x: &Tensor, w: &Tensor, b: &[i32], pad: usize, relu: bool,
+               shift: u32) -> Tensor {
+    let (nof, nif, k) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+    assert_eq!(x.shape()[0], nif, "input channel mismatch");
+    assert_eq!(b.len(), nof);
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let (oh, ow) = (hp - k + 1, wp - k + 1);
+    let mut out = Tensor::zeros(&[nof, oh, ow]);
+    let xd = xp.data();
+    let od = out.data_mut();
+    // Weight-stationary loop order (§Perf): for each scalar tap, stream a
+    // contiguous input row into a contiguous accumulator row — the inner
+    // loop auto-vectorizes, ~8x over the naive per-pixel loop nest.
+    let mut acc = vec![0i32; oh * ow];
+    for of in 0..nof {
+        acc.fill(b[of]);
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let wt = w.at4(of, ci, ky, kx);
+                    if wt == 0 {
+                        continue;
+                    }
+                    for oy in 0..oh {
+                        let xrow = (ci * hp + oy + ky) * wp + kx;
+                        let arow = oy * ow;
+                        let xs = &xd[xrow..xrow + ow];
+                        let ac = &mut acc[arow..arow + ow];
+                        for (a, &xv) in ac.iter_mut().zip(xs) {
+                            *a = a.wrapping_add(wt.wrapping_mul(xv));
+                        }
+                    }
+                }
+            }
+        }
+        let orow = of * oh * ow;
+        for (o, &a) in od[orow..orow + oh * ow].iter_mut().zip(&acc) {
+            let mut v = requant(a, shift);
+            if relu && v < 0 {
+                v = 0;
+            }
+            *o = v;
+        }
+    }
+    out
+}
+
+/// Convenience: FP conv with the standard activation requantization.
+pub fn conv_fp_std(x: &Tensor, w: &Tensor, b: &[i32], relu: bool) -> Tensor {
+    conv_fp(x, w, b, (w.shape()[2] - 1) / 2, relu, SHIFT_CONV_FP)
+}
+
+/// The transposable-buffer access pattern (Fig. 5) in index space:
+/// interchange if/of and rotate the taps 180 degrees.
+pub fn transpose_flip(w: &Tensor) -> Tensor {
+    let (nof, nif, kh, kw) =
+        (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    let mut out = Tensor::zeros(&[nif, nof, kh, kw]);
+    for of in 0..nof {
+        for ci in 0..nif {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    out.set4(ci, of, kh - 1 - ky, kw - 1 - kx,
+                             w.at4(of, ci, ky, kx));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// BP convolution, Eq. (3): local gradients of layer l from those of
+/// layer l+1 through the 180-degree-rotated, if/of-interchanged kernels.
+pub fn conv_bp(g: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let wt = transpose_flip(w);
+    let zeros = vec![0i32; wt.shape()[0]];
+    conv_fp(g, &wt, &zeros, pad, false, SHIFT_CONV_BP)
+}
+
+/// WU convolution, Eq. (4): kernel gradients (Nof, Nif, K, K) at FWG and
+/// bias gradients (Nof,) at FG.
+pub fn conv_wu(x: &Tensor, g: &Tensor, pad: usize) -> (Tensor, Vec<i32>) {
+    let k = 2 * pad + 1;
+    let nif = x.shape()[0];
+    let (nof, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let xd = xp.data();
+    let gd = g.data();
+    let mut dw = Tensor::zeros(&[nof, nif, k, k]);
+    for of in 0..nof {
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    // row-wise dot products over contiguous slices
+                    // (auto-vectorized; §Perf)
+                    let mut acc: i32 = 0;
+                    for y in 0..oh {
+                        let grow = (of * oh + y) * ow;
+                        let xrow = (ci * hp + y + ky) * wp + kx;
+                        let gs = &gd[grow..grow + ow];
+                        let xs = &xd[xrow..xrow + ow];
+                        for (&gv, &xv) in gs.iter().zip(xs) {
+                            acc = acc.wrapping_add(gv.wrapping_mul(xv));
+                        }
+                    }
+                    dw.set4(of, ci, ky, kx, shift_round(acc, SHIFT_WU_STORE));
+                }
+            }
+        }
+    }
+    let mut db = vec![0i32; nof];
+    for of in 0..nof {
+        let base = of * oh * ow;
+        let mut s: i32 = 0;
+        for v in &gd[base..base + oh * ow] {
+            s = s.wrapping_add(*v);
+        }
+        db[of] = s;
+    }
+    (dw, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{randi, Lcg};
+
+    #[test]
+    fn conv_identity_kernel_passes_through() {
+        // 1x1-channel 3x3 identity kernel scaled to 1.0 at FW
+        let x = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|v| v * 16).collect());
+        let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+        w.set4(0, 0, 1, 1, 1 << crate::fixed::FW);
+        let out = conv_fp_std(&x, &w, &[0], false);
+        assert_eq!(out.data(), x.data());
+    }
+
+    #[test]
+    fn conv_relu_clamps_negative() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![-100, -100, -100, -100]);
+        let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+        w.set4(0, 0, 1, 1, 1 << crate::fixed::FW);
+        let out = conv_fp_std(&x, &w, &[0], true);
+        assert!(out.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn conv_bias_at_accumulator_fraction() {
+        let x = Tensor::zeros(&[1, 2, 2]);
+        let w = Tensor::zeros(&[1, 1, 3, 3]);
+        // bias of 1.0 at FA+FW requantizes to 1.0 at FA = 256
+        let out = conv_fp_std(&x, &w, &[1 << (crate::fixed::FA
+                                              + crate::fixed::FW)], false);
+        assert!(out.data().iter().all(|&v| v == 256));
+    }
+
+    #[test]
+    fn transpose_flip_is_involution() {
+        let mut rng = Lcg::new(7);
+        let w = randi(&mut rng, &[6, 4, 3, 3], 400);
+        assert_eq!(transpose_flip(&transpose_flip(&w)), w);
+    }
+
+    #[test]
+    fn transpose_flip_places_rotated_taps() {
+        let mut w = Tensor::zeros(&[2, 3, 3, 3]);
+        w.set4(1, 2, 0, 2, 77);
+        let t = transpose_flip(&w);
+        assert_eq!(t.at4(2, 1, 2, 0), 77);
+    }
+
+    #[test]
+    fn conv_bp_shape_interchanges_channels() {
+        let mut rng = Lcg::new(3);
+        let g = randi(&mut rng, &[8, 4, 4], 300);
+        let w = randi(&mut rng, &[8, 5, 3, 3], 150);
+        let out = conv_bp(&g, &w, 1);
+        assert_eq!(out.shape(), &[5, 4, 4]);
+    }
+
+    #[test]
+    fn conv_wu_zero_gradient_zero_update() {
+        let mut rng = Lcg::new(4);
+        let x = randi(&mut rng, &[3, 6, 6], 300);
+        let g = Tensor::zeros(&[4, 6, 6]);
+        let (dw, db) = conv_wu(&x, &g, 1);
+        assert!(dw.data().iter().all(|&v| v == 0));
+        assert!(db.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn conv_wu_single_plane_manual_check() {
+        // mirror of test_conv_wu_is_4d_intra_tile_accumulation in python
+        let mut rng = Lcg::new(5);
+        let x = randi(&mut rng, &[3, 8, 8], 400);
+        let g = randi(&mut rng, &[4, 8, 8], 400);
+        let (dw, _) = conv_wu(&x, &g, 1);
+        let xp = x.pad_hw(1);
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let mut acc: i64 = 0;
+                for y in 0..8 {
+                    for xx in 0..8 {
+                        acc += i64::from(g.at3(2, y, xx))
+                            * i64::from(xp.at3(1, y + ky, xx + kx));
+                    }
+                }
+                let want = ((acc as f64 / f64::from(1u32 << SHIFT_WU_STORE))
+                    + 0.5)
+                    .floor() as i32;
+                assert_eq!(dw.at4(2, 1, ky, kx), want);
+            }
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Golden-model fully-connected layer: forward, backward (transposed
+//! weights, §II) and weight update (outer product), bit-exact with the
+//! Pallas matmul kernel.
+
+use crate::fixed::{requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE};
+use crate::nn::tensor::Tensor;
+
+/// FC forward: x (K,) at FA, w (N, K) at FW, b (N,) at FA+FW -> (N,) at FA.
+pub fn fc_fp(x: &[i32], w: &Tensor, b: &[i32]) -> Vec<i32> {
+    let (n, k) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.len(), k);
+    assert_eq!(b.len(), n);
+    let wd = w.data();
+    (0..n)
+        .map(|row| {
+            let mut acc = 0i32;
+            let wrow = &wd[row * k..(row + 1) * k];
+            for (xi, wi) in x.iter().zip(wrow) {
+                acc = acc.wrapping_add(xi.wrapping_mul(*wi));
+            }
+            requant(acc.wrapping_add(b[row]), SHIFT_CONV_FP)
+        })
+        .collect()
+}
+
+/// FC backward with the transposed weight matrix: g (N,) at FG -> (K,) at FG.
+pub fn fc_bp(g: &[i32], w: &Tensor) -> Vec<i32> {
+    let (n, k) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(g.len(), n);
+    let wd = w.data();
+    let mut out = vec![0i32; k];
+    for (row, &gv) in g.iter().enumerate() {
+        let wrow = &wd[row * k..(row + 1) * k];
+        for (o, wi) in out.iter_mut().zip(wrow) {
+            *o = o.wrapping_add(gv.wrapping_mul(*wi));
+        }
+    }
+    out.iter().map(|&v| requant(v, SHIFT_CONV_BP)).collect()
+}
+
+/// FC weight gradients: outer(g, x) at FWG plus bias gradients at FG.
+pub fn fc_wu(g: &[i32], x: &[i32]) -> (Tensor, Vec<i32>) {
+    let (n, k) = (g.len(), x.len());
+    let mut dw = Tensor::zeros(&[n, k]);
+    let dd = dw.data_mut();
+    for (row, &gv) in g.iter().enumerate() {
+        for (col, &xv) in x.iter().enumerate() {
+            dd[row * k + col] =
+                shift_round(gv.wrapping_mul(xv), SHIFT_WU_STORE);
+        }
+    }
+    (dw, g.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{FA, FW};
+
+    #[test]
+    fn fc_fp_identity() {
+        // W = I at FW scale, zero bias -> output == input
+        let k = 4;
+        let mut w = Tensor::zeros(&[k, k]);
+        for i in 0..k {
+            w.data_mut()[i * k + i] = 1 << FW;
+        }
+        let x = vec![100, -200, 300, 0];
+        assert_eq!(fc_fp(&x, &w, &[0; 4]), x);
+    }
+
+    #[test]
+    fn fc_fp_bias_only() {
+        let w = Tensor::zeros(&[2, 3]);
+        let b = vec![1 << (FA + FW), -(1 << (FA + FW))];
+        assert_eq!(fc_fp(&[0, 0, 0], &w, &b), vec![256, -256]);
+    }
+
+    #[test]
+    fn fc_bp_is_transpose_action() {
+        // g @ W with W (N,K): check against hand computation
+        let w = Tensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let g = vec![1 << 12, 2 << 12]; // scaled so requant shift cancels
+        let out = fc_bp(&g, &w);
+        assert_eq!(out, vec![1 + 2 * 4, 2 + 2 * 5, 3 + 2 * 6]);
+    }
+
+    #[test]
+    fn fc_wu_outer_product() {
+        let g = vec![16, -32];
+        let x = vec![1 << 4, 2 << 4, 3 << 4];
+        let (dw, db) = fc_wu(&g, &x);
+        // products are multiples of 2^8, shift 4 -> exact division by 16
+        assert_eq!(dw.shape(), &[2, 3]);
+        assert_eq!(dw.data(), &[16, 32, 48, -32, -64, -96]);
+        assert_eq!(db, g);
+    }
+}

@@ -1,0 +1,526 @@
+//! f32 floating-point reference trainer — the "baseline with
+//! floating-point precision" the paper compares its 16-bit fixed-point
+//! training against (§IV-B).
+//!
+//! A line-by-line port of the golden fixed-point model (`conv`, `pool`,
+//! `fc`, `loss`, `golden`) with requantization removed: same layer walk,
+//! same SGD-with-momentum, IEEE f32 arithmetic.  Unit tests check that
+//! its gradients agree with the dequantized fixed-point gradients on
+//! small nets, which is exactly the fixed-vs-float fidelity claim.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::{Layer, Loss, Network};
+use crate::fixed::{dequantize, FA, FW};
+use crate::nn::golden::Params;
+use crate::nn::tensor::Tensor;
+
+/// Dense f32 tensor (shape + data), minimal.
+#[derive(Debug, Clone)]
+pub struct FTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl FTensor {
+    pub fn zeros(shape: &[usize]) -> FTensor {
+        FTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_fixed(t: &Tensor, frac: u32) -> FTensor {
+        FTensor {
+            shape: t.shape().to_vec(),
+            data: t
+                .data()
+                .iter()
+                .map(|&q| dequantize(q, frac) as f32)
+                .collect(),
+        }
+    }
+
+    #[inline(always)]
+    fn at3(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.shape[1] + y) * self.shape[2] + x]
+    }
+}
+
+fn pad_hw(x: &FTensor, p: usize) -> FTensor {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let mut out = FTensor::zeros(&[c, h + 2 * p, w + 2 * p]);
+    for ci in 0..c {
+        for y in 0..h {
+            let src = (ci * h + y) * w;
+            let dst = (ci * (h + 2 * p) + y + p) * (w + 2 * p) + p;
+            out.data[dst..dst + w].copy_from_slice(&x.data[src..src + w]);
+        }
+    }
+    out
+}
+
+fn conv_fp(x: &FTensor, w: &FTensor, b: &[f32], pad: usize, relu: bool)
+           -> FTensor {
+    let (nof, nif, k) = (w.shape[0], w.shape[1], w.shape[2]);
+    let xp = pad_hw(x, pad);
+    let (hp, wp) = (xp.shape[1], xp.shape[2]);
+    let (oh, ow) = (hp - k + 1, wp - k + 1);
+    let mut out = FTensor::zeros(&[nof, oh, ow]);
+    for of in 0..nof {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b[of];
+                for ci in 0..nif {
+                    for ky in 0..k {
+                        let xrow = (ci * hp + oy + ky) * wp + ox;
+                        let wrow = ((of * nif + ci) * k + ky) * k;
+                        for kx in 0..k {
+                            acc += w.data[wrow + kx] * xp.data[xrow + kx];
+                        }
+                    }
+                }
+                out.data[(of * oh + oy) * ow + ox] =
+                    if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    out
+}
+
+fn transpose_flip(w: &FTensor) -> FTensor {
+    let (nof, nif, k) = (w.shape[0], w.shape[1], w.shape[2]);
+    let mut out = FTensor::zeros(&[nif, nof, k, k]);
+    for of in 0..nof {
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    out.data[((ci * nof + of) * k + k - 1 - ky) * k + k
+                             - 1 - kx] =
+                        w.data[((of * nif + ci) * k + ky) * k + kx];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn conv_bp(g: &FTensor, w: &FTensor, pad: usize) -> FTensor {
+    let wt = transpose_flip(w);
+    let zeros = vec![0.0; wt.shape[0]];
+    conv_fp(g, &wt, &zeros, pad, false)
+}
+
+fn conv_wu(x: &FTensor, g: &FTensor, pad: usize)
+           -> (FTensor, Vec<f32>) {
+    let k = 2 * pad + 1;
+    let nif = x.shape[0];
+    let (nof, oh, ow) = (g.shape[0], g.shape[1], g.shape[2]);
+    let xp = pad_hw(x, pad);
+    let (hp, wp) = (xp.shape[1], xp.shape[2]);
+    let mut dw = FTensor::zeros(&[nof, nif, k, k]);
+    for of in 0..nof {
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let mut acc = 0.0f32;
+                    for y in 0..oh {
+                        let grow = (of * oh + y) * ow;
+                        let xrow = (ci * hp + y + ky) * wp + kx;
+                        for xx in 0..ow {
+                            acc += g.data[grow + xx] * xp.data[xrow + xx];
+                        }
+                    }
+                    dw.data[((of * nif + ci) * k + ky) * k + kx] = acc;
+                }
+            }
+        }
+    }
+    let db: Vec<f32> = (0..nof)
+        .map(|of| g.data[of * oh * ow..(of + 1) * oh * ow].iter().sum())
+        .collect();
+    (dw, db)
+}
+
+fn maxpool(x: &FTensor, k: usize) -> (FTensor, Vec<usize>) {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, ow) = (h / k, w / k);
+    let mut out = FTensor::zeros(&[c, oh, ow]);
+    let mut idx = vec![0usize; c * oh * ow];
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f32::MIN;
+                let mut bi = 0;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                        if v > best {
+                            best = v;
+                            bi = dy * k + dx;
+                        }
+                    }
+                }
+                out.data[(ci * oh + oy) * ow + ox] = best;
+                idx[(ci * oh + oy) * ow + ox] = bi;
+            }
+        }
+    }
+    (out, idx)
+}
+
+fn upsample_scale(g: &FTensor, idx: &[usize], below: &FTensor, k: usize)
+                  -> FTensor {
+    let (c, oh, ow) = (g.shape[0], g.shape[1], g.shape[2]);
+    let mut out = FTensor::zeros(&[c, oh * k, ow * k]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let gi = (ci * oh + oy) * ow + ox;
+                let (dy, dx) = (idx[gi] / k, idx[gi] % k);
+                let (y, x) = (oy * k + dy, ox * k + dx);
+                if below.at3(ci, y, x) > 0.0 {
+                    out.data[(ci * oh * k + y) * ow * k + x] = g.data[gi];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Float parameters + momentum for the whole network.
+pub struct FloatTrainer {
+    net: Network,
+    weights: HashMap<String, FTensor>,
+    biases: HashMap<String, Vec<f32>>,
+    mw: HashMap<String, Vec<f32>>,
+    mb: HashMap<String, Vec<f32>>,
+    lr: f32,
+    beta: f32,
+}
+
+impl FloatTrainer {
+    /// Start from the SAME (dequantized) parameters as a fixed trainer.
+    pub fn from_params(net: &Network, params: &Params, lr: f64,
+                       beta: f64) -> Result<FloatTrainer> {
+        let mut weights = HashMap::new();
+        let mut biases = HashMap::new();
+        let mut mw = HashMap::new();
+        let mut mb = HashMap::new();
+        for l in &net.layers {
+            if matches!(l, Layer::Pool { .. }) {
+                continue;
+            }
+            let n = l.name();
+            let w = params.get(&format!("w_{n}"))?;
+            let b = params.get(&format!("b_{n}"))?;
+            let wf = FTensor::from_fixed(w, FW);
+            let bf: Vec<f32> = b
+                .data()
+                .iter()
+                .map(|&q| dequantize(q, FA + FW) as f32)
+                .collect();
+            mw.insert(n.to_string(), vec![0.0; wf.data.len()]);
+            mb.insert(n.to_string(), vec![0.0; bf.len()]);
+            weights.insert(n.to_string(), wf);
+            biases.insert(n.to_string(), bf);
+        }
+        Ok(FloatTrainer {
+            net: net.clone(),
+            weights,
+            biases,
+            mw,
+            mb,
+            lr: lr as f32,
+            beta: beta as f32,
+        })
+    }
+
+    /// Forward pass; returns (logits, cache of activations, pool indices,
+    /// flattened input to fc).
+    #[allow(clippy::type_complexity)]
+    fn forward(&self, x: &FTensor)
+               -> (Vec<f32>, HashMap<String, FTensor>,
+                   HashMap<String, Vec<usize>>, Vec<f32>) {
+        let mut acts = HashMap::new();
+        let mut idxs = HashMap::new();
+        let mut a = x.clone();
+        let mut logits = Vec::new();
+        let mut flat = Vec::new();
+        for l in &self.net.layers {
+            match l {
+                Layer::Conv { name, pad, relu, .. } => {
+                    a = conv_fp(&a, &self.weights[name],
+                                &self.biases[name], *pad, *relu);
+                    acts.insert(name.clone(), a.clone());
+                }
+                Layer::Pool { name, k, .. } => {
+                    let (p, idx) = maxpool(&a, *k);
+                    acts.insert(name.clone(), p.clone());
+                    idxs.insert(name.clone(), idx);
+                    a = p;
+                }
+                Layer::Fc { name, cout, .. } => {
+                    flat = a.data.clone();
+                    let w = &self.weights[name];
+                    let b = &self.biases[name];
+                    let kk = flat.len();
+                    logits = (0..*cout)
+                        .map(|n| {
+                            b[n] + (0..kk)
+                                .map(|k| w.data[n * kk + k] * flat[k])
+                                .sum::<f32>()
+                        })
+                        .collect();
+                }
+            }
+        }
+        (logits, acts, idxs, flat)
+    }
+
+    pub fn predict(&self, x: &FTensor) -> usize {
+        let (logits, ..) = self.forward(x);
+        let mut best = (f32::MIN, 0usize);
+        for (i, &v) in logits.iter().enumerate() {
+            if v > best.0 {
+                best = (v, i);
+            }
+        }
+        best.1
+    }
+
+    /// One-image loss + gradients (square hinge or euclidean).
+    #[allow(clippy::type_complexity)]
+    fn grads(&self, x: &FTensor, label: usize)
+             -> (f32, HashMap<String, FTensor>, HashMap<String, Vec<f32>>) {
+        let (logits, acts, idxs, flat) = self.forward(x);
+        let n_out = logits.len();
+        let mut g = vec![0.0f32; n_out];
+        let mut loss = 0.0f32;
+        match self.net.loss {
+            Loss::SquareHinge => {
+                for (n, gv) in g.iter_mut().enumerate() {
+                    let y = if n == label { 1.0 } else { -1.0 };
+                    let margin = (1.0 - y * logits[n]).max(0.0);
+                    loss += margin * margin;
+                    *gv = -2.0 * y * margin;
+                }
+            }
+            Loss::Euclidean => {
+                for (n, gv) in g.iter_mut().enumerate() {
+                    let y = if n == label { 1.0 } else { -1.0 };
+                    let d = logits[n] - y;
+                    loss += 0.5 * d * d;
+                    *gv = d;
+                }
+            }
+        }
+        let mut dws: HashMap<String, FTensor> = HashMap::new();
+        let mut dbs: HashMap<String, Vec<f32>> = HashMap::new();
+
+        // fc
+        let fc_name = self.net.layers.last().unwrap().name().to_string();
+        let kk = flat.len();
+        let mut dw_fc = FTensor::zeros(&[n_out, kk]);
+        for n in 0..n_out {
+            for k in 0..kk {
+                dw_fc.data[n * kk + k] = g[n] * flat[k];
+            }
+        }
+        dws.insert(format!("{fc_name}"), dw_fc);
+        dbs.insert(fc_name.clone(), g.clone());
+        let w_fc = &self.weights[&fc_name];
+        let g_flat: Vec<f32> = (0..kk)
+            .map(|k| {
+                (0..n_out).map(|n| g[n] * w_fc.data[n * kk + k]).sum()
+            })
+            .collect();
+
+        // reverse conv/pool walk (same structure as golden::backward)
+        let rev: Vec<&Layer> = self
+            .net
+            .layers
+            .iter()
+            .filter(|l| !matches!(l, Layer::Fc { .. }))
+            .rev()
+            .collect();
+        let (lc, lh, lk) = match rev.first() {
+            Some(Layer::Pool { c, h, k, .. }) => (*c, *h, *k),
+            _ => panic!("expected pool before fc"),
+        };
+        let mut grad = FTensor {
+            shape: vec![lc, lh / lk, lh / lk],
+            data: g_flat,
+        };
+        for (i, l) in rev.iter().enumerate() {
+            match l {
+                Layer::Pool { name, k, .. } => {
+                    let below = rev[i + 1].name();
+                    grad = upsample_scale(&grad, &idxs[name],
+                                          &acts[below], *k);
+                }
+                Layer::Conv { name, pad, .. } => {
+                    let below = rev.get(i + 1);
+                    let x_in: &FTensor = match below {
+                        None => x,
+                        Some(b) => &acts[b.name()],
+                    };
+                    let (dw, db) = conv_wu(x_in, &grad, *pad);
+                    dws.insert(name.clone(), dw);
+                    dbs.insert(name.clone(), db);
+                    if let Some(b) = below {
+                        grad = conv_bp(&grad, &self.weights[name], *pad);
+                        if let Layer::Conv { .. } = b {
+                            let ba = &acts[b.name()];
+                            for (gv, &av) in
+                                grad.data.iter_mut().zip(&ba.data)
+                            {
+                                if av <= 0.0 {
+                                    *gv = 0.0;
+                                }
+                            }
+                        }
+                    }
+                }
+                Layer::Fc { .. } => unreachable!(),
+            }
+        }
+        (loss, dws, dbs)
+    }
+
+    /// Train one batch (accumulate, average, momentum step); mean loss.
+    pub fn train_batch(&mut self, batch: &[(FTensor, usize)]) -> f32 {
+        let bs = batch.len() as f32;
+        let mut acc_w: HashMap<String, Vec<f32>> = HashMap::new();
+        let mut acc_b: HashMap<String, Vec<f32>> = HashMap::new();
+        let mut loss_sum = 0.0;
+        for (x, label) in batch {
+            let (loss, dws, dbs) = self.grads(x, *label);
+            loss_sum += loss;
+            for (n, dw) in dws {
+                let e = acc_w
+                    .entry(n)
+                    .or_insert_with(|| vec![0.0; dw.data.len()]);
+                for (a, v) in e.iter_mut().zip(&dw.data) {
+                    *a += v;
+                }
+            }
+            for (n, db) in dbs {
+                let e = acc_b
+                    .entry(n)
+                    .or_insert_with(|| vec![0.0; db.len()]);
+                for (a, v) in e.iter_mut().zip(&db) {
+                    *a += v;
+                }
+            }
+        }
+        let names: Vec<String> = self.weights.keys().cloned().collect();
+        for n in names {
+            let gw = &acc_w[&n];
+            let mw = self.mw.get_mut(&n).unwrap();
+            let w = self.weights.get_mut(&n).unwrap();
+            for j in 0..w.data.len() {
+                mw[j] = self.beta * mw[j] - self.lr * gw[j] / bs;
+                w.data[j] += mw[j];
+            }
+            let gb = &acc_b[&n];
+            let mb = self.mb.get_mut(&n).unwrap();
+            let b = self.biases.get_mut(&n).unwrap();
+            for j in 0..b.len() {
+                mb[j] = self.beta * mb[j] - self.lr * gb[j] / bs;
+                b[j] += mb[j];
+            }
+        }
+        loss_sum / bs
+    }
+}
+
+/// Convert a fixed-point image (at FA) to the float domain.
+pub fn image_f32(x: &Tensor) -> FTensor {
+    FTensor::from_fixed(x, FA)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+    use crate::fixed::{FG, FWG};
+    use crate::nn::golden;
+    use crate::nn::init::init_params;
+    use crate::nn::loss::encode_label;
+    use crate::nn::testutil::{randi, Lcg};
+
+    fn tiny_net() -> Network {
+        Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1 relu\nconv c2 4 k3 s1 p1 \
+             relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn float_gradients_track_fixed_gradients() {
+        // the fixed-vs-float fidelity claim, at gradient granularity:
+        // dequantized fixed grads must correlate strongly with f32 grads
+        let net = tiny_net();
+        let params = init_params(&net, 3);
+        let ft = FloatTrainer::from_params(&net, &params, 0.01, 0.9)
+            .unwrap();
+        let mut rng = Lcg::new(8);
+        let x = randi(&mut rng, &[3, 8, 8], 200);
+        let y = encode_label(2, 10);
+        let (_, _, fixed_grads) =
+            golden::train_step(&net, &params, &x, &y).unwrap();
+        let (_, dws, _) = ft.grads(&image_f32(&x), 2);
+        for lname in ["c1", "c2", "fc"] {
+            let fg = &fixed_grads[&format!("w_{lname}")];
+            let fl = &dws[lname];
+            // cosine similarity between dequantized fixed and float
+            let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+            for (&q, &f) in fg.data().iter().zip(&fl.data) {
+                let a = dequantize(q, FWG);
+                let b = f as f64;
+                dot += a * b;
+                na += a * a;
+                nb += b * b;
+            }
+            let cos = dot / (na.sqrt() * nb.sqrt() + 1e-12);
+            assert!(cos > 0.99, "{lname}: cos = {cos}");
+            let _ = FG;
+        }
+    }
+
+    #[test]
+    fn float_training_reduces_loss() {
+        let net = tiny_net();
+        let params = init_params(&net, 5);
+        let mut ft = FloatTrainer::from_params(&net, &params, 0.01, 0.9)
+            .unwrap();
+        let mut rng = Lcg::new(9);
+        let batch: Vec<(FTensor, usize)> = (0..4)
+            .map(|i| {
+                (image_f32(&randi(&mut rng, &[3, 8, 8], 200)), i % 10)
+            })
+            .collect();
+        let first = ft.train_batch(&batch);
+        let mut last = first;
+        for _ in 0..5 {
+            last = ft.train_batch(&batch);
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn predict_is_nan_safe() {
+        let net = tiny_net();
+        let params = init_params(&net, 1);
+        let ft = FloatTrainer::from_params(&net, &params, 0.01, 0.9)
+            .unwrap();
+        let x = FTensor::zeros(&[3, 8, 8]);
+        let p = ft.predict(&x);
+        assert!(p < 10);
+    }
+}

@@ -1,0 +1,85 @@
+//! Fallback parameter initialization for networks without AOT artifacts
+//! (the canonical initial parameters for the CIFAR nets come from
+//! `artifacts/params_<scale>.bin`, single-sourced from python so the two
+//! golden models start identical).
+//!
+//! He-style scaling with a deterministic LCG-driven approximate normal
+//! (sum of uniforms), quantized to the FW grid.
+
+use crate::config::{Layer, Network};
+use crate::fixed::{quantize, FW};
+use crate::nn::golden::Params;
+use crate::nn::tensor::Tensor;
+use crate::nn::testutil::Lcg;
+
+/// Deterministic He-init of all parameters of `net` (biases zero).
+pub fn init_params(net: &Network, seed: u64) -> Params {
+    let mut rng = Lcg::new(seed);
+    let mut params = Params::default();
+    for l in &net.layers {
+        let (name, fan_in, wshape): (&str, usize, Vec<usize>) = match l {
+            Layer::Conv { name, cin, cout, k, .. } => {
+                (name, cin * k * k, vec![*cout, *cin, *k, *k])
+            }
+            Layer::Fc { name, cin, cout, .. } => {
+                (name, *cin, vec![*cout, *cin])
+            }
+            Layer::Pool { .. } => continue,
+        };
+        let std = (2.0 / fan_in as f64).sqrt();
+        let n: usize = wshape.iter().product();
+        let data: Vec<i32> = (0..n)
+            .map(|_| quantize(rng.normal() * std, FW))
+            .collect();
+        params.insert(&format!("w_{name}"), Tensor::from_vec(&wshape, data));
+        let nb = match l {
+            Layer::Conv { cout, .. } | Layer::Fc { cout, .. } => *cout,
+            Layer::Pool { .. } => unreachable!(),
+        };
+        params.insert(&format!("b_{name}"), Tensor::zeros(&[nb]));
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let net = Network::cifar(1);
+        let a = init_params(&net, 42);
+        let b = init_params(&net, 42);
+        for name in net.param_order() {
+            assert_eq!(a.get(&name).unwrap(), b.get(&name).unwrap());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let net = Network::cifar(1);
+        let a = init_params(&net, 1);
+        let b = init_params(&net, 2);
+        assert_ne!(a.get("w_c1").unwrap(), b.get("w_c1").unwrap());
+    }
+
+    #[test]
+    fn weights_scale_with_fan_in() {
+        let net = Network::cifar(1);
+        let p = init_params(&net, 3);
+        // c1 fan-in 27, c6 fan-in 576: c1 weights should be larger typically
+        let m1 = p.get("w_c1").unwrap().max_abs();
+        let m6 = p.get("w_c6").unwrap().max_abs();
+        assert!(m1 > m6, "m1={m1} m6={m6}");
+    }
+
+    #[test]
+    fn covers_param_order() {
+        let net = Network::cifar(2);
+        let p = init_params(&net, 4);
+        for name in net.param_order() {
+            assert!(p.get(&name).is_ok(), "{name}");
+        }
+    }
+}

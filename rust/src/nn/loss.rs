@@ -1,0 +1,100 @@
+//! Loss units (§III-B): square hinge (default) and euclidean, bit-exact
+//! with `ref.py`'s `loss_grad_*_ref`.
+
+use crate::config::Loss;
+use crate::fixed::{sat16, shift_round, FA, FG};
+
+/// Square hinge loss and gradient.  `a`: logits at FA; `y`: ±1 * 2^FA.
+/// Returns (gradient at FG, loss at FA).
+pub fn loss_grad_hinge(a: &[i32], y: &[i32]) -> (Vec<i32>, i32) {
+    let one = 1i32 << FA;
+    let mut loss = 0i32;
+    let g = a
+        .iter()
+        .zip(y)
+        .map(|(&av, &yv)| {
+            let ya = shift_round(av.wrapping_mul(yv), FA);
+            let margin = (one - ya).max(0);
+            loss = loss
+                .wrapping_add(shift_round(margin.wrapping_mul(margin), FA));
+            let g_fa = sat16(-2 * shift_round(yv.wrapping_mul(margin), FA));
+            sat16(g_fa << (FG - FA))
+        })
+        .collect();
+    (g, loss)
+}
+
+/// Euclidean (quadratic) loss, Eq. (2).  `a`, `y` at FA.
+pub fn loss_grad_euclid(a: &[i32], y: &[i32]) -> (Vec<i32>, i32) {
+    let mut loss = 0i32;
+    let g = a
+        .iter()
+        .zip(y)
+        .map(|(&av, &yv)| {
+            let d = sat16(av - yv);
+            loss = loss.wrapping_add(shift_round(d.wrapping_mul(d), FA));
+            sat16(d << (FG - FA))
+        })
+        .collect();
+    (g, loss >> 1)
+}
+
+/// Dispatch on the configured loss unit.
+pub fn loss_grad(kind: Loss, a: &[i32], y: &[i32]) -> (Vec<i32>, i32) {
+    match kind {
+        Loss::SquareHinge => loss_grad_hinge(a, y),
+        Loss::Euclidean => loss_grad_euclid(a, y),
+    }
+}
+
+/// Encode a class label as the ±1 one-hot target at FA (what the paper's
+/// loss unit consumes alongside the logits).
+pub fn encode_label(class: usize, nclass: usize) -> Vec<i32> {
+    (0..nclass)
+        .map(|i| if i == class { 1 << FA } else { -(1 << FA) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hinge_zero_when_margins_met() {
+        let one = 1 << FA;
+        // y*a = 2.0 > 1 -> margin 0
+        let a = vec![2 * one, -2 * one];
+        let y = vec![one, -one];
+        let (g, loss) = loss_grad_hinge(&a, &y);
+        assert_eq!(loss, 0);
+        assert!(g.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn hinge_gradient_signs() {
+        let one = 1 << FA;
+        let a = vec![0, 0];
+        let y = vec![one, -one];
+        let (g, loss) = loss_grad_hinge(&a, &y);
+        assert!(loss > 0);
+        assert!(g[0] < 0, "correct class pushed up");
+        assert!(g[1] > 0, "wrong class pushed down");
+    }
+
+    #[test]
+    fn euclid_gradient_is_difference() {
+        let a = vec![300, -200];
+        let y = vec![256, 0];
+        let (g, loss) = loss_grad_euclid(&a, &y);
+        assert_eq!(g, vec![44 << (FG - FA), -200 << (FG - FA)]);
+        let t1 = (44 * 44 + (1 << (FA - 1))) >> FA;
+        let t2 = (200 * 200 + (1 << (FA - 1))) >> FA;
+        assert_eq!(loss, (t1 + t2) >> 1);
+    }
+
+    #[test]
+    fn encode_label_one_hot_pm1() {
+        let y = encode_label(2, 4);
+        assert_eq!(y, vec![-256, -256, 256, -256]);
+    }
+}

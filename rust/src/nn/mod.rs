@@ -1,0 +1,21 @@
+//! Golden-model neural-network substrate: bit-exact fixed-point CNN
+//! training primitives (the rust mirror of the paper's PyTorch
+//! fixed-point verification model), tensor/IO utilities, and the
+//! SGD-with-momentum weight-update arithmetic.
+
+pub mod bn;
+pub mod conv;
+pub mod fc;
+pub mod floatref;
+pub mod golden;
+pub mod init;
+pub mod loss;
+pub mod pool;
+pub mod sgd;
+pub mod tensor;
+pub mod tensorio;
+pub mod testutil;
+
+pub use golden::{backward, forward, train_step, FwdCache, Grads, Params};
+pub use tensor::Tensor;
+pub use tensorio::Bundle;

@@ -1,0 +1,168 @@
+//! Golden-model pooling / upsampling / scaling units (§III-G), bit-exact
+//! with the Pallas kernels.
+
+use crate::fixed::sat16;
+use crate::nn::tensor::Tensor;
+
+/// k x k max pooling with flat window-argmax indices (row-major within the
+/// window: idx = dy * k + dx).  Ties pick the first maximum, matching
+/// `jnp.argmax`.
+pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let mut idx = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = i32::MIN;
+                let mut best_i = 0i32;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                        if v > best {
+                            best = v;
+                            best_i = (dy * k + dx) as i32;
+                        }
+                    }
+                }
+                out.set3(ci, oy, ox, best);
+                idx.set3(ci, oy, ox, best_i);
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Upsample pooled gradients through the stored indices (demultiplexer)
+/// and scale by the binary ReLU activation gradient.
+pub fn upsample_scale(g: &Tensor, idx: &Tensor, mask: &Tensor, k: usize)
+                      -> Tensor {
+    let (c, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
+    assert_eq!(mask.shape(), &[c, oh * k, ow * k]);
+    let mut out = Tensor::zeros(&[c, oh * k, ow * k]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let i = idx.at3(ci, oy, ox) as usize;
+                let (dy, dx) = (i / k, i % k);
+                let (y, x) = (oy * k + dy, ox * k + dx);
+                let v = sat16(
+                    g.at3(ci, oy, ox).wrapping_mul(mask.at3(ci, y, x)),
+                );
+                out.set3(ci, y, x, v);
+            }
+        }
+    }
+    out
+}
+
+/// Scaling unit at a ReLU node without pooling: g * relu'(a).
+pub fn scale_mask(g: &Tensor, mask: &Tensor) -> Tensor {
+    assert_eq!(g.shape(), mask.shape());
+    let data = g
+        .data()
+        .iter()
+        .zip(mask.data())
+        .map(|(&gv, &mv)| sat16(gv.wrapping_mul(mv)))
+        .collect();
+    Tensor::from_vec(g.shape(), data)
+}
+
+/// Binary activation gradient of ReLU, recomputed from post-ReLU
+/// activations (a > 0), exactly as the JAX side derives it.
+pub fn relu_mask(a: &Tensor) -> Tensor {
+    a.map(|v| i32::from(v > 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{randi, Lcg};
+
+    #[test]
+    fn maxpool_picks_window_max_and_index() {
+        let x = Tensor::from_vec(
+            &[1, 4, 4],
+            vec![1, 5, 2, 2, 3, 4, 2, 9, 7, 6, 1, 1, 5, 8, 0, 3],
+        );
+        let (p, idx) = maxpool(&x, 2);
+        assert_eq!(p.data(), &[5, 9, 8, 3]);
+        assert_eq!(idx.data(), &[1, 3, 3, 3]);
+    }
+
+    #[test]
+    fn maxpool_tie_picks_first() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![7, 7, 7, 7]);
+        let (_, idx) = maxpool(&x, 2);
+        assert_eq!(idx.data(), &[0]);
+    }
+
+    #[test]
+    fn maxpool_indices_fit_2_bits_for_2x2() {
+        let mut rng = Lcg::new(9);
+        let x = randi(&mut rng, &[16, 16, 16], 500);
+        let (_, idx) = maxpool(&x, 2);
+        assert!(idx.data().iter().all(|&v| (0..4).contains(&v)));
+    }
+
+    #[test]
+    fn upsample_routes_to_max_only() {
+        let x = Tensor::from_vec(
+            &[1, 4, 4],
+            vec![1, 5, 2, 2, 3, 4, 2, 9, 7, 6, 1, 1, 5, 8, 0, 3],
+        );
+        let (_, idx) = maxpool(&x, 2);
+        let g = Tensor::from_vec(&[1, 2, 2], vec![10, 20, 30, 40]);
+        let ones = Tensor::from_vec(&[1, 4, 4], vec![1; 16]);
+        let up = upsample_scale(&g, &idx, &ones, 2);
+        // one nonzero per window, at the argmax position
+        assert_eq!(up.at3(0, 0, 1), 10);
+        assert_eq!(up.at3(0, 1, 3), 20);
+        assert_eq!(up.at3(0, 3, 1), 30);
+        assert_eq!(up.at3(0, 3, 3), 40);
+        assert_eq!(up.data().iter().filter(|&&v| v != 0).count(), 4);
+    }
+
+    #[test]
+    fn upsample_zero_mask_kills_gradient() {
+        let mut rng = Lcg::new(2);
+        let x = randi(&mut rng, &[4, 8, 8], 300);
+        let (_, idx) = maxpool(&x, 2);
+        let g = randi(&mut rng, &[4, 4, 4], 300);
+        let zero = Tensor::zeros(&[4, 8, 8]);
+        let up = upsample_scale(&g, &idx, &zero, 2);
+        assert!(up.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn pool_roundtrip_property() {
+        // maxpool(upsample(pooled)) == pooled for positive inputs
+        let mut rng = Lcg::new(11);
+        for _ in 0..10 {
+            let mut x = randi(&mut rng, &[4, 8, 8], 900);
+            for v in x.data_mut() {
+                *v = v.abs() + 1;
+            }
+            let (p, idx) = maxpool(&x, 2);
+            let ones = Tensor::from_vec(&[4, 8, 8], vec![1; 4 * 64]);
+            let up = upsample_scale(&p, &idx, &ones, 2);
+            let (p2, _) = maxpool(&up, 2);
+            assert_eq!(p2, p);
+        }
+    }
+
+    #[test]
+    fn relu_mask_binary() {
+        let a = Tensor::from_vec(&[1, 1, 4], vec![-3, 0, 2, 100]);
+        assert_eq!(relu_mask(&a).data(), &[0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn scale_mask_elementwise() {
+        let g = Tensor::from_vec(&[1, 1, 3], vec![5, -7, 9]);
+        let m = Tensor::from_vec(&[1, 1, 3], vec![1, 0, 1]);
+        assert_eq!(scale_mask(&g, &m).data(), &[5, 0, 9]);
+    }
+}

@@ -1,0 +1,222 @@
+//! The weight-update unit's arithmetic (§III-E, Fig. 7): batch
+//! accumulation of weight gradients and SGD-with-momentum updates,
+//! Eq. (5)/(6), all in fixed point.
+//!
+//! Per image, freshly computed weight gradients (at FWG) are accumulated
+//! into the DRAM-resident i32 accumulators; at the end of the batch the
+//! average gradient is formed (multiply by a Q15 reciprocal — batch sizes
+//! need not be powers of two), the momentum buffer is advanced
+//! (`v = beta*v - lr*g_avg`) and the weights are stepped.  Weights saturate
+//! to the i16 range (they live in 16-bit DRAM words); momentum stays i32.
+
+use crate::fixed::{sat16, FG, FV, FW};
+use crate::nn::tensor::Tensor;
+
+/// Hyper-parameters in fixed point.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdHyper {
+    /// Learning rate as Q16 (paper: 0.002 -> 131).
+    pub lr_q16: i32,
+    /// Momentum beta as Q15 (0.9 -> 29491).
+    pub beta_q15: i32,
+    /// Batch size.
+    pub batch: usize,
+}
+
+impl SgdHyper {
+    pub fn new(lr: f64, beta: f64, batch: usize) -> SgdHyper {
+        SgdHyper {
+            lr_q16: (lr * f64::from(1 << 16)).round() as i32,
+            beta_q15: (beta * f64::from(1 << 15)).round() as i32,
+            batch,
+        }
+    }
+
+    /// Q15 reciprocal of the batch size.
+    fn recip_q15(&self) -> i64 {
+        ((f64::from(1 << 15)) / self.batch as f64).round() as i64
+    }
+}
+
+/// Whether a parameter is a weight (i16, frac FW) or a bias (i32
+/// accumulator-resident, frac FA+FW).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    Weight,
+    Bias,
+}
+
+/// Gradient accumulator + momentum state for one parameter tensor.
+#[derive(Debug, Clone)]
+pub struct ParamState {
+    pub kind: ParamKind,
+    /// Batch gradient accumulator (frac FWG for weights, FG for biases).
+    pub grad_acc: Tensor,
+    /// Momentum buffer (frac FV for weights, FA+FW for biases).
+    pub momentum: Tensor,
+    /// Images accumulated since the last update.
+    pub count: usize,
+}
+
+impl ParamState {
+    pub fn new(kind: ParamKind, shape: &[usize]) -> ParamState {
+        ParamState {
+            kind,
+            grad_acc: Tensor::zeros(shape),
+            momentum: Tensor::zeros(shape),
+            count: 0,
+        }
+    }
+
+    /// Accumulate one image's gradients (Fig. 7: "accumulated tile-by-tile
+    /// and repeated for the entire batch").
+    pub fn accumulate(&mut self, g: &Tensor) {
+        assert_eq!(g.shape(), self.grad_acc.shape());
+        for (a, &v) in self.grad_acc.data_mut().iter_mut().zip(g.data()) {
+            *a = a.wrapping_add(v);
+        }
+        self.count += 1;
+    }
+
+    /// End-of-batch weight update, Eq. (6).  Mutates `param` in place and
+    /// clears the accumulator.
+    pub fn apply(&mut self, param: &mut Tensor, hy: &SgdHyper) {
+        assert_eq!(param.shape(), self.grad_acc.shape());
+        let recip = hy.recip_q15();
+        let lr = i64::from(hy.lr_q16);
+        let beta = i64::from(hy.beta_q15);
+        // bias gradients arrive at FG but the bias lives at FA+FW;
+        // align fractions before the lr multiply.
+        let bias_shift = (crate::fixed::FA + FW) as i64 - FG as i64;
+        for ((p, v), &acc) in param
+            .data_mut()
+            .iter_mut()
+            .zip(self.momentum.data_mut())
+            .zip(self.grad_acc.data())
+        {
+            // batch average: multiply by Q15 reciprocal, round
+            let mut g_avg = (i64::from(acc) * recip + (1 << 14)) >> 15;
+            if self.kind == ParamKind::Bias {
+                g_avg <<= bias_shift;
+            }
+            // v = beta * v - lr * g_avg   (Q15 and Q16 multiplies)
+            let bv = (beta * i64::from(*v) + (1 << 14)) >> 15;
+            let lg = (lr * g_avg + (1 << 15)) >> 16;
+            let vn = bv - lg;
+            *v = vn.clamp(i64::from(i32::MIN), i64::from(i32::MAX)) as i32;
+            match self.kind {
+                ParamKind::Weight => {
+                    // v at FV -> weight at FW, saturate to 16-bit DRAM word
+                    let step = (vn + (1 << ((FV - FW) as i64 - 1)))
+                        >> (FV - FW) as i64;
+                    *p = sat16((i64::from(*p) + step)
+                        .clamp(i64::from(i32::MIN), i64::from(i32::MAX))
+                        as i32);
+                }
+                ParamKind::Bias => {
+                    // bias momentum already at FA+FW; add directly
+                    *p = (i64::from(*p) + vn)
+                        .clamp(-(1 << 28), 1 << 28) as i32;
+                }
+            }
+        }
+        for a in self.grad_acc.data_mut() {
+            *a = 0;
+        }
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{dequantize, quantize, FWG};
+
+    fn hy(batch: usize) -> SgdHyper {
+        SgdHyper::new(0.002, 0.9, batch)
+    }
+
+    #[test]
+    fn paper_hyperparams_quantize() {
+        let h = hy(40);
+        assert_eq!(h.lr_q16, 131); // 0.002 * 65536
+        assert_eq!(h.beta_q15, 29491); // 0.9 * 32768
+    }
+
+    #[test]
+    fn accumulate_sums_and_counts() {
+        let mut st = ParamState::new(ParamKind::Weight, &[2, 2]);
+        st.accumulate(&Tensor::from_vec(&[2, 2], vec![1, 2, 3, 4]));
+        st.accumulate(&Tensor::from_vec(&[2, 2], vec![10, 20, 30, 40]));
+        assert_eq!(st.grad_acc.data(), &[11, 22, 33, 44]);
+        assert_eq!(st.count, 2);
+    }
+
+    #[test]
+    fn apply_steps_against_gradient() {
+        let mut st = ParamState::new(ParamKind::Weight, &[1]);
+        let mut w = Tensor::from_vec(&[1], vec![quantize(0.5, FW)]);
+        // constant positive gradient of 1.0 at FWG for a batch of 1
+        st.accumulate(&Tensor::from_vec(&[1], vec![1 << FWG]));
+        st.apply(&mut w, &hy(1));
+        let w1 = dequantize(w.data()[0], FW);
+        // one step of lr 0.002 against gradient +1 -> ~0.498
+        assert!((w1 - 0.498).abs() < 1e-3, "w1 = {w1}");
+        assert_eq!(st.count, 0);
+        assert!(st.grad_acc.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn momentum_accelerates_repeated_steps() {
+        let mut st = ParamState::new(ParamKind::Weight, &[1]);
+        let mut w = Tensor::from_vec(&[1], vec![0]);
+        let mut deltas = Vec::new();
+        let mut prev = 0i32;
+        for _ in 0..5 {
+            st.accumulate(&Tensor::from_vec(&[1], vec![1 << FWG]));
+            st.apply(&mut w, &hy(1));
+            deltas.push(prev - w.data()[0]);
+            prev = w.data()[0];
+        }
+        // steady gradient + momentum -> step size grows
+        assert!(deltas[4] > deltas[0], "deltas = {deltas:?}");
+    }
+
+    #[test]
+    fn batch_average_divides() {
+        let mut a = ParamState::new(ParamKind::Weight, &[1]);
+        let mut b = ParamState::new(ParamKind::Weight, &[1]);
+        let mut wa = Tensor::from_vec(&[1], vec![0]);
+        let mut wb = Tensor::from_vec(&[1], vec![0]);
+        // batch of 4 identical grads must equal a single grad at batch 1
+        for _ in 0..4 {
+            a.accumulate(&Tensor::from_vec(&[1], vec![1 << FWG]));
+        }
+        b.accumulate(&Tensor::from_vec(&[1], vec![1 << FWG]));
+        a.apply(&mut wa, &hy(4));
+        b.apply(&mut wb, &hy(1));
+        assert_eq!(wa.data()[0], wb.data()[0]);
+    }
+
+    #[test]
+    fn weight_saturates_at_i16() {
+        let mut st = ParamState::new(ParamKind::Weight, &[1]);
+        let mut w = Tensor::from_vec(&[1], vec![32767]);
+        // huge negative gradient pushes weight up; must clamp at 32767
+        st.accumulate(&Tensor::from_vec(&[1], vec![i32::MIN / 2]));
+        st.apply(&mut w, &hy(1));
+        assert_eq!(w.data()[0], 32767);
+    }
+
+    #[test]
+    fn bias_update_aligns_fraction() {
+        let mut st = ParamState::new(ParamKind::Bias, &[1]);
+        let mut b = Tensor::from_vec(&[1], vec![0]);
+        // gradient of 1.0 at FG
+        st.accumulate(&Tensor::from_vec(&[1], vec![1 << FG]));
+        st.apply(&mut b, &hy(1));
+        // expect roughly -lr at FA+FW = -0.002 * 2^20 = -2097
+        let got = b.data()[0];
+        assert!((-2300..=-1900).contains(&got), "bias step = {got}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal dense i32 tensor used by the golden model, the weight-update
+//! unit, and the PJRT literal bridge.  Row-major, shape-checked.
+
+use std::fmt;
+
+/// Dense row-major i32 tensor (fixed-point payload).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl Tensor {
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    /// Wrap an existing buffer; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<i32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 3D access (c, y, x) — the activation/gradient layout.
+    #[inline(always)]
+    pub fn at3(&self, c: usize, y: usize, x: usize) -> i32 {
+        let (_, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x]
+    }
+
+    #[inline(always)]
+    pub fn set3(&mut self, c: usize, y: usize, x: usize, v: i32) {
+        let (_, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x] = v;
+    }
+
+    /// 4D access (o, i, ky, kx) — the conv-kernel layout.
+    #[inline(always)]
+    pub fn at4(&self, o: usize, i: usize, ky: usize, kx: usize) -> i32 {
+        let (_, ci, kh, kw) =
+            (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((o * ci + i) * kh + ky) * kw + kx]
+    }
+
+    #[inline(always)]
+    pub fn set4(&mut self, o: usize, i: usize, ky: usize, kx: usize, v: i32) {
+        let (_, ci, kh, kw) =
+            (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((o * ci + i) * kh + ky) * kw + kx] = v;
+    }
+
+    /// Zero-pad the two trailing (H, W) dims of a (C, H, W) tensor.
+    pub fn pad_hw(&self, p: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 3);
+        let (c, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        let mut out = Tensor::zeros(&[c, h + 2 * p, w + 2 * p]);
+        for ci in 0..c {
+            for y in 0..h {
+                let src = (ci * h + y) * w;
+                let dst = (ci * (h + 2 * p) + y + p) * (w + 2 * p) + p;
+                out.data[dst..dst + w]
+                    .copy_from_slice(&self.data[src..src + w]);
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(i32) -> i32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Max absolute value (reporting / overflow diagnostics).
+    pub fn max_abs(&self) -> i32 {
+        self.data.iter().map(|v| v.saturating_abs()).max().unwrap_or(0)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} els", self.shape, self.data.len())?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert!(t.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_count() {
+        Tensor::from_vec(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn at3_row_major() {
+        let t = Tensor::from_vec(&[2, 2, 3], (0..12).collect());
+        assert_eq!(t.at3(0, 0, 0), 0);
+        assert_eq!(t.at3(0, 1, 2), 5);
+        assert_eq!(t.at3(1, 0, 1), 7);
+    }
+
+    #[test]
+    fn at4_row_major() {
+        let t = Tensor::from_vec(&[2, 2, 2, 2], (0..16).collect());
+        assert_eq!(t.at4(1, 0, 1, 0), 10);
+        assert_eq!(t.at4(0, 1, 1, 1), 7);
+    }
+
+    #[test]
+    fn pad_hw_places_interior() {
+        let t = Tensor::from_vec(&[1, 2, 2], vec![1, 2, 3, 4]);
+        let p = t.pad_hw(1);
+        assert_eq!(p.shape(), &[1, 4, 4]);
+        assert_eq!(p.at3(0, 0, 0), 0);
+        assert_eq!(p.at3(0, 1, 1), 1);
+        assert_eq!(p.at3(0, 2, 2), 4);
+        assert_eq!(p.at3(0, 3, 3), 0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+}

@@ -1,0 +1,170 @@
+//! FXTB tensor-bundle reader/writer — the binary interchange format used
+//! for initial parameters and golden test vectors emitted by
+//! `python/compile/aot.py` (see its module docstring for the layout).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"FXTB";
+
+/// Ordered name -> tensor bundle.
+#[derive(Debug, Clone, Default)]
+pub struct Bundle {
+    entries: Vec<(String, Tensor)>,
+}
+
+impl Bundle {
+    pub fn new() -> Bundle {
+        Bundle::default()
+    }
+
+    pub fn push(&mut self, name: &str, t: Tensor) {
+        self.entries.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.entries.iter().map(|(n, t)| (n.as_str(), t))
+    }
+
+    /// Parse a bundle from bytes.
+    pub fn from_bytes(blob: &[u8]) -> Result<Bundle> {
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > blob.len() {
+                bail!("truncated bundle at offset {off}");
+            }
+            let s = &blob[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        let u32le = |off: &mut usize| -> Result<u32> {
+            let b = take(off, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        if take(&mut off, 4)? != MAGIC {
+            bail!("bad magic (expected FXTB)");
+        }
+        let count = u32le(&mut off)? as usize;
+        let mut bundle = Bundle::new();
+        for _ in 0..count {
+            let name_len = u32le(&mut off)? as usize;
+            let name = String::from_utf8(take(&mut off, name_len)?.to_vec())
+                .context("tensor name not utf8")?;
+            let ndim = u32le(&mut off)? as usize;
+            if ndim > 8 {
+                bail!("implausible ndim {ndim} for `{name}`");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32le(&mut off)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&mut off, 4 * n)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            bundle.push(&name, Tensor::from_vec(&shape, data));
+        }
+        if off != blob.len() {
+            bail!("{} trailing bytes in bundle", blob.len() - off);
+        }
+        Ok(bundle)
+    }
+
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let blob = fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Bundle::from_bytes(&blob)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Serialize to bytes (same layout the python writer produces).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+            for &d in t.shape() {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = Bundle::new();
+        b.push("a", Tensor::from_vec(&[2, 3], (0..6).collect()));
+        b.push("b", Tensor::from_vec(&[1], vec![-5]));
+        let blob = b.to_bytes();
+        let r = Bundle::from_bytes(&blob).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("a").unwrap().shape(), &[2, 3]);
+        assert_eq!(r.get("b").unwrap().data(), &[-5]);
+        assert_eq!(r.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Bundle::from_bytes(b"NOPE\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut b = Bundle::new();
+        b.push("t", Tensor::from_vec(&[4], vec![1, 2, 3, 4]));
+        let blob = b.to_bytes();
+        for cut in [3, 8, 12, blob.len() - 1] {
+            assert!(Bundle::from_bytes(&blob[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = Bundle::new();
+        b.push("t", Tensor::from_vec(&[1], vec![7]));
+        let mut blob = b.to_bytes();
+        blob.push(0);
+        assert!(Bundle::from_bytes(&blob).is_err());
+    }
+}

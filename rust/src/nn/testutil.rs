@@ -1,0 +1,102 @@
+//! Deterministic pseudo-random helpers shared by unit tests and the
+//! synthetic dataset generator (no external RNG crates are available in
+//! the offline build, so we carry a small LCG + Box–Muller-free normal).
+
+use crate::nn::tensor::Tensor;
+
+/// 64-bit LCG (Knuth MMIX constants) with helpers for the value ranges the
+/// fixed-point stack uses.
+#[derive(Debug, Clone)]
+pub struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    pub fn new(seed: u64) -> Lcg {
+        // avoid the all-zeros fixed point and decorrelate tiny seeds
+        Lcg { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        // xor-fold the high bits down; raw LCG low bits are weak
+        self.state ^ (self.state >> 33)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform in [-amp, amp].
+    #[inline]
+    pub fn int_pm(&mut self, amp: i32) -> i32 {
+        (self.below((2 * amp + 1) as u64) as i32) - amp
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Approximate standard normal: Irwin–Hall sum of 12 uniforms - 6.
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        (0..12).map(|_| self.unit()).sum::<f64>() - 6.0
+    }
+}
+
+/// Random tensor with entries uniform in [-amp, amp].
+pub fn randi(rng: &mut Lcg, shape: &[usize], amp: i32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.int_pm(amp)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Lcg::new(5);
+        let mut b = Lcg::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn int_pm_in_range() {
+        let mut r = Lcg::new(1);
+        for _ in 0..1000 {
+            let v = r.int_pm(10);
+            assert!((-10..=10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn unit_in_range_and_spread() {
+        let mut r = Lcg::new(2);
+        let xs: Vec<f64> = (0..1000).map(|_| r.unit()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Lcg::new(3);
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.1, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.15, "var = {var}");
+    }
+}

@@ -1,0 +1,328 @@
+//! PJRT runtime: loads the HLO-text artifacts lowered by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and executes them from the coordinator's hot path.  Python never runs
+//! here — the artifacts directory is the entire contract.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::Json;
+use crate::nn::tensor::Tensor;
+
+/// Signature of one artifact op (from manifest.json).
+#[derive(Debug, Clone)]
+pub struct OpSig {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub ops: HashMap<String, OpSig>,
+    /// Q-format fraction bits (fa, fw, fg, fwg, fv) — checked against the
+    /// rust `fixed` constants at load.
+    pub qformat: (u32, u32, u32, u32, u32),
+    /// scale tag -> (params file, testvec file)
+    pub nets: HashMap<String, (String, String)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let q = j.get("qformat").ok_or_else(|| anyhow!("no qformat"))?;
+        let get_q = |k: &str| -> Result<u32> {
+            q.get(k)
+                .and_then(Json::as_usize)
+                .map(|v| v as u32)
+                .ok_or_else(|| anyhow!("qformat.{k} missing"))
+        };
+        let qformat = (get_q("fa")?, get_q("fw")?, get_q("fg")?,
+                       get_q("fwg")?, get_q("fv")?);
+
+        let mut ops = HashMap::new();
+        let jops = j
+            .get("ops")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("no ops object"))?;
+        for (name, op) in jops {
+            let file = op
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: no file"))?
+                .to_string();
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                op.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter().filter_map(|s| s.as_shape()).collect()
+                    })
+                    .ok_or_else(|| anyhow!("{name}: no {key}"))
+            };
+            ops.insert(
+                name.clone(),
+                OpSig { file, inputs: shapes("inputs")?,
+                        outputs: shapes("outputs")? },
+            );
+        }
+
+        let mut nets = HashMap::new();
+        if let Some(jnets) = j.get("nets").and_then(Json::as_obj) {
+            for (scale, n) in jnets {
+                let pf = n
+                    .get("params_file")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string();
+                let tf = n
+                    .get("testvec_file")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string();
+                nets.insert(scale.clone(), (pf, tf));
+            }
+        }
+        Ok(Manifest { ops, qformat, nets })
+    }
+}
+
+/// A host literal pre-converted from a [`Tensor`], reusable across many
+/// executions (the coordinator caches parameter literals for a whole
+/// batch — §Perf: conversion was ~20% of per-op step time).
+pub struct Prepared {
+    lit: xla::Literal,
+    shape: Vec<usize>,
+}
+
+/// Input to [`Runtime::execute_prepared`]: borrowed tensor (converted on
+/// the fly) or a cached [`Prepared`] literal.
+pub enum In<'a> {
+    T(&'a Tensor),
+    P(&'a Prepared),
+}
+
+/// The PJRT-backed artifact executor.  Executables compile lazily on
+/// first use and are cached for the lifetime of the runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executed-op counter (coordinator metrics).
+    pub executions: Mutex<u64>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let manifest = Manifest::parse(&text)?;
+        // fail fast if the artifacts were built with different Q formats
+        let want = (
+            crate::fixed::FA,
+            crate::fixed::FW,
+            crate::fixed::FG,
+            crate::fixed::FWG,
+            crate::fixed::FV,
+        );
+        if manifest.qformat != want {
+            bail!(
+                "artifact Q-format {:?} != rust Q-format {:?}; rebuild \
+                 artifacts",
+                manifest.qformat,
+                want
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            executions: Mutex::new(0),
+        })
+    }
+
+    /// Number of distinct compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Eagerly compile a set of ops (startup warming).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&self, op: &str) -> Result<()> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if cache.contains_key(op) {
+                return Ok(());
+            }
+        }
+        let sig = self
+            .manifest
+            .ops
+            .get(op)
+            .ok_or_else(|| anyhow!("unknown artifact op `{op}`"))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {op}: {e:?}"))?;
+        self.cache.lock().unwrap().insert(op.to_string(), exe);
+        Ok(())
+    }
+
+    /// Convert a tensor into a reusable device-ready literal.
+    pub fn prepare(&self, t: &Tensor) -> Result<Prepared> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(t.data())
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        Ok(Prepared { lit, shape: t.shape().to_vec() })
+    }
+
+    /// Execute an artifact op on int32 tensors; shape-checked against the
+    /// manifest signature on both sides.
+    pub fn execute(&self, op: &str, inputs: &[&Tensor])
+                   -> Result<Vec<Tensor>> {
+        let ins: Vec<In> = inputs.iter().map(|t| In::T(t)).collect();
+        self.execute_prepared(op, &ins)
+    }
+
+    /// Execute with a mix of raw tensors and pre-converted literals.
+    pub fn execute_prepared(&self, op: &str, inputs: &[In])
+                            -> Result<Vec<Tensor>> {
+        let sig = self
+            .manifest
+            .ops
+            .get(op)
+            .ok_or_else(|| anyhow!("unknown artifact op `{op}`"))?
+            .clone();
+        if inputs.len() != sig.inputs.len() {
+            bail!(
+                "{op}: {} inputs given, {} expected",
+                inputs.len(),
+                sig.inputs.len()
+            );
+        }
+        for (i, (inp, want)) in inputs.iter().zip(&sig.inputs).enumerate()
+        {
+            let shape: &[usize] = match inp {
+                In::T(t) => t.shape(),
+                In::P(p) => &p.shape,
+            };
+            if shape != &want[..] {
+                bail!(
+                    "{op}: input {i} shape {:?} != manifest {:?}",
+                    shape,
+                    want
+                );
+            }
+        }
+        self.ensure_compiled(op)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(op).unwrap();
+
+        // convert only the raw-tensor inputs; reuse prepared literals
+        let mut owned: Vec<Option<xla::Literal>> = Vec::new();
+        for inp in inputs {
+            owned.push(match inp {
+                In::T(t) => {
+                    let dims: Vec<i64> =
+                        t.shape().iter().map(|&d| d as i64).collect();
+                    Some(
+                        xla::Literal::vec1(t.data())
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("reshape: {e:?}"))?,
+                    )
+                }
+                In::P(_) => None,
+            });
+        }
+        let literals: Vec<&xla::Literal> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(inp, o)| match inp {
+                In::T(_) => o.as_ref().unwrap(),
+                In::P(p) => &p.lit,
+            })
+            .collect();
+
+        let result = exe
+            .execute::<&xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {op}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {op} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {op}: {e:?}"))?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{op}: {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.iter().zip(&sig.outputs) {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("{op} output to_vec: {e:?}"))?;
+            outs.push(Tensor::from_vec(shape, data));
+        }
+        *self.executions.lock().unwrap() += 1;
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let text = r#"{
+            "qformat": {"fa":8,"fw":12,"fg":12,"fwg":16,"fv":16},
+            "ops": {"x": {"file":"x.hlo.txt","inputs":[[2,2]],
+                          "outputs":[[2,2]]}},
+            "nets": {"1x": {"params_file":"p.bin","testvec_file":"t.bin"}}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.qformat, (8, 12, 12, 16, 16));
+        assert_eq!(m.ops["x"].inputs, vec![vec![2, 2]]);
+        assert_eq!(m.nets["1x"].0, "p.bin");
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"qformat":{"fa":8}}"#).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Event-driven tile-level simulator: a finer-grained cross-check of the
+//! analytic cycle model in `sim::simulate`.
+//!
+//! Where the analytic model charges each scheduled step
+//! `max(logic, dram)` under double buffering, this simulator plays out
+//! every DMA tile and compute tile as discrete events against a single
+//! DDR3 channel and a single MAC-array engine:
+//!
+//! - the DMA engine prefetches tile `t+1` while the array computes tile
+//!   `t` (double buffering) or strictly serializes (single buffering);
+//! - the DRAM channel is a shared resource across the whole schedule —
+//!   a step's writes can collide with the next step's prefetch, which
+//!   the analytic model ignores;
+//! - per-tile compute cannot start before its tile's DMA completes.
+//!
+//! `cargo test sim::event` asserts the two models agree within a
+//! tolerance band on all three CIFAR designs, which is the usual
+//! validation argument for using the (fast) analytic model in
+//! design-space sweeps.
+
+use crate::compiler::Accelerator;
+use crate::hw::dram::{DramModel, DESCRIPTOR_OVERHEAD_CYCLES};
+use crate::sim::{logic_cycles_for_step, SimReport};
+
+/// Result of an event-driven run over one image's schedule.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    /// Cycle at which the last event retires.
+    pub makespan: u64,
+    /// Per-step completion latency (schedule order).
+    pub step_latency: Vec<u64>,
+    /// Fraction of the makespan the DRAM channel was busy.
+    pub dram_utilization: f64,
+    /// Fraction of the makespan the MAC array was busy.
+    pub compute_utilization: f64,
+}
+
+/// Play one image's per-image schedule through the event model.
+pub fn simulate_events(acc: &Accelerator) -> EventReport {
+    let dram = DramModel::new(&acc.dv);
+    let double = acc.dv.double_buffer;
+
+    let mut dram_free: u64 = 0; // channel next-free cycle
+    let mut compute_free: u64 = 0; // MAC array next-free cycle
+    let mut dram_busy: u64 = 0;
+    let mut compute_busy: u64 = 0;
+    let mut step_latency = Vec::new();
+    let mut makespan: u64 = 0;
+
+    for step in &acc.schedule.per_image {
+        let tiles = step.tiles.max(1);
+        let bytes = step.dram_read_bytes + step.dram_write_bytes;
+        let logic = logic_cycles_for_step(acc, step);
+        // split the step's traffic and compute evenly across its tiles
+        let bytes_per_tile = bytes / tiles;
+        let dma_per_tile = if bytes == 0 {
+            0
+        } else {
+            DESCRIPTOR_OVERHEAD_CYCLES
+                + (bytes_per_tile as f64 / dram.bytes_per_cycle).ceil()
+                    as u64
+        };
+        let compute_per_tile = logic / tiles;
+        let start = makespan;
+        let mut tile_dma_done = vec![0u64; tiles as usize];
+        for t in 0..tiles as usize {
+            // DMA for tile t: channel availability; under single
+            // buffering it must also wait for the previous tile's compute
+            let earliest = if double || t == 0 {
+                dram_free.max(start)
+            } else {
+                dram_free.max(compute_free)
+            };
+            let done = earliest + dma_per_tile;
+            dram_busy += dma_per_tile;
+            dram_free = done;
+            tile_dma_done[t] = done;
+            // compute for tile t starts when the array is free AND the
+            // tile's data has landed
+            let cstart = compute_free.max(done);
+            compute_free = cstart + compute_per_tile;
+            compute_busy += compute_per_tile;
+        }
+        let end = compute_free.max(dram_free);
+        step_latency.push(end - start);
+        makespan = end;
+    }
+
+    EventReport {
+        makespan,
+        step_latency,
+        dram_utilization: if makespan == 0 {
+            0.0
+        } else {
+            dram_busy as f64 / makespan as f64
+        },
+        compute_utilization: if makespan == 0 {
+            0.0
+        } else {
+            compute_busy as f64 / makespan as f64
+        },
+    }
+}
+
+/// Analytic per-image latency for comparison (FP+BP+WU, no batch update).
+pub fn analytic_image_cycles(report: &SimReport) -> u64 {
+    report.fp.latency_cycles
+        + report.bp.latency_cycles
+        + report.wu.latency_cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::RtlCompiler;
+    use crate::config::{DesignVars, Network};
+    use crate::sim::simulate;
+
+    fn acc_for(scale: usize) -> crate::compiler::Accelerator {
+        RtlCompiler::default()
+            .compile(&Network::cifar(scale), &DesignVars::for_scale(scale))
+            .unwrap()
+    }
+
+    #[test]
+    fn event_and_analytic_models_agree() {
+        // the event model serializes cross-step channel contention that
+        // the analytic model ignores, so it should be equal-or-slower,
+        // but within 35% on all paper designs
+        for scale in [1, 2, 4] {
+            let acc = acc_for(scale);
+            let ev = simulate_events(&acc);
+            let an = analytic_image_cycles(&simulate(&acc, 40));
+            let ratio = ev.makespan as f64 / an as f64;
+            assert!(
+                (0.9..1.35).contains(&ratio),
+                "{scale}X: event {} vs analytic {an} (ratio {ratio:.3})",
+                ev.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn step_count_matches_schedule() {
+        let acc = acc_for(1);
+        let ev = simulate_events(&acc);
+        assert_eq!(ev.step_latency.len(), acc.schedule.per_image.len());
+    }
+
+    #[test]
+    fn utilizations_are_fractions() {
+        let acc = acc_for(4);
+        let ev = simulate_events(&acc);
+        assert!(ev.dram_utilization > 0.0 && ev.dram_utilization <= 1.0);
+        assert!(ev.compute_utilization > 0.0
+            && ev.compute_utilization <= 1.0);
+    }
+
+    #[test]
+    fn training_is_dram_bound_in_event_model_too() {
+        // Fig. 9's conclusion must survive the finer model
+        let acc = acc_for(4);
+        let ev = simulate_events(&acc);
+        assert!(ev.dram_utilization > ev.compute_utilization,
+                "dram {} vs compute {}", ev.dram_utilization,
+                ev.compute_utilization);
+    }
+
+    #[test]
+    fn single_buffering_slower_in_event_model() {
+        let net = Network::cifar(2);
+        let mut dv = DesignVars::for_scale(2);
+        let on = simulate_events(
+            &RtlCompiler::default().compile(&net, &dv).unwrap());
+        dv.double_buffer = false;
+        let off = simulate_events(
+            &RtlCompiler::default().compile(&net, &dv).unwrap());
+        assert!(on.makespan < off.makespan,
+                "{} !< {}", on.makespan, off.makespan);
+    }
+
+    #[test]
+    fn makespan_monotone_in_network_width() {
+        let m1 = simulate_events(&acc_for(1)).makespan;
+        let m4 = simulate_events(&acc_for(4)).makespan;
+        assert!(m4 > 3 * m1);
+    }
+}

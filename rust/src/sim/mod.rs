@@ -1,0 +1,360 @@
+//! Cycle-accurate training simulator: interprets a compiled accelerator's
+//! schedule against the hardware models to produce the paper's evaluation
+//! numbers — per-phase latency breakdowns (Fig. 9), epoch latency vs batch
+//! size and GOPS (Table II), and efficiency (Table III).
+//!
+//! This is the same methodology as the paper ("latency was measured using
+//! simulation of the synthesized accelerator", §IV-A): each scheduled step
+//! costs `logic` cycles from the MAC-array model and `dram` cycles from
+//! the DDR3 model; with double buffering the two overlap per §IV-B.
+
+pub mod event;
+
+use std::collections::HashMap;
+
+use crate::compiler::{Accelerator, OpKind, Step};
+use crate::config::Layer;
+use crate::hw::bram::overlap_latency;
+use crate::hw::dram::DramModel;
+use crate::hw::mac_array::{self, Phase};
+
+/// Cost of one scheduled step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    pub logic_cycles: u64,
+    pub dram_cycles: u64,
+    pub latency_cycles: u64,
+}
+
+/// Aggregate over a phase (Fig. 9's bar groups).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseCost {
+    pub logic_cycles: u64,
+    pub dram_cycles: u64,
+    pub latency_cycles: u64,
+}
+
+/// Full simulation result for one network + design point + batch size.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Per (phase, layer) step costs, in schedule order.
+    pub steps: Vec<(Phase, String, OpKind, StepCost)>,
+    /// Per-image latency by phase: FP, BP, WU-conv layers.
+    pub fp: PhaseCost,
+    pub bp: PhaseCost,
+    pub wu: PhaseCost,
+    /// Batch-end weight-update cost (amortized per batch).
+    pub update: PhaseCost,
+    pub batch_size: usize,
+    pub clock_hz: f64,
+    /// Training ops per image (2 * MACs over FP+BP+WU).
+    pub ops_per_image: u64,
+}
+
+impl SimReport {
+    /// Per-image latency in cycles, amortizing the batch-end update.
+    pub fn cycles_per_image(&self) -> f64 {
+        (self.fp.latency_cycles
+            + self.bp.latency_cycles
+            + self.wu.latency_cycles) as f64
+            + self.update.latency_cycles as f64 / self.batch_size as f64
+    }
+
+    /// Latency of one full batch iteration (BS images + one update).
+    pub fn cycles_per_iteration(&self) -> u64 {
+        (self.fp.latency_cycles
+            + self.bp.latency_cycles
+            + self.wu.latency_cycles)
+            * self.batch_size as u64
+            + self.update.latency_cycles
+    }
+
+    pub fn seconds_per_image(&self) -> f64 {
+        self.cycles_per_image() / self.clock_hz
+    }
+
+    /// Epoch latency for `images` training images (Table II).
+    pub fn seconds_per_epoch(&self, images: u64) -> f64 {
+        self.seconds_per_image() * images as f64
+    }
+
+    /// Achieved throughput in GOPS (Table II's metric: training ops over
+    /// wall-clock).
+    pub fn gops(&self) -> f64 {
+        self.ops_per_image as f64 / self.seconds_per_image() / 1e9
+    }
+
+    /// Latency by phase in milliseconds for the Fig. 9 breakdown,
+    /// splitting logic vs DRAM.  Returns (phase, logic_ms, dram_ms,
+    /// latency_ms) rows for FP / BP / WU / update.
+    pub fn breakdown_ms(&self) -> Vec<(&'static str, f64, f64, f64)> {
+        let to_ms = |c: u64| c as f64 / self.clock_hz * 1e3;
+        vec![
+            ("FP", to_ms(self.fp.logic_cycles), to_ms(self.fp.dram_cycles),
+             to_ms(self.fp.latency_cycles)),
+            ("BP", to_ms(self.bp.logic_cycles), to_ms(self.bp.dram_cycles),
+             to_ms(self.bp.latency_cycles)),
+            ("WU", to_ms(self.wu.logic_cycles), to_ms(self.wu.dram_cycles),
+             to_ms(self.wu.latency_cycles)),
+            ("UPDATE", to_ms(self.update.logic_cycles),
+             to_ms(self.update.dram_cycles),
+             to_ms(self.update.latency_cycles)),
+        ]
+    }
+}
+
+/// Pipeline-fill cycles charged per double-buffered step.
+const PIPELINE_FILL: u64 = 16;
+
+/// Logic cycles for one scheduled step (shared with the event-driven
+/// model in [`event`]).
+pub fn logic_cycles_for_step(acc: &Accelerator, step: &Step) -> u64 {
+    let dv = &acc.dv;
+    let layer = acc
+        .net
+        .layers
+        .iter()
+        .find(|l| l.name() == step.layer);
+    match step.op {
+        OpKind::ConvFp => {
+            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
+            else {
+                return 0;
+            };
+            mac_array::conv_cycles(dv, *cin, *cout, *h, *w, *k).cycles
+        }
+        OpKind::ConvBp => {
+            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
+            else {
+                return 0;
+            };
+            mac_array::conv_cycles(dv, *cout, *cin, *h, *w, *k).cycles
+        }
+        OpKind::ConvWu => {
+            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
+            else {
+                return 0;
+            };
+            mac_array::wu_cycles(dv, *cin, *cout, *h, *w, *k).cycles
+        }
+        OpKind::Pool | OpKind::Upsample => {
+            let Some(Layer::Pool { c, h, w, k, .. }) = layer else {
+                return 0;
+            };
+            mac_array::pool_cycles(dv, *c, *h, *w, *k)
+        }
+        OpKind::FcFp | OpKind::FcBp | OpKind::FcWu => {
+            let Some(Layer::Fc { cin, cout, .. }) = layer else {
+                return 0;
+            };
+            mac_array::fc_cycles(dv, *cin, *cout).cycles
+        }
+        OpKind::ScaleMask | OpKind::LossGrad => {
+            // affiliated elementwise units keep pace with the datapath
+            8
+        }
+        OpKind::WeightUpdate => {
+            // new-weight computation: one MAC-ish op per weight through
+            // the Pof-wide update unit
+            let Some(l) = layer else { return 0 };
+            (l.weight_elems() as u64).div_ceil(dv.pof as u64)
+        }
+    }
+}
+
+fn cost_step(acc: &Accelerator, dram: &DramModel, step: &Step) -> StepCost {
+    let logic = logic_cycles_for_step(acc, step);
+    let dram_cycles = dram.tiled_transfer_cycles(
+        step.dram_read_bytes + step.dram_write_bytes,
+        step.tiles,
+    );
+    let latency = overlap_latency(
+        logic,
+        dram_cycles,
+        acc.dv.double_buffer,
+        if acc.dv.double_buffer { PIPELINE_FILL } else { 0 },
+    );
+    StepCost { logic_cycles: logic, dram_cycles, latency_cycles: latency }
+}
+
+/// Simulate one compiled accelerator at a given batch size.
+pub fn simulate(acc: &Accelerator, batch_size: usize) -> SimReport {
+    let dram = DramModel::new(&acc.dv);
+    let mut steps = Vec::new();
+    let mut fp = PhaseCost::default();
+    let mut bp = PhaseCost::default();
+    let mut wu = PhaseCost::default();
+    let mut update = PhaseCost::default();
+
+    for s in &acc.schedule.per_image {
+        let c = cost_step(acc, &dram, s);
+        let bucket = match s.phase {
+            Phase::Fp => &mut fp,
+            Phase::Bp => &mut bp,
+            Phase::Wu => &mut wu,
+        };
+        bucket.logic_cycles += c.logic_cycles;
+        bucket.dram_cycles += c.dram_cycles;
+        bucket.latency_cycles += c.latency_cycles;
+        steps.push((s.phase, s.layer.clone(), s.op, c));
+    }
+    for s in &acc.schedule.per_batch {
+        let c = cost_step(acc, &dram, s);
+        update.logic_cycles += c.logic_cycles;
+        update.dram_cycles += c.dram_cycles;
+        update.latency_cycles += c.latency_cycles;
+        steps.push((s.phase, s.layer.clone(), s.op, c));
+    }
+
+    SimReport {
+        steps,
+        fp,
+        bp,
+        wu,
+        update,
+        batch_size,
+        clock_hz: acc.dv.clock_mhz * 1e6,
+        ops_per_image: acc.net.ops_per_image(),
+    }
+}
+
+/// Per-layer [FP, BP, WU] latency table, for detailed reports.
+pub fn per_layer_latency(report: &SimReport)
+                         -> HashMap<String, [u64; 3]> {
+    let mut map: HashMap<String, [u64; 3]> = HashMap::new();
+    for (phase, layer, _, cost) in &report.steps {
+        let e = map.entry(layer.clone()).or_default();
+        let i = match phase {
+            Phase::Fp => 0,
+            Phase::Bp => 1,
+            Phase::Wu => 2,
+        };
+        e[i] += cost.latency_cycles;
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::RtlCompiler;
+    use crate::config::{DesignVars, Network};
+
+    fn sim(scale: usize, bs: usize) -> SimReport {
+        let acc = RtlCompiler::default()
+            .compile(&Network::cifar(scale), &DesignVars::for_scale(scale))
+            .unwrap();
+        simulate(&acc, bs)
+    }
+
+    #[test]
+    fn epoch_latency_order_matches_table2() {
+        // Table II: 1X ~18 s, 2X ~41 s, 4X ~96 s per 50k-image epoch at
+        // BS-40.  The model must land within 2x of each (shape criterion).
+        for (scale, want) in [(1, 18.0), (2, 41.0), (4, 96.2)] {
+            let got = sim(scale, 40).seconds_per_epoch(50_000);
+            assert!(
+                got > want / 2.0 && got < want * 2.0,
+                "{scale}X epoch {got:.1}s vs paper {want}s"
+            );
+        }
+    }
+
+    #[test]
+    fn gops_increase_with_scale() {
+        let (g1, g2, g4) =
+            (sim(1, 40).gops(), sim(2, 40).gops(), sim(4, 40).gops());
+        assert!(g1 < g2 && g2 < g4, "{g1} {g2} {g4}");
+        // Table II: 163 / 282 / 479 GOPS — within 2x each
+        assert!(g1 > 80.0 && g1 < 330.0, "1X {g1}");
+        assert!(g4 > 240.0 && g4 < 960.0, "4X {g4}");
+    }
+
+    #[test]
+    fn larger_batch_slightly_faster_epoch() {
+        // Table II: BS-10 -> BS-40 improves epoch latency slightly
+        // (fewer weight updates per epoch)
+        let r10 = sim(1, 10);
+        let r40 = sim(1, 40);
+        let (e10, e40) = (r10.seconds_per_epoch(50_000),
+                          r40.seconds_per_epoch(50_000));
+        assert!(e40 < e10, "{e40} !< {e10}");
+        let improvement = (e10 - e40) / e10;
+        assert!(improvement < 0.10,
+                "improvement should be small: {improvement}");
+    }
+
+    #[test]
+    fn wu_phase_dominates_4x_iteration() {
+        // Fig. 9: 51% of one batch iteration's latency is in the weight
+        // update layers (WU convs + batch update) for the 4X design
+        let r = sim(4, 40);
+        let wu_total = r.wu.latency_cycles as f64
+            + r.update.latency_cycles as f64 / r.batch_size as f64;
+        let frac = wu_total / r.cycles_per_image();
+        assert!(frac > 0.35 && frac < 0.75, "WU fraction = {frac}");
+    }
+
+    #[test]
+    fn wu_layers_are_dram_bound() {
+        // Fig. 9's point: WU-layer DRAM cycles exceed logic cycles
+        let r = sim(4, 40);
+        assert!(r.wu.dram_cycles > r.wu.logic_cycles);
+        assert!(r.update.dram_cycles > r.update.logic_cycles);
+    }
+
+    #[test]
+    fn double_buffering_helps() {
+        let net = Network::cifar(4);
+        let mut dv = DesignVars::for_scale(4);
+        let on = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        dv.double_buffer = false;
+        let off = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        assert!(on.cycles_per_image() < off.cycles_per_image());
+        // §IV-B: double buffering reduced WU-layer latency by ~11%
+        let wu_gain = 1.0
+            - on.wu.latency_cycles as f64 / off.wu.latency_cycles as f64;
+        assert!(wu_gain > 0.02 && wu_gain < 0.45,
+                "WU gain = {wu_gain:.3}");
+    }
+
+    #[test]
+    fn load_balance_cuts_wu_logic_4x() {
+        let net = Network::cifar(4);
+        let mut dv = DesignVars::for_scale(4);
+        let on = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        dv.load_balance = false;
+        let off = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 40);
+        let ratio =
+            off.wu.logic_cycles as f64 / on.wu.logic_cycles as f64;
+        assert!(ratio > 3.0 && ratio <= 4.2, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn per_layer_table_covers_all_layers() {
+        let r = sim(1, 40);
+        let t = per_layer_latency(&r);
+        for l in ["c1", "c2", "c3", "c4", "c5", "c6", "p1", "p2", "p3",
+                  "fc"] {
+            assert!(t.contains_key(l), "{l} missing");
+        }
+    }
+
+    #[test]
+    fn breakdown_rows_sum_to_total() {
+        let r = sim(2, 20);
+        let rows = r.breakdown_ms();
+        assert_eq!(rows.len(), 4);
+        let sum: f64 = rows.iter().map(|(_, _, _, l)| l).sum();
+        let direct = (r.fp.latency_cycles + r.bp.latency_cycles
+            + r.wu.latency_cycles + r.update.latency_cycles)
+            as f64
+            / r.clock_hz
+            * 1e3;
+        assert!((sum - direct).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,139 @@
+//! CLI integration tests: drive the `stratus` binary end to end and
+//! check the user-facing contracts (exit codes, report contents, config
+//! parsing, netlist emission).
+
+use std::process::Command;
+
+fn stratus(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_stratus"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn stratus");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let (ok, _, err) = stratus(&[]);
+    assert!(!ok);
+    assert!(err.contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, _, err) = stratus(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("USAGE"));
+}
+
+#[test]
+fn compile_reports_design() {
+    let (ok, out, _) = stratus(&["compile", "--scale", "1x"]);
+    assert!(ok);
+    assert!(out.contains("cifar10-1x"));
+    assert!(out.contains("8x8x16 = 1024 MACs"));
+    assert!(out.contains("transposable_wbuf"));
+    assert!(out.contains("DSP"));
+}
+
+#[test]
+fn compile_emits_verilog() {
+    let tmp = std::env::temp_dir().join("stratus_cli_top.sv");
+    let path = tmp.to_str().unwrap();
+    let (ok, out, _) =
+        stratus(&["compile", "--scale", "2x", "--emit-verilog", path]);
+    assert!(ok, "{out}");
+    let v = std::fs::read_to_string(&tmp).unwrap();
+    assert!(v.contains("module cnn_train_top"));
+    assert!(v.contains("parameter POF = 32"));
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn compile_rejects_oversized_design() {
+    let (ok, _, err) = stratus(&[
+        "compile", "--scale", "4x", "--pox", "32", "--poy", "32",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("does not fit"));
+}
+
+#[test]
+fn simulate_prints_phase_table() {
+    let (ok, out, _) =
+        stratus(&["simulate", "--scale", "4x", "--batch", "40"]);
+    assert!(ok);
+    for phase in ["FP", "BP", "WU", "UPDATE"] {
+        assert!(out.contains(phase), "{phase} missing:\n{out}");
+    }
+    assert!(out.contains("GOPS"));
+}
+
+#[test]
+fn report_table2_has_three_networks() {
+    let (ok, out, _) = stratus(&["report", "table2"]);
+    assert!(ok);
+    for net in ["CIFAR-10 1X", "CIFAR-10 2X", "CIFAR-10 4X"] {
+        assert!(out.contains(net));
+    }
+}
+
+#[test]
+fn report_rejects_unknown() {
+    let (ok, _, err) = stratus(&["report", "fig42"]);
+    assert!(!ok);
+    assert!(err.contains("unknown report"));
+}
+
+#[test]
+fn calibrate_runs_on_custom_net() {
+    let tmp = std::env::temp_dir().join("stratus_cli_net.cfg");
+    std::fs::write(
+        &tmp,
+        "input 3 8 8\nconv c1 4 k3 s1 p1 relu\nconv c2 4 k3 s1 p1 relu\n\
+         pool p1 2\nfc fc 10\nloss hinge\n",
+    )
+    .unwrap();
+    let (ok, out, _) = stratus(&[
+        "calibrate", "--net", tmp.to_str().unwrap(), "--samples", "3",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("c1"));
+    assert!(out.contains("rec"));
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn train_golden_tiny_runs() {
+    let tmp = std::env::temp_dir().join("stratus_cli_train.cfg");
+    std::fs::write(
+        &tmp,
+        "name tiny\ninput 3 8 8\nconv c1 4 k3 s1 p1 relu\n\
+         conv c2 4 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge\n",
+    )
+    .unwrap();
+    let (ok, out, _) = stratus(&[
+        "train", "--net", tmp.to_str().unwrap(), "--backend", "golden",
+        "--images", "8", "--epochs", "1", "--batch", "4", "--eval", "8",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("epoch   1"));
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn bad_net_config_reports_line() {
+    let tmp = std::env::temp_dir().join("stratus_cli_bad.cfg");
+    std::fs::write(&tmp, "input 3 8 8\nconv c1 4 k3 s2 p1\nfc fc 10\n")
+        .unwrap();
+    let (ok, _, err) =
+        stratus(&["compile", "--net", tmp.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("line 2"), "{err}");
+    let _ = std::fs::remove_file(&tmp);
+}
