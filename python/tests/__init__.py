@@ -1,0 +1,4 @@
+"""Test package marker: lets pytest import these modules as
+``tests.test_*`` so the relative ``from .helpers import randi`` imports
+resolve regardless of rootdir (conftest.py puts ``python/`` on sys.path
+for the ``compile`` package itself)."""

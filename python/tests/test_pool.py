@@ -5,7 +5,14 @@ selected max pixel; all other window pixels receive zero)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # degrade: only the property sweeps skip; every deterministic
+    # test in this module still runs
+    from .helpers import hyp_given as given, hyp_settings as \
+        settings, hyp_st as st
 
 from compile.kernels import maxpool, scale_mask, upsample_scale
 from compile.kernels import ref

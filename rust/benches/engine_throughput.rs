@@ -1,0 +1,73 @@
+//! Engine throughput bench (ISSUE 1 tentpole): host-side scaling of the
+//! batch-parallel training engine on the golden backend — per-image
+//! latency and images/sec at 1/2/4/8 workers with a bit-identity check
+//! against the sequential path — plus the hardware model's projection
+//! for the same sharding across replicated accelerator instances.
+//! `cargo bench --bench engine_throughput`
+
+use std::time::Instant;
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+use stratus::metrics::engine_scaling;
+use stratus::sim::simulate;
+
+const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
+                       conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
+                       loss hinge";
+
+fn main() {
+    let net = Network::parse(NET_CFG).unwrap();
+    let dv = DesignVars::for_scale(1);
+    let data = Synthetic::new(10, (3, 16, 16), 17, 0.3);
+    let batch_size = 32;
+    let batches = 4;
+    let train = data.batch(0, batch_size * batches);
+
+    println!("=== batch-parallel engine: host throughput ===");
+    println!("{:<8} {:>10} {:>12} {:>9} {:>14}", "workers", "images/s",
+             "ms/image", "speedup", "vs sequential");
+    let mut reference: Option<Vec<i32>> = None;
+    let mut base_ips = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let mut t = Trainer::new(&net, &dv, batch_size, 0.02, 0.9,
+                                 Backend::Golden, None)
+            .unwrap()
+            .with_workers(workers);
+        let t0 = Instant::now();
+        for chunk in train.chunks(batch_size) {
+            t.train_batch(chunk).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let n = train.len() as f64;
+        let ips = n / dt;
+        if workers == 1 {
+            base_ips = ips;
+        }
+        let flat = t.flat_params();
+        let verdict = match &reference {
+            None => "(reference)",
+            Some(r) if *r == flat => "bit-identical",
+            Some(_) => "MISMATCH",
+        };
+        if reference.is_none() {
+            reference = Some(flat);
+        }
+        println!("{:<8} {:>10.1} {:>12.3} {:>8.2}x {:>14}", workers, ips,
+                 dt / n * 1e3, ips / base_ips, verdict);
+    }
+
+    println!("\n=== hardware model: sharded accelerator instances \
+              (1X @ BS 40) ===");
+    println!("{}", engine_scaling(1, 40, &[1, 2, 4, 8, 16]));
+
+    let acc = RtlCompiler::default()
+        .compile(&Network::cifar(1), &DesignVars::for_scale(1))
+        .unwrap();
+    let r = simulate(&acc, 40);
+    println!("single-instance per-image latency: {:.3} ms ({:.0} \
+              images/s)",
+             r.seconds_per_image() * 1e3, r.images_per_second());
+}

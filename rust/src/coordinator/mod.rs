@@ -4,6 +4,13 @@
 //! gradients across the batch, and runs the weight-update unit at batch
 //! end, while accounting simulated hardware cycles from the `sim` model.
 //!
+//! Batches are dispatched through the batch-parallel
+//! [`engine`](crate::engine): with `workers > 1` the golden backend
+//! shards a batch across threads with thread-local accumulators and a
+//! deterministic merge, bit-identical to the sequential path (see the
+//! engine docs for the contract).  [`Trainer::train_image`] remains the
+//! single-shard path and the faithful per-image hardware analogue.
+//!
 //! Numerics run through one of three backends:
 //! - [`Backend::PerOp`] — every scheduled op executes its own AOT
 //!   artifact on the PJRT runtime (the accelerator's layer-by-layer
@@ -21,6 +28,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::compiler::{Accelerator, OpKind, RtlCompiler};
 use crate::config::{DesignVars, Layer, Network};
 use crate::data::Sample;
+use crate::engine::{self, EngineReport, StepOut};
 use crate::nn::golden;
 use crate::nn::loss::encode_label;
 use crate::nn::pool::relu_mask;
@@ -64,6 +72,16 @@ impl TrainMetrics {
     pub fn sim_seconds(&self, clock_hz: f64) -> f64 {
         self.sim_cycles / clock_hz
     }
+
+    /// Host-side training throughput (engine metric): images per second
+    /// of numerics wall-clock across all batches so far.
+    pub fn images_per_second(&self) -> f64 {
+        if self.host_seconds > 0.0 {
+            self.images as f64 / self.host_seconds
+        } else {
+            0.0
+        }
+    }
 }
 
 /// The trainer: compiled accelerator + parameters + optimizer state +
@@ -78,6 +96,11 @@ pub struct Trainer {
     /// per-image simulated cycles (constant per design point)
     image_cycles: f64,
     batch_cycles: f64,
+    /// Engine worker shards for `train_batch` (1 = sequential, the
+    /// hardware-faithful default; golden backend only beyond 1).
+    pub workers: usize,
+    /// Engine observations from the most recent `train_batch`.
+    pub last_engine: Option<EngineReport>,
     pub metrics: TrainMetrics,
     /// parameter literals cached for the current batch (§Perf:
     /// parameters only change at end_batch, so their host->literal
@@ -170,11 +193,45 @@ impl Trainer {
             runtime,
             image_cycles,
             batch_cycles,
+            workers: 1,
+            last_engine: None,
             metrics: TrainMetrics::default(),
             param_lits: HashMap::new(),
             pool_prev,
             conv_below,
         })
+    }
+
+    /// Set the engine worker count (builder style).  `train_batch`
+    /// shards golden-backend batches across this many threads; results
+    /// stay bit-identical to `workers == 1` (engine contract).
+    pub fn with_workers(mut self, workers: usize) -> Trainer {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Optimizer state (gradient accumulators + momentum) per parameter,
+    /// in the network's canonical order — exposed for equivalence tests
+    /// and checkpoint tooling.
+    pub fn param_states(&self) -> &[(String, ParamState)] {
+        &self.states
+    }
+
+    /// Every parameter flattened in canonical `param_order` — the shape
+    /// used by the engine's bit-identity checks.
+    pub fn flat_params(&self) -> Vec<i32> {
+        self.acc
+            .net
+            .param_order()
+            .iter()
+            .flat_map(|p| {
+                self.params
+                    .get(p)
+                    .expect("param_order names exist")
+                    .data()
+                    .to_vec()
+            })
+            .collect()
     }
 
     fn runtime(&self) -> Result<&Runtime> {
@@ -239,19 +296,85 @@ impl Trainer {
         Ok(())
     }
 
-    /// Train a full batch of samples (sequentially, like the hardware).
+    /// Train a full batch of samples and run the end-of-batch weight
+    /// update.  Golden-backend batches go through the batch-parallel
+    /// [`engine`] (sharded across [`Trainer::workers`] threads, merged
+    /// deterministically — bit-identical to sequential at any worker
+    /// count); runtime backends execute image-by-image, like the
+    /// hardware.  Errors on an empty batch.  On any step error the
+    /// batch's partial gradient accumulation is discarded
+    /// (all-or-nothing on every backend), so a caller may retry the
+    /// batch without double-counting.
     pub fn train_batch(&mut self, samples: &[Sample]) -> Result<f64> {
-        let mut sum = 0f64;
-        for s in samples {
-            sum += f64::from(self.train_image(s)?);
+        if samples.is_empty() {
+            bail!("train_batch: empty batch (nothing to train on)");
         }
+        let sum = match self.backend {
+            Backend::Golden => self.train_batch_engine(samples)?,
+            _ if self.workers > 1 => bail!(
+                "train_batch: workers = {} requires the golden backend \
+                 (the PJRT runtime executes on a single host thread)",
+                self.workers
+            ),
+            _ => {
+                let mut sum = 0f64;
+                for s in samples {
+                    match self.train_image(s) {
+                        Ok(loss) => sum += f64::from(loss),
+                        Err(e) => {
+                            // discard the partial batch (see doc above)
+                            for (_, st) in &mut self.states {
+                                st.reset();
+                            }
+                            return Err(e);
+                        }
+                    }
+                }
+                sum
+            }
+        };
         self.end_batch()?;
         Ok(sum / samples.len() as f64)
     }
 
+    /// Golden-backend batch through the engine (any worker count; a
+    /// single worker runs inline through the same fork/merge machinery).
+    fn train_batch_engine(&mut self, samples: &[Sample]) -> Result<f64> {
+        let net = &self.acc.net;
+        let params = &self.params;
+        let order = net.param_order();
+        let nclass = net.nclass;
+        let step = |s: &Sample| -> Result<StepOut> {
+            let y = encode_label(s.label, nclass);
+            let (loss, _logits, mut grads) =
+                golden::train_step(net, params, &s.image, &y)?;
+            let mut gs = Vec::with_capacity(order.len());
+            for name in &order {
+                gs.push(grads.remove(name).ok_or_else(|| {
+                    anyhow!("missing grad {name}")
+                })?);
+            }
+            Ok(StepOut { loss, grads: gs })
+        };
+        let (loss_sum, report) =
+            engine::run_batch(samples, self.workers, &mut self.states,
+                              &step)?;
+        self.metrics.images += samples.len() as u64;
+        self.metrics.loss_sum += loss_sum as f64;
+        self.metrics.sim_cycles +=
+            self.image_cycles * samples.len() as f64;
+        self.metrics.host_seconds += report.wall_seconds;
+        self.last_engine = Some(report);
+        Ok(loss_sum as f64)
+    }
+
     /// Classification accuracy over samples (golden forward; numerics are
-    /// bit-identical to the artifacts, see integration tests).
+    /// bit-identical to the artifacts, see integration tests).  Errors on
+    /// an empty sample set.
     pub fn evaluate(&self, samples: &[Sample]) -> Result<f64> {
+        if samples.is_empty() {
+            bail!("evaluate: empty sample set (accuracy undefined)");
+        }
         let mut correct = 0usize;
         for s in samples {
             let (logits, _) =
@@ -522,6 +645,90 @@ mod tests {
         }
         let a1 = t.evaluate(&train).unwrap();
         assert!(a1 > a0, "acc {a0} -> {a1}");
+    }
+
+    #[test]
+    fn empty_batch_and_eval_are_errors() {
+        let mut t = tiny_trainer();
+        let err = t.train_batch(&[]).unwrap_err();
+        assert!(format!("{err:#}").contains("empty batch"));
+        let err = t.evaluate(&[]).unwrap_err();
+        assert!(format!("{err:#}").contains("empty sample set"));
+        // nothing was recorded by the failed calls
+        assert_eq!(t.metrics.images, 0);
+        assert_eq!(t.metrics.batches, 0);
+    }
+
+    #[test]
+    fn four_workers_bit_identical_to_one() {
+        // same seed, same batch: the engine's sharded path must produce
+        // bit-identical params, loss, and optimizer state (engine
+        // merge contract; ISSUE 1 acceptance criterion)
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 10);
+        let mut t1 = tiny_trainer();
+        let mut t4 = tiny_trainer().with_workers(4);
+        for _ in 0..2 {
+            // two batches so momentum state is exercised too
+            let l1 = t1.train_batch(&batch).unwrap();
+            let l4 = t4.train_batch(&batch).unwrap();
+            assert_eq!(l1, l4, "mean loss diverged");
+        }
+        for name in t1.acc.net.param_order() {
+            assert_eq!(
+                t1.params.get(&name).unwrap(),
+                t4.params.get(&name).unwrap(),
+                "params diverged for {name}"
+            );
+        }
+        for ((n1, s1), (n4, s4)) in
+            t1.param_states().iter().zip(t4.param_states())
+        {
+            assert_eq!(n1, n4);
+            assert_eq!(s1.grad_acc, s4.grad_acc, "{n1} accumulator");
+            assert_eq!(s1.momentum, s4.momentum, "{n1} momentum");
+            assert_eq!(s1.count, s4.count);
+        }
+        let rep = t4.last_engine.as_ref().unwrap();
+        assert_eq!(rep.workers, 4);
+        assert_eq!(rep.shard_sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn engine_matches_manual_train_image_loop() {
+        // cross-path pin: the engine's positional fork/merge must land
+        // every gradient on the same parameter as the name-addressed
+        // train_image + end_batch path (guards param_order alignment)
+        let data = Synthetic::new(10, (3, 8, 8), 9, 0.3);
+        let batch = data.batch(0, 6);
+        let mut manual = tiny_trainer();
+        for s in &batch {
+            manual.train_image(s).unwrap();
+        }
+        manual.end_batch().unwrap();
+        let mut sharded = tiny_trainer().with_workers(3);
+        sharded.train_batch(&batch).unwrap();
+        assert_eq!(manual.flat_params(), sharded.flat_params());
+        for ((n, s), (_, p)) in manual
+            .param_states()
+            .iter()
+            .zip(sharded.param_states())
+        {
+            assert_eq!(s.momentum, p.momentum, "{n} momentum");
+            assert_eq!(s.count, p.count);
+        }
+        assert_eq!(manual.metrics.loss_sum, sharded.metrics.loss_sum);
+    }
+
+    #[test]
+    fn more_workers_than_images_still_works() {
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 3);
+        let mut t = tiny_trainer().with_workers(16);
+        t.train_batch(&batch).unwrap();
+        let rep = t.last_engine.as_ref().unwrap();
+        assert_eq!(rep.workers, 3); // clamped to one image per shard
+        assert_eq!(t.metrics.images, 3);
     }
 
     #[test]

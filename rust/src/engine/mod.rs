@@ -1,0 +1,282 @@
+//! Batch-parallel training engine: shards a batch across worker threads
+//! and merges per-shard gradient accumulators deterministically.
+//!
+//! The paper trains with gradient accumulation — per image, FP/BP/WU
+//! produce weight gradients that are summed into DRAM-resident i32
+//! accumulators, and the weight-update unit runs once per batch (§III-E,
+//! Fig. 7).  Nothing inside a batch depends on any other image, so the
+//! batch dimension is embarrassingly parallel: the FPGA-CNN literature
+//! calls this batch-level parallelism, the standard throughput lever
+//! that layer-level tiling alone cannot provide (one accelerator
+//! instance per shard; arXiv:2505.13461 §IV).
+//!
+//! # Sharding / merge contract
+//!
+//! - The batch is split into **contiguous** shards in sample order,
+//!   sizes differing by at most one ([`shard_sizes`]).
+//! - Each shard runs the per-image step on its own OS thread with
+//!   **thread-local** accumulators forked from the trainer's
+//!   ([`ParamState::fork_shard`]) — workers never contend on shared
+//!   state.
+//! - Shard accumulators merge back in **fixed index order** (shard 0
+//!   first).  Because accumulation is wrapping i32 addition (associative
+//!   and commutative mod 2^32), the merged accumulator — and therefore
+//!   every parameter after `end_batch` — is **bit-identical** to the
+//!   sequential path at any worker count.  Loss totals are summed in
+//!   i64, which is exact.
+//!
+//! The step function is pluggable (`Fn(&Sample) -> Result<StepOut> +
+//! Sync`): the coordinator plugs in the golden model today, and any
+//! thread-safe runtime step can slot in without touching the engine.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Sample;
+use crate::nn::sgd::ParamState;
+use crate::nn::tensor::Tensor;
+
+/// One image's step result: fixed-point loss plus weight/bias gradients
+/// in the network's canonical `param_order`.
+pub struct StepOut {
+    pub loss: i32,
+    pub grads: Vec<Tensor>,
+}
+
+/// What the engine observed while running one batch.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Shards actually used (≤ requested workers, ≥ 1).
+    pub workers: usize,
+    pub images: usize,
+    /// Contiguous shard sizes, in shard index order.
+    pub shard_sizes: Vec<usize>,
+    /// Wall-clock of the sharded section (fork -> join -> merge).
+    pub wall_seconds: f64,
+}
+
+/// Deterministic contiguous shard sizes: `n` images over at most
+/// `workers` shards, the first `n % shards` one image larger.  Never
+/// produces an empty shard; returns an empty vec only for `n == 0`.
+pub fn shard_sizes(n: usize, workers: usize) -> Vec<usize> {
+    let w = workers.max(1).min(n);
+    if w == 0 {
+        return Vec::new();
+    }
+    let base = n / w;
+    let extra = n % w;
+    (0..w).map(|i| base + usize::from(i < extra)).collect()
+}
+
+struct ShardOut {
+    loss_sum: i64,
+    states: Vec<ParamState>,
+}
+
+fn run_shard<F>(shard: &[Sample], mut states: Vec<ParamState>, step: &F)
+                -> Result<ShardOut>
+where
+    F: Fn(&Sample) -> Result<StepOut> + Sync,
+{
+    let mut loss_sum = 0i64;
+    for s in shard {
+        let out = step(s)?;
+        if out.grads.len() != states.len() {
+            bail!(
+                "engine: step produced {} gradients for {} parameters",
+                out.grads.len(),
+                states.len()
+            );
+        }
+        for (st, g) in states.iter_mut().zip(&out.grads) {
+            st.accumulate(g);
+        }
+        loss_sum += i64::from(out.loss);
+    }
+    Ok(ShardOut { loss_sum, states })
+}
+
+/// Run one batch through `step`, sharded across up to `workers` threads,
+/// accumulating into `states` (name, accumulator) pairs whose order must
+/// match the gradient order `step` emits.  Returns the exact i64 loss
+/// sum and an [`EngineReport`].
+///
+/// `workers == 1` (or a single-image batch) runs inline on the calling
+/// thread through the same fork/merge machinery, so the two paths cannot
+/// drift.
+pub fn run_batch<F>(samples: &[Sample], workers: usize,
+                    states: &mut [(String, ParamState)], step: &F)
+                    -> Result<(i64, EngineReport)>
+where
+    F: Fn(&Sample) -> Result<StepOut> + Sync,
+{
+    if samples.is_empty() {
+        bail!("engine: cannot run an empty batch");
+    }
+    let t0 = Instant::now();
+    let sizes = shard_sizes(samples.len(), workers);
+    let mut slices: Vec<&[Sample]> = Vec::with_capacity(sizes.len());
+    let mut off = 0usize;
+    for &sz in &sizes {
+        slices.push(&samples[off..off + sz]);
+        off += sz;
+    }
+    let forks: Vec<Vec<ParamState>> = slices
+        .iter()
+        .map(|_| states.iter().map(|(_, st)| st.fork_shard()).collect())
+        .collect();
+
+    let results: Vec<Result<ShardOut>> = if slices.len() == 1 {
+        let fork = forks.into_iter().next().unwrap();
+        vec![run_shard(slices[0], fork, step)]
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = slices
+                .iter()
+                .zip(forks)
+                .map(|(&sl, fork)| {
+                    scope.spawn(move || run_shard(sl, fork, step))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow!("engine: worker thread panicked"))
+                    })
+                })
+                .collect()
+        })
+    };
+
+    // all-or-nothing: if any shard failed, propagate before touching
+    // `states` — otherwise the caller would observe partially-merged
+    // accumulators whose content depends on the worker count
+    let shards = results
+        .into_iter()
+        .collect::<Result<Vec<ShardOut>>>()?;
+    // fixed-order merge: shard 0 first, then 1, ... (see module docs)
+    let mut loss_sum = 0i64;
+    for sh in &shards {
+        loss_sum += sh.loss_sum;
+        for ((_, st), shard_st) in states.iter_mut().zip(&sh.states) {
+            st.merge_shard(shard_st);
+        }
+    }
+    let report = EngineReport {
+        workers: sizes.len(),
+        images: samples.len(),
+        shard_sizes: sizes,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((loss_sum, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::sgd::ParamKind;
+
+    fn samples(n: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| Sample {
+                // adversarial payloads: large magnitudes force wrapping
+                image: Tensor::from_vec(
+                    &[4],
+                    vec![
+                        i as i32 + 1,
+                        -(i as i32) - 1,
+                        i32::MAX - i as i32,
+                        i32::MIN + i as i32,
+                    ],
+                ),
+                label: i % 3,
+            })
+            .collect()
+    }
+
+    /// Step under test: gradient = the image itself, loss = label.
+    fn step(s: &Sample) -> Result<StepOut> {
+        Ok(StepOut { loss: s.label as i32, grads: vec![s.image.clone()] })
+    }
+
+    fn fresh_states() -> Vec<(String, ParamState)> {
+        vec![("w".to_string(), ParamState::new(ParamKind::Weight, &[4]))]
+    }
+
+    #[test]
+    fn shard_sizes_partition_evenly() {
+        assert_eq!(shard_sizes(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(shard_sizes(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(shard_sizes(3, 8), vec![1, 1, 1]);
+        assert_eq!(shard_sizes(5, 1), vec![5]);
+        assert_eq!(shard_sizes(0, 4), Vec::<usize>::new());
+        for (n, w) in [(17, 5), (40, 3), (1, 1), (9, 9)] {
+            let s = shard_sizes(n, w);
+            assert_eq!(s.iter().sum::<usize>(), n);
+            assert!(s.iter().all(|&x| x > 0));
+            let (mn, mx) =
+                (s.iter().min().unwrap(), s.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced: {s:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_merge_is_bit_identical_to_sequential() {
+        let batch = samples(10);
+        let mut seq = fresh_states();
+        let (loss_seq, r1) =
+            run_batch(&batch, 1, &mut seq, &step).unwrap();
+        assert_eq!(r1.workers, 1);
+        for workers in [2, 3, 4, 10] {
+            let mut par = fresh_states();
+            let (loss_par, rep) =
+                run_batch(&batch, workers, &mut par, &step).unwrap();
+            assert_eq!(loss_par, loss_seq);
+            assert_eq!(rep.workers, workers.min(10));
+            assert_eq!(rep.images, 10);
+            assert_eq!(
+                par[0].1.grad_acc, seq[0].1.grad_acc,
+                "accumulators diverged at {workers} workers"
+            );
+            assert_eq!(par[0].1.count, seq[0].1.count);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_an_error() {
+        let mut st = fresh_states();
+        let err = run_batch(&[], 4, &mut st, &step).unwrap_err();
+        assert!(format!("{err:#}").contains("empty"));
+    }
+
+    #[test]
+    fn step_errors_propagate_from_any_shard() {
+        let batch = samples(8);
+        let failing = |s: &Sample| -> Result<StepOut> {
+            if s.label == 2 {
+                bail!("injected failure");
+            }
+            step(s)
+        };
+        let mut st = fresh_states();
+        let err = run_batch(&batch, 4, &mut st, &failing).unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+        // all-or-nothing: no shard merged, regardless of which failed
+        assert!(st[0].1.grad_acc.data().iter().all(|&v| v == 0),
+                "accumulators polluted by a failed batch");
+        assert_eq!(st[0].1.count, 0);
+    }
+
+    #[test]
+    fn gradient_arity_mismatch_is_an_error() {
+        let batch = samples(4);
+        let bad = |_: &Sample| -> Result<StepOut> {
+            Ok(StepOut { loss: 0, grads: Vec::new() })
+        };
+        let mut st = fresh_states();
+        let err = run_batch(&batch, 2, &mut st, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("gradients"));
+    }
+}

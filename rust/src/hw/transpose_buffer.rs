@@ -199,6 +199,47 @@ mod tests {
     }
 
     #[test]
+    fn non_square_nif_gt_nof_pins_circulant_placement() {
+        // More input-channel rows than column buffers (nif > nof): the
+        // rotation wraps several times per row range, so this shape pins
+        // the `(r + c) % nof` placement.  Storage, reconstruction, both
+        // read modes, and stream latency must all hold.
+        let (nof, nif) = (4usize, 6usize);
+        let w = sample(nof, nif, 3, 9);
+        let mut tb = TransposableBuffer::store(&w);
+        assert_eq!(tb.storage_words(), nof * nif * 9);
+        assert_eq!(tb.reconstruct(), w);
+        assert_eq!(tb.fp_stream_cycles(), nif as u64);
+        assert_eq!(tb.bp_stream_cycles(), nif as u64);
+        assert_eq!(tb.naive_bp_stream_cycles(), (nif * nof) as u64);
+        for of in 0..nof {
+            for r in 0..nif {
+                let block = tb.read_normal(of, r).to_vec();
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        assert_eq!(block[ky * 3 + kx],
+                                   w.at4(of, r, ky, kx));
+                    }
+                }
+            }
+        }
+        let wt = transpose_flip(&w);
+        for r in 0..nif {
+            let row = tb.read_transpose_row(r);
+            assert_eq!(row.len(), nof);
+            for (of, block) in row.iter().enumerate() {
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        assert_eq!(block[ky * 3 + kx],
+                                   wt.at4(r, of, ky, kx),
+                                   "r={r} of={of}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn transpose_read_is_conflict_free() {
         // every block of a transpose row must come from a distinct column
         // buffer (single-port constraint)

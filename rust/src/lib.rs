@@ -6,7 +6,9 @@
 //!
 //! - **Layer 3 (this crate)** — the paper's system contribution: the RTL
 //!   compiler ([`compiler`]), the accelerator's global control and
-//!   layer-by-layer training schedule ([`coordinator`]), a cycle-accurate
+//!   layer-by-layer training schedule ([`coordinator`]), the
+//!   batch-parallel training engine that shards batches across worker
+//!   threads with bit-identical results ([`engine`]), a cycle-accurate
 //!   hardware model of the generated accelerator ([`hw`], [`sim`]), and a
 //!   PJRT runtime that executes the AOT-compiled numerics ([`runtime`]).
 //! - **Layer 2 (python/compile/model.py, build-time)** — the fixed-point
@@ -24,6 +26,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod fixed;
 pub mod gpu_model;
 pub mod hw;

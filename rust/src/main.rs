@@ -195,6 +195,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 0.002)?;
     let momentum = args.f64_or("momentum", 0.9)?;
     let seed = args.usize_or("seed", 7)? as u64;
+    let workers = args.usize_or("workers", 1)?;
     let backend = match args.get_or("backend", "golden").as_str() {
         "golden" => Backend::Golden,
         "perop" | "per-op" => Backend::PerOp,
@@ -204,12 +205,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let artifacts: Option<PathBuf> =
         Some(PathBuf::from(args.get_or("artifacts", "artifacts")));
     let mut t = Trainer::new(&net, &dv, batch, lr, momentum, backend,
-                             artifacts.as_deref())?;
+                             artifacts.as_deref())?
+        .with_workers(workers);
     let data = Synthetic::new(net.nclass, net.input, seed, 0.3);
     let train: Vec<_> = data.batch(0, images);
     let test: Vec<_> = data.batch(1_000_000, eval_n);
-    println!("== training {} ({:?} backend, {} images, BS {batch}) ==",
-             net.name, backend, images);
+    println!("== training {} ({:?} backend, {} images, BS {batch}, \
+              {} worker{}) ==",
+             net.name, backend, images, t.workers,
+             if t.workers == 1 { "" } else { "s" });
     for epoch in 0..epochs {
         let mut loss_sum = 0.0;
         let mut nb = 0;
@@ -221,13 +225,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         let acc_te = t.evaluate(&test)?;
         println!(
             "epoch {:>3}: loss {:>10.1}  train-acc {:>5.1}%  \
-             test-acc {:>5.1}%  sim {:>8.2}s  host {:>6.1}s",
+             test-acc {:>5.1}%  sim {:>8.2}s  host {:>6.1}s  \
+             eng {:>7.0} img/s",
             epoch + 1,
             loss_sum / nb as f64,
             acc_tr * 100.0,
             acc_te * 100.0,
             t.metrics.sim_seconds(dv.clock_mhz * 1e6),
-            t.metrics.host_seconds
+            t.metrics.host_seconds,
+            t.metrics.images_per_second()
         );
     }
     Ok(())
@@ -280,9 +286,15 @@ fn cmd_report(args: &Args) -> Result<()> {
         println!("== Fig. 10: 4X buffer usage ==\n{}", metrics::fig10());
         any = true;
     }
+    if which == "engine" || which == "all" {
+        println!("== engine scaling: 1X @ BS 40, sharded accelerator \
+                  instances ==\n{}",
+                 metrics::engine_scaling(1, 40, &[1, 2, 4, 8, 16]));
+        any = true;
+    }
     if !any {
         bail!("unknown report `{which}` \
-               (table2|table3|fig9|fig10|all)");
+               (table2|table3|fig9|fig10|engine|all)");
     }
     Ok(())
 }
@@ -299,7 +311,9 @@ COMMANDS:
   simulate  --scale .. --batch N            cycle-level simulation
   train     --scale .. --backend golden|perop|fused --images N
             --epochs N --batch N --lr F [--artifacts DIR --eval N]
-  report    table2|table3|fig9|fig10|all    regenerate paper outputs
+            [--workers N   shard each batch across N engine threads
+                           (golden backend; bit-identical results)]
+  report    table2|table3|fig9|fig10|engine|all  regenerate outputs
   calibrate --scale .. --samples N          adaptive fixed-point pass
 ";
 

@@ -141,6 +141,37 @@ pub fn fig9() -> String {
     render_table(&header, &rows)
 }
 
+/// Batch-parallel engine scaling (ISSUE 1 tentpole): simulated per-image
+/// latency and throughput when a batch is sharded across N replicated
+/// accelerator instances — the hardware analogue of the host engine's
+/// `train --workers N`.  The batch-end weight update stays serialized on
+/// the merged accumulators, so speedup is sublinear by exactly that
+/// term.
+pub fn engine_scaling(scale: usize, batch: usize, engines: &[usize])
+                      -> String {
+    let acc = compile(scale);
+    let r = simulate(&acc, batch);
+    let base = r.sharded_images_per_second(1);
+    let header = ["engines", "iter cycles", "ms/image", "images/s",
+                  "speedup"];
+    let rows: Vec<Vec<String>> = engines
+        .iter()
+        .map(|&e| {
+            let ips = r.sharded_images_per_second(e);
+            let iter = r.sharded_cycles_per_iteration(e);
+            vec![
+                format!("{e}"),
+                format!("{iter}"),
+                format!("{:.3}",
+                        iter as f64 / batch as f64 / r.clock_hz * 1e3),
+                format!("{ips:.0}"),
+                format!("{:.2}x", ips / base),
+            ]
+        })
+        .collect();
+    render_table(&header, &rows)
+}
+
 /// Fig. 10: buffer usage breakdown of the 4X design.
 pub fn fig10() -> String {
     let net = Network::cifar(4);
@@ -205,6 +236,26 @@ mod tests {
             })
             .sum();
         assert!((sum - 100.0).abs() < 0.5, "sum = {sum}");
+    }
+
+    #[test]
+    fn engine_scaling_reports_monotone_speedup() {
+        let t = engine_scaling(1, 40, &[1, 2, 4, 8]);
+        assert_eq!(t.lines().count(), 6);
+        let speedups: Vec<f64> = t
+            .lines()
+            .skip(2)
+            .filter_map(|l| {
+                l.split('|')
+                    .nth(5)
+                    .and_then(|c| c.trim().trim_end_matches('x')
+                              .parse::<f64>().ok())
+            })
+            .collect();
+        assert_eq!(speedups.len(), 4);
+        assert!((speedups[0] - 1.0).abs() < 1e-9);
+        assert!(speedups.windows(2).all(|w| w[0] < w[1]),
+                "not monotone: {speedups:?}");
     }
 
     #[test]

@@ -78,6 +78,44 @@ impl ParamState {
         self.count += 1;
     }
 
+    /// Fork a zeroed shard-local accumulator with this state's kind and
+    /// geometry (the engine's thread-local gradient store).  The fork
+    /// carries no momentum: shards only accumulate; momentum advances
+    /// once per batch in [`ParamState::apply`] on the merged state.
+    pub fn fork_shard(&self) -> ParamState {
+        ParamState::new(self.kind, self.grad_acc.shape())
+    }
+
+    /// Fold a shard accumulator back into this state.  Accumulation is
+    /// wrapping i32 addition — associative and commutative mod 2^32 —
+    /// so the merged result is bit-identical to having accumulated every
+    /// image directly, at any shard count and in any merge order.  (The
+    /// engine still merges shards in fixed index order; this method just
+    /// doesn't depend on it.)
+    pub fn merge_shard(&mut self, shard: &ParamState) {
+        assert_eq!(shard.kind, self.kind, "shard kind mismatch");
+        assert_eq!(shard.grad_acc.shape(), self.grad_acc.shape());
+        for (a, &v) in self
+            .grad_acc
+            .data_mut()
+            .iter_mut()
+            .zip(shard.grad_acc.data())
+        {
+            *a = a.wrapping_add(v);
+        }
+        self.count += shard.count;
+    }
+
+    /// Discard any accumulated gradients (batch abandoned before its
+    /// weight update, e.g. a step failed mid-batch).  Momentum is
+    /// untouched: it only advances in [`ParamState::apply`].
+    pub fn reset(&mut self) {
+        for a in self.grad_acc.data_mut() {
+            *a = 0;
+        }
+        self.count = 0;
+    }
+
     /// End-of-batch weight update, Eq. (6).  Mutates `param` in place and
     /// clears the accumulator.
     pub fn apply(&mut self, param: &mut Tensor, hy: &SgdHyper) {
@@ -120,10 +158,7 @@ impl ParamState {
                 }
             }
         }
-        for a in self.grad_acc.data_mut() {
-            *a = 0;
-        }
-        self.count = 0;
+        self.reset();
     }
 }
 
@@ -150,6 +185,61 @@ mod tests {
         st.accumulate(&Tensor::from_vec(&[2, 2], vec![10, 20, 30, 40]));
         assert_eq!(st.grad_acc.data(), &[11, 22, 33, 44]);
         assert_eq!(st.count, 2);
+    }
+
+    #[test]
+    fn fork_shard_copies_geometry_not_state() {
+        let mut st = ParamState::new(ParamKind::Bias, &[2, 3]);
+        st.accumulate(&Tensor::from_vec(&[2, 3], vec![1; 6]));
+        let f = st.fork_shard();
+        assert_eq!(f.kind, ParamKind::Bias);
+        assert_eq!(f.grad_acc.shape(), &[2, 3]);
+        assert!(f.grad_acc.data().iter().all(|&v| v == 0));
+        assert!(f.momentum.data().iter().all(|&v| v == 0));
+        assert_eq!(f.count, 0);
+    }
+
+    #[test]
+    fn merge_shard_equals_direct_accumulation() {
+        // accumulating 4 grads directly must equal accumulating them
+        // into two shard forks and merging — including wrapping
+        let grads: Vec<Tensor> = [i32::MAX - 3, 7, i32::MAX - 11, 23]
+            .iter()
+            .map(|&v| Tensor::from_vec(&[2], vec![v, -v]))
+            .collect();
+        let mut direct = ParamState::new(ParamKind::Weight, &[2]);
+        for g in &grads {
+            direct.accumulate(g);
+        }
+        let mut merged = ParamState::new(ParamKind::Weight, &[2]);
+        let mut s0 = merged.fork_shard();
+        let mut s1 = merged.fork_shard();
+        s0.accumulate(&grads[0]);
+        s0.accumulate(&grads[1]);
+        s1.accumulate(&grads[2]);
+        s1.accumulate(&grads[3]);
+        merged.merge_shard(&s0);
+        merged.merge_shard(&s1);
+        assert_eq!(merged.grad_acc, direct.grad_acc);
+        assert_eq!(merged.count, direct.count);
+    }
+
+    #[test]
+    fn merge_shard_is_order_independent() {
+        let g0 = Tensor::from_vec(&[1], vec![i32::MAX]);
+        let g1 = Tensor::from_vec(&[1], vec![12345]);
+        let mut a = ParamState::new(ParamKind::Weight, &[1]);
+        let mut b = ParamState::new(ParamKind::Weight, &[1]);
+        let mut s0 = a.fork_shard();
+        let mut s1 = a.fork_shard();
+        s0.accumulate(&g0);
+        s1.accumulate(&g1);
+        a.merge_shard(&s0);
+        a.merge_shard(&s1);
+        b.merge_shard(&s1);
+        b.merge_shard(&s0);
+        assert_eq!(a.grad_acc, b.grad_acc);
+        assert_eq!(a.count, b.count);
     }
 
     #[test]

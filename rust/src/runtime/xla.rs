@@ -1,0 +1,150 @@
+//! In-tree stand-in for the `xla` FFI crate (PJRT / xla_extension
+//! bindings).
+//!
+//! The offline toolchain vendors no FFI crates, so the runtime compiles
+//! against this API-compatible stub instead of the real bindings: every
+//! entry point type-checks exactly like the call sites in
+//! [`super`](crate::runtime) expect, and the only reachable failure is
+//! [`PjRtClient::cpu`], which reports that PJRT support is not compiled
+//! into this build.  Host-side literal handling ([`Literal::vec1`],
+//! [`Literal::reshape`], [`Literal::to_vec`]) is implemented for real so
+//! shape plumbing and the parameter-literal cache stay testable.
+//!
+//! The golden backend (pure rust, bit-identical to the AOT artifacts by
+//! construction) is unaffected; integration tests that need artifacts
+//! detect the missing `artifacts/` directory and skip themselves.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring the FFI crate's; call sites format it with
+/// `{e:?}`, so `Debug` renders the human-readable message directly.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+type XlaResult<T> = Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> XlaResult<T> {
+    Err(Error(format!(
+        "{what}: PJRT support is not compiled into this build (the \
+         `xla` FFI crate is unavailable in the offline toolchain); use \
+         the golden backend"
+    )))
+}
+
+/// Host literal.  This system only ever moves int32 payloads.
+pub struct Literal {
+    data: Vec<i32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a borrowed buffer.
+    pub fn vec1(data: &[i32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions of equal element count.
+    pub fn reshape(self, dims: &[i64]) -> XlaResult<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data, dims: dims.to_vec() })
+    }
+
+    /// Destructure a tuple literal (device results are always tuples).
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        unavailable("to_tuple")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: From<i32>>(&self) -> XlaResult<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from(v)).collect())
+    }
+}
+
+/// Parsed HLO module (text interchange; see runtime module docs).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> XlaResult<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T])
+                      -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device-resident result buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_counts() {
+        let l = Literal::vec1(&[1, 2, 3, 4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims, vec![2, 2]);
+        assert!(Literal::vec1(&[1, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrips_host_data() {
+        let l = Literal::vec1(&[5, -6, 7]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, -6, 7]);
+    }
+
+    #[test]
+    fn client_reports_missing_pjrt() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err:?}").contains("PJRT support"));
+    }
+}

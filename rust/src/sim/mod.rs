@@ -73,6 +73,33 @@ impl SimReport {
         self.cycles_per_image() / self.clock_hz
     }
 
+    /// Training throughput of one accelerator instance (per-image
+    /// latency inverted; the engine-scaling baseline).
+    pub fn images_per_second(&self) -> f64 {
+        1.0 / self.seconds_per_image()
+    }
+
+    /// Latency of one batch iteration when the batch is sharded across
+    /// `engines` replicated accelerator instances (the hardware analogue
+    /// of the host engine's `--workers`): shards of ceil(BS/N) images
+    /// run concurrently, then the batch-end weight update runs once on
+    /// the merged accumulators.
+    pub fn sharded_cycles_per_iteration(&self, engines: usize) -> u64 {
+        let n = engines.max(1).min(self.batch_size.max(1)) as u64;
+        let per_image = self.fp.latency_cycles
+            + self.bp.latency_cycles
+            + self.wu.latency_cycles;
+        let shard = (self.batch_size as u64).div_ceil(n);
+        per_image * shard + self.update.latency_cycles
+    }
+
+    /// Sharded-engine training throughput in images per second.
+    pub fn sharded_images_per_second(&self, engines: usize) -> f64 {
+        let secs = self.sharded_cycles_per_iteration(engines) as f64
+            / self.clock_hz;
+        self.batch_size as f64 / secs
+    }
+
     /// Epoch latency for `images` training images (Table II).
     pub fn seconds_per_epoch(&self, images: u64) -> f64 {
         self.seconds_per_image() * images as f64
@@ -332,6 +359,32 @@ mod tests {
         let ratio =
             off.wu.logic_cycles as f64 / on.wu.logic_cycles as f64;
         assert!(ratio > 3.0 && ratio <= 4.2, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn sharded_one_engine_matches_sequential_iteration() {
+        let r = sim(1, 40);
+        assert_eq!(r.sharded_cycles_per_iteration(1),
+                   r.cycles_per_iteration());
+        // and the degenerate engine counts clamp sanely
+        assert_eq!(r.sharded_cycles_per_iteration(0),
+                   r.cycles_per_iteration());
+        assert_eq!(r.sharded_cycles_per_iteration(1000),
+                   r.sharded_cycles_per_iteration(40));
+    }
+
+    #[test]
+    fn sharded_throughput_scales_with_engines() {
+        let r = sim(1, 40);
+        let t1 = r.sharded_images_per_second(1);
+        let t4 = r.sharded_images_per_second(4);
+        let t8 = r.sharded_images_per_second(8);
+        assert!(t1 < t4 && t4 < t8, "{t1} {t4} {t8}");
+        // speedup is sublinear: the batch-end update is serialized
+        assert!(t8 / t1 < 8.0);
+        // but the image phases themselves scale: 4 engines on BS-40
+        // cut shard length 40 -> 10
+        assert!(t4 / t1 > 2.0, "4-engine speedup only {}", t4 / t1);
     }
 
     #[test]

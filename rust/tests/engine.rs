@@ -1,0 +1,92 @@
+//! Engine equivalence suite (ISSUE 1 acceptance criterion): the
+//! batch-parallel engine must be a pure performance transform — same
+//! seed, same batch stream, any worker count => bit-identical
+//! parameters, losses, and optimizer state after every `end_batch`.
+//! Exercises the paper-scale 1X network, uneven shard splits, and
+//! multi-epoch momentum state.
+
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+
+fn trainer(net: &Network, batch: usize, workers: usize) -> Trainer {
+    let scale = match net.scale_tag() {
+        "4x" => 4,
+        "2x" => 2,
+        _ => 1,
+    };
+    Trainer::new(net, &DesignVars::for_scale(scale), batch, 0.002, 0.9,
+                 Backend::Golden, None)
+        .unwrap()
+        .with_workers(workers)
+}
+
+fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
+                     workers: usize) {
+    let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
+    let stream = data.batch(0, batch_images * batches);
+    let mut seq = trainer(net, batch_images, 1);
+    let mut par = trainer(net, batch_images, workers);
+    for chunk in stream.chunks(batch_images) {
+        let l_seq = seq.train_batch(chunk).unwrap();
+        let l_par = par.train_batch(chunk).unwrap();
+        assert_eq!(l_seq, l_par, "loss diverged at {workers} workers");
+    }
+    assert_eq!(seq.flat_params(), par.flat_params(),
+               "parameters diverged at {workers} workers");
+    for ((n, s), (_, p)) in
+        seq.param_states().iter().zip(par.param_states())
+    {
+        assert_eq!(s.grad_acc, p.grad_acc, "{n} grad_acc");
+        assert_eq!(s.momentum, p.momentum, "{n} momentum");
+        assert_eq!(s.count, p.count, "{n} count");
+    }
+    assert_eq!(seq.metrics.images, par.metrics.images);
+    assert_eq!(seq.metrics.loss_sum, par.metrics.loss_sum);
+    assert_eq!(seq.metrics.sim_cycles, par.metrics.sim_cycles);
+}
+
+fn tiny_net() -> Network {
+    Network::parse(
+        "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
+         relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+    .unwrap()
+}
+
+#[test]
+fn tiny_net_four_workers_two_batches() {
+    assert_equivalent(&tiny_net(), 8, 2, 4);
+}
+
+#[test]
+fn tiny_net_uneven_shards() {
+    // 10 images over 4 workers -> shards of 3/3/2/2
+    assert_equivalent(&tiny_net(), 10, 1, 4);
+}
+
+#[test]
+fn tiny_net_more_workers_than_batch() {
+    assert_equivalent(&tiny_net(), 3, 1, 16);
+}
+
+#[test]
+fn cifar_1x_two_workers_one_batch() {
+    // the paper-scale network (32x32 input, 14 parameter tensors)
+    assert_equivalent(&Network::cifar(1), 4, 1, 2);
+}
+
+#[test]
+fn engine_report_reflects_sharding() {
+    let net = tiny_net();
+    let data = Synthetic::new(net.nclass, net.input, 5, 0.3);
+    let batch = data.batch(0, 10);
+    let mut t = trainer(&net, 10, 4);
+    t.train_batch(&batch).unwrap();
+    let rep = t.last_engine.as_ref().unwrap();
+    assert_eq!(rep.workers, 4);
+    assert_eq!(rep.images, 10);
+    assert_eq!(rep.shard_sizes, vec![3, 3, 2, 2]);
+    assert!(rep.wall_seconds >= 0.0);
+    assert!(t.metrics.images_per_second() > 0.0);
+}
