@@ -1,0 +1,70 @@
+//! Cluster scaling bench (ISSUE 2 tentpole): host-side images/sec of
+//! the data-parallel cluster engine at 1/2/4/8 accelerator instances —
+//! with a bit-identity check against single-instance training — plus
+//! the hardware model's cluster projection including the ring
+//! all-reduce communication.
+//!
+//! `cargo bench --bench cluster_scaling [-- --smoke]`: smoke mode (also
+//! `BENCH_SMOKE=1`) runs one batch per instance count for CI.  The
+//! bench writes `BENCH_cluster_scaling.json` and exits nonzero when the
+//! headline `images_per_second` regresses more than 30% below
+//! `benches/baseline.json`, or on a bit-identity mismatch
+//! (metrics::bench::ScalingBench).
+
+use std::time::Instant;
+
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+use stratus::metrics::bench::{smoke_mode, ScalingBench};
+use stratus::metrics::cluster_scaling;
+
+const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
+                       conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
+                       loss hinge";
+
+fn main() {
+    let smoke = smoke_mode();
+    let net = Network::parse(NET_CFG).unwrap();
+    let dv = DesignVars::for_scale(1);
+    let data = Synthetic::new(10, (3, 16, 16), 23, 0.3);
+    let batch_size = 32;
+    let batches = if smoke { 1 } else { 4 };
+    let train = data.batch(0, batch_size * batches);
+
+    println!("=== cluster engine: host throughput vs instances{} ===",
+             if smoke { " (smoke)" } else { "" });
+    println!("{:<10} {:>10} {:>12} {:>9} {:>15}", "instances",
+             "images/s", "ms/image", "speedup", "vs 1 instance");
+    let mut bench = ScalingBench::new("cluster_scaling", smoke);
+    for instances in [1usize, 2, 4, 8] {
+        let mut t = Trainer::new(&net, &dv, batch_size, 0.02, 0.9,
+                                 Backend::Golden, None)
+            .unwrap()
+            .with_accelerators(instances);
+        // warmup batch (identical across instance counts, so final
+        // params stay comparable): the first cluster batch pays a
+        // one-time compile+simulate for the all-reduce cost cache,
+        // which must not land in the timed region
+        t.train_batch(&train[..batch_size]).unwrap();
+        let t0 = Instant::now();
+        for chunk in train.chunks(batch_size) {
+            t.train_batch(chunk).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let n = train.len() as f64;
+        let ips = n / dt;
+        let (speedup, verdict) = bench.observe(ips, t.flat_params());
+        println!("{:<10} {:>10.1} {:>12.3} {:>8.2}x {:>15}", instances,
+                 ips, dt / n * 1e3, speedup, verdict);
+    }
+
+    println!("\n=== hardware model: cluster projection with ring \
+              all-reduce (1X @ BS 40) ===");
+    println!("{}", cluster_scaling(1, 40, &[1, 2, 4, 8, 16]));
+
+    std::process::exit(bench.finish(&[
+        ("batch_size", batch_size as f64),
+        ("batches", batches as f64),
+    ]));
+}

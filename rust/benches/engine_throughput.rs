@@ -3,7 +3,13 @@
 //! latency and images/sec at 1/2/4/8 workers with a bit-identity check
 //! against the sequential path — plus the hardware model's projection
 //! for the same sharding across replicated accelerator instances.
-//! `cargo bench --bench engine_throughput`
+//!
+//! `cargo bench --bench engine_throughput [-- --smoke]`: smoke mode
+//! (also `BENCH_SMOKE=1`) runs one batch per worker count for CI.  The
+//! bench writes `BENCH_engine_throughput.json` and exits nonzero when
+//! the headline `images_per_second` regresses more than 30% below
+//! `benches/baseline.json`, or on a bit-identity mismatch
+//! (metrics::bench::ScalingBench).
 
 use std::time::Instant;
 
@@ -11,6 +17,7 @@ use stratus::compiler::RtlCompiler;
 use stratus::config::{DesignVars, Network};
 use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
+use stratus::metrics::bench::{smoke_mode, ScalingBench};
 use stratus::metrics::engine_scaling;
 use stratus::sim::simulate;
 
@@ -19,23 +26,28 @@ const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
                        loss hinge";
 
 fn main() {
+    let smoke = smoke_mode();
     let net = Network::parse(NET_CFG).unwrap();
     let dv = DesignVars::for_scale(1);
     let data = Synthetic::new(10, (3, 16, 16), 17, 0.3);
     let batch_size = 32;
-    let batches = 4;
+    let batches = if smoke { 1 } else { 4 };
     let train = data.batch(0, batch_size * batches);
 
-    println!("=== batch-parallel engine: host throughput ===");
+    println!("=== batch-parallel engine: host throughput{} ===",
+             if smoke { " (smoke)" } else { "" });
     println!("{:<8} {:>10} {:>12} {:>9} {:>14}", "workers", "images/s",
              "ms/image", "speedup", "vs sequential");
-    let mut reference: Option<Vec<i32>> = None;
-    let mut base_ips = 0.0;
+    let mut bench = ScalingBench::new("engine_throughput", smoke);
     for workers in [1usize, 2, 4, 8] {
         let mut t = Trainer::new(&net, &dv, batch_size, 0.02, 0.9,
                                  Backend::Golden, None)
             .unwrap()
             .with_workers(workers);
+        // warmup batch (identical across worker counts, so final
+        // params stay comparable); keeps the two scaling benches'
+        // measurement protocol symmetric
+        t.train_batch(&train[..batch_size]).unwrap();
         let t0 = Instant::now();
         for chunk in train.chunks(batch_size) {
             t.train_batch(chunk).unwrap();
@@ -43,20 +55,9 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         let n = train.len() as f64;
         let ips = n / dt;
-        if workers == 1 {
-            base_ips = ips;
-        }
-        let flat = t.flat_params();
-        let verdict = match &reference {
-            None => "(reference)",
-            Some(r) if *r == flat => "bit-identical",
-            Some(_) => "MISMATCH",
-        };
-        if reference.is_none() {
-            reference = Some(flat);
-        }
+        let (speedup, verdict) = bench.observe(ips, t.flat_params());
         println!("{:<8} {:>10.1} {:>12.3} {:>8.2}x {:>14}", workers, ips,
-                 dt / n * 1e3, ips / base_ips, verdict);
+                 dt / n * 1e3, speedup, verdict);
     }
 
     println!("\n=== hardware model: sharded accelerator instances \
@@ -70,4 +71,9 @@ fn main() {
     println!("single-instance per-image latency: {:.3} ms ({:.0} \
               images/s)",
              r.seconds_per_image() * 1e3, r.images_per_second());
+
+    std::process::exit(bench.finish(&[
+        ("batch_size", batch_size as f64),
+        ("batches", batches as f64),
+    ]));
 }

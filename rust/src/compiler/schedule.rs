@@ -6,9 +6,11 @@
 //! - a **per-image** step list: FP layers in order, the loss unit, then BP
 //!   and WU interleaved walking the layers in reverse (WU gradients are
 //!   accumulated into DRAM tile-by-tile each image, Fig. 7);
-//! - a **per-batch** step list: the weight-update passes that run once per
-//!   batch (read weights + momentum + accumulated gradients, write new
-//!   weights tile-by-tile, §III-E).
+//! - a **per-batch** step list: for cluster designs (`dv.cluster > 1`),
+//!   the `2*(N-1)` ring steps of the gradient all-reduce, then the
+//!   weight-update passes that run once per batch (read weights +
+//!   momentum + accumulated gradients, write new weights tile-by-tile,
+//!   §III-E).
 //!
 //! Every step carries its phase, the key/affiliated classification
 //! (§III-B: key layers read fresh tiles from DRAM; affiliated layers
@@ -34,6 +36,11 @@ pub enum OpKind {
     FcWu,
     LossGrad,
     WeightUpdate,
+    /// One ring step of the cluster gradient all-reduce (per batch,
+    /// cluster designs only): stage a gradient chunk from DRAM, move it
+    /// over the inter-accelerator link, fold the received chunk into the
+    /// local accumulator.
+    AllReduce,
 }
 
 /// One scheduled operation.
@@ -256,8 +263,41 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
         }
     }
 
-    // ---------------- per-batch weight update ----------------
+    // ---------------- per-batch cluster all-reduce ----------------
+    // With N > 1 accelerator instances the batch's gradient
+    // accumulators ring-all-reduce (reduce-scatter + all-gather,
+    // 2*(N-1) steps) before the weight update runs on the merged —
+    // bit-identical — accumulators.  Each step stages one chunk out of
+    // DRAM and writes the received chunk back.
     let mut per_batch = Vec::new();
+    if dv.cluster > 1 {
+        let grad_words = net.param_count() as u64;
+        let chunk_words = grad_words.div_ceil(dv.cluster as u64);
+        let chunk_bytes = chunk_words * W32;
+        let half = dv.cluster - 1;
+        let tiles = (2 * ceil_div(chunk_words as usize,
+                                  dv.pof * dv.tile_rows * 64)
+            .max(1)) as u64;
+        for s in 0..2 * half {
+            let layer = if s < half {
+                format!("ring_rs{s}")
+            } else {
+                format!("ring_ag{}", s - half)
+            };
+            per_batch.push(Step {
+                phase: Phase::Wu,
+                layer,
+                op: OpKind::AllReduce,
+                key: true,
+                artifact: None, // runs on the link + update datapath
+                dram_read_bytes: chunk_bytes,
+                dram_write_bytes: chunk_bytes,
+                tiles,
+            });
+        }
+    }
+
+    // ---------------- per-batch weight update ----------------
     for l in &net.layers {
         let we = l.weight_elems() as u64;
         if we == 0 {
@@ -403,6 +443,53 @@ mod tests {
             .per_batch
             .iter()
             .all(|st| st.op == OpKind::WeightUpdate));
+    }
+
+    #[test]
+    fn single_instance_schedule_has_no_allreduce() {
+        let s = sched1x();
+        assert!(!s
+            .per_batch
+            .iter()
+            .any(|st| st.op == OpKind::AllReduce));
+    }
+
+    #[test]
+    fn cluster_schedule_rings_before_updating() {
+        let net = Network::cifar(1);
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 4;
+        let s = build(&net, &dv);
+        let ring: Vec<&Step> = s
+            .per_batch
+            .iter()
+            .filter(|st| st.op == OpKind::AllReduce)
+            .collect();
+        assert_eq!(ring.len(), 6); // 2 * (4 - 1)
+        // reduce-scatter steps first, then all-gather
+        assert_eq!(ring[0].layer, "ring_rs0");
+        assert_eq!(ring[3].layer, "ring_ag0");
+        // every ring step stages one chunk out and one chunk in
+        let chunk = (net.param_count() as u64).div_ceil(4) * 4;
+        for st in &ring {
+            assert_eq!(st.dram_read_bytes, chunk);
+            assert_eq!(st.dram_write_bytes, chunk);
+            assert!(st.tiles >= 2);
+        }
+        // the all-reduce precedes every weight-update step
+        let first_wu = s
+            .per_batch
+            .iter()
+            .position(|st| st.op == OpKind::WeightUpdate)
+            .unwrap();
+        let last_ring = s
+            .per_batch
+            .iter()
+            .rposition(|st| st.op == OpKind::AllReduce)
+            .unwrap();
+        assert!(last_ring < first_wu);
+        // weight updates themselves are unchanged
+        assert_eq!(s.per_batch.len(), 6 + 7);
     }
 
     #[test]

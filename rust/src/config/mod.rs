@@ -398,6 +398,18 @@ pub struct DesignVars {
     pub tile_rows: usize,
     /// Data width in bits (the paper's entire datapath is 16-bit fixed).
     pub data_bits: usize,
+    /// Accelerator instances training data-parallel (1 = the paper's
+    /// single-FPGA setup).  Beyond 1 the compiler emits per-instance
+    /// schedules plus a ring all-reduce of the WU gradient accumulators
+    /// between batch accumulation and the weight update.
+    pub cluster: usize,
+    /// Inter-accelerator serial-link peak bandwidth in GB/s per
+    /// direction (one point-to-point link per ring neighbor; sized like
+    /// the devkit's transceiver-based SerialLite links).
+    pub link_gbytes: f64,
+    /// Effective fraction of link peak bandwidth after framing/protocol
+    /// overheads (see hw::link, mirroring dram_efficiency).
+    pub link_efficiency: f64,
 }
 
 impl Default for DesignVars {
@@ -413,6 +425,9 @@ impl Default for DesignVars {
             double_buffer: true,
             tile_rows: 8,
             data_bits: 16,
+            cluster: 1,
+            link_gbytes: 12.5,
+            link_efficiency: 0.80,
         }
     }
 }

@@ -8,8 +8,12 @@
 //! [`engine`](crate::engine): with `workers > 1` the golden backend
 //! shards a batch across threads with thread-local accumulators and a
 //! deterministic merge, bit-identical to the sequential path (see the
-//! engine docs for the contract).  [`Trainer::train_image`] remains the
-//! single-shard path and the faithful per-image hardware analogue.
+//! engine docs for the contract).  With `accelerators > 1` batches go
+//! through the cluster engine instead: per-instance shards plus a
+//! deterministic ring all-reduce of the gradient accumulators,
+//! bit-identical to single-instance training at any cluster size.
+//! [`Trainer::train_image`] remains the single-shard path and the
+//! faithful per-image hardware analogue.
 //!
 //! Numerics run through one of three backends:
 //! - [`Backend::PerOp`] — every scheduled op executes its own AOT
@@ -28,6 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::compiler::{Accelerator, OpKind, RtlCompiler};
 use crate::config::{DesignVars, Layer, Network};
 use crate::data::Sample;
+use crate::engine::cluster::{run_batch_cluster, ClusterReport};
 use crate::engine::{self, EngineReport, StepOut};
 use crate::nn::golden;
 use crate::nn::loss::encode_label;
@@ -99,8 +104,20 @@ pub struct Trainer {
     /// Engine worker shards for `train_batch` (1 = sequential, the
     /// hardware-faithful default; golden backend only beyond 1).
     pub workers: usize,
-    /// Engine observations from the most recent `train_batch`.
+    /// Data-parallel accelerator instances for `train_batch` (1 = the
+    /// single-device setup; golden backend only beyond 1).  Initialized
+    /// from `dv.cluster`; results stay bit-identical at any count.
+    pub accelerators: usize,
+    /// Cached per-batch ring all-reduce cycles, keyed by the ring size
+    /// it was simulated at (recomputed lazily when the effective
+    /// instance count changes).
+    allreduce_cache: Option<(usize, f64)>,
+    /// Engine observations from the most recent `train_batch` (`None`
+    /// when that batch ran through the cluster path instead).
     pub last_engine: Option<EngineReport>,
+    /// Cluster observations from the most recent `train_batch` (`None`
+    /// when that batch ran through the single-instance engine path).
+    pub last_cluster: Option<ClusterReport>,
     pub metrics: TrainMetrics,
     /// parameter literals cached for the current batch (§Perf:
     /// parameters only change at end_batch, so their host->literal
@@ -164,6 +181,9 @@ impl Trainer {
             + report.bp.latency_cycles
             + report.wu.latency_cycles) as f64;
         let batch_cycles = report.update.latency_cycles as f64;
+        let allreduce_cache = Some((dv.cluster.max(1),
+                                    report.allreduce.latency_cycles
+                                        as f64));
 
         let mut pool_prev = HashMap::new();
         let mut conv_below = HashMap::new();
@@ -194,7 +214,10 @@ impl Trainer {
             image_cycles,
             batch_cycles,
             workers: 1,
+            accelerators: dv.cluster.max(1),
+            allreduce_cache,
             last_engine: None,
+            last_cluster: None,
             metrics: TrainMetrics::default(),
             param_lits: HashMap::new(),
             pool_prev,
@@ -208,6 +231,38 @@ impl Trainer {
     pub fn with_workers(mut self, workers: usize) -> Trainer {
         self.workers = workers.max(1);
         self
+    }
+
+    /// Set the data-parallel accelerator instance count (builder
+    /// style).  `train_batch` shards golden-backend batches across this
+    /// many instances and ring-all-reduces their gradient accumulators;
+    /// results stay bit-identical to one instance (cluster contract).
+    /// The simulated per-batch all-reduce cost is recomputed from the
+    /// compiled cluster schedule on the next cluster batch.
+    pub fn with_accelerators(mut self, accelerators: usize) -> Trainer {
+        self.accelerators = accelerators.max(1);
+        self
+    }
+
+    /// Per-batch ring all-reduce cycles for a ring of `instances`,
+    /// simulated from the compiled cluster schedule and cached until
+    /// the instance count changes (so writing
+    /// [`Trainer::accelerators`] directly stays consistent too).
+    fn cluster_allreduce_cycles(&mut self, instances: usize)
+                                -> Result<f64> {
+        if let Some((n, cycles)) = self.allreduce_cache {
+            if n == instances {
+                return Ok(cycles);
+            }
+        }
+        let mut dv = self.acc.dv.clone();
+        dv.cluster = instances;
+        let acc = RtlCompiler::default().compile(&self.acc.net, &dv)?;
+        let cycles = simulate(&acc, self.hyper.batch)
+            .allreduce
+            .latency_cycles as f64;
+        self.allreduce_cache = Some((instances, cycles));
+        Ok(cycles)
     }
 
     /// Optimizer state (gradient accumulators + momentum) per parameter,
@@ -300,21 +355,29 @@ impl Trainer {
     /// update.  Golden-backend batches go through the batch-parallel
     /// [`engine`] (sharded across [`Trainer::workers`] threads, merged
     /// deterministically — bit-identical to sequential at any worker
-    /// count); runtime backends execute image-by-image, like the
-    /// hardware.  Errors on an empty batch.  On any step error the
-    /// batch's partial gradient accumulation is discarded
-    /// (all-or-nothing on every backend), so a caller may retry the
-    /// batch without double-counting.
+    /// count) or, with [`Trainer::accelerators`] > 1, through the
+    /// cluster engine (per-instance shards merged with a deterministic
+    /// ring all-reduce — bit-identical to one instance at any count);
+    /// runtime backends execute image-by-image, like the hardware.
+    /// Errors on an empty batch.  On any step error the batch's partial
+    /// gradient accumulation is discarded (all-or-nothing on every
+    /// backend), so a caller may retry the batch without
+    /// double-counting.
     pub fn train_batch(&mut self, samples: &[Sample]) -> Result<f64> {
         if samples.is_empty() {
             bail!("train_batch: empty batch (nothing to train on)");
         }
         let sum = match self.backend {
+            Backend::Golden if self.accelerators > 1 => {
+                self.train_batch_cluster(samples)?
+            }
             Backend::Golden => self.train_batch_engine(samples)?,
-            _ if self.workers > 1 => bail!(
-                "train_batch: workers = {} requires the golden backend \
-                 (the PJRT runtime executes on a single host thread)",
-                self.workers
+            _ if self.workers > 1 || self.accelerators > 1 => bail!(
+                "train_batch: workers = {} / accelerators = {} require \
+                 the golden backend (the PJRT runtime executes on a \
+                 single host thread)",
+                self.workers,
+                self.accelerators
             ),
             _ => {
                 let mut sum = 0f64;
@@ -343,19 +406,7 @@ impl Trainer {
         let net = &self.acc.net;
         let params = &self.params;
         let order = net.param_order();
-        let nclass = net.nclass;
-        let step = |s: &Sample| -> Result<StepOut> {
-            let y = encode_label(s.label, nclass);
-            let (loss, _logits, mut grads) =
-                golden::train_step(net, params, &s.image, &y)?;
-            let mut gs = Vec::with_capacity(order.len());
-            for name in &order {
-                gs.push(grads.remove(name).ok_or_else(|| {
-                    anyhow!("missing grad {name}")
-                })?);
-            }
-            Ok(StepOut { loss, grads: gs })
-        };
+        let step = |s: &Sample| golden_step(net, params, &order, s);
         let (loss_sum, report) =
             engine::run_batch(samples, self.workers, &mut self.states,
                               &step)?;
@@ -365,6 +416,38 @@ impl Trainer {
             self.image_cycles * samples.len() as f64;
         self.metrics.host_seconds += report.wall_seconds;
         self.last_engine = Some(report);
+        self.last_cluster = None;
+        Ok(loss_sum as f64)
+    }
+
+    /// Golden-backend batch through the cluster engine: the batch
+    /// shards across [`Trainer::accelerators`] instances (each itself
+    /// sharding across [`Trainer::workers`] threads), and the
+    /// per-instance accumulators merge with the deterministic ring
+    /// all-reduce.  Simulated cycles advance by the longest instance
+    /// shard (instances run concurrently) plus the per-batch all-reduce
+    /// communication.
+    fn train_batch_cluster(&mut self, samples: &[Sample]) -> Result<f64> {
+        // the full deployed ring runs every batch (idle instances
+        // contribute zero gradients), matching the simulate projection
+        let allreduce_cycles =
+            self.cluster_allreduce_cycles(self.accelerators)?;
+        let net = &self.acc.net;
+        let params = &self.params;
+        let order = net.param_order();
+        let step = |s: &Sample| golden_step(net, params, &order, s);
+        let (loss_sum, report) = run_batch_cluster(
+            samples, self.accelerators, self.workers, &mut self.states,
+            &step)?;
+        self.metrics.images += samples.len() as u64;
+        self.metrics.loss_sum += loss_sum as f64;
+        let max_shard =
+            report.shard_sizes.iter().copied().max().unwrap_or(0);
+        self.metrics.sim_cycles += self.image_cycles * max_shard as f64
+            + allreduce_cycles;
+        self.metrics.host_seconds += report.wall_seconds;
+        self.last_cluster = Some(report);
+        self.last_engine = None;
         Ok(loss_sum as f64)
     }
 
@@ -577,7 +660,9 @@ impl Trainer {
                         self.runtime()?.execute(art, &[&cur, &mask])?;
                     cur = outs.into_iter().next().unwrap();
                 }
-                OpKind::WeightUpdate => unreachable!("per-batch only"),
+                OpKind::WeightUpdate | OpKind::AllReduce => {
+                    unreachable!("per-batch only")
+                }
             }
         }
         for (name, g) in pending {
@@ -585,6 +670,23 @@ impl Trainer {
         }
         Ok(loss)
     }
+}
+
+/// Golden-model per-image step in engine form — loss plus gradients in
+/// canonical `order` — shared by the engine and cluster batch paths so
+/// gradient ordering can never diverge between them.
+fn golden_step(net: &Network, params: &Params, order: &[String],
+               sample: &Sample) -> Result<StepOut> {
+    let y = encode_label(sample.label, net.nclass);
+    let (loss, _logits, mut grads) =
+        golden::train_step(net, params, &sample.image, &y)?;
+    let mut gs = Vec::with_capacity(order.len());
+    for name in order {
+        gs.push(grads.remove(name).ok_or_else(|| {
+            anyhow!("missing grad {name}")
+        })?);
+    }
+    Ok(StepOut { loss, grads: gs })
 }
 
 #[cfg(test)]
@@ -718,6 +820,67 @@ mod tests {
             assert_eq!(s.count, p.count);
         }
         assert_eq!(manual.metrics.loss_sum, sharded.metrics.loss_sum);
+    }
+
+    #[test]
+    fn four_accelerators_bit_identical_to_one() {
+        // the cluster engine is a pure performance transform: same
+        // batch stream, any instance count => identical params, losses
+        // and optimizer state (ISSUE 2 acceptance criterion)
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 10);
+        let mut t1 = tiny_trainer();
+        let mut t4 = tiny_trainer().with_accelerators(4);
+        for _ in 0..2 {
+            let l1 = t1.train_batch(&batch).unwrap();
+            let l4 = t4.train_batch(&batch).unwrap();
+            assert_eq!(l1, l4, "mean loss diverged");
+        }
+        for name in t1.acc.net.param_order() {
+            assert_eq!(
+                t1.params.get(&name).unwrap(),
+                t4.params.get(&name).unwrap(),
+                "params diverged for {name}"
+            );
+        }
+        for ((n1, s1), (n4, s4)) in
+            t1.param_states().iter().zip(t4.param_states())
+        {
+            assert_eq!(n1, n4);
+            assert_eq!(s1.momentum, s4.momentum, "{n1} momentum");
+            assert_eq!(s1.count, s4.count);
+        }
+        let rep = t4.last_cluster.as_ref().unwrap();
+        assert_eq!(rep.instances, 4);
+        assert_eq!(rep.shard_sizes, vec![3, 3, 2, 2]);
+        assert_eq!(rep.ring_steps, 6);
+        // instances run concurrently: the cluster's simulated time is
+        // below the sequential trainer's
+        assert!(t4.metrics.sim_cycles < t1.metrics.sim_cycles);
+        assert!(t4.metrics.sim_cycles > 0.0);
+    }
+
+    #[test]
+    fn accelerators_compose_with_workers() {
+        let data = Synthetic::new(10, (3, 8, 8), 3, 0.3);
+        let batch = data.batch(0, 8);
+        let mut seq = tiny_trainer();
+        let mut cl = tiny_trainer().with_accelerators(2).with_workers(2);
+        seq.train_batch(&batch).unwrap();
+        cl.train_batch(&batch).unwrap();
+        assert_eq!(seq.flat_params(), cl.flat_params());
+        assert_eq!(cl.last_cluster.as_ref().unwrap().instances, 2);
+    }
+
+    #[test]
+    fn cluster_requires_golden_backend() {
+        let mut t = tiny_trainer();
+        t.backend = Backend::PerOp;
+        t.accelerators = 4;
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 4);
+        let err = t.train_batch(&batch).unwrap_err();
+        assert!(format!("{err:#}").contains("golden backend"));
     }
 
     #[test]

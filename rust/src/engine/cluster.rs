@@ -1,0 +1,419 @@
+//! Multi-accelerator cluster engine: data-parallel training across N
+//! simulated accelerator instances with a deterministic ring all-reduce
+//! of the WU gradient accumulators.
+//!
+//! This extends the batch-parallel engine one level up: where
+//! [`super::run_batch`] shards a batch across worker threads *inside*
+//! one accelerator, the cluster engine shards it across accelerator
+//! *instances* — each with its own DRAM-resident accumulator state
+//! (modeled by [`ParamState::fork_shard`]) — and merges per-instance
+//! batch gradients with the ring all-reduce every multi-device training
+//! system uses (reduce-scatter + all-gather, `2*(N-1)` steps).
+//!
+//! # Determinism / bit-identity contract
+//!
+//! - The batch splits into **contiguous per-instance shards** in sample
+//!   order ([`super::shard_sizes`]), and each instance runs its shard
+//!   through the inner engine (so instances can themselves use worker
+//!   threads).
+//! - The ring walks chunks in **fixed slot order**: chunk `c` of the
+//!   flattened gradient vector accumulates through instances `c, c+1,
+//!   ...` — the addition order is a pure function of `(N, len)`,
+//!   independent of thread scheduling.
+//! - Accumulation is wrapping i32 addition (associative and commutative
+//!   mod 2^32), so the reduced vector — and every parameter after
+//!   `end_batch` — is **bit-identical to 1-instance training at any
+//!   N**, and every instance ends the all-reduce with the identical
+//!   accumulator (asserted in tests).  Loss totals sum in i64, exact.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Sample;
+use crate::engine::{self, shard_sizes, StepOut};
+use crate::nn::sgd::ParamState;
+
+/// What the cluster engine observed while running one batch.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Ring size: every deployed instance joins the all-reduce, even
+    /// ones that received no images this batch (they contribute zero
+    /// gradients, exactly like idle accelerators in a real ring).
+    pub instances: usize,
+    pub images: usize,
+    /// Contiguous per-instance shard sizes for the instances that
+    /// received work, in instance order (shorter than `instances` when
+    /// the batch has fewer images than the ring has members).
+    pub shard_sizes: Vec<usize>,
+    /// Ring steps executed: `2 * (instances - 1)`, 0 for one instance.
+    pub ring_steps: usize,
+    /// i32 words moved across all ring links in total
+    /// (`2 * (instances - 1) * gradient_len`; divide by `instances`
+    /// for the average per-link traffic).
+    pub ring_words: u64,
+    /// Wall-clock of the cluster section (fork -> ring -> merge).
+    pub wall_seconds: f64,
+}
+
+/// Statistics of one host-side ring all-reduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingStats {
+    /// Ring steps walked (reduce-scatter plus all-gather).
+    pub steps: usize,
+    /// i32 words moved across all ring links in total.
+    pub total_words: u64,
+}
+
+/// Deterministic fixed-order ring all-reduce over per-instance flat
+/// gradient vectors (reduce-scatter then all-gather).  After the call
+/// every buffer holds the identical element-wise wrapping-i32 sum of
+/// all inputs.  Buffers shorter than the instance count are handled
+/// (some ring chunks are empty).  Panics on ragged buffer lengths.
+pub fn ring_all_reduce(bufs: &mut [Vec<i32>]) -> RingStats {
+    let n = bufs.len();
+    if n <= 1 {
+        return RingStats { steps: 0, total_words: 0 };
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len),
+            "ring_all_reduce: ragged buffers");
+    // balanced chunk ranges per ring slot (empty when len < n)
+    let bound = |c: usize| c * len / n;
+    let mut words = 0u64;
+    // reduce-scatter: at step s, instance (c+s)%n sends its partial of
+    // chunk c one hop to (c+s+1)%n, which accumulates it; after n-1
+    // steps instance (c+n-1)%n owns the fully reduced chunk c
+    for s in 0..n - 1 {
+        for c in 0..n {
+            let src = (c + s) % n;
+            let dst = (c + s + 1) % n;
+            let (lo, hi) = (bound(c), bound(c + 1));
+            let (from, to) = pair_mut(bufs, src, dst);
+            for (d, &v) in to[lo..hi].iter_mut().zip(&from[lo..hi]) {
+                *d = d.wrapping_add(v);
+            }
+            words += (hi - lo) as u64;
+        }
+    }
+    // all-gather: each reduced chunk circulates one hop per step until
+    // every instance holds every chunk
+    for s in 0..n - 1 {
+        for c in 0..n {
+            let src = (c + n - 1 + s) % n;
+            let dst = (src + 1) % n;
+            let (lo, hi) = (bound(c), bound(c + 1));
+            let (from, to) = pair_mut(bufs, src, dst);
+            to[lo..hi].copy_from_slice(&from[lo..hi]);
+            words += (hi - lo) as u64;
+        }
+    }
+    // every step moves `len` words in total across the n links
+    RingStats { steps: 2 * (n - 1), total_words: words }
+}
+
+/// Split-borrow two distinct ring members: shared access to `src`,
+/// mutable access to `dst` — the ring's hot loop moves gradient chunks
+/// with no temporary allocations.
+fn pair_mut(bufs: &mut [Vec<i32>], src: usize, dst: usize)
+            -> (&[i32], &mut Vec<i32>) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (head, tail) = bufs.split_at_mut(dst);
+        (head[src].as_slice(), &mut tail[0])
+    } else {
+        let (head, tail) = bufs.split_at_mut(src);
+        (tail[0].as_slice(), &mut head[dst])
+    }
+}
+
+/// Run one batch data-parallel across `instances` accelerator
+/// instances, each sharding its sub-batch across up to `workers`
+/// threads through the inner engine, then ring-all-reduce the
+/// per-instance gradient accumulators and merge the (identical)
+/// reduced result into `states`.  Every instance joins the ring even
+/// when the batch has fewer images than the ring has members — idle
+/// instances contribute zero gradients, so the simulated communication
+/// cost matches the deployed ring.  Returns the exact i64 loss sum and
+/// a [`ClusterReport`].
+///
+/// All-or-nothing like the inner engine: if any instance fails,
+/// `states` is left untouched.
+pub fn run_batch_cluster<F>(samples: &[Sample], instances: usize,
+                            workers: usize,
+                            states: &mut [(String, ParamState)], step: &F)
+                            -> Result<(i64, ClusterReport)>
+where
+    F: Fn(&Sample) -> Result<StepOut> + Sync,
+{
+    if samples.is_empty() {
+        anyhow::bail!("cluster: cannot run an empty batch");
+    }
+    let t0 = Instant::now();
+    let ring = instances.max(1);
+    let sizes = shard_sizes(samples.len(), ring);
+    let n = sizes.len(); // instances that received work (≤ ring)
+    let mut slices: Vec<&[Sample]> = Vec::with_capacity(n);
+    let mut off = 0usize;
+    for &sz in &sizes {
+        slices.push(&samples[off..off + sz]);
+        off += sz;
+    }
+    // per-instance accumulator replicas (each instance's DRAM state);
+    // instances beyond the shard count stay zeroed but still ring
+    let mut forks: Vec<Vec<(String, ParamState)>> = (0..ring)
+        .map(|_| {
+            states
+                .iter()
+                .map(|(name, st)| (name.clone(), st.fork_shard()))
+                .collect()
+        })
+        .collect();
+
+    let results: Vec<Result<i64>> = if n == 1 {
+        vec![engine::run_batch(slices[0], workers, &mut forks[0], step)
+            .map(|(loss, _)| loss)]
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = slices
+                .iter()
+                .zip(forks.iter_mut())
+                .map(|(&sl, fork)| {
+                    scope.spawn(move || {
+                        engine::run_batch(sl, workers, fork, step)
+                            .map(|(loss, _)| loss)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow!("cluster: instance thread panicked"))
+                    })
+                })
+                .collect()
+        })
+    };
+    // all-or-nothing: propagate before the ring so `states` never sees
+    // a partial cluster
+    let losses = results.into_iter().collect::<Result<Vec<i64>>>()?;
+    let loss_sum: i64 = losses.iter().sum();
+
+    // flatten each instance's accumulators and run the ring
+    let mut flats: Vec<Vec<i32>> = forks
+        .iter()
+        .map(|fork| {
+            let mut flat = Vec::new();
+            for (_, st) in fork {
+                flat.extend_from_slice(st.grad_acc.data());
+            }
+            flat
+        })
+        .collect();
+    let stats = ring_all_reduce(&mut flats);
+    debug_assert!(flats.iter().all(|f| *f == flats[0]),
+                  "ring left instances with diverged accumulators");
+
+    // every instance now holds the full batch sum; fold instance 0's
+    // copy into the caller's accumulators (wrapping add, so a nonzero
+    // starting accumulator keeps bit-identity with the inner engine)
+    let images: usize = forks
+        .iter()
+        .map(|fork| fork.first().map_or(0, |(_, st)| st.count))
+        .sum();
+    let reduced = &flats[0];
+    let mut off = 0usize;
+    for (_, st) in states.iter_mut() {
+        let data = st.grad_acc.data_mut();
+        let len = data.len();
+        for (a, &v) in data.iter_mut().zip(&reduced[off..off + len]) {
+            *a = a.wrapping_add(v);
+        }
+        off += len;
+        st.count += images;
+    }
+
+    let report = ClusterReport {
+        instances: ring,
+        images: samples.len(),
+        shard_sizes: sizes,
+        ring_steps: stats.steps,
+        ring_words: stats.total_words,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    };
+    Ok((loss_sum, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::sgd::ParamKind;
+    use crate::nn::tensor::Tensor;
+    use anyhow::bail;
+
+    fn samples(count: usize) -> Vec<Sample> {
+        (0..count)
+            .map(|i| Sample {
+                // adversarial payloads: large magnitudes force wrapping
+                image: Tensor::from_vec(
+                    &[4],
+                    vec![
+                        i as i32 + 1,
+                        -(i as i32) - 1,
+                        i32::MAX - i as i32,
+                        i32::MIN + i as i32,
+                    ],
+                ),
+                label: i % 3,
+            })
+            .collect()
+    }
+
+    fn step(s: &Sample) -> Result<StepOut> {
+        Ok(StepOut { loss: s.label as i32, grads: vec![s.image.clone()] })
+    }
+
+    fn fresh_states() -> Vec<(String, ParamState)> {
+        vec![("w".to_string(), ParamState::new(ParamKind::Weight, &[4]))]
+    }
+
+    #[test]
+    fn ring_matches_direct_sum_with_wrapping() {
+        for n in [2usize, 3, 4, 7] {
+            let mut bufs: Vec<Vec<i32>> = (0..n)
+                .map(|i| {
+                    vec![
+                        i as i32 + 1,
+                        i32::MAX - i as i32,
+                        i32::MIN + 17 * i as i32,
+                        -(i as i32) * 1_000_003,
+                        42,
+                    ]
+                })
+                .collect();
+            let mut direct = vec![0i32; 5];
+            for b in &bufs {
+                for (d, &v) in direct.iter_mut().zip(b) {
+                    *d = d.wrapping_add(v);
+                }
+            }
+            let stats = ring_all_reduce(&mut bufs);
+            assert_eq!(stats.steps, 2 * (n - 1));
+            for (i, b) in bufs.iter().enumerate() {
+                assert_eq!(*b, direct, "instance {i} diverged at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_handles_fewer_elements_than_instances() {
+        let mut bufs: Vec<Vec<i32>> =
+            (0..5).map(|i| vec![i as i32, 10 + i as i32]).collect();
+        let stats = ring_all_reduce(&mut bufs);
+        assert_eq!(stats.steps, 8);
+        for b in &bufs {
+            assert_eq!(*b, vec![10, 60]);
+        }
+    }
+
+    #[test]
+    fn ring_single_instance_is_noop() {
+        let mut bufs = vec![vec![1, 2, 3]];
+        let stats = ring_all_reduce(&mut bufs);
+        assert_eq!(stats.steps, 0);
+        assert_eq!(stats.total_words, 0);
+        assert_eq!(bufs[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cluster_bit_identical_to_inner_engine() {
+        let batch = samples(10);
+        let mut seq = fresh_states();
+        let (loss_seq, _) =
+            engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        for instances in [1usize, 2, 3, 4, 10] {
+            let mut cl = fresh_states();
+            let (loss_cl, rep) =
+                run_batch_cluster(&batch, instances, 1, &mut cl, &step)
+                    .unwrap();
+            assert_eq!(loss_cl, loss_seq, "{instances} instances");
+            assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc,
+                       "accumulators diverged at {instances} instances");
+            assert_eq!(cl[0].1.count, seq[0].1.count);
+            assert_eq!(rep.instances, instances);
+            assert_eq!(rep.images, 10);
+            assert_eq!(rep.ring_steps, 2 * (instances - 1));
+        }
+    }
+
+    #[test]
+    fn cluster_composes_with_inner_workers() {
+        let batch = samples(12);
+        let mut seq = fresh_states();
+        engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        let mut cl = fresh_states();
+        let (_, rep) =
+            run_batch_cluster(&batch, 3, 2, &mut cl, &step).unwrap();
+        assert_eq!(rep.instances, 3);
+        assert_eq!(rep.shard_sizes, vec![4, 4, 4]);
+        assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc);
+        assert_eq!(cl[0].1.count, seq[0].1.count);
+    }
+
+    #[test]
+    fn idle_instances_still_join_the_ring() {
+        // 16 deployed instances, 3 images: 3 shards of work, but the
+        // full 16-member ring runs (idle members add zero gradients)
+        // and the result stays bit-identical to the sequential sum
+        let batch = samples(3);
+        let mut seq = fresh_states();
+        engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        let mut cl = fresh_states();
+        let (_, rep) =
+            run_batch_cluster(&batch, 16, 1, &mut cl, &step).unwrap();
+        assert_eq!(rep.instances, 16);
+        assert_eq!(rep.shard_sizes, vec![1, 1, 1]);
+        assert_eq!(rep.ring_steps, 30); // 2 * (16 - 1)
+        assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc);
+        assert_eq!(cl[0].1.count, 3);
+    }
+
+    #[test]
+    fn empty_batch_is_an_error() {
+        let mut st = fresh_states();
+        let err = run_batch_cluster(&[], 4, 1, &mut st, &step)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("empty"));
+    }
+
+    #[test]
+    fn instance_errors_leave_states_untouched() {
+        let batch = samples(8);
+        let failing = |s: &Sample| -> Result<StepOut> {
+            if s.label == 2 {
+                bail!("injected failure");
+            }
+            step(s)
+        };
+        let mut st = fresh_states();
+        let err = run_batch_cluster(&batch, 4, 1, &mut st, &failing)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+        assert!(st[0].1.grad_acc.data().iter().all(|&v| v == 0),
+                "accumulators polluted by a failed cluster batch");
+        assert_eq!(st[0].1.count, 0);
+    }
+
+    #[test]
+    fn ring_words_reflect_traffic() {
+        let batch = samples(8);
+        let mut st = fresh_states();
+        let (_, rep) =
+            run_batch_cluster(&batch, 4, 1, &mut st, &step).unwrap();
+        // 4 words over 4 instances: every step moves 4 words across the
+        // ring -> 6 steps * 4 words = 24 words in total
+        assert_eq!(rep.ring_steps, 6);
+        assert_eq!(rep.ring_words, 24);
+    }
+}

@@ -28,6 +28,13 @@
 //! The step function is pluggable (`Fn(&Sample) -> Result<StepOut> +
 //! Sync`): the coordinator plugs in the golden model today, and any
 //! thread-safe runtime step can slot in without touching the engine.
+//!
+//! One level up, [`cluster`] shards a batch across accelerator
+//! *instances* (data parallelism between devices rather than threads)
+//! and merges per-instance accumulators with a deterministic ring
+//! all-reduce — same bit-identity contract, cluster-sized.
+
+pub mod cluster;
 
 use std::time::Instant;
 

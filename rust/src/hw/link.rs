@@ -1,0 +1,154 @@
+//! Inter-accelerator link model for multi-instance (cluster) training:
+//! one point-to-point serial link per ring neighbor, used by the ring
+//! all-reduce of WU gradient accumulators between batch accumulation and
+//! the weight update.
+//!
+//! The cost accounting deliberately mirrors the DRAM model
+//! ([`crate::hw::dram`]): a fixed per-message overhead (serial-link
+//! framing, CRC and handshake latency) plus payload at derated peak
+//! bandwidth (`DesignVars::link_gbytes * link_efficiency`).  Links are
+//! full duplex, so a ring step's concurrent send and receive cost one
+//! message; every ring link is busy in every step, so a whole-cluster
+//! ring step costs exactly one message.
+
+use crate::config::DesignVars;
+
+/// Fixed cycles charged per ring message — serial-link framing, CRC and
+/// handshake latency, ~1 us at the 240 MHz accelerator clock (the same
+/// role `DESCRIPTOR_OVERHEAD_CYCLES` plays for DRAM descriptors).
+pub const MESSAGE_OVERHEAD_CYCLES: u64 = 240;
+
+/// Point-to-point inter-accelerator link derived from the design
+/// variables.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Effective payload bytes per accelerator cycle, per direction.
+    pub bytes_per_cycle: f64,
+}
+
+impl LinkModel {
+    pub fn new(dv: &DesignVars) -> LinkModel {
+        let bytes_per_sec = dv.link_gbytes * 1e9 * dv.link_efficiency;
+        let cycles_per_sec = dv.clock_mhz * 1e6;
+        LinkModel { bytes_per_cycle: bytes_per_sec / cycles_per_sec }
+    }
+
+    /// Cycles to move one `bytes` message to a ring neighbor.  A zero-
+    /// byte message costs nothing (no ring traffic to move).
+    pub fn message_cycles(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        MESSAGE_OVERHEAD_CYCLES
+            + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+/// Analytic cost of one ring all-reduce of `total_bytes` of gradient
+/// accumulator over a cluster (reduce-scatter + all-gather): `2*(N-1)`
+/// steps, each moving a `ceil(total/N)`-byte chunk on every link
+/// concurrently.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllReduceCost {
+    /// Ring steps (reduce-scatter plus all-gather).
+    pub steps: u64,
+    /// Bytes per message (one gradient chunk).
+    pub chunk_bytes: u64,
+    /// Bytes each instance pushes through its outgoing link in total.
+    pub bytes_per_instance: u64,
+    /// Link-bound cycles for the whole all-reduce.
+    pub cycles: u64,
+}
+
+/// Cost of ring-all-reducing `total_bytes` across `instances`
+/// accelerators over `link`.  One instance (or nothing to reduce) costs
+/// zero.
+pub fn ring_cost(total_bytes: u64, instances: usize, link: &LinkModel)
+                 -> AllReduceCost {
+    let n = instances.max(1) as u64;
+    if n == 1 || total_bytes == 0 {
+        return AllReduceCost::default();
+    }
+    let chunk_bytes = total_bytes.div_ceil(n);
+    let steps = 2 * (n - 1);
+    AllReduceCost {
+        steps,
+        chunk_bytes,
+        bytes_per_instance: steps * chunk_bytes,
+        cycles: steps * link.message_cycles(chunk_bytes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignVars;
+
+    fn model() -> LinkModel {
+        LinkModel::new(&DesignVars::default())
+    }
+
+    #[test]
+    fn bandwidth_derivation() {
+        // 12.5 GB/s * 0.8 / 240 MHz = ~41.67 B/cycle
+        let m = model();
+        assert!((m.bytes_per_cycle - 41.67).abs() < 0.1,
+                "B/cyc = {}", m.bytes_per_cycle);
+    }
+
+    #[test]
+    fn message_overhead_charged() {
+        let m = model();
+        assert_eq!(m.message_cycles(0), 0);
+        assert_eq!(m.message_cycles(1),
+                   MESSAGE_OVERHEAD_CYCLES + 1);
+    }
+
+    #[test]
+    fn payload_scales_linearly() {
+        let m = model();
+        let small = m.message_cycles(1 << 16);
+        let big = m.message_cycles(1 << 26);
+        let ratio = (big - MESSAGE_OVERHEAD_CYCLES) as f64
+            / (small - MESSAGE_OVERHEAD_CYCLES) as f64;
+        assert!((ratio / 1024.0 - 1.0).abs() < 0.02, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn single_instance_costs_nothing() {
+        let c = ring_cost(1 << 20, 1, &model());
+        assert_eq!(c.steps, 0);
+        assert_eq!(c.cycles, 0);
+    }
+
+    #[test]
+    fn ring_step_count_and_chunking() {
+        let c = ring_cost(1 << 20, 4, &model());
+        assert_eq!(c.steps, 6); // 2 * (4 - 1)
+        assert_eq!(c.chunk_bytes, (1u64 << 20).div_ceil(4));
+        assert_eq!(c.bytes_per_instance, 6 * c.chunk_bytes);
+        assert!(c.cycles > 0);
+    }
+
+    #[test]
+    fn overhead_makes_wide_rings_costlier_on_small_payloads() {
+        // tiny gradient: per-step overhead dominates, so more instances
+        // cost strictly more cycles
+        let m = model();
+        let c2 = ring_cost(1024, 2, &m);
+        let c8 = ring_cost(1024, 8, &m);
+        assert!(c8.cycles > c2.cycles, "{} !> {}", c8.cycles, c2.cycles);
+    }
+
+    #[test]
+    fn large_payload_cost_roughly_bandwidth_bound() {
+        // 2(N-1)/N of the data crosses each link: for large payloads the
+        // total cycles approach 2 * total / bandwidth regardless of N
+        let m = model();
+        let total = 1u64 << 28;
+        let c4 = ring_cost(total, 4, &m);
+        let ideal = 2.0 * total as f64 / m.bytes_per_cycle;
+        let ratio = c4.cycles as f64 / ideal;
+        assert!(ratio > 0.7 && ratio < 1.1, "ratio = {ratio}");
+    }
+}

@@ -1,7 +1,8 @@
 //! Hardware substrate models of the generated FPGA accelerator: the
 //! systolic MAC array with load balancing, the DDR3 DRAM channel + DMA
 //! engine, on-chip BRAM buffers with double buffering, the transposable
-//! circulant weight buffer, and resource/power estimation calibrated to
+//! circulant weight buffer, the inter-accelerator ring link for
+//! multi-instance clusters, and resource/power estimation calibrated to
 //! the paper's Table II.
 //!
 //! These models implement the same dataflow equations the RTL executes,
@@ -10,6 +11,7 @@
 
 pub mod bram;
 pub mod dram;
+pub mod link;
 pub mod mac_array;
 pub mod power;
 pub mod resources;
@@ -17,6 +19,7 @@ pub mod transpose_buffer;
 
 pub use bram::{overlap_latency, BufferGroup, BufferPlan, BufferSpec};
 pub use dram::{DmaDescriptor, DramModel, Traffic};
+pub use link::{ring_cost, AllReduceCost, LinkModel};
 pub use mac_array::{layer_cycles, LogicCost, Phase};
 pub use power::{power, PowerReport};
 pub use resources::{estimate, Device, ResourceReport, STRATIX10_GX};

@@ -31,6 +31,20 @@ impl PowerReport {
     pub fn dynamic(&self) -> f64 {
         self.total() - self.static_w
     }
+
+    /// Aggregate power of `instances` replicated accelerator instances
+    /// (every component scales linearly — each instance is a full
+    /// device, static power included).
+    pub fn aggregate(&self, instances: usize) -> PowerReport {
+        let n = instances.max(1) as f64;
+        PowerReport {
+            dsp_w: self.dsp_w * n,
+            ram_w: self.ram_w * n,
+            logic_w: self.logic_w * n,
+            clock_w: self.clock_w * n,
+            static_w: self.static_w * n,
+        }
+    }
 }
 
 // DSP W = A * macs^B through (1024, 0.58) and (4096, 3.48).
@@ -121,6 +135,15 @@ mod tests {
         // 1X total 20.64 W; 4X total 50.5 W — ~2.4x apart
         let ratio = report(4).total() / report(1).total();
         assert!(ratio > 1.8 && ratio < 3.2, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn aggregate_scales_every_component() {
+        let p = report(1);
+        let agg = p.aggregate(4);
+        assert!((agg.total() - 4.0 * p.total()).abs() < 1e-9);
+        assert!((agg.static_w - 4.0 * p.static_w).abs() < 1e-9);
+        assert!((p.aggregate(0).total() - p.total()).abs() < 1e-12);
     }
 
     #[test]

@@ -35,6 +35,22 @@ pub struct ResourceReport {
     pub fits: bool,
 }
 
+impl ResourceReport {
+    /// Aggregate totals for `instances` replicated accelerator
+    /// instances (one device each): absolute resources scale linearly;
+    /// per-device utilization fractions and the fit verdict are
+    /// unchanged because every instance occupies its own FPGA.
+    pub fn aggregate(&self, instances: usize) -> ResourceReport {
+        let n = instances.max(1) as u64;
+        ResourceReport {
+            dsp: self.dsp * n,
+            alm: self.alm * n,
+            bram_mbits: self.bram_mbits * n as f64,
+            ..*self
+        }
+    }
+}
+
 // DSP = A_DSP * macs^B_DSP, through (1024, 1699) and (4096, 5760).
 const A_DSP: f64 = 3.79357;
 const B_DSP: f64 = 0.88069;
@@ -148,6 +164,19 @@ mod tests {
         for s in [1, 2, 4] {
             assert!(report(s).fits, "{s}x does not fit");
         }
+    }
+
+    #[test]
+    fn aggregate_scales_absolutes_only() {
+        let r = report(1);
+        let agg = r.aggregate(4);
+        assert_eq!(agg.dsp, 4 * r.dsp);
+        assert_eq!(agg.alm, 4 * r.alm);
+        assert!((agg.bram_mbits - 4.0 * r.bram_mbits).abs() < 1e-9);
+        assert!((agg.dsp_frac - r.dsp_frac).abs() < 1e-12);
+        assert_eq!(agg.fits, r.fits);
+        // degenerate instance counts clamp to one
+        assert_eq!(r.aggregate(0).dsp, r.dsp);
     }
 
     #[test]

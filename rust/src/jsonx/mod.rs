@@ -121,7 +121,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.pos < self.b.len()
             && matches!(self.b[self.pos], b' ' | b'\t' | b'\n' | b'\r')

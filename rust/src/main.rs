@@ -116,6 +116,8 @@ fn design_vars(args: &Args, net: &Network) -> Result<DesignVars> {
     dv.clock_mhz = args.f64_or("clock-mhz", dv.clock_mhz)?;
     dv.dram_gbytes = args.f64_or("dram-gbs", dv.dram_gbytes)?;
     dv.tile_rows = args.usize_or("tile-rows", dv.tile_rows)?;
+    dv.cluster = args.usize_or("accelerators", dv.cluster)?.max(1);
+    dv.link_gbytes = args.f64_or("link-gbs", dv.link_gbytes)?;
     if args.has("no-load-balance") {
         dv.load_balance = false;
     }
@@ -154,6 +156,14 @@ fn cmd_compile(args: &Args) -> Result<()> {
     println!("DRAM traffic   : {:.2} MB/image, {:.2} MB/batch-update",
              acc.schedule.image_bytes() as f64 / 1e6,
              acc.schedule.batch_bytes() as f64 / 1e6);
+    if dv.cluster > 1 {
+        let ar = acc.resources.aggregate(dv.cluster);
+        let ap = acc.power.aggregate(dv.cluster);
+        println!("cluster        : {} instances -> {} DSP, {:.1}K ALM, \
+                  {:.1} Mbit BRAM, {:.1} W aggregate",
+                 dv.cluster, ar.dsp, ar.alm as f64 / 1e3, ar.bram_mbits,
+                 ap.total());
+    }
     if let Some(out) = args.get("emit-verilog") {
         let v = RtlCompiler::default().verilog(&acc);
         std::fs::write(out, &v)
@@ -170,11 +180,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let acc = RtlCompiler::default().compile(&net, &dv)?;
     let r = simulate(&acc, bs);
     println!("== cycle simulation: {} @ BS {bs} ==", net.name);
-    println!("{:<8} {:>12} {:>12} {:>12}", "phase", "logic cyc",
+    println!("{:<9} {:>12} {:>12} {:>12}", "phase", "logic cyc",
              "dram cyc", "latency cyc");
-    for (name, p) in [("FP", &r.fp), ("BP", &r.bp), ("WU", &r.wu),
-                      ("UPDATE", &r.update)] {
-        println!("{:<8} {:>12} {:>12} {:>12}", name, p.logic_cycles,
+    let mut phases = vec![("FP", &r.fp), ("BP", &r.bp), ("WU", &r.wu),
+                          ("UPDATE", &r.update)];
+    if dv.cluster > 1 {
+        phases.push(("ALLREDUCE", &r.allreduce));
+    }
+    for (name, p) in phases {
+        println!("{:<9} {:>12} {:>12} {:>12}", name, p.logic_cycles,
                  p.dram_cycles, p.latency_cycles);
     }
     println!("per image      : {:.0} cycles = {:.3} ms",
@@ -182,6 +196,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("epoch (50k)    : {:.2} s",
              r.seconds_per_epoch(metrics::EPOCH_IMAGES));
     println!("throughput     : {:.0} GOPS", r.gops());
+    if dv.cluster > 1 {
+        // 1-instance baseline: the sharded projection at N=1 equals the
+        // single-accelerator iteration (no recompile needed)
+        let base = r.sharded_images_per_second(1);
+        println!("cluster        : {} instances, {} ring steps, \
+                  all-reduce {} cycles/batch",
+                 dv.cluster, 2 * (dv.cluster - 1),
+                 r.allreduce.latency_cycles);
+        println!("iteration      : {} cycles -> {:.0} images/s \
+                  ({:.2}x vs 1 instance)",
+                 r.cluster_cycles_per_iteration(),
+                 r.cluster_images_per_second(),
+                 r.cluster_images_per_second() / base);
+    }
     Ok(())
 }
 
@@ -211,8 +239,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let train: Vec<_> = data.batch(0, images);
     let test: Vec<_> = data.batch(1_000_000, eval_n);
     println!("== training {} ({:?} backend, {} images, BS {batch}, \
-              {} worker{}) ==",
-             net.name, backend, images, t.workers,
+              {} accelerator{} x {} worker{}) ==",
+             net.name, backend, images, t.accelerators,
+             if t.accelerators == 1 { "" } else { "s" }, t.workers,
              if t.workers == 1 { "" } else { "s" });
     for epoch in 0..epochs {
         let mut loss_sum = 0.0;
@@ -292,9 +321,15 @@ fn cmd_report(args: &Args) -> Result<()> {
                  metrics::engine_scaling(1, 40, &[1, 2, 4, 8, 16]));
         any = true;
     }
+    if which == "cluster" || which == "all" {
+        println!("== cluster scaling: 1X @ BS 40, ring all-reduce data \
+                  parallelism ==\n{}",
+                 metrics::cluster_scaling(1, 40, &[1, 2, 4, 8, 16]));
+        any = true;
+    }
     if !any {
         bail!("unknown report `{which}` \
-               (table2|table3|fig9|fig10|engine|all)");
+               (table2|table3|fig9|fig10|engine|cluster|all)");
     }
     Ok(())
 }
@@ -308,12 +343,24 @@ COMMANDS:
   compile   --scale 1x|2x|4x | --net FILE   run the RTL compiler
             [--pox N --poy N --pof N --clock-mhz F --emit-verilog OUT]
             [--no-load-balance --no-double-buffer]
+            [--accelerators N  compile an N-instance cluster: emits the
+                               ring all-reduce schedule + control-ROM
+                               word and reports aggregate resources]
+            [--link-gbs F      inter-accelerator link bandwidth, GB/s]
   simulate  --scale .. --batch N            cycle-level simulation
+            [--accelerators N  project N data-parallel instances with a
+                               ring all-reduce of WU gradients between
+                               batch accumulation and weight update]
+            [--link-gbs F      inter-accelerator link bandwidth, GB/s]
   train     --scale .. --backend golden|perop|fused --images N
             --epochs N --batch N --lr F [--artifacts DIR --eval N]
-            [--workers N   shard each batch across N engine threads
-                           (golden backend; bit-identical results)]
-  report    table2|table3|fig9|fig10|engine|all  regenerate outputs
+            [--workers N       shard each batch across N engine threads
+                               (golden backend; bit-identical results)]
+            [--accelerators N  train data-parallel across N simulated
+                               accelerator instances with a deterministic
+                               ring all-reduce (golden backend;
+                               bit-identical to one instance)]
+  report    table2|table3|fig9|fig10|engine|cluster|all  regenerate
   calibrate --scale .. --samples N          adaptive fixed-point pass
 ";
 

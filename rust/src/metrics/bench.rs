@@ -1,0 +1,331 @@
+//! Bench-harness support: smoke-mode detection, `BENCH_<name>.json`
+//! result records, and the CI perf-regression comparator.
+//!
+//! The benches are plain `fn main` reports (no criterion in the offline
+//! registry — DESIGN.md §Substitutions), so the regression gate lives
+//! here in the library where every bench target and the unit tests can
+//! reach it: a bench measures its headline `images_per_second`, writes
+//! a JSON record next to the crate manifest (CI uploads it as a
+//! workflow artifact), and exits nonzero when the result drops more
+//! than [`MAX_DROP`] below the checked-in `benches/baseline.json`
+//! entry.  Baselines are deliberately conservative floors (shared CI
+//! runners are slow and noisy); ratchet them upward as the engine gets
+//! faster.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonx::Json;
+
+/// Fractional drop below the baseline that fails the gate (30%).
+pub const MAX_DROP: f64 = 0.30;
+
+/// One bench's headline result plus free-form extra metrics.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub images_per_second: f64,
+    pub smoke: bool,
+    pub extra: Vec<(String, f64)>,
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl BenchRecord {
+    pub fn new(name: &str, images_per_second: f64, smoke: bool)
+               -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            images_per_second,
+            smoke,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach an extra metric to the record.
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    /// Render as a JSON object (insertion order preserved).
+    pub fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"name\":{:?},\"images_per_second\":{},\"smoke\":{}",
+            self.name,
+            fmt_f64(self.images_per_second),
+            self.smoke
+        );
+        for (k, v) in &self.extra {
+            s.push_str(&format!(",{k:?}:{}", fmt_f64(*v)));
+        }
+        s.push('}');
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// True when a bench should run its fast CI configuration (`--smoke`
+/// argument or `BENCH_SMOKE=1` in the environment).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
+/// Compare a result against the baseline file.  `Ok(None)` when the
+/// bench has no baseline entry (informational run), `Ok(Some(msg))`
+/// when within bounds, `Err` when the result regressed more than
+/// [`MAX_DROP`] below baseline.
+pub fn check_baseline(baseline: &Path, name: &str,
+                      images_per_second: f64) -> Result<Option<String>> {
+    let text = std::fs::read_to_string(baseline)
+        .with_context(|| format!("reading {}", baseline.display()))?;
+    let json = Json::parse(&text)
+        .with_context(|| format!("parsing {}", baseline.display()))?;
+    let Some(base) = json
+        .get(name)
+        .and_then(|e| e.get("images_per_second"))
+        .and_then(Json::as_f64)
+    else {
+        return Ok(None);
+    };
+    let floor = base * (1.0 - MAX_DROP);
+    if images_per_second < floor {
+        return Err(anyhow!(
+            "perf regression: {name} at {images_per_second:.1} images/s \
+             is more than {:.0}% below the baseline {base:.1} (floor \
+             {floor:.1}); investigate before ratcheting \
+             benches/baseline.json",
+            MAX_DROP * 100.0
+        ));
+    }
+    Ok(Some(format!(
+        "{name}: {images_per_second:.1} images/s vs baseline {base:.1} \
+         (floor {floor:.1}) — ok"
+    )))
+}
+
+/// Bench epilogue: write the record next to the crate manifest and gate
+/// it against `benches/baseline.json`.  Returns the process exit code
+/// (0 ok, 1 on write failure or perf regression).
+pub fn finish(record: &BenchRecord) -> i32 {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    match record.write(manifest) {
+        Ok(p) => println!("bench record   : wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("bench record   : {e:#}");
+            return 1;
+        }
+    }
+    match check_baseline(&manifest.join("benches/baseline.json"),
+                         &record.name, record.images_per_second) {
+        Ok(Some(msg)) => {
+            println!("perf gate      : {msg}");
+            0
+        }
+        Ok(None) => {
+            println!("perf gate      : no baseline entry for {} \
+                      (informational)",
+                     record.name);
+            0
+        }
+        Err(e) => {
+            eprintln!("perf gate      : {e:#}");
+            1
+        }
+    }
+}
+
+/// Measurement scaffolding shared by the scaling benches
+/// (`engine_throughput`, `cluster_scaling`): per-configuration
+/// throughput observations with a bit-identity check against the first
+/// configuration, then the record/gate epilogue.  The record is always
+/// written before the bit-identity verdict decides the exit code, so a
+/// MISMATCH run still uploads its `BENCH_*.json` diagnostics in CI.
+pub struct ScalingBench {
+    name: &'static str,
+    smoke: bool,
+    reference: Option<Vec<i32>>,
+    base_ips: f64,
+    best_ips: f64,
+    identical: bool,
+}
+
+impl ScalingBench {
+    pub fn new(name: &'static str, smoke: bool) -> ScalingBench {
+        ScalingBench {
+            name,
+            smoke,
+            reference: None,
+            base_ips: 0.0,
+            best_ips: 0.0,
+            identical: true,
+        }
+    }
+
+    /// Record one configuration's throughput and final parameters.
+    /// The first observation becomes the reference; returns the
+    /// speedup over it and a display verdict.
+    pub fn observe(&mut self, ips: f64, flat_params: Vec<i32>)
+                   -> (f64, &'static str) {
+        self.best_ips = self.best_ips.max(ips);
+        let verdict = match &self.reference {
+            None => "(reference)",
+            Some(r) if *r == flat_params => "bit-identical",
+            Some(_) => "MISMATCH",
+        };
+        if self.reference.is_none() {
+            self.base_ips = ips;
+            self.reference = Some(flat_params);
+        } else if verdict == "MISMATCH" {
+            self.identical = false;
+        }
+        let speedup =
+            if self.base_ips > 0.0 { ips / self.base_ips } else { 1.0 };
+        (speedup, verdict)
+    }
+
+    /// Write the record (best observed images/s + `extra` metrics), run
+    /// the perf gate, then fold in the bit-identity verdict.  Returns
+    /// the process exit code.
+    pub fn finish(self, extra: &[(&str, f64)]) -> i32 {
+        let mut rec = BenchRecord::new(self.name, self.best_ips,
+                                       self.smoke);
+        rec.push("images_per_second_base", self.base_ips);
+        rec.push("bit_identical",
+                 if self.identical { 1.0 } else { 0.0 });
+        for (k, v) in extra {
+            rec.push(k, *v);
+        }
+        let code = finish(&rec);
+        if !self.identical {
+            eprintln!("bit-identity   : FAILED (final params diverged \
+                       from the reference configuration)");
+            return 1;
+        }
+        code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_baseline(text: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "stratus_baseline_{}_{text_len}.json",
+            std::process::id(),
+            text_len = text.len()
+        ));
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    #[test]
+    fn record_round_trips_through_jsonx() {
+        let mut rec = BenchRecord::new("engine_throughput", 1234.5, true);
+        rec.push("workers", 4.0);
+        rec.push("speedup", 2.75);
+        let json = Json::parse(&rec.to_json()).unwrap();
+        assert_eq!(json.get("name").and_then(Json::as_str),
+                   Some("engine_throughput"));
+        assert_eq!(json.get("images_per_second").and_then(Json::as_f64),
+                   Some(1234.5));
+        assert_eq!(json.get("workers").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(json.get("smoke"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn non_finite_metrics_render_parseable() {
+        let rec = BenchRecord::new("x", f64::INFINITY, false);
+        let json = Json::parse(&rec.to_json()).unwrap();
+        assert_eq!(json.get("images_per_second").and_then(Json::as_f64),
+                   Some(0.0));
+    }
+
+    #[test]
+    fn gate_passes_within_bounds() {
+        let p = tmp_baseline(
+            r#"{"eng":{"images_per_second":100.0}}"#,
+        );
+        // 30% below exactly is still allowed; 29% below passes clearly
+        assert!(check_baseline(&p, "eng", 71.0).unwrap().is_some());
+        assert!(check_baseline(&p, "eng", 250.0).unwrap().is_some());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn gate_fails_on_regression() {
+        let p = tmp_baseline(
+            r#"{"eng":{"images_per_second":100.0},"o":{"images_per_second":1}}"#,
+        );
+        let err = check_baseline(&p, "eng", 60.0).unwrap_err();
+        assert!(format!("{err:#}").contains("perf regression"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn gate_skips_unknown_bench() {
+        let p = tmp_baseline(r#"{"other":{"images_per_second":5}}"#);
+        assert!(check_baseline(&p, "eng", 1.0).unwrap().is_none());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_baseline_file_is_an_error() {
+        let p = Path::new("/nonexistent/baseline.json");
+        assert!(check_baseline(p, "eng", 1.0).is_err());
+    }
+
+    #[test]
+    fn scaling_bench_tracks_reference_and_identity() {
+        let mut b = ScalingBench::new("x", true);
+        let (sp, v) = b.observe(100.0, vec![1, 2, 3]);
+        assert_eq!(v, "(reference)");
+        assert!((sp - 1.0).abs() < 1e-12);
+        let (sp, v) = b.observe(250.0, vec![1, 2, 3]);
+        assert_eq!(v, "bit-identical");
+        assert!((sp - 2.5).abs() < 1e-12);
+        assert!(b.identical);
+        assert_eq!(b.best_ips, 250.0);
+        assert_eq!(b.base_ips, 100.0);
+    }
+
+    #[test]
+    fn scaling_bench_flags_mismatch() {
+        let mut b = ScalingBench::new("x", true);
+        b.observe(100.0, vec![1, 2, 3]);
+        let (_, v) = b.observe(90.0, vec![9, 9, 9]);
+        assert_eq!(v, "MISMATCH");
+        assert!(!b.identical);
+    }
+
+    #[test]
+    fn checked_in_baseline_parses_and_covers_gated_benches() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("benches/baseline.json");
+        let json =
+            Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        for bench in ["engine_throughput", "cluster_scaling"] {
+            let base = json
+                .get(bench)
+                .and_then(|e| e.get("images_per_second"))
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("{bench} missing baseline"));
+            assert!(base > 0.0);
+        }
+    }
+}

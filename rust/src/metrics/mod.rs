@@ -1,7 +1,10 @@
 //! Report generation: renders the paper's tables and figures from
 //! simulation / GPU-model / resource outputs as aligned text tables
 //! (consumed by the CLI `report` subcommand and the bench harnesses, and
-//! pasted into EXPERIMENTS.md).
+//! pasted into EXPERIMENTS.md).  The [`bench`] submodule carries the
+//! bench-record / perf-regression-gate support the CI smoke jobs use.
+
+pub mod bench;
 
 use crate::compiler::{Accelerator, RtlCompiler};
 use crate::config::{DesignVars, Network};
@@ -172,6 +175,53 @@ pub fn engine_scaling(scale: usize, batch: usize, engines: &[usize])
     render_table(&header, &rows)
 }
 
+/// Cluster scaling (ISSUE 2 tentpole): simulated batch-iteration
+/// latency and throughput when training runs data-parallel across N
+/// accelerator instances with a ring all-reduce of the WU gradient
+/// accumulators between batch accumulation and the weight update.
+/// Unlike [`engine_scaling`], the projection charges the
+/// inter-accelerator communication the compiled cluster schedule
+/// carries, so efficiency degrades with N instead of only the
+/// serialized update.
+pub fn cluster_scaling(scale: usize, batch: usize, instances: &[usize])
+                       -> String {
+    let net = Network::cifar(scale);
+    let sim_at = |n: usize| {
+        let mut dv = DesignVars::for_scale(scale);
+        dv.cluster = n.max(1);
+        let acc = RtlCompiler::default()
+            .compile(&net, &dv)
+            .expect("paper configs always compile");
+        simulate(&acc, batch)
+    };
+    // one compile+simulate per instance count; the 1-instance baseline
+    // falls out of any report's sharded projection (the per-image and
+    // update phases are cluster-independent)
+    let reports: Vec<(usize, SimReport)> =
+        instances.iter().map(|&n| (n, sim_at(n))).collect();
+    let base = reports
+        .first()
+        .map_or(1.0, |(_, r)| r.sharded_images_per_second(1));
+    let header = ["instances", "iter cycles", "all-reduce cyc",
+                  "images/s", "speedup", "efficiency"];
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|(n, r)| {
+            let ips = r.cluster_images_per_second();
+            vec![
+                format!("{n}"),
+                format!("{}", r.cluster_cycles_per_iteration()),
+                format!("{}", r.allreduce.latency_cycles),
+                format!("{ips:.0}"),
+                format!("{:.2}x", ips / base),
+                format!("{:.0}%",
+                        ips / base / (*n).max(1) as f64 * 100.0),
+            ]
+        })
+        .collect();
+    render_table(&header, &rows)
+}
+
 /// Fig. 10: buffer usage breakdown of the 4X design.
 pub fn fig10() -> String {
     let net = Network::cifar(4);
@@ -256,6 +306,37 @@ mod tests {
         assert!((speedups[0] - 1.0).abs() < 1e-9);
         assert!(speedups.windows(2).all(|w| w[0] < w[1]),
                 "not monotone: {speedups:?}");
+    }
+
+    #[test]
+    fn cluster_scaling_charges_communication() {
+        let t = cluster_scaling(1, 40, &[1, 2, 4, 8]);
+        assert_eq!(t.lines().count(), 6);
+        let col = |line: &str, i: usize| -> Option<f64> {
+            line.split('|').nth(i).and_then(|c| {
+                c.trim()
+                    .trim_end_matches('x')
+                    .trim_end_matches('%')
+                    .parse::<f64>()
+                    .ok()
+            })
+        };
+        let rows: Vec<&str> = t.lines().skip(2).collect();
+        // all-reduce cycles: zero at 1 instance, nonzero and growing after
+        let ar: Vec<f64> =
+            rows.iter().filter_map(|l| col(l, 3)).collect();
+        assert_eq!(ar.len(), 4);
+        assert_eq!(ar[0], 0.0);
+        assert!(ar[1] > 0.0);
+        assert!(ar.windows(2).skip(1).all(|w| w[0] < w[1]),
+                "all-reduce not growing: {ar:?}");
+        // speedup monotone but sublinear (efficiency < 100% beyond 1)
+        let sp: Vec<f64> =
+            rows.iter().filter_map(|l| col(l, 5)).collect();
+        assert!((sp[0] - 1.0).abs() < 1e-9);
+        assert!(sp.windows(2).all(|w| w[0] < w[1]),
+                "not monotone: {sp:?}");
+        assert!(sp[3] < 8.0);
     }
 
     #[test]

@@ -18,9 +18,9 @@
 //! validation argument for using the (fast) analytic model in
 //! design-space sweeps.
 
-use crate::compiler::Accelerator;
+use crate::compiler::{Accelerator, OpKind};
 use crate::hw::dram::{DramModel, DESCRIPTOR_OVERHEAD_CYCLES};
-use crate::sim::{logic_cycles_for_step, SimReport};
+use crate::sim::{logic_cycles_for_step, simulate, SimReport};
 
 /// Result of an event-driven run over one image's schedule.
 #[derive(Debug, Clone)]
@@ -109,6 +109,83 @@ pub fn analytic_image_cycles(report: &SimReport) -> u64 {
         + report.wu.latency_cycles
 }
 
+/// One labeled interval on the cluster batch timeline.
+#[derive(Debug, Clone)]
+pub struct TimelineEvent {
+    pub label: String,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Event timeline of one cluster batch iteration: per-instance compute
+/// (the event-driven per-image makespan times the shard length), the
+/// `2*(N-1)` ring all-reduce phases, then the batch weight update on the
+/// merged accumulators.
+#[derive(Debug, Clone)]
+pub struct ClusterEventReport {
+    pub instances: usize,
+    /// Cycle at which the iteration's last event retires.
+    pub makespan: u64,
+    /// Compute span (longest instance shard through the event model).
+    pub compute_cycles: u64,
+    /// Total cycles spent in the ring all-reduce phases.
+    pub allreduce_cycles: u64,
+    /// Every interval, in timeline order: one `compute` event, the
+    /// `allreduce/...` ring phases, one `weight-update` event.
+    pub events: Vec<TimelineEvent>,
+}
+
+/// Schedule one batch of `batch` images on the compiled cluster
+/// (`acc.dv.cluster` instances) into an event timeline.  Instances run
+/// their shards concurrently, so compute spans ceil(batch/N) images;
+/// the ring all-reduce phases then serialize (each ring step is a
+/// barrier for the whole ring), followed by the weight update.  Ring
+/// step durations come from the same per-step costs `simulate` charges,
+/// so the timeline and the analytic cluster projection agree on
+/// communication.
+pub fn simulate_cluster_events(acc: &Accelerator, batch: usize)
+                               -> ClusterEventReport {
+    let n = acc.dv.cluster.max(1);
+    let report = simulate(acc, batch.max(1));
+    let image = simulate_events(acc);
+    let shard = (batch.max(1) as u64).div_ceil(n as u64);
+    let compute_cycles = image.makespan * shard;
+    let mut events = vec![TimelineEvent {
+        label: format!("compute x{shard}"),
+        start: 0,
+        end: compute_cycles,
+    }];
+    let mut t = compute_cycles;
+    let mut allreduce_cycles = 0u64;
+    let mut ring = 0usize;
+    for (_, layer, op, cost) in &report.steps {
+        if *op == OpKind::AllReduce {
+            events.push(TimelineEvent {
+                label: format!("allreduce/{layer}"),
+                start: t,
+                end: t + cost.latency_cycles,
+            });
+            t += cost.latency_cycles;
+            allreduce_cycles += cost.latency_cycles;
+            ring += 1;
+        }
+    }
+    debug_assert_eq!(ring, if n > 1 { 2 * (n - 1) } else { 0 });
+    let update = report.update.latency_cycles;
+    events.push(TimelineEvent {
+        label: "weight-update".into(),
+        start: t,
+        end: t + update,
+    });
+    ClusterEventReport {
+        instances: n,
+        makespan: t + update,
+        compute_cycles,
+        allreduce_cycles,
+        events,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +261,82 @@ mod tests {
         let m1 = simulate_events(&acc_for(1)).makespan;
         let m4 = simulate_events(&acc_for(4)).makespan;
         assert!(m4 > 3 * m1);
+    }
+
+    fn cluster_acc(instances: usize) -> crate::compiler::Accelerator {
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = instances;
+        RtlCompiler::default()
+            .compile(&Network::cifar(1), &dv)
+            .unwrap()
+    }
+
+    #[test]
+    fn cluster_timeline_contains_allreduce_events() {
+        let ev = simulate_cluster_events(&cluster_acc(4), 40);
+        let ring: Vec<&TimelineEvent> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.starts_with("allreduce/"))
+            .collect();
+        assert_eq!(ring.len(), 6); // 2 * (4 - 1)
+        assert!(ev.allreduce_cycles > 0);
+        assert_eq!(ev.allreduce_cycles,
+                   ring.iter().map(|e| e.end - e.start).sum::<u64>());
+        // ring phases sit between compute and the weight update
+        assert!(ring.iter().all(|e| e.start >= ev.compute_cycles));
+        let update = ev.events.last().unwrap();
+        assert_eq!(update.label, "weight-update");
+        assert!(ring.iter().all(|e| e.end <= update.start));
+        assert_eq!(update.end, ev.makespan);
+    }
+
+    #[test]
+    fn cluster_timeline_is_contiguous() {
+        let ev = simulate_cluster_events(&cluster_acc(4), 40);
+        for pair in ev.events.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start,
+                       "gap between {} and {}", pair[0].label,
+                       pair[1].label);
+        }
+    }
+
+    #[test]
+    fn allreduce_events_scale_with_instances() {
+        let e2 = simulate_cluster_events(&cluster_acc(2), 40);
+        let e4 = simulate_cluster_events(&cluster_acc(4), 40);
+        let e8 = simulate_cluster_events(&cluster_acc(8), 40);
+        let count = |ev: &ClusterEventReport| {
+            ev.events
+                .iter()
+                .filter(|e| e.label.starts_with("allreduce/"))
+                .count()
+        };
+        assert_eq!(count(&e2), 2);
+        assert_eq!(count(&e4), 6);
+        assert_eq!(count(&e8), 14);
+        assert!(e2.allreduce_cycles < e4.allreduce_cycles);
+        assert!(e4.allreduce_cycles < e8.allreduce_cycles);
+    }
+
+    #[test]
+    fn single_instance_timeline_has_no_allreduce() {
+        let ev = simulate_cluster_events(&cluster_acc(1), 40);
+        assert_eq!(ev.instances, 1);
+        assert_eq!(ev.allreduce_cycles, 0);
+        assert!(ev
+            .events
+            .iter()
+            .all(|e| !e.label.starts_with("allreduce/")));
+        // compute + update only
+        assert_eq!(ev.events.len(), 2);
+    }
+
+    #[test]
+    fn cluster_shrinks_compute_span() {
+        let e1 = simulate_cluster_events(&cluster_acc(1), 40);
+        let e4 = simulate_cluster_events(&cluster_acc(4), 40);
+        assert_eq!(e1.compute_cycles, 4 * e4.compute_cycles);
+        assert!(e4.makespan < e1.makespan);
     }
 }

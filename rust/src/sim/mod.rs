@@ -16,6 +16,7 @@ use crate::compiler::{Accelerator, OpKind, Step};
 use crate::config::Layer;
 use crate::hw::bram::overlap_latency;
 use crate::hw::dram::DramModel;
+use crate::hw::link::LinkModel;
 use crate::hw::mac_array::{self, Phase};
 
 /// Cost of one scheduled step.
@@ -45,6 +46,14 @@ pub struct SimReport {
     pub wu: PhaseCost,
     /// Batch-end weight-update cost (amortized per batch).
     pub update: PhaseCost,
+    /// Per-batch ring all-reduce cost (cluster designs; zero at one
+    /// instance).  Latency cycles are the communication bound: each
+    /// ring step costs the slower of the link message and the local
+    /// DRAM staging + accumulate.
+    pub allreduce: PhaseCost,
+    /// Accelerator instances the schedule was compiled for
+    /// (`dv.cluster`).
+    pub instances: usize,
     pub batch_size: usize,
     pub clock_hz: f64,
     /// Training ops per image (2 * MACs over FP+BP+WU).
@@ -100,6 +109,32 @@ impl SimReport {
         self.batch_size as f64 / secs
     }
 
+    /// Latency of one batch iteration on the compiled cluster: each of
+    /// the `instances` replicas trains ceil(BS/N) images concurrently,
+    /// the full deployed ring all-reduces the WU gradient accumulators
+    /// (idle instances contribute zero gradients, exactly like the
+    /// cluster engine), then the weight update runs on every instance
+    /// in parallel (identical merged accumulators, so one update's
+    /// latency).  Unlike [`SimReport::sharded_cycles_per_iteration`]
+    /// this includes the inter-accelerator communication the schedule
+    /// carries.
+    pub fn cluster_cycles_per_iteration(&self) -> u64 {
+        let n = self.instances.max(1) as u64;
+        let per_image = self.fp.latency_cycles
+            + self.bp.latency_cycles
+            + self.wu.latency_cycles;
+        per_image * (self.batch_size as u64).div_ceil(n)
+            + self.allreduce.latency_cycles
+            + self.update.latency_cycles
+    }
+
+    /// Cluster training throughput in images per second.
+    pub fn cluster_images_per_second(&self) -> f64 {
+        let secs =
+            self.cluster_cycles_per_iteration() as f64 / self.clock_hz;
+        self.batch_size as f64 / secs
+    }
+
     /// Epoch latency for `images` training images (Table II).
     pub fn seconds_per_epoch(&self, images: u64) -> f64 {
         self.seconds_per_image() * images as f64
@@ -113,7 +148,9 @@ impl SimReport {
 
     /// Latency by phase in milliseconds for the Fig. 9 breakdown,
     /// splitting logic vs DRAM.  Returns (phase, logic_ms, dram_ms,
-    /// latency_ms) rows for FP / BP / WU / update.
+    /// latency_ms) rows for FP / BP / WU / update (the paper's
+    /// single-accelerator phases; cluster all-reduce is reported
+    /// separately via [`SimReport::allreduce`]).
     pub fn breakdown_ms(&self) -> Vec<(&'static str, f64, f64, f64)> {
         let to_ms = |c: u64| c as f64 / self.clock_hz * 1e3;
         vec![
@@ -186,6 +223,11 @@ pub fn logic_cycles_for_step(acc: &Accelerator, step: &Step) -> u64 {
             let Some(l) = layer else { return 0 };
             (l.weight_elems() as u64).div_ceil(dv.pof as u64)
         }
+        OpKind::AllReduce => {
+            // fold the received gradient chunk into the local
+            // accumulator through the Pof-wide update datapath
+            (step.dram_write_bytes / 4).div_ceil(dv.pof as u64)
+        }
     }
 }
 
@@ -204,14 +246,31 @@ fn cost_step(acc: &Accelerator, dram: &DramModel, step: &Step) -> StepCost {
     StepCost { logic_cycles: logic, dram_cycles, latency_cycles: latency }
 }
 
+/// Cost of one ring all-reduce step: the local DRAM staging +
+/// accumulate overlaps the (full-duplex) link message, so the slower of
+/// the two bounds the step — the link shares the DRAM model's cost
+/// shape (per-message overhead + payload at derated bandwidth).
+fn cost_allreduce_step(acc: &Accelerator, dram: &DramModel,
+                       link: &LinkModel, step: &Step) -> StepCost {
+    let local = cost_step(acc, dram, step);
+    let link_cycles = link.message_cycles(step.dram_read_bytes);
+    StepCost {
+        logic_cycles: local.logic_cycles,
+        dram_cycles: local.dram_cycles,
+        latency_cycles: local.latency_cycles.max(link_cycles),
+    }
+}
+
 /// Simulate one compiled accelerator at a given batch size.
 pub fn simulate(acc: &Accelerator, batch_size: usize) -> SimReport {
     let dram = DramModel::new(&acc.dv);
+    let link = LinkModel::new(&acc.dv);
     let mut steps = Vec::new();
     let mut fp = PhaseCost::default();
     let mut bp = PhaseCost::default();
     let mut wu = PhaseCost::default();
     let mut update = PhaseCost::default();
+    let mut allreduce = PhaseCost::default();
 
     for s in &acc.schedule.per_image {
         let c = cost_step(acc, &dram, s);
@@ -226,10 +285,14 @@ pub fn simulate(acc: &Accelerator, batch_size: usize) -> SimReport {
         steps.push((s.phase, s.layer.clone(), s.op, c));
     }
     for s in &acc.schedule.per_batch {
-        let c = cost_step(acc, &dram, s);
-        update.logic_cycles += c.logic_cycles;
-        update.dram_cycles += c.dram_cycles;
-        update.latency_cycles += c.latency_cycles;
+        let (c, bucket) = if s.op == OpKind::AllReduce {
+            (cost_allreduce_step(acc, &dram, &link, s), &mut allreduce)
+        } else {
+            (cost_step(acc, &dram, s), &mut update)
+        };
+        bucket.logic_cycles += c.logic_cycles;
+        bucket.dram_cycles += c.dram_cycles;
+        bucket.latency_cycles += c.latency_cycles;
         steps.push((s.phase, s.layer.clone(), s.op, c));
     }
 
@@ -239,6 +302,8 @@ pub fn simulate(acc: &Accelerator, batch_size: usize) -> SimReport {
         bp,
         wu,
         update,
+        allreduce,
+        instances: acc.dv.cluster.max(1),
         batch_size,
         clock_hz: acc.dv.clock_mhz * 1e6,
         ops_per_image: acc.net.ops_per_image(),
@@ -385,6 +450,79 @@ mod tests {
         // but the image phases themselves scale: 4 engines on BS-40
         // cut shard length 40 -> 10
         assert!(t4 / t1 > 2.0, "4-engine speedup only {}", t4 / t1);
+    }
+
+    fn sim_cluster(scale: usize, bs: usize, instances: usize)
+                   -> SimReport {
+        let mut dv = DesignVars::for_scale(scale);
+        dv.cluster = instances;
+        let acc = RtlCompiler::default()
+            .compile(&Network::cifar(scale), &dv)
+            .unwrap();
+        simulate(&acc, bs)
+    }
+
+    #[test]
+    fn single_instance_has_zero_allreduce() {
+        let r = sim(1, 40);
+        assert_eq!(r.instances, 1);
+        assert_eq!(r.allreduce.latency_cycles, 0);
+        assert_eq!(r.cluster_cycles_per_iteration(),
+                   r.cycles_per_iteration());
+        assert_eq!(r.cluster_cycles_per_iteration(),
+                   r.sharded_cycles_per_iteration(1));
+    }
+
+    #[test]
+    fn allreduce_cycles_nonzero_and_grow_with_instances() {
+        let a2 = sim_cluster(1, 40, 2).allreduce.latency_cycles;
+        let a4 = sim_cluster(1, 40, 4).allreduce.latency_cycles;
+        let a8 = sim_cluster(1, 40, 8).allreduce.latency_cycles;
+        assert!(a2 > 0);
+        // more ring steps -> more per-step overhead, monotone in N
+        assert!(a2 < a4 && a4 < a8, "{a2} {a4} {a8}");
+    }
+
+    #[test]
+    fn allreduce_at_least_link_bound() {
+        // the schedule-based cost must not undercut the pure link-bound
+        // analytic ring cost (each step is max(local, link))
+        use crate::hw::link::{ring_cost, LinkModel};
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 4;
+        let net = Network::cifar(1);
+        let acc = RtlCompiler::default().compile(&net, &dv).unwrap();
+        let r = simulate(&acc, 40);
+        let link = LinkModel::new(&dv);
+        let analytic =
+            ring_cost(net.param_count() as u64 * 4, 4, &link);
+        assert_eq!(analytic.steps, 6);
+        assert!(r.allreduce.latency_cycles >= analytic.cycles,
+                "{} < {}", r.allreduce.latency_cycles, analytic.cycles);
+    }
+
+    #[test]
+    fn cluster_throughput_scales_with_instances() {
+        let t1 = sim_cluster(1, 40, 1).cluster_images_per_second();
+        let t2 = sim_cluster(1, 40, 2).cluster_images_per_second();
+        let t4 = sim_cluster(1, 40, 4).cluster_images_per_second();
+        assert!(t1 < t2 && t2 < t4, "{t1} {t2} {t4}");
+        // communication + the serialized update keep it sublinear
+        assert!(t4 / t1 < 4.0, "superlinear? {}", t4 / t1);
+        // but compute dominates at this scale: 4 instances > 2.5x
+        assert!(t4 / t1 > 2.5, "4-instance speedup only {}", t4 / t1);
+    }
+
+    #[test]
+    fn cluster_slower_than_free_sharding() {
+        // the sharded_* projection ignores communication; the cluster
+        // projection must pay for it
+        let r4 = sim_cluster(1, 40, 4);
+        assert!(r4.cluster_cycles_per_iteration()
+            > r4.sharded_cycles_per_iteration(4));
+        assert_eq!(r4.cluster_cycles_per_iteration()
+                       - r4.sharded_cycles_per_iteration(4),
+                   r4.allreduce.latency_cycles);
     }
 
     #[test]

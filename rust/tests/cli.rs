@@ -127,6 +127,77 @@ fn train_golden_tiny_runs() {
 }
 
 #[test]
+fn simulate_cluster_reports_allreduce_projection() {
+    let (ok, out, _) = stratus(&[
+        "simulate", "--scale", "1x", "--batch", "40", "--accelerators",
+        "4",
+    ]);
+    assert!(ok, "{out}");
+    assert!(out.contains("ALLREDUCE"), "{out}");
+    assert!(out.contains("cluster        : 4 instances, 6 ring steps"),
+            "{out}");
+    // nonzero all-reduce communication cycles in the projection
+    assert!(!out.contains("all-reduce 0 cycles/batch"), "{out}");
+    assert!(out.contains("vs 1 instance"), "{out}");
+    // single-instance runs stay free of cluster noise
+    let (ok, out, _) =
+        stratus(&["simulate", "--scale", "1x", "--batch", "40"]);
+    assert!(ok);
+    assert!(!out.contains("ALLREDUCE"));
+}
+
+/// (loss, train-acc, test-acc) triples from `stratus train` epoch lines.
+fn epoch_stats(out: &str) -> Vec<(String, String, String)> {
+    out.lines()
+        .filter(|l| l.trim_start().starts_with("epoch"))
+        .map(|l| {
+            let t: Vec<&str> = l.split_whitespace().collect();
+            (t[3].to_string(), t[5].to_string(), t[7].to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn train_cluster_bit_identical_to_single_instance() {
+    // ISSUE 2 acceptance: `train --accelerators 4 --workers 1` produces
+    // identical losses and accuracies to `--accelerators 1`
+    let tmp = std::env::temp_dir().join("stratus_cli_cluster.cfg");
+    std::fs::write(
+        &tmp,
+        "name tiny\ninput 3 8 8\nconv c1 4 k3 s1 p1 relu\n\
+         conv c2 4 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge\n",
+    )
+    .unwrap();
+    let run = |accelerators: &str| {
+        let (ok, out, err) = stratus(&[
+            "train", "--net", tmp.to_str().unwrap(), "--backend",
+            "golden", "--images", "12", "--epochs", "2", "--batch", "4",
+            "--eval", "8", "--accelerators", accelerators, "--workers",
+            "1",
+        ]);
+        assert!(ok, "accelerators={accelerators}: {out}\n{err}");
+        out
+    };
+    let single = run("1");
+    let cluster = run("4");
+    assert!(cluster.contains("4 accelerators"), "{cluster}");
+    let s1 = epoch_stats(&single);
+    let s4 = epoch_stats(&cluster);
+    assert_eq!(s1.len(), 2);
+    assert_eq!(s1, s4, "losses/accuracies diverged:\n{single}\n{cluster}");
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn report_cluster_scaling_table() {
+    let (ok, out, _) = stratus(&["report", "cluster"]);
+    assert!(ok);
+    assert!(out.contains("cluster scaling"));
+    assert!(out.contains("all-reduce cyc"));
+    assert!(out.contains("instances"));
+}
+
+#[test]
 fn bad_net_config_reports_line() {
     let tmp = std::env::temp_dir().join("stratus_cli_bad.cfg");
     std::fs::write(&tmp, "input 3 8 8\nconv c1 4 k3 s2 p1\nfc fc 10\n")

@@ -1,0 +1,156 @@
+//! Cluster equivalence suite (ISSUE 2 acceptance criterion): training
+//! data-parallel across N accelerator instances with the ring
+//! all-reduce must be a pure performance transform — same seed, same
+//! batch stream, any instance count => bit-identical parameters,
+//! losses, and optimizer state after every `end_batch`.  Mirrors
+//! rust/tests/engine.rs one level up, and checks the simulator's
+//! cluster event timeline carries the all-reduce phases.
+
+use stratus::compiler::RtlCompiler;
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, Trainer};
+use stratus::data::Synthetic;
+use stratus::sim::event::simulate_cluster_events;
+use stratus::sim::simulate;
+
+fn trainer(net: &Network, batch: usize, accelerators: usize,
+           workers: usize) -> Trainer {
+    let scale = match net.scale_tag() {
+        "4x" => 4,
+        "2x" => 2,
+        _ => 1,
+    };
+    Trainer::new(net, &DesignVars::for_scale(scale), batch, 0.002, 0.9,
+                 Backend::Golden, None)
+        .unwrap()
+        .with_accelerators(accelerators)
+        .with_workers(workers)
+}
+
+fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
+                     accelerators: usize, workers: usize) {
+    let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
+    let stream = data.batch(0, batch_images * batches);
+    let mut seq = trainer(net, batch_images, 1, 1);
+    let mut par = trainer(net, batch_images, accelerators, workers);
+    for chunk in stream.chunks(batch_images) {
+        let l_seq = seq.train_batch(chunk).unwrap();
+        let l_par = par.train_batch(chunk).unwrap();
+        assert_eq!(l_seq, l_par,
+                   "loss diverged at {accelerators} instances");
+    }
+    assert_eq!(seq.flat_params(), par.flat_params(),
+               "parameters diverged at {accelerators} instances");
+    for ((n, s), (_, p)) in
+        seq.param_states().iter().zip(par.param_states())
+    {
+        assert_eq!(s.grad_acc, p.grad_acc, "{n} grad_acc");
+        assert_eq!(s.momentum, p.momentum, "{n} momentum");
+        assert_eq!(s.count, p.count, "{n} count");
+    }
+    assert_eq!(seq.metrics.images, par.metrics.images);
+    assert_eq!(seq.metrics.loss_sum, par.metrics.loss_sum);
+}
+
+fn tiny_net() -> Network {
+    Network::parse(
+        "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
+         relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+    .unwrap()
+}
+
+#[test]
+fn tiny_net_four_instances_two_batches() {
+    assert_equivalent(&tiny_net(), 8, 2, 4, 1);
+}
+
+#[test]
+fn tiny_net_uneven_instance_shards() {
+    // 10 images over 4 instances -> shards of 3/3/2/2
+    assert_equivalent(&tiny_net(), 10, 1, 4, 1);
+}
+
+#[test]
+fn tiny_net_more_instances_than_batch() {
+    assert_equivalent(&tiny_net(), 3, 1, 16, 1);
+}
+
+#[test]
+fn tiny_net_instances_and_workers_compose() {
+    // 2 instances each sharding across 2 worker threads
+    assert_equivalent(&tiny_net(), 12, 2, 2, 2);
+}
+
+#[test]
+fn cifar_1x_two_instances_one_batch() {
+    // the paper-scale network (32x32 input, 14 parameter tensors)
+    assert_equivalent(&Network::cifar(1), 4, 1, 2, 1);
+}
+
+#[test]
+fn cluster_report_reflects_ring() {
+    let net = tiny_net();
+    let data = Synthetic::new(net.nclass, net.input, 5, 0.3);
+    let batch = data.batch(0, 10);
+    let mut t = trainer(&net, 10, 4, 1);
+    t.train_batch(&batch).unwrap();
+    let rep = t.last_cluster.as_ref().unwrap();
+    assert_eq!(rep.instances, 4);
+    assert_eq!(rep.images, 10);
+    assert_eq!(rep.shard_sizes, vec![3, 3, 2, 2]);
+    assert_eq!(rep.ring_steps, 6); // 2 * (4 - 1)
+    assert!(rep.ring_words > 0);
+    assert!(rep.wall_seconds >= 0.0);
+    // single-instance batches never populate the cluster report
+    let mut t1 = trainer(&net, 10, 1, 1);
+    t1.train_batch(&batch).unwrap();
+    assert!(t1.last_cluster.is_none());
+    assert!(t1.last_engine.is_some());
+}
+
+#[test]
+fn allreduce_cycles_appear_in_event_timeline_and_scale() {
+    let net = Network::cifar(1);
+    let mut cycles = Vec::new();
+    for instances in [1usize, 2, 4, 8] {
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = instances;
+        let acc = RtlCompiler::default().compile(&net, &dv).unwrap();
+        let ev = simulate_cluster_events(&acc, 40);
+        let ring: Vec<_> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.starts_with("allreduce/"))
+            .collect();
+        let expected = if instances > 1 { 2 * (instances - 1) } else { 0 };
+        assert_eq!(ring.len(), expected, "{instances} instances");
+        assert_eq!(ev.allreduce_cycles,
+                   ring.iter().map(|e| e.end - e.start).sum::<u64>());
+        // the timeline agrees with the analytic cluster projection
+        let r = simulate(&acc, 40);
+        assert_eq!(ev.allreduce_cycles, r.allreduce.latency_cycles);
+        cycles.push(ev.allreduce_cycles);
+    }
+    assert_eq!(cycles[0], 0);
+    assert!(cycles[1] > 0);
+    assert!(cycles.windows(2).skip(1).all(|w| w[0] < w[1]),
+            "all-reduce cycles not scaling with N: {cycles:?}");
+}
+
+#[test]
+fn cluster_simulated_time_beats_sequential() {
+    // the whole point: 4 instances finish a batch in fewer simulated
+    // cycles than 1, even after paying for the ring
+    let net = tiny_net();
+    let data = Synthetic::new(net.nclass, net.input, 9, 0.3);
+    let batch = data.batch(0, 8);
+    let mut seq = trainer(&net, 8, 1, 1);
+    let mut par = trainer(&net, 8, 4, 1);
+    seq.train_batch(&batch).unwrap();
+    par.train_batch(&batch).unwrap();
+    assert!(par.metrics.sim_cycles < seq.metrics.sim_cycles,
+            "cluster {} !< sequential {}", par.metrics.sim_cycles,
+            seq.metrics.sim_cycles);
+    assert!(par.metrics.sim_cycles > 0.0);
+}
