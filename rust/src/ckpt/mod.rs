@@ -1,0 +1,512 @@
+//! Crash-safe training checkpoints: a versioned, CRC-guarded binary
+//! snapshot of everything the trainer needs to restart *bit-identically*
+//! — parameters, the full optimizer state (gradient accumulators +
+//! momentum + per-batch counts), the rolling [`TrainMetrics`], a
+//! fingerprint of the network/design/hyper-parameters, and the dataset
+//! cursor.
+//!
+//! # Why this can promise bit-identical restarts
+//!
+//! Every quantity the training loop evolves is either an integer tensor
+//! (params, accumulators, momentum — restored exactly), an exact i64/u64
+//! counter, or an f64 running sum restored from its raw bits
+//! ([`f64::to_bits`]), after which the resumed run appends the *same*
+//! addends in the *same* order as an uninterrupted run.  The dataset
+//! ([`crate::data::Synthetic`]) is a pure function of `(seed, index)`,
+//! so the cursor is just four integers: epoch, next batch index, seed,
+//! and the epoch width in images (batch indices are only meaningful
+//! relative to it).
+//! Combined with the engine/cluster determinism contract (merge order
+//! fixed at any `--workers`/`--accelerators` count), *resumed training
+//! is bit-for-bit identical to never having stopped* — asserted by
+//! `rust/tests/ckpt.rs`.
+//!
+//! # On-disk layout (`CKPT_VERSION` 1)
+//!
+//! ```text
+//! [0..4)    magic  b"SCKP"
+//! [4..8)    format version, u32 LE
+//! [8..n-4)  payload: an FXTB tensor bundle (nn::tensorio::Bundle)
+//! [n-4..n)  CRC-32 (IEEE) of bytes [0..n-4), u32 LE
+//! ```
+//!
+//! The payload reuses the [`Bundle`] framing with a flat namespace:
+//! `meta/*` tensors carry the cursor/hyper/metrics/fingerprint (u64 and
+//! f64 values split into i32 lo/hi words), `param/<name>` the parameter
+//! tensors, and `state.grad/<name>` / `state.mom/<name>` /
+//! `state.meta/<name>` the optimizer state, all in the network's
+//! canonical `param_order`.
+//!
+//! Writes are atomic and durable: the bytes go to a `<file>.tmp`
+//! sibling (fsync'd) which is then renamed over the target, and the
+//! parent directory is fsync'd so the rename survives power loss — a
+//! crash mid-write can never leave a half-written checkpoint where the
+//! next `--resume` would find it, and even a torn file is caught by
+//! the CRC trailer, which rejects truncated or corrupted files instead
+//! of half-loading them.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::TrainMetrics;
+use crate::nn::sgd::{ParamKind, ParamState, SgdHyper};
+use crate::nn::tensor::Tensor;
+use crate::nn::tensorio::Bundle;
+
+/// Checkpoint container magic ("Stratus ChecKPoint").
+pub const MAGIC: &[u8; 4] = b"SCKP";
+
+/// On-disk format version; bump on any layout change.
+pub const CKPT_VERSION: u32 = 1;
+
+/// Where training stood when the checkpoint was taken: the *next* batch
+/// to run.  `batch` indexes batches within the epoch (0-based); an
+/// epoch boundary is always normalized to `(epoch + 1, 0)`.  `seed` is
+/// the synthetic-dataset seed and `images` the epoch width — together
+/// with the indices they fully determine every remaining sample (the
+/// dataset cursor from the module docs; a batch index is only
+/// meaningful relative to the epoch width, so `images` rides along and
+/// a resume with a different `--images` is refused rather than
+/// silently retraining over a different data window).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cursor {
+    pub epoch: u64,
+    pub batch: u64,
+    pub seed: u64,
+    pub images: u64,
+}
+
+impl Cursor {
+    /// The cursor before any training: epoch 0, batch 0.
+    pub fn start(seed: u64, images: u64) -> Cursor {
+        Cursor { epoch: 0, batch: 0, seed, images }
+    }
+}
+
+/// A full training snapshot (see module docs for the field inventory).
+/// Parameters and optimizer states are stored in the network's
+/// canonical `param_order`; the fingerprint refuses resumption onto a
+/// different network / design point / hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub fingerprint: String,
+    pub cursor: Cursor,
+    pub hyper: SgdHyper,
+    pub metrics: TrainMetrics,
+    /// `(name, tensor)` in canonical order.
+    pub params: Vec<(String, Tensor)>,
+    /// `(name, state)` in canonical order.
+    pub states: Vec<(String, ParamState)>,
+}
+
+// ---------------- integer/float packing ----------------
+
+fn split_u64(v: u64) -> [i32; 2] {
+    [(v & 0xFFFF_FFFF) as u32 as i32, (v >> 32) as u32 as i32]
+}
+
+fn join_u64(lo: i32, hi: i32) -> u64 {
+    u64::from(lo as u32) | (u64::from(hi as u32) << 32)
+}
+
+fn split_f64(v: f64) -> [i32; 2] {
+    split_u64(v.to_bits())
+}
+
+fn join_f64(lo: i32, hi: i32) -> f64 {
+    f64::from_bits(join_u64(lo, hi))
+}
+
+/// CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320) — the guard on
+/// the checkpoint trailer.  Bitwise implementation: checkpoints are
+/// megabytes at most and written once per N batches, so table-free
+/// simplicity wins over throughput.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte layout (module docs), borrowing
+    /// wrapper for tests/tools; the save path uses the consuming
+    /// [`Checkpoint::into_bytes`] so no tensor is copied twice.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.clone().into_bytes()
+    }
+
+    /// Serialize to the on-disk byte layout, consuming the snapshot —
+    /// every parameter/state tensor moves into the payload bundle
+    /// instead of being cloned a second time (the checkpoint cadence
+    /// sits on the training loop's hot path).
+    pub fn into_bytes(self) -> Vec<u8> {
+        let mut bundle = Bundle::new();
+        let fp_bytes: Vec<i32> = self
+            .fingerprint
+            .as_bytes()
+            .iter()
+            .map(|&b| i32::from(b))
+            .collect();
+        let n_fp = fp_bytes.len();
+        bundle.push("meta/fingerprint",
+                    Tensor::from_vec(&[n_fp], fp_bytes));
+        let c = &self.cursor;
+        let cur: Vec<i32> = [c.epoch, c.batch, c.seed, c.images]
+            .iter()
+            .flat_map(|&v| split_u64(v))
+            .collect();
+        bundle.push("meta/cursor", Tensor::from_vec(&[8], cur));
+        let [b_lo, b_hi] = split_u64(self.hyper.batch as u64);
+        bundle.push("meta/hyper",
+                    Tensor::from_vec(&[4],
+                                     vec![self.hyper.lr_q16,
+                                          self.hyper.beta_q15, b_lo,
+                                          b_hi]));
+        let m = &self.metrics;
+        let mut mm = Vec::with_capacity(10);
+        mm.extend_from_slice(&split_u64(m.images));
+        mm.extend_from_slice(&split_u64(m.batches));
+        mm.extend_from_slice(&split_f64(m.loss_sum));
+        mm.extend_from_slice(&split_f64(m.sim_cycles));
+        mm.extend_from_slice(&split_f64(m.host_seconds));
+        bundle.push("meta/metrics", Tensor::from_vec(&[10], mm));
+        for (name, t) in self.params {
+            bundle.push(&format!("param/{name}"), t);
+        }
+        for (name, st) in self.states {
+            let kind = match st.kind {
+                ParamKind::Weight => 0,
+                ParamKind::Bias => 1,
+            };
+            let [c_lo, c_hi] = split_u64(st.count as u64);
+            bundle.push(&format!("state.grad/{name}"), st.grad_acc);
+            bundle.push(&format!("state.mom/{name}"), st.momentum);
+            bundle.push(&format!("state.meta/{name}"),
+                        Tensor::from_vec(&[3], vec![kind, c_lo, c_hi]));
+        }
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        out.extend_from_slice(&bundle.to_bytes());
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully validate a checkpoint: magic, version, CRC, and
+    /// the presence/shape of every metadata tensor.  A truncated or
+    /// bit-flipped file is rejected here — never half-loaded.
+    pub fn from_bytes(blob: &[u8]) -> Result<Checkpoint> {
+        if blob.len() < 12 {
+            bail!("checkpoint truncated ({} bytes; a valid file is at \
+                   least 12)",
+                  blob.len());
+        }
+        if &blob[0..4] != MAGIC {
+            bail!("bad checkpoint magic (expected SCKP)");
+        }
+        let version =
+            u32::from_le_bytes([blob[4], blob[5], blob[6], blob[7]]);
+        if version != CKPT_VERSION {
+            bail!("unsupported checkpoint format version {version} \
+                   (this build reads version {CKPT_VERSION})");
+        }
+        let body = &blob[..blob.len() - 4];
+        let tail = &blob[blob.len() - 4..];
+        let stored =
+            u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+        let computed = crc32(body);
+        if stored != computed {
+            bail!("checkpoint CRC checksum mismatch (stored {stored:#010x}, \
+                   computed {computed:#010x}); the file is truncated or \
+                   corrupted — refusing to load it");
+        }
+        let bundle = Bundle::from_bytes(&body[8..])
+            .context("parsing checkpoint payload bundle")?;
+
+        let fp_t = bundle.get_req("meta/fingerprint")?;
+        let fp_bytes: Vec<u8> = fp_t
+            .data()
+            .iter()
+            .map(|&v| {
+                u8::try_from(v).map_err(|_| {
+                    anyhow!("checkpoint fingerprint holds non-byte \
+                             value {v}")
+                })
+            })
+            .collect::<Result<_>>()?;
+        let fingerprint = String::from_utf8(fp_bytes)
+            .context("checkpoint fingerprint is not utf8")?;
+
+        let cur = bundle.get_req("meta/cursor")?;
+        if cur.len() != 8 {
+            bail!("checkpoint cursor has {} words (expected 8)",
+                  cur.len());
+        }
+        let cd = cur.data();
+        let cursor = Cursor {
+            epoch: join_u64(cd[0], cd[1]),
+            batch: join_u64(cd[2], cd[3]),
+            seed: join_u64(cd[4], cd[5]),
+            images: join_u64(cd[6], cd[7]),
+        };
+
+        let hy = bundle.get_req("meta/hyper")?;
+        if hy.len() != 4 {
+            bail!("checkpoint hyper has {} words (expected 4)", hy.len());
+        }
+        let hd = hy.data();
+        let batch = usize::try_from(join_u64(hd[2], hd[3]))
+            .map_err(|_| anyhow!("checkpoint batch size overflows"))?;
+        let hyper =
+            SgdHyper { lr_q16: hd[0], beta_q15: hd[1], batch };
+
+        let mt = bundle.get_req("meta/metrics")?;
+        if mt.len() != 10 {
+            bail!("checkpoint metrics has {} words (expected 10)",
+                  mt.len());
+        }
+        let md = mt.data();
+        let metrics = TrainMetrics {
+            images: join_u64(md[0], md[1]),
+            batches: join_u64(md[2], md[3]),
+            loss_sum: join_f64(md[4], md[5]),
+            sim_cycles: join_f64(md[6], md[7]),
+            host_seconds: join_f64(md[8], md[9]),
+        };
+
+        // params and optimizer states, preserving bundle order (which is
+        // the canonical param_order the writer used)
+        let mut params = Vec::new();
+        let mut states = Vec::new();
+        for name in bundle.names() {
+            if let Some(p) = name.strip_prefix("param/") {
+                params.push((p.to_string(),
+                             bundle.get_req(name)?.clone()));
+            }
+        }
+        for (name, _) in &params {
+            let grad_acc =
+                bundle.get_req(&format!("state.grad/{name}"))?.clone();
+            let momentum =
+                bundle.get_req(&format!("state.mom/{name}"))?.clone();
+            let sm = bundle.get_req(&format!("state.meta/{name}"))?;
+            if sm.len() != 3 {
+                bail!("checkpoint state.meta/{name} has {} words \
+                       (expected 3)",
+                      sm.len());
+            }
+            let sd = sm.data();
+            let kind = match sd[0] {
+                0 => ParamKind::Weight,
+                1 => ParamKind::Bias,
+                other => bail!("checkpoint state.meta/{name} has \
+                                unknown param kind {other}"),
+            };
+            let count = usize::try_from(join_u64(sd[1], sd[2]))
+                .map_err(|_| anyhow!("state count overflows"))?;
+            let st =
+                ParamState::from_snapshot(kind, grad_acc, momentum,
+                                          count)
+                    .with_context(|| format!("restoring state {name}"))?;
+            states.push((name.clone(), st));
+        }
+        if params.is_empty() {
+            bail!("checkpoint holds no parameters");
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            cursor,
+            hyper,
+            metrics,
+            params,
+            states,
+        })
+    }
+
+    /// Atomically write the checkpoint to `path` (consuming it — see
+    /// [`Checkpoint::into_bytes`]): the bytes land in a `<file>.tmp`
+    /// sibling first, fsync'd, and are renamed into place, and the
+    /// parent directory is fsync'd too so the rename itself is durable
+    /// — a crash at any point leaves either the previous checkpoint or
+    /// the new one, never a torn or vanished file.
+    pub fn save_atomic(self, path: &Path) -> Result<()> {
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| {
+                anyhow!("checkpoint path {} has no file name",
+                        path.display())
+            })?;
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp).with_context(|| {
+                format!("creating {}", tmp.display())
+            })?;
+            f.write_all(&self.into_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), path.display())
+        })?;
+        // make the rename durable: fsync the directory holding the
+        // entry (an empty parent means the path is a bare file name
+        // in the current directory)
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        fs::File::open(parent)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("syncing {}", parent.display()))?;
+        Ok(())
+    }
+
+    /// Load and validate a checkpoint file (see [`Checkpoint::from_bytes`]
+    /// for what validation covers).
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let blob = fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Checkpoint::from_bytes(&blob)
+            .with_context(|| format!("loading {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let w = Tensor::from_vec(&[2, 2], vec![1, -2, 3, i32::MIN]);
+        let b = Tensor::from_vec(&[2], vec![7, -7]);
+        let mut sw = ParamState::new(ParamKind::Weight, &[2, 2]);
+        sw.accumulate(&Tensor::from_vec(&[2, 2],
+                                        vec![5, 6, 7, i32::MAX]));
+        let sb = ParamState::new(ParamKind::Bias, &[2]);
+        Checkpoint {
+            fingerprint: "net tiny | dv 8x8x16".to_string(),
+            cursor: Cursor { epoch: 3, batch: 11, seed: 42,
+                             images: 2048 },
+            hyper: SgdHyper::new(0.002, 0.9, 40),
+            metrics: TrainMetrics {
+                images: u64::from(u32::MAX) + 5,
+                batches: 17,
+                loss_sum: 1234.5678,
+                sim_cycles: 9.87e12,
+                host_seconds: 0.25,
+            },
+            params: vec![("w_c1".to_string(), w),
+                         ("b_c1".to_string(), b)],
+            states: vec![("w_c1".to_string(), sw),
+                         ("b_c1".to_string(), sb)],
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn u64_f64_packing_round_trips() {
+        for v in [0u64, 1, u64::from(u32::MAX), u64::MAX, 1 << 33] {
+            let [lo, hi] = split_u64(v);
+            assert_eq!(join_u64(lo, hi), v);
+        }
+        for v in [0.0f64, -1.5, f64::MIN_POSITIVE, 1.0e300,
+                  -0.1234567890123456789] {
+            let [lo, hi] = split_f64(v);
+            assert_eq!(join_f64(lo, hi).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_exactly() {
+        let ck = sample_checkpoint();
+        let blob = ck.to_bytes();
+        let r = Checkpoint::from_bytes(&blob).unwrap();
+        assert_eq!(r.fingerprint, ck.fingerprint);
+        assert_eq!(r.cursor, ck.cursor);
+        assert_eq!(r.hyper.lr_q16, ck.hyper.lr_q16);
+        assert_eq!(r.hyper.beta_q15, ck.hyper.beta_q15);
+        assert_eq!(r.hyper.batch, ck.hyper.batch);
+        assert_eq!(r.metrics.images, ck.metrics.images);
+        assert_eq!(r.metrics.batches, ck.metrics.batches);
+        assert_eq!(r.metrics.loss_sum.to_bits(),
+                   ck.metrics.loss_sum.to_bits());
+        assert_eq!(r.metrics.sim_cycles.to_bits(),
+                   ck.metrics.sim_cycles.to_bits());
+        assert_eq!(r.params.len(), 2);
+        assert_eq!(r.params[0].0, "w_c1");
+        assert_eq!(r.params[0].1, ck.params[0].1);
+        assert_eq!(r.states[0].1.grad_acc, ck.states[0].1.grad_acc);
+        assert_eq!(r.states[0].1.momentum, ck.states[0].1.momentum);
+        assert_eq!(r.states[0].1.count, ck.states[0].1.count);
+        assert_eq!(r.states[1].1.kind, ParamKind::Bias);
+    }
+
+    #[test]
+    fn rejects_truncation_at_any_cut() {
+        let blob = sample_checkpoint().to_bytes();
+        for cut in [0, 3, 8, 11, blob.len() / 2, blob.len() - 1] {
+            assert!(Checkpoint::from_bytes(&blob[..cut]).is_err(),
+                    "cut={cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_any_bit_flip() {
+        let blob = sample_checkpoint().to_bytes();
+        // flip one bit at several offsets across the file, including
+        // payload and trailer bytes
+        for off in [0, 5, 9, blob.len() / 3, blob.len() - 2] {
+            let mut bad = blob.clone();
+            bad[off] ^= 0x10;
+            assert!(Checkpoint::from_bytes(&bad).is_err(),
+                    "bit flip at {off} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut blob = sample_checkpoint().to_bytes();
+        blob[4] = 99; // version field
+        // restore the CRC so only the version check can fire
+        let n = blob.len();
+        let crc = crc32(&blob[..n - 4]);
+        blob[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&blob).unwrap_err();
+        assert!(format!("{err:#}").contains("version"));
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir()
+            .join(format!("stratus_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.stratus");
+        let ck = sample_checkpoint();
+        ck.clone().save_atomic(&path).unwrap();
+        // overwrite in place (the crash-safety path: rename over)
+        ck.clone().save_atomic(&path).unwrap();
+        let r = Checkpoint::load(&path).unwrap();
+        assert_eq!(r.cursor, ck.cursor);
+        assert!(!path.with_file_name("ckpt.stratus.tmp").exists(),
+                "tmp file left behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

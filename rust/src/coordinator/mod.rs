@@ -15,6 +15,13 @@
 //! [`Trainer::train_image`] remains the single-shard path and the
 //! faithful per-image hardware analogue.
 //!
+//! Long runs go through [`Trainer::run`], the loop refactored from
+//! "run to completion" to "run between checkpoints": it drives
+//! epochs × batches from a [`Cursor`], snapshots crash-safe
+//! checkpoints ([`crate::ckpt`]) on a cadence, and
+//! [`Trainer::resume_from`] restarts a killed run bit-identically to
+//! never having stopped.
+//!
 //! Numerics run through one of three backends:
 //! - [`Backend::PerOp`] — every scheduled op executes its own AOT
 //!   artifact on the PJRT runtime (the accelerator's layer-by-layer
@@ -25,13 +32,14 @@
 //!   the artifacts; used for networks without artifacts, e.g. 2X/4X).
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::ckpt::{Checkpoint, Cursor};
 use crate::compiler::{Accelerator, OpKind, RtlCompiler};
 use crate::config::{DesignVars, Layer, Network};
-use crate::data::Sample;
+use crate::data::{Sample, Synthetic};
 use crate::engine::cluster::{run_batch_cluster, ClusterReport};
 use crate::engine::{self, EngineReport, StepOut};
 use crate::nn::golden;
@@ -87,6 +95,50 @@ impl TrainMetrics {
             0.0
         }
     }
+}
+
+/// Checkpoint cadence for [`Trainer::run`]: write to `path` every
+/// `every_batches` trained batches (and at every epoch boundary).
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// Checkpoint file (one file, atomically replaced on every save).
+    pub path: PathBuf,
+    /// Save after this many batches (≥ 1; epoch ends always save too).
+    pub every_batches: u64,
+}
+
+/// One training run's shape for [`Trainer::run`]: how far to train and
+/// when to checkpoint.  The run starts wherever its `start` cursor says
+/// — `Cursor::start(seed, images)` for a fresh run, or the cursor
+/// returned by
+/// [`Trainer::resume_from`] to continue a checkpointed one.
+#[derive(Debug, Clone)]
+pub struct TrainRun {
+    /// Train until this many epochs are complete (absolute, not
+    /// relative to the start cursor).
+    pub epochs: u64,
+    /// Images per epoch; batches cover `[b*batch, min((b+1)*batch,
+    /// images))` of the dataset index space, so the last batch of an
+    /// epoch may be short.
+    pub images: u64,
+    /// Checkpoint cadence; `None` trains without checkpoints.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Stop after this many batches *of this run* (a preemption point
+    /// for tests and budgeted runs); `None` runs to `epochs`.
+    pub max_batches: Option<u64>,
+}
+
+/// What [`Trainer::run`] reports at each epoch boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochStats {
+    /// 0-based epoch index that just finished.
+    pub epoch: u64,
+    /// Mean of the per-batch mean losses over the batches this run
+    /// executed in the epoch (a mid-epoch resume covers only the
+    /// remainder; [`TrainMetrics`] carries the exact cross-run totals).
+    pub mean_loss: f64,
+    /// Batches this run executed in the epoch.
+    pub batches: u64,
 }
 
 /// The trainer: compiled accelerator + parameters + optimizer state +
@@ -228,6 +280,11 @@ impl Trainer {
     /// Set the engine worker count (builder style).  `train_batch`
     /// shards golden-backend batches across this many threads; results
     /// stay bit-identical to `workers == 1` (engine contract).
+    ///
+    /// A count of 0 is normalized to 1 — the documented clamp shared
+    /// with [`Trainer::with_accelerators`] (the CLI rejects 0 before it
+    /// gets here; in code, "no parallelism" and "one worker" are the
+    /// same thing).
     pub fn with_workers(mut self, workers: usize) -> Trainer {
         self.workers = workers.max(1);
         self
@@ -239,6 +296,10 @@ impl Trainer {
     /// results stay bit-identical to one instance (cluster contract).
     /// The simulated per-batch all-reduce cost is recomputed from the
     /// compiled cluster schedule on the next cluster batch.
+    ///
+    /// A count of 0 is normalized to 1 — the documented clamp shared
+    /// with [`Trainer::with_workers`] (the CLI rejects 0 before it gets
+    /// here).
     pub fn with_accelerators(mut self, accelerators: usize) -> Trainer {
         self.accelerators = accelerators.max(1);
         self
@@ -287,6 +348,244 @@ impl Trainer {
                     .to_vec()
             })
             .collect()
+    }
+
+    // ---------------- checkpoint / resume ----------------
+
+    /// Canonical description of everything that must match for a
+    /// resumed run to continue bit-identically: the network (every
+    /// layer dimension), the loss, the SGD hyper-parameters, and the
+    /// design variables that feed the simulated-cycle metrics.  Worker
+    /// and accelerator counts are deliberately **excluded** — the
+    /// engine/cluster merge contract makes gradient grouping
+    /// irrelevant, so a checkpoint taken at any `--workers` /
+    /// `--accelerators` resumes at any other count.
+    pub fn fingerprint(&self) -> String {
+        let net = &self.acc.net;
+        let dv = &self.acc.dv;
+        let layers: Vec<String> =
+            net.layers.iter().map(|l| format!("{l:?}")).collect();
+        format!(
+            "stratus-ckpt net={} input={:?} nclass={} loss={:?} \
+             layers=[{}] hyper(lr_q16={},beta_q15={},batch={}) \
+             dv(pox={},poy={},pof={},clock_mhz={},dram_gbytes={},\
+             dram_efficiency={},load_balance={},double_buffer={},\
+             tile_rows={},data_bits={})",
+            net.name,
+            net.input,
+            net.nclass,
+            net.loss,
+            layers.join(";"),
+            self.hyper.lr_q16,
+            self.hyper.beta_q15,
+            self.hyper.batch,
+            dv.pox,
+            dv.poy,
+            dv.pof,
+            dv.clock_mhz,
+            dv.dram_gbytes,
+            dv.dram_efficiency,
+            dv.load_balance,
+            dv.double_buffer,
+            dv.tile_rows,
+            dv.data_bits,
+        )
+    }
+
+    /// Snapshot the complete training state (params, optimizer state,
+    /// metrics, fingerprint) plus `cursor` into an atomic checkpoint
+    /// file at `path` (tmp + rename + dir fsync; see [`crate::ckpt`]).
+    /// Tensors are copied once to assemble the snapshot and then move
+    /// into the serialized payload ([`Checkpoint::into_bytes`]).
+    pub fn save_checkpoint(&self, path: &Path, cursor: Cursor)
+                           -> Result<()> {
+        let order = self.acc.net.param_order();
+        let mut params = Vec::with_capacity(order.len());
+        for name in &order {
+            params.push((name.clone(), self.params.get(name)?.clone()));
+        }
+        let ck = Checkpoint {
+            fingerprint: self.fingerprint(),
+            cursor,
+            hyper: self.hyper,
+            metrics: self.metrics.clone(),
+            params,
+            states: self.states.clone(),
+        };
+        ck.save_atomic(path)
+    }
+
+    /// Restore params, optimizer state, and metrics from a checkpoint
+    /// and return its cursor (the next batch to run).  Refuses — with
+    /// the trainer untouched — a corrupted/truncated file (CRC), a
+    /// checkpoint written for a different network / design point /
+    /// hyper-parameters (fingerprint), or any geometry mismatch.
+    pub fn resume_from(&mut self, path: &Path) -> Result<Cursor> {
+        let ck = Checkpoint::load(path)?;
+        let want = self.fingerprint();
+        if ck.fingerprint != want {
+            bail!(
+                "cannot resume from {}: the checkpoint fingerprint does \
+                 not match this run's network/design/hyper \
+                 configuration\n  checkpoint: {}\n  this run  : {}",
+                path.display(),
+                ck.fingerprint,
+                want
+            );
+        }
+        // validate everything before mutating anything, so a bad file
+        // can never leave the trainer half-restored
+        let order = self.acc.net.param_order();
+        if ck.params.len() != order.len()
+            || ck.states.len() != self.states.len()
+        {
+            bail!(
+                "cannot resume from {}: checkpoint holds {} params / {} \
+                 states, this network has {} / {}",
+                path.display(),
+                ck.params.len(),
+                ck.states.len(),
+                order.len(),
+                self.states.len()
+            );
+        }
+        for ((name, t), want_name) in ck.params.iter().zip(&order) {
+            if name != want_name {
+                bail!("cannot resume from {}: parameter order mismatch \
+                       (`{name}` where `{want_name}` was expected)",
+                      path.display());
+            }
+            let shape = self.params.get(name)?.shape();
+            if t.shape() != shape {
+                bail!("cannot resume from {}: `{name}` has shape {:?} \
+                       in the checkpoint but {:?} here",
+                      path.display(),
+                      t.shape(),
+                      shape);
+            }
+        }
+        for ((name, st), (want_name, cur)) in
+            ck.states.iter().zip(&self.states)
+        {
+            if name != want_name
+                || st.kind != cur.kind
+                || st.grad_acc.shape() != cur.grad_acc.shape()
+            {
+                bail!("cannot resume from {}: optimizer state `{name}` \
+                       does not match this network's `{want_name}`",
+                      path.display());
+            }
+        }
+        for (name, t) in ck.params {
+            *self.params.get_mut(&name)? = t;
+        }
+        self.states = ck.states;
+        self.metrics = ck.metrics;
+        self.param_lits.clear(); // parameters changed (§Perf cache)
+        Ok(ck.cursor)
+    }
+
+    /// Drive training from `start` until `cfg.epochs` epochs are
+    /// complete (or `cfg.max_batches` batches of this run have
+    /// executed), checkpointing per `cfg.checkpoint` — the training
+    /// loop refactored from "run to completion" to "run between
+    /// checkpoints".  Batch `b` of every epoch covers dataset indices
+    /// `[b*batch, min((b+1)*batch, images))`, so the position is fully
+    /// described by the returned [`Cursor`]; `on_epoch` fires at every
+    /// epoch boundary this run reaches (after that epoch's final
+    /// checkpoint is on disk).
+    ///
+    /// Checkpoints are written every `every_batches` batches and at
+    /// every epoch boundary, always carrying the cursor of the *next*
+    /// batch; a run killed anywhere replays at most `every_batches - 1`
+    /// batches after [`Trainer::resume_from`], and the replayed stream
+    /// is bit-identical to the uninterrupted one (see `tests/ckpt.rs`).
+    pub fn run(
+        &mut self,
+        data: &Synthetic,
+        cfg: &TrainRun,
+        start: Cursor,
+        mut on_epoch: impl FnMut(&mut Trainer, &EpochStats) -> Result<()>,
+    ) -> Result<Cursor> {
+        if cfg.images == 0 {
+            bail!("run: images must be at least 1");
+        }
+        let bs = self.hyper.batch as u64;
+        if bs == 0 {
+            bail!("run: batch size must be at least 1");
+        }
+        if let Some(ck) = &cfg.checkpoint {
+            if ck.every_batches == 0 {
+                bail!("run: checkpoint cadence must be at least 1 batch");
+            }
+        }
+        if data.seed != start.seed {
+            bail!(
+                "run: dataset seed {} does not match the cursor seed {} \
+                 (a resumed run must rebuild the dataset from the \
+                 checkpoint's recorded seed)",
+                data.seed,
+                start.seed
+            );
+        }
+        if cfg.images != start.images {
+            bail!(
+                "run: images {} does not match the cursor's recorded \
+                 epoch width {} — the batch index would address a \
+                 different data window (a resumed run must keep the \
+                 recorded --images)",
+                cfg.images,
+                start.images
+            );
+        }
+        let bpe = cfg.images.div_ceil(bs); // batches per epoch
+        if start.epoch < cfg.epochs && start.batch >= bpe {
+            bail!("run: start cursor batch {} is outside the epoch's \
+                   {bpe} batches",
+                  start.batch);
+        }
+        let mut cur = start;
+        let mut executed = 0u64;
+        'epochs: while cur.epoch < cfg.epochs {
+            let mut epoch_loss = 0.0f64;
+            let mut epoch_batches = 0u64;
+            while cur.batch < bpe {
+                if cfg.max_batches.is_some_and(|m| executed >= m) {
+                    break 'epochs;
+                }
+                let lo = cur.batch * bs;
+                let hi = ((cur.batch + 1) * bs).min(cfg.images);
+                let samples = data.batch(lo, (hi - lo) as usize);
+                epoch_loss += self.train_batch(&samples)?;
+                epoch_batches += 1;
+                executed += 1;
+                cur.batch += 1;
+                let epoch_done = cur.batch == bpe;
+                if epoch_done {
+                    // normalize the boundary to (epoch + 1, 0)
+                    cur = Cursor {
+                        epoch: cur.epoch + 1,
+                        batch: 0,
+                        ..cur
+                    };
+                }
+                if let Some(ck) = &cfg.checkpoint {
+                    if epoch_done || executed % ck.every_batches == 0 {
+                        self.save_checkpoint(&ck.path, cur)?;
+                    }
+                }
+                if epoch_done {
+                    let stats = EpochStats {
+                        epoch: cur.epoch - 1,
+                        mean_loss: epoch_loss / epoch_batches as f64,
+                        batches: epoch_batches,
+                    };
+                    on_epoch(self, &stats)?;
+                    continue 'epochs;
+                }
+            }
+        }
+        Ok(cur)
     }
 
     fn runtime(&self) -> Result<&Runtime> {
@@ -892,6 +1191,130 @@ mod tests {
         let rep = t.last_engine.as_ref().unwrap();
         assert_eq!(rep.workers, 3); // clamped to one image per shard
         assert_eq!(t.metrics.images, 3);
+    }
+
+    #[test]
+    fn zero_workers_and_accelerators_clamp_to_one() {
+        // the documented clamp (ISSUE 3 satellite): 0 normalizes to 1
+        // in the builders, consistently for both axes
+        let t = tiny_trainer().with_workers(0).with_accelerators(0);
+        assert_eq!(t.workers, 1);
+        assert_eq!(t.accelerators, 1);
+    }
+
+    #[test]
+    fn fingerprint_ignores_parallelism_but_not_design() {
+        // resume composes with any workers/accelerators count, so the
+        // fingerprint must not depend on either; it must depend on the
+        // design point and hyper-parameters
+        let base = tiny_trainer().fingerprint();
+        let par = tiny_trainer()
+            .with_workers(4)
+            .with_accelerators(3)
+            .fingerprint();
+        assert_eq!(base, par);
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 4;
+        let clustered =
+            Trainer::new(&tiny_net(), &dv, 4, 0.02, 0.9, Backend::Golden,
+                         None)
+                .unwrap()
+                .fingerprint();
+        assert_eq!(base, clustered, "dv.cluster leaked into fingerprint");
+        let other_lr =
+            Trainer::new(&tiny_net(), &DesignVars::for_scale(1), 4, 0.05,
+                         0.9, Backend::Golden, None)
+                .unwrap()
+                .fingerprint();
+        assert_ne!(base, other_lr);
+        let mut small = DesignVars::for_scale(1);
+        small.pox = 4;
+        let other_dv =
+            Trainer::new(&tiny_net(), &small, 4, 0.02, 0.9,
+                         Backend::Golden, None)
+                .unwrap()
+                .fingerprint();
+        assert_ne!(base, other_dv);
+    }
+
+    #[test]
+    fn run_trains_epochs_and_returns_end_cursor() {
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let cfg = TrainRun {
+            epochs: 2,
+            images: 10,
+            checkpoint: None,
+            max_batches: None,
+        };
+        let mut t = tiny_trainer(); // batch size 4 -> 3 batches/epoch
+        let mut seen = Vec::new();
+        let end = t
+            .run(&data, &cfg, crate::ckpt::Cursor::start(7, 10),
+                 |_, stats| {
+                     seen.push((stats.epoch, stats.batches));
+                     Ok(())
+                 })
+            .unwrap();
+        assert_eq!(end, crate::ckpt::Cursor { epoch: 2, batch: 0,
+                                              seed: 7, images: 10 });
+        assert_eq!(seen, vec![(0, 3), (1, 3)]);
+        assert_eq!(t.metrics.batches, 6);
+        assert_eq!(t.metrics.images, 20);
+    }
+
+    #[test]
+    fn run_max_batches_stops_mid_epoch() {
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let cfg = TrainRun {
+            epochs: 2,
+            images: 10,
+            checkpoint: None,
+            max_batches: Some(2),
+        };
+        let mut t = tiny_trainer();
+        let end = t
+            .run(&data, &cfg, crate::ckpt::Cursor::start(7, 10),
+                 |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(end, crate::ckpt::Cursor { epoch: 0, batch: 2,
+                                              seed: 7, images: 10 });
+        assert_eq!(t.metrics.batches, 2);
+    }
+
+    #[test]
+    fn run_rejects_mismatched_dataset_seed() {
+        let data = Synthetic::new(10, (3, 8, 8), 8, 0.3);
+        let cfg = TrainRun {
+            epochs: 1,
+            images: 4,
+            checkpoint: None,
+            max_batches: None,
+        };
+        let mut t = tiny_trainer();
+        let err = t
+            .run(&data, &cfg, crate::ckpt::Cursor::start(7, 4),
+                 |_, _| Ok(()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("seed"));
+    }
+
+    #[test]
+    fn run_rejects_mismatched_epoch_width() {
+        // the cursor records the epoch width; running with a different
+        // --images would silently retrain a different data window
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let cfg = TrainRun {
+            epochs: 1,
+            images: 8,
+            checkpoint: None,
+            max_batches: None,
+        };
+        let mut t = tiny_trainer();
+        let err = t
+            .run(&data, &cfg, crate::ckpt::Cursor::start(7, 12),
+                 |_, _| Ok(()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("epoch width"), "{err:#}");
     }
 
     #[test]

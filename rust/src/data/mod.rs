@@ -25,6 +25,10 @@ pub struct Synthetic {
     prototypes: Vec<Vec<f64>>, // nclass x (c*h*w)
     pub nclass: usize,
     pub shape: (usize, usize, usize),
+    /// The generator seed.  Together with a sample index this fully
+    /// determines every sample, so `(seed, index)` is the whole dataset
+    /// cursor a training checkpoint needs to record (see `ckpt`).
+    pub seed: u64,
     noise: f64,
 }
 
@@ -66,7 +70,7 @@ impl Synthetic {
             }
             prototypes.push(proto);
         }
-        Synthetic { prototypes, nclass, shape, noise }
+        Synthetic { prototypes, nclass, shape, seed, noise }
     }
 
     /// Paper-shaped default: 10 classes, 3x32x32.

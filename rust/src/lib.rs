@@ -8,9 +8,11 @@
 //!   compiler ([`compiler`]), the accelerator's global control and
 //!   layer-by-layer training schedule ([`coordinator`]), the
 //!   batch-parallel training engine that shards batches across worker
-//!   threads with bit-identical results ([`engine`]), a cycle-accurate
-//!   hardware model of the generated accelerator ([`hw`], [`sim`]), and a
-//!   PJRT runtime that executes the AOT-compiled numerics ([`runtime`]).
+//!   threads with bit-identical results ([`engine`]), crash-safe
+//!   checkpoint/resume with bit-identical restarts ([`ckpt`]), a
+//!   cycle-accurate hardware model of the generated accelerator ([`hw`],
+//!   [`sim`]), and a PJRT runtime that executes the AOT-compiled
+//!   numerics ([`runtime`]).
 //! - **Layer 2 (python/compile/model.py, build-time)** — the fixed-point
 //!   CNN training step in JAX, lowered per layer-op to HLO text artifacts.
 //! - **Layer 1 (python/compile/kernels/, build-time)** — Pallas kernels
@@ -22,6 +24,7 @@
 //! See DESIGN.md for the full system inventory and the experiment index
 //! (every table and figure of the paper mapped to a bench target).
 
+pub mod ckpt;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

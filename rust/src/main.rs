@@ -7,21 +7,26 @@
 //!   report    regenerate a paper table/figure (table2|table3|fig9|fig10)
 //!
 //! Run `stratus` with no arguments for usage.  (The offline build
-//! environment vendors no CLI crates, so argument parsing is manual.)
+//! environment vendors no CLI crates, so argument parsing is manual —
+//! but strict: every subcommand declares which flags take values and
+//! which are switches, a value flag with its value missing is an error
+//! rather than a silent switch demotion, and unrecognized flags are
+//! rejected with a usage hint instead of being ignored.)
 
 use std::path::PathBuf;
 use std::process::exit;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use stratus::ckpt::Cursor;
 use stratus::compiler::{calibrate, RtlCompiler};
 use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
 use stratus::data::Synthetic;
 use stratus::metrics;
 use stratus::sim::simulate;
 
-/// Minimal flag parser: `--key value` pairs plus positionals.
+/// Parsed arguments: `--key value` pairs, `--switch`es, positionals.
 struct Args {
     positional: Vec<String>,
     flags: Vec<(String, String)>,
@@ -29,7 +34,12 @@ struct Args {
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Args {
+    /// Strict parse against a subcommand's flag spec.  `value_flags`
+    /// must be followed by a value (a missing one — end of line or
+    /// another `--flag` — is an error, never a silent demotion to a
+    /// switch); names in neither list are rejected.
+    fn parse(argv: &[String], value_flags: &[&str],
+             switch_flags: &[&str]) -> Result<Args> {
         let mut positional = Vec::new();
         let mut flags = Vec::new();
         let mut switches = Vec::new();
@@ -37,19 +47,26 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.push((key.to_string(), argv[i + 1].clone()));
-                    i += 2;
-                } else {
+                if value_flags.contains(&key) {
+                    match argv.get(i + 1) {
+                        Some(v) if !v.starts_with("--") => {
+                            flags.push((key.to_string(), v.clone()));
+                            i += 2;
+                        }
+                        _ => bail!("flag --{key} expects a value"),
+                    }
+                } else if switch_flags.contains(&key) {
                     switches.push(key.to_string());
                     i += 1;
+                } else {
+                    bail!("unknown flag --{key}");
                 }
             } else {
                 positional.push(a.clone());
                 i += 1;
             }
         }
-        Args { positional, flags, switches }
+        Ok(Args { positional, flags, switches })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -77,6 +94,18 @@ impl Args {
         }
     }
 
+    /// Like [`Args::usize_or`] but 0 is rejected — the one place zero
+    /// worker/instance/batch counts are normalized (the library-side
+    /// builders clamp 0 to 1; the CLI refuses it outright so a typo'd
+    /// `--workers 0` cannot silently train single-threaded).
+    fn usize_positive(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.usize_or(key, default)?;
+        if v == 0 {
+            bail!("--{key} must be at least 1");
+        }
+        Ok(v)
+    }
+
     fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -85,6 +114,38 @@ impl Args {
                 .with_context(|| format!("--{key} wants a number")),
         }
     }
+}
+
+/// Flag spec per subcommand: (flags that take a value, switches).
+/// Anything not listed is rejected by [`Args::parse`].
+fn flag_spec(cmd: &str)
+             -> Option<(Vec<&'static str>, Vec<&'static str>)> {
+    // design-point flags shared by compile/simulate/train
+    const DESIGN: &[&str] = &["net", "scale", "pox", "poy", "pof",
+                              "clock-mhz", "dram-gbs", "tile-rows",
+                              "accelerators", "link-gbs"];
+    const DESIGN_SW: &[&str] = &["no-load-balance", "no-double-buffer"];
+    let (design, extra, extra_sw): (bool, &[&str], &[&str]) = match cmd {
+        "compile" => (true, &["emit-verilog"], &[]),
+        "simulate" => (true, &["batch"], &[]),
+        "train" => (true,
+                    &["batch", "epochs", "images", "eval", "lr",
+                      "momentum", "seed", "workers", "backend",
+                      "artifacts", "checkpoint-dir", "checkpoint-every"],
+                    &["resume"]),
+        "report" => (false, &[], &[]),
+        "calibrate" => (false, &["net", "scale", "samples", "seed"], &[]),
+        _ => return None,
+    };
+    let mut value_flags = Vec::new();
+    let mut switches = Vec::new();
+    if design {
+        value_flags.extend_from_slice(DESIGN);
+        switches.extend_from_slice(DESIGN_SW);
+    }
+    value_flags.extend_from_slice(extra);
+    switches.extend_from_slice(extra_sw);
+    Some((value_flags, switches))
 }
 
 fn load_network(args: &Args) -> Result<Network> {
@@ -110,13 +171,13 @@ fn design_vars(args: &Args, net: &Network) -> Result<DesignVars> {
         _ => 1,
     };
     let mut dv = DesignVars::for_scale(scale);
-    dv.pox = args.usize_or("pox", dv.pox)?;
-    dv.poy = args.usize_or("poy", dv.poy)?;
-    dv.pof = args.usize_or("pof", dv.pof)?;
+    dv.pox = args.usize_positive("pox", dv.pox)?;
+    dv.poy = args.usize_positive("poy", dv.poy)?;
+    dv.pof = args.usize_positive("pof", dv.pof)?;
     dv.clock_mhz = args.f64_or("clock-mhz", dv.clock_mhz)?;
     dv.dram_gbytes = args.f64_or("dram-gbs", dv.dram_gbytes)?;
-    dv.tile_rows = args.usize_or("tile-rows", dv.tile_rows)?;
-    dv.cluster = args.usize_or("accelerators", dv.cluster)?.max(1);
+    dv.tile_rows = args.usize_positive("tile-rows", dv.tile_rows)?;
+    dv.cluster = args.usize_positive("accelerators", dv.cluster)?;
     dv.link_gbytes = args.f64_or("link-gbs", dv.link_gbytes)?;
     if args.has("no-load-balance") {
         dv.load_balance = false;
@@ -176,7 +237,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let net = load_network(args)?;
     let dv = design_vars(args, &net)?;
-    let bs = args.usize_or("batch", 40)?;
+    let bs = args.usize_positive("batch", 40)?;
     let acc = RtlCompiler::default().compile(&net, &dv)?;
     let r = simulate(&acc, bs);
     println!("== cycle simulation: {} @ BS {bs} ==", net.name);
@@ -216,14 +277,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let net = load_network(args)?;
     let dv = design_vars(args, &net)?;
-    let batch = args.usize_or("batch", 40)?;
-    let epochs = args.usize_or("epochs", 5)?;
-    let images = args.usize_or("images", 512)?;
-    let eval_n = args.usize_or("eval", 256)?;
+    let batch = args.usize_positive("batch", 40)?;
+    let epochs = args.usize_positive("epochs", 5)? as u64;
+    let images = args.usize_positive("images", 512)? as u64;
+    let eval_n = args.usize_positive("eval", 256)?;
     let lr = args.f64_or("lr", 0.002)?;
     let momentum = args.f64_or("momentum", 0.9)?;
     let seed = args.usize_or("seed", 7)? as u64;
-    let workers = args.usize_or("workers", 1)?;
+    let workers = args.usize_positive("workers", 1)?;
     let backend = match args.get_or("backend", "golden").as_str() {
         "golden" => Backend::Golden,
         "perop" | "per-op" => Backend::PerOp,
@@ -232,46 +293,103 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let artifacts: Option<PathBuf> =
         Some(PathBuf::from(args.get_or("artifacts", "artifacts")));
+    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+    let ckpt_every = args.usize_positive("checkpoint-every", 50)? as u64;
+    let resume = args.has("resume");
+    if ckpt_dir.is_none() && args.get("checkpoint-every").is_some() {
+        bail!("--checkpoint-every needs --checkpoint-dir (where the \
+               checkpoints go) — without it nothing would be saved");
+    }
+    let ckpt_path = ckpt_dir.as_ref().map(|d| d.join("ckpt.stratus"));
+
     let mut t = Trainer::new(&net, &dv, batch, lr, momentum, backend,
                              artifacts.as_deref())?
         .with_workers(workers);
-    let data = Synthetic::new(net.nclass, net.input, seed, 0.3);
-    let train: Vec<_> = data.batch(0, images);
-    let test: Vec<_> = data.batch(1_000_000, eval_n);
+    let start = if resume {
+        let path = ckpt_path.as_ref().ok_or_else(|| {
+            anyhow!("--resume needs --checkpoint-dir (where the \
+                     checkpoint lives)")
+        })?;
+        let cur = t.resume_from(path)?;
+        if args.get("seed").is_some() && cur.seed != seed {
+            bail!("--seed {seed} conflicts with the checkpoint's \
+                   recorded seed {}; drop --seed to continue the \
+                   recorded run",
+                  cur.seed);
+        }
+        if args.get("images").is_some() && cur.images != images {
+            bail!("--images {images} conflicts with the checkpoint's \
+                   recorded epoch width {}; drop --images to continue \
+                   the recorded run",
+                  cur.images);
+        }
+        println!("resumed        : {} -> epoch {}, batch {} (seed {}, \
+                  {} images/epoch)",
+                 path.display(), cur.epoch + 1, cur.batch, cur.seed,
+                 cur.images);
+        cur
+    } else {
+        Cursor::start(seed, images)
+    };
+    // the cursor's recorded epoch width wins on resume (== `images`
+    // for fresh runs; an explicitly conflicting --images errored above)
+    let images = start.images;
     println!("== training {} ({:?} backend, {} images, BS {batch}, \
               {} accelerator{} x {} worker{}) ==",
              net.name, backend, images, t.accelerators,
              if t.accelerators == 1 { "" } else { "s" }, t.workers,
              if t.workers == 1 { "" } else { "s" });
-    for epoch in 0..epochs {
-        let mut loss_sum = 0.0;
-        let mut nb = 0;
-        for chunk in train.chunks(batch) {
-            loss_sum += t.train_batch(chunk)?;
-            nb += 1;
+    if let Some(dir) = &ckpt_dir {
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("creating checkpoint dir {}", dir.display())
+        })?;
+    }
+    if start.epoch >= epochs {
+        if resume {
+            println!("checkpoint already covers epoch {}; nothing to \
+                      do (raise --epochs to train further)",
+                     start.epoch);
         }
-        let acc_tr = t.evaluate(&train)?;
-        let acc_te = t.evaluate(&test)?;
+        return Ok(());
+    }
+
+    let data = Synthetic::new(net.nclass, net.input, start.seed, 0.3);
+    let train: Vec<_> = data.batch(0, images as usize);
+    let test: Vec<_> = data.batch(1_000_000, eval_n);
+    let cfg = TrainRun {
+        epochs,
+        images,
+        checkpoint: ckpt_path.map(|path| CheckpointPolicy {
+            path,
+            every_batches: ckpt_every,
+        }),
+        max_batches: None,
+    };
+    let clock_hz = dv.clock_mhz * 1e6;
+    t.run(&data, &cfg, start, |tr, stats| {
+        let acc_tr = tr.evaluate(&train)?;
+        let acc_te = tr.evaluate(&test)?;
         println!(
             "epoch {:>3}: loss {:>10.1}  train-acc {:>5.1}%  \
              test-acc {:>5.1}%  sim {:>8.2}s  host {:>6.1}s  \
              eng {:>7.0} img/s",
-            epoch + 1,
-            loss_sum / nb as f64,
+            stats.epoch + 1,
+            stats.mean_loss,
             acc_tr * 100.0,
             acc_te * 100.0,
-            t.metrics.sim_seconds(dv.clock_mhz * 1e6),
-            t.metrics.host_seconds,
-            t.metrics.images_per_second()
+            tr.metrics.sim_seconds(clock_hz),
+            tr.metrics.host_seconds,
+            tr.metrics.images_per_second()
         );
-    }
+        Ok(())
+    })?;
     Ok(())
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
     // adaptive fixed-point calibration pass (paper §IV-B extension)
     let net = load_network(args)?;
-    let n = args.usize_or("samples", 16)?;
+    let n = args.usize_positive("samples", 16)?;
     let seed = args.usize_or("seed", 7)? as u64;
     let params = stratus::nn::init::init_params(&net, 1234);
     let (c, h, w) = net.input;
@@ -292,7 +410,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args
         .positional
-        .get(1)
+        .first()
         .map(String::as_str)
         .unwrap_or("all");
     let mut any = false;
@@ -360,23 +478,49 @@ COMMANDS:
                                accelerator instances with a deterministic
                                ring all-reduce (golden backend;
                                bit-identical to one instance)]
+            [--checkpoint-dir D    write crash-safe checkpoints to
+                                   D/ckpt.stratus (atomic tmp+rename,
+                                   CRC-guarded; see DESIGN.md)]
+            [--checkpoint-every N  checkpoint every N batches
+                                   (default 50; epoch ends always save)]
+            [--resume              continue from D/ckpt.stratus at its
+                                   recorded epoch/batch/seed cursor —
+                                   bit-identical to never having
+                                   stopped, at any worker/accelerator
+                                   count]
   report    table2|table3|fig9|fig10|engine|cluster|all  regenerate
   calibrate --scale .. --samples N          adaptive fixed-point pass
+
+Flags that take a value error when the value is missing; unrecognized
+flags are rejected.
 ";
+
+fn run_cli(argv: &[String]) -> Result<()> {
+    let cmd = match argv.first() {
+        Some(c) if !c.starts_with("--") => c.as_str(),
+        _ => bail!("{USAGE}"),
+    };
+    let Some((value_flags, switches)) = flag_spec(cmd) else {
+        bail!("unknown command `{cmd}`\n\n{USAGE}");
+    };
+    let args = Args::parse(&argv[1..], &value_flags, &switches)
+        .map_err(|e| {
+            anyhow!("{cmd}: {e:#} (run `stratus` without arguments for \
+                     usage)")
+        })?;
+    match cmd {
+        "compile" => cmd_compile(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "report" => cmd_report(&args),
+        "calibrate" => cmd_calibrate(&args),
+        _ => unreachable!("flag_spec gates the command set"),
+    }
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv);
-    let cmd = args.positional.first().map(String::as_str);
-    let result = match cmd {
-        Some("compile") => cmd_compile(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("train") => cmd_train(&args),
-        Some("report") => cmd_report(&args),
-        Some("calibrate") => cmd_calibrate(&args),
-        _ => Err(anyhow!("{USAGE}")),
-    };
-    if let Err(e) = result {
+    if let Err(e) = run_cli(&argv) {
         eprintln!("error: {e:#}");
         exit(1);
     }

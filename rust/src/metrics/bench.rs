@@ -88,9 +88,20 @@ pub fn smoke_mode() -> bool {
 /// Compare a result against the baseline file.  `Ok(None)` when the
 /// bench has no baseline entry (informational run), `Ok(Some(msg))`
 /// when within bounds, `Err` when the result regressed more than
-/// [`MAX_DROP`] below baseline.
+/// [`MAX_DROP`] below baseline — or when the measurement itself is
+/// non-finite (`inf` from an elapsed time that rounded to zero, or
+/// NaN): every float comparison against the floor is false for those,
+/// so without this check a broken measurement would sail through the
+/// gate as "ok".
 pub fn check_baseline(baseline: &Path, name: &str,
                       images_per_second: f64) -> Result<Option<String>> {
+    if !images_per_second.is_finite() {
+        return Err(anyhow!(
+            "invalid measurement: {name} reported images_per_second = \
+             {images_per_second} (non-finite; did the measured interval \
+             round to zero?) — refusing to gate on it"
+        ));
+    }
     let text = std::fs::read_to_string(baseline)
         .with_context(|| format!("reading {}", baseline.display()))?;
     let json = Json::parse(&text)
@@ -254,6 +265,26 @@ mod tests {
         let json = Json::parse(&rec.to_json()).unwrap();
         assert_eq!(json.get("images_per_second").and_then(Json::as_f64),
                    Some(0.0));
+    }
+
+    #[test]
+    fn gate_rejects_non_finite_measurements() {
+        // a smoke run whose elapsed time rounds to zero yields inf
+        // images/s; inf > floor would otherwise read as "ok", and NaN
+        // compares false both ways — both must fail the gate loudly,
+        // baseline entry or not (ISSUE 3 satellite)
+        let p = tmp_baseline(
+            r#"{"eng":{"images_per_second":100.0}}"#,
+        );
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let err = check_baseline(&p, "eng", bad).unwrap_err();
+            assert!(format!("{err:#}").contains("non-finite"),
+                    "bad={bad}");
+            // even a bench without a baseline entry must not pass
+            let err = check_baseline(&p, "unlisted", bad).unwrap_err();
+            assert!(format!("{err:#}").contains("non-finite"));
+        }
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -68,6 +68,23 @@ impl ParamState {
         }
     }
 
+    /// Rebuild a state from checkpointed pieces (ckpt restore path).
+    /// Errors when the accumulator and momentum geometries disagree —
+    /// a checkpoint that would half-load is rejected instead.
+    pub fn from_snapshot(kind: ParamKind, grad_acc: Tensor,
+                         momentum: Tensor, count: usize)
+                         -> anyhow::Result<ParamState> {
+        if grad_acc.shape() != momentum.shape() {
+            anyhow::bail!(
+                "optimizer snapshot is inconsistent: accumulator shape \
+                 {:?} vs momentum shape {:?}",
+                grad_acc.shape(),
+                momentum.shape()
+            );
+        }
+        Ok(ParamState { kind, grad_acc, momentum, count })
+    }
+
     /// Accumulate one image's gradients (Fig. 7: "accumulated tile-by-tile
     /// and repeated for the entire batch").
     pub fn accumulate(&mut self, g: &Tensor) {

@@ -6,7 +6,7 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::nn::tensor::Tensor;
 
@@ -29,6 +29,13 @@ impl Bundle {
 
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.entries.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+
+    /// Like [`Bundle::get`], but a missing tensor is an error naming it
+    /// (the checkpoint loader's "all fields or nothing" validation).
+    pub fn get_req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("bundle is missing tensor `{name}`"))
     }
 
     pub fn names(&self) -> Vec<&str> {

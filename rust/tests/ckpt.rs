@@ -1,0 +1,310 @@
+//! Checkpoint/resume integration tests (ISSUE 3 tentpole): killing a
+//! training run and resuming from its checkpoint must be bit-for-bit
+//! identical to never having stopped — parameters, optimizer state
+//! (accumulators + momentum + counts), and the deterministic metrics
+//! (images, batches, exact loss sums, simulated cycles) — at every
+//! tested workers x accelerators combination, and a truncated or
+//! corrupted checkpoint file must be rejected whole (CRC) rather than
+//! half-loaded.
+
+use std::path::PathBuf;
+
+use stratus::ckpt::{Checkpoint, Cursor};
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
+use stratus::data::Synthetic;
+
+const SEED: u64 = 7;
+const BATCH: usize = 4;
+const IMAGES: u64 = 12; // 3 batches per epoch
+const EPOCHS: u64 = 2;
+const KILL_AFTER: u64 = 2; // batches into epoch 0
+
+fn tiny_net() -> Network {
+    Network::parse(
+        "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 \
+         s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+    .unwrap()
+}
+
+fn trainer(workers: usize, accelerators: usize) -> Trainer {
+    Trainer::new(&tiny_net(), &DesignVars::for_scale(1), BATCH, 0.02,
+                 0.9, Backend::Golden, None)
+        .unwrap()
+        .with_workers(workers)
+        .with_accelerators(accelerators)
+}
+
+fn tmp_ckpt(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stratus_ckpt_test_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("ckpt.stratus")
+}
+
+fn plain_run() -> TrainRun {
+    TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: None,
+        max_batches: None,
+    }
+}
+
+/// Everything the bit-identity contract covers, extracted for equality
+/// asserts (host_seconds is wall clock and deliberately excluded).
+#[derive(Debug, PartialEq)]
+struct Signature {
+    params: Vec<i32>,
+    grad_accs: Vec<Vec<i32>>,
+    momenta: Vec<Vec<i32>>,
+    counts: Vec<usize>,
+    images: u64,
+    batches: u64,
+    loss_sum_bits: u64,
+    sim_cycles_bits: u64,
+}
+
+fn state_signature(t: &Trainer) -> Signature {
+    Signature {
+        params: t.flat_params(),
+        grad_accs: t
+            .param_states()
+            .iter()
+            .map(|(_, s)| s.grad_acc.data().to_vec())
+            .collect(),
+        momenta: t
+            .param_states()
+            .iter()
+            .map(|(_, s)| s.momentum.data().to_vec())
+            .collect(),
+        counts: t.param_states().iter().map(|(_, s)| s.count).collect(),
+        images: t.metrics.images,
+        batches: t.metrics.batches,
+        loss_sum_bits: t.metrics.loss_sum.to_bits(),
+        sim_cycles_bits: t.metrics.sim_cycles.to_bits(),
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_across_parallelism() {
+    // ISSUE 3 acceptance: train K batches, checkpoint, drop the
+    // trainer, resume in a fresh one, finish — equal to an
+    // uninterrupted run, across {1,2,4} workers x {1,3} accelerators
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    for &workers in &[1usize, 2, 4] {
+        for &accels in &[1usize, 3] {
+            let tag = format!("w{workers}a{accels}");
+            // uninterrupted reference
+            let mut full = trainer(workers, accels);
+            let end = full
+                .run(&data, &plain_run(), Cursor::start(SEED, IMAGES),
+                     |_, _| Ok(()))
+                .unwrap();
+            assert_eq!(end,
+                       Cursor { epoch: EPOCHS, batch: 0, seed: SEED,
+                                images: IMAGES });
+
+            // interrupted: kill after KILL_AFTER batches, mid-epoch
+            let path = tmp_ckpt(&tag);
+            let killed_cfg = TrainRun {
+                checkpoint: Some(CheckpointPolicy {
+                    path: path.clone(),
+                    every_batches: KILL_AFTER,
+                }),
+                max_batches: Some(KILL_AFTER),
+                ..plain_run()
+            };
+            let mut killed = trainer(workers, accels);
+            let stopped = killed
+                .run(&data, &killed_cfg, Cursor::start(SEED, IMAGES),
+                     |_, _| Ok(()))
+                .unwrap();
+            assert_eq!(stopped,
+                       Cursor { epoch: 0, batch: KILL_AFTER,
+                                seed: SEED, images: IMAGES },
+                       "{tag}: unexpected kill point");
+            drop(killed); // the "crash": all in-memory state is gone
+
+            // resume in a fresh trainer and finish the run
+            let mut resumed = trainer(workers, accels);
+            let cur = resumed.resume_from(&path).unwrap();
+            assert_eq!(cur, stopped, "{tag}: cursor did not round-trip");
+            let resumed_cfg = TrainRun {
+                checkpoint: Some(CheckpointPolicy {
+                    path: path.clone(),
+                    every_batches: KILL_AFTER,
+                }),
+                ..plain_run()
+            };
+            let end2 = resumed
+                .run(&data, &resumed_cfg, cur, |_, _| Ok(()))
+                .unwrap();
+            assert_eq!(end2, end);
+
+            assert_eq!(state_signature(&full),
+                       state_signature(&resumed),
+                       "{tag}: resumed run diverged from uninterrupted");
+            let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        }
+    }
+}
+
+#[test]
+fn resume_composes_with_different_parallelism() {
+    // a checkpoint taken at 1 worker x 1 accelerator resumes at 4x3 —
+    // grouping is irrelevant under the fixed-order merge, so params,
+    // optimizer state, and exact loss sums still match the
+    // uninterrupted single-instance run (sim_cycles differ by design:
+    // the cluster charges concurrent-shard + all-reduce cycles)
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let mut full = trainer(1, 1);
+    full.run(&data, &plain_run(), Cursor::start(SEED, IMAGES), |_, _| Ok(()))
+        .unwrap();
+
+    let path = tmp_ckpt("cross");
+    let killed_cfg = TrainRun {
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: KILL_AFTER,
+        }),
+        max_batches: Some(KILL_AFTER),
+        ..plain_run()
+    };
+    let mut killed = trainer(1, 1);
+    killed
+        .run(&data, &killed_cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(()))
+        .unwrap();
+    drop(killed);
+
+    let mut resumed = trainer(4, 3);
+    let cur = resumed.resume_from(&path).unwrap();
+    resumed.run(&data, &plain_run(), cur, |_, _| Ok(())).unwrap();
+
+    assert_eq!(full.flat_params(), resumed.flat_params());
+    assert_eq!(full.metrics.images, resumed.metrics.images);
+    assert_eq!(full.metrics.batches, resumed.metrics.batches);
+    assert_eq!(full.metrics.loss_sum.to_bits(),
+               resumed.metrics.loss_sum.to_bits());
+    for ((n1, s1), (n2, s2)) in
+        full.param_states().iter().zip(resumed.param_states())
+    {
+        assert_eq!(n1, n2);
+        assert_eq!(s1.momentum, s2.momentum, "{n1} momentum");
+        assert_eq!(s1.grad_acc, s2.grad_acc, "{n1} accumulator");
+        assert_eq!(s1.count, s2.count);
+    }
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn corrupted_checkpoints_are_rejected_not_half_loaded() {
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let path = tmp_ckpt("corrupt");
+    let cfg = TrainRun {
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 1,
+        }),
+        max_batches: Some(2),
+        ..plain_run()
+    };
+    let mut t = trainer(2, 1);
+    t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(())).unwrap();
+    let blob = std::fs::read(&path).unwrap();
+    assert!(Checkpoint::from_bytes(&blob).is_ok());
+
+    let mut victim = trainer(2, 1);
+    let before = victim.flat_params();
+
+    // truncation at several cuts, including mid-tensor
+    for cut in [0usize, 7, 64, blob.len() / 2, blob.len() - 1] {
+        std::fs::write(&path, &blob[..cut]).unwrap();
+        let err = victim.resume_from(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("CRC") || msg.contains("truncated"),
+            "cut={cut}: unexpected error: {msg}"
+        );
+        assert_eq!(victim.flat_params(), before,
+                   "cut={cut}: trainer mutated by a rejected resume");
+    }
+
+    // single corrupted byte mid-payload: CRC must catch it
+    let mut bad = blob.clone();
+    let mid = blob.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    let err = victim.resume_from(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+    assert_eq!(victim.flat_params(), before);
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn resume_refuses_a_different_network_or_hyper() {
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let path = tmp_ckpt("fingerprint");
+    let cfg = TrainRun {
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 1,
+        }),
+        max_batches: Some(1),
+        ..plain_run()
+    };
+    let mut t = trainer(1, 1);
+    t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(())).unwrap();
+
+    // different network (wider conv): fingerprint mismatch
+    let other_net = Network::parse(
+        "name tiny\ninput 3 8 8\nconv c1 12 k3 s1 p1 relu\nconv c2 12 \
+         k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+    .unwrap();
+    let mut other = Trainer::new(&other_net, &DesignVars::for_scale(1),
+                                 BATCH, 0.02, 0.9, Backend::Golden, None)
+        .unwrap();
+    let err = other.resume_from(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    // same network, different learning rate: also refused
+    let mut other_lr = Trainer::new(&tiny_net(),
+                                    &DesignVars::for_scale(1), BATCH,
+                                    0.05, 0.9, Backend::Golden, None)
+        .unwrap();
+    let err = other_lr.resume_from(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+    // the original configuration still resumes fine
+    let mut same = trainer(1, 1);
+    assert!(same.resume_from(&path).is_ok());
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn checkpoint_cadence_writes_at_epoch_boundaries() {
+    // epoch ends always checkpoint, even when the cadence would not
+    // have fired yet; the recorded cursor is normalized to the next
+    // epoch's start
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let path = tmp_ckpt("cadence");
+    let cfg = TrainRun {
+        epochs: 1,
+        images: IMAGES,
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 100, // cadence never fires on its own
+        }),
+        max_batches: None,
+    };
+    let mut t = trainer(1, 1);
+    let end = t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(()))
+        .unwrap();
+    assert_eq!(end, Cursor { epoch: 1, batch: 0, seed: SEED,
+                            images: IMAGES });
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.cursor, end);
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}

@@ -198,6 +198,138 @@ fn report_cluster_scaling_table() {
 }
 
 #[test]
+fn missing_flag_value_is_an_error_not_a_switch() {
+    // ISSUE 3 satellite: `--workers --backend golden` used to demote
+    // --workers to a switch and silently train with 1 worker
+    let (ok, _, err) =
+        stratus(&["train", "--workers", "--backend", "golden"]);
+    assert!(!ok);
+    assert!(err.contains("--workers expects a value"), "{err}");
+    assert!(err.contains("usage"), "{err}");
+    // value flag at end of line is the same error
+    let (ok, _, err) = stratus(&["simulate", "--batch"]);
+    assert!(!ok);
+    assert!(err.contains("--batch expects a value"), "{err}");
+}
+
+#[test]
+fn unknown_flags_are_rejected_with_a_hint() {
+    // ISSUE 3 satellite: a misspelled flag used to be silently ignored
+    let (ok, _, err) = stratus(&[
+        "train", "--acclerators", "4", "--backend", "golden",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown flag --acclerators"), "{err}");
+    assert!(err.contains("usage"), "{err}");
+    let (ok, _, err) = stratus(&["compile", "--fast"]);
+    assert!(!ok);
+    assert!(err.contains("unknown flag --fast"), "{err}");
+    // flags accepted by one subcommand stay rejected by another
+    let (ok, _, err) = stratus(&["report", "--workers", "2"]);
+    assert!(!ok);
+    assert!(err.contains("unknown flag --workers"), "{err}");
+}
+
+#[test]
+fn zero_parallelism_counts_are_rejected() {
+    // ISSUE 3 satellite: `--workers 0` / `--accelerators 0` error
+    // instead of silently training with one
+    let (ok, _, err) = stratus(&[
+        "train", "--workers", "0", "--backend", "golden",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--workers must be at least 1"), "{err}");
+    let (ok, _, err) =
+        stratus(&["simulate", "--accelerators", "0"]);
+    assert!(!ok);
+    assert!(err.contains("--accelerators must be at least 1"), "{err}");
+    // a zero epoch count would silently train nothing
+    let (ok, _, err) = stratus(&[
+        "train", "--epochs", "0", "--backend", "golden",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--epochs must be at least 1"), "{err}");
+}
+
+#[test]
+fn train_checkpoint_resume_end_to_end() {
+    // ISSUE 3 acceptance: `stratus train --resume` continues from the
+    // recorded epoch/batch cursor, and the continued run's epoch lines
+    // are identical to an uninterrupted run's
+    let tmp = std::env::temp_dir().join("stratus_cli_ckpt.cfg");
+    std::fs::write(
+        &tmp,
+        "name tiny\ninput 3 8 8\nconv c1 4 k3 s1 p1 relu\n\
+         conv c2 4 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge\n",
+    )
+    .unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("stratus_cli_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let base: Vec<&str> = vec![
+        "train", "--net", tmp.to_str().unwrap(), "--backend", "golden",
+        "--images", "8", "--batch", "4", "--eval", "8", "--workers", "2",
+    ];
+    let dir_s = dir.to_str().unwrap().to_string();
+    let run = |extra: &[&str]| {
+        let mut argv = base.clone();
+        argv.extend_from_slice(extra);
+        let (ok, out, err) = stratus(&argv);
+        assert!(ok, "{out}\n{err}");
+        out
+    };
+    // uninterrupted 2-epoch reference (no checkpointing)
+    let full = run(&["--epochs", "2"]);
+    // epoch 1 with checkpoints, then resume into epoch 2
+    let first = run(&["--epochs", "1", "--checkpoint-dir", &dir_s,
+                      "--checkpoint-every", "1"]);
+    assert!(dir.join("ckpt.stratus").exists(), "{first}");
+    let second = run(&["--epochs", "2", "--checkpoint-dir", &dir_s,
+                       "--resume"]);
+    assert!(second.contains("resumed"), "{second}");
+    let s_full = epoch_stats(&full);
+    let s1 = epoch_stats(&first);
+    let s2 = epoch_stats(&second);
+    assert_eq!(s_full.len(), 2);
+    assert_eq!(s1.len(), 1);
+    assert_eq!(s2.len(), 1, "resume must not replay epoch 1:\n{second}");
+    assert_eq!(s_full[0], s1[0], "epoch 1 diverged:\n{full}\n{first}");
+    assert_eq!(s_full[1], s2[0], "epoch 2 diverged:\n{full}\n{second}");
+    // resuming again with the same target is a clean no-op
+    let done = run(&["--epochs", "2", "--checkpoint-dir", &dir_s,
+                     "--resume"]);
+    assert!(done.contains("nothing to do"), "{done}");
+    // --resume without --checkpoint-dir is an error
+    let mut argv = base.clone();
+    argv.extend_from_slice(&["--epochs", "2", "--resume"]);
+    let (ok, _, err) = stratus(&argv);
+    assert!(!ok);
+    assert!(err.contains("--checkpoint-dir"), "{err}");
+    // a conflicting explicit --images on resume is refused (the cursor
+    // records the epoch width; silently shrinking the data window
+    // would break the bit-identity contract)
+    let mut argv = base.clone();
+    argv.extend_from_slice(&["--epochs", "3", "--checkpoint-dir",
+                             &dir_s, "--resume", "--images", "99"]);
+    let (ok, _, err) = stratus(&argv);
+    assert!(!ok);
+    assert!(err.contains("--images 99 conflicts"), "{err}");
+    let _ = std::fs::remove_file(&tmp);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_every_without_dir_is_an_error() {
+    // cadence without a destination would silently save nothing
+    let (ok, _, err) = stratus(&[
+        "train", "--backend", "golden", "--checkpoint-every", "5",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--checkpoint-every needs --checkpoint-dir"),
+            "{err}");
+}
+
+#[test]
 fn bad_net_config_reports_line() {
     let tmp = std::env::temp_dir().join("stratus_cli_bad.cfg");
     std::fs::write(&tmp, "input 3 8 8\nconv c1 4 k3 s2 p1\nfc fc 10\n")
