@@ -33,9 +33,13 @@
 //! The payload reuses the [`Bundle`] framing with a flat namespace:
 //! `meta/*` tensors carry the cursor/hyper/metrics/fingerprint (u64 and
 //! f64 values split into i32 lo/hi words), `param/<name>` the parameter
-//! tensors, and `state.grad/<name>` / `state.mom/<name>` /
-//! `state.meta/<name>` the optimizer state, all in the network's
-//! canonical `param_order`.
+//! tensors (canonical `param_order`, then the BN running statistics
+//! `rm_*`/`rv_*` from `state_order`), and `state.grad/<name>` /
+//! `state.mom/<name>` / `state.meta/<name>` the optimizer and
+//! statistic-accumulator states in the trainer's `accum_order`.  Params
+//! and states are independent namespaces: BN running statistics are
+//! params without states, BN shard-sum accumulators (`sm_*`/`sq_*`,
+//! kind `Stat`) are states without params.
 //!
 //! Writes are atomic and durable: the bytes go to a `<file>.tmp`
 //! sibling (fsync'd) which is then renamed over the target, and the
@@ -186,6 +190,7 @@ impl Checkpoint {
             let kind = match st.kind {
                 ParamKind::Weight => 0,
                 ParamKind::Bias => 1,
+                ParamKind::Stat => 2,
             };
             let [c_lo, c_hi] = split_u64(st.count as u64);
             bundle.push(&format!("state.grad/{name}"), st.grad_acc);
@@ -285,8 +290,11 @@ impl Checkpoint {
             host_seconds: join_f64(md[8], md[9]),
         };
 
-        // params and optimizer states, preserving bundle order (which is
-        // the canonical param_order the writer used)
+        // params and optimizer states, preserving bundle order (which
+        // is the canonical order the writer used).  States are scanned
+        // by their own prefix rather than derived from the param list:
+        // BN running statistics are params without states, and BN
+        // statistic accumulators are states without params.
         let mut params = Vec::new();
         let mut states = Vec::new();
         for name in bundle.names() {
@@ -295,9 +303,11 @@ impl Checkpoint {
                              bundle.get_req(name)?.clone()));
             }
         }
-        for (name, _) in &params {
-            let grad_acc =
-                bundle.get_req(&format!("state.grad/{name}"))?.clone();
+        for full in bundle.names() {
+            let Some(name) = full.strip_prefix("state.grad/") else {
+                continue;
+            };
+            let grad_acc = bundle.get_req(full)?.clone();
             let momentum =
                 bundle.get_req(&format!("state.mom/{name}"))?.clone();
             let sm = bundle.get_req(&format!("state.meta/{name}"))?;
@@ -310,6 +320,7 @@ impl Checkpoint {
             let kind = match sd[0] {
                 0 => ParamKind::Weight,
                 1 => ParamKind::Bias,
+                2 => ParamKind::Stat,
                 other => bail!("checkpoint state.meta/{name} has \
                                 unknown param kind {other}"),
             };
@@ -319,7 +330,7 @@ impl Checkpoint {
                 ParamState::from_snapshot(kind, grad_acc, momentum,
                                           count)
                     .with_context(|| format!("restoring state {name}"))?;
-            states.push((name.clone(), st));
+            states.push((name.to_string(), st));
         }
         if params.is_empty() {
             bail!("checkpoint holds no parameters");
@@ -457,6 +468,28 @@ mod tests {
         assert_eq!(r.states[0].1.momentum, ck.states[0].1.momentum);
         assert_eq!(r.states[0].1.count, ck.states[0].1.count);
         assert_eq!(r.states[1].1.kind, ParamKind::Bias);
+    }
+
+    #[test]
+    fn stat_states_and_stateless_params_round_trip() {
+        // BN shape: a running-stat param with no state, and a Stat
+        // accumulator state with no param
+        let mut ck = sample_checkpoint();
+        ck.params
+            .push(("rm_n1".to_string(),
+                   Tensor::from_vec(&[2], vec![3, -9])));
+        let mut st = ParamState::new(ParamKind::Stat, &[2]);
+        st.accumulate(&Tensor::from_vec(&[2], vec![512, 1024]));
+        ck.states.push(("sm_n1".to_string(), st));
+        let r = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(r.params.len(), 3);
+        assert_eq!(r.params[2].0, "rm_n1");
+        assert_eq!(r.params[2].1.data(), &[3, -9]);
+        assert_eq!(r.states.len(), 3);
+        assert_eq!(r.states[2].0, "sm_n1");
+        assert_eq!(r.states[2].1.kind, ParamKind::Stat);
+        assert_eq!(r.states[2].1.grad_acc.data(), &[512, 1024]);
+        assert_eq!(r.states[2].1.count, 1);
     }
 
     #[test]

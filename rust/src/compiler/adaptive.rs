@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Layer, Network};
+use crate::config::Network;
 use crate::data::Sample;
 use crate::fixed::{dequantize, FA, FG};
 use crate::nn::golden::{self, Params};
@@ -85,7 +85,10 @@ pub fn calibrate(net: &Network, params: &Params, samples: &[Sample])
     let mut acts: Vec<(String, f64)> = Vec::new();
     let mut grads: Vec<(String, f64)> = Vec::new();
     for l in &net.layers {
-        if matches!(l, Layer::Pool { .. }) {
+        // every parameterized layer (conv, fc, bn) carries activations
+        // and bias-gradient proxies worth calibrating; pool layers are
+        // pure routing
+        if l.weight_elems() == 0 {
             continue;
         }
         acts.push((l.name().to_string(), 0.0));
@@ -172,6 +175,26 @@ mod tests {
         for l in &r.layers {
             assert!(l.act.max_abs >= 0.0);
             assert!((2..=15).contains(&l.act.frac_rec));
+        }
+    }
+
+    #[test]
+    fn calibrate_covers_bn_layers() {
+        // the §IV-B pairing: the adaptive pass must see the bn layers'
+        // activation and gradient ranges too
+        let net = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1\nbn n1 relu\nconv c2 4 k3 \
+             s1 p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap();
+        let params = init_params(&net, 3);
+        let data = Synthetic::new(10, (3, 8, 8), 1, 0.3);
+        let r = calibrate(&net, &params, &data.batch(0, 4)).unwrap();
+        let names: Vec<&str> =
+            r.layers.iter().map(|l| l.layer.as_str()).collect();
+        assert_eq!(names, ["c1", "n1", "c2", "n2", "fc"]);
+        for l in &r.layers {
+            assert!((2..=15).contains(&l.act.frac_rec), "{}", l.layer);
         }
     }
 

@@ -103,6 +103,21 @@ mod tests {
     }
 
     #[test]
+    fn compiles_bn_configs() {
+        let c = RtlCompiler::default();
+        for s in [1, 2, 4] {
+            let acc = c
+                .compile(&Network::cifar_bn(s), &DesignVars::for_scale(s))
+                .unwrap();
+            assert!(acc.resources.fits, "{s}x bn design does not fit");
+            assert!(acc
+                .modules
+                .contains(&crate::compiler::Module::BatchNormUnit));
+            assert_eq!(acc.control.len(), acc.net.layers.len());
+        }
+    }
+
+    #[test]
     fn rejects_oversized_design() {
         let c = RtlCompiler::default();
         let mut dv = DesignVars::for_scale(4);

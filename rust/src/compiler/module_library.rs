@@ -4,7 +4,7 @@
 //! variables — "only the selected modules from the RTL library based on
 //! the training algorithm will be synthesized" (§III-A).
 
-use crate::config::{DesignVars, Layer, Loss, Network};
+use crate::config::{DesignVars, Loss, Network};
 
 /// Every module the library provides (mirrors Fig. 4's blocks).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -27,6 +27,10 @@ pub enum Module {
     LossUnitHinge,
     LossUnitEuclid,
     FcUnit,
+    /// Integer batch-normalization unit (§IV-B extension): per-channel
+    /// multiply + shift + add against precomputed scales, plus the
+    /// statistic accumulation datapath.
+    BatchNormUnit,
 }
 
 impl Module {
@@ -51,11 +55,15 @@ impl Module {
             Module::LossUnitHinge => "loss_unit_sqhinge",
             Module::LossUnitEuclid => "loss_unit_euclid",
             Module::FcUnit => "fc_unit",
+            Module::BatchNormUnit => "batchnorm_unit",
         }
     }
 }
 
-/// Select the set of library modules a network + design point requires.
+/// Select the set of library modules a network + design point requires:
+/// the base datapath every training accelerator instantiates, plus the
+/// union of what each layer's descriptor asks for (layer-ops registry),
+/// plus the configured loss unit.
 pub fn select_modules(net: &Network, dv: &DesignVars) -> Vec<Module> {
     let mut mods = vec![
         Module::GlobalControl,
@@ -71,27 +79,12 @@ pub fn select_modules(net: &Network, dv: &DesignVars) -> Vec<Module> {
     if dv.load_balance {
         mods.push(Module::MacLoadBalance);
     }
-    let mut has_pool = false;
-    let mut has_relu = false;
-    let mut has_fc = false;
     for l in &net.layers {
-        match l {
-            Layer::Pool { .. } => has_pool = true,
-            Layer::Conv { relu, .. } => has_relu |= relu,
-            Layer::Fc { .. } => has_fc = true,
+        for m in crate::ops::for_layer(l).modules(l) {
+            if !mods.contains(&m) {
+                mods.push(m);
+            }
         }
-    }
-    if has_pool {
-        mods.push(Module::MaxPoolUnit);
-        mods.push(Module::UpsampleUnit);
-    }
-    if has_relu {
-        mods.push(Module::ReluUnit);
-        mods.push(Module::ScalingUnit);
-    }
-    if has_fc {
-        mods.push(Module::FlattenUnit);
-        mods.push(Module::FcUnit);
     }
     mods.push(match net.loss {
         Loss::SquareHinge => Module::LossUnitHinge,
@@ -141,6 +134,21 @@ mod tests {
         let mods = select_modules(&net, &DesignVars::default());
         assert!(!mods.contains(&Module::MaxPoolUnit));
         assert!(!mods.contains(&Module::UpsampleUnit));
+    }
+
+    #[test]
+    fn bn_net_selects_batchnorm_unit() {
+        let mods = select_modules(&Network::cifar_bn(1),
+                                  &DesignVars::for_scale(1));
+        assert!(mods.contains(&Module::BatchNormUnit));
+        // the bn layers fuse the relus, so the relu/scaling units are
+        // still required
+        assert!(mods.contains(&Module::ReluUnit));
+        assert!(mods.contains(&Module::ScalingUnit));
+        // and a bn-free net must not synthesize the unit
+        let plain = select_modules(&Network::cifar(1),
+                                   &DesignVars::for_scale(1));
+        assert!(!plain.contains(&Module::BatchNormUnit));
     }
 
     #[test]

@@ -15,11 +15,19 @@
 //! Every step carries its phase, the key/affiliated classification
 //! (§III-B: key layers read fresh tiles from DRAM; affiliated layers
 //! consume key-layer outputs on chip), its DRAM traffic, its DMA tile
-//! count, and — when the op has numerics — the AOT artifact that executes
-//! it on the PJRT runtime.
+//! count, its output geometry, and — when the op has numerics — the AOT
+//! artifact that executes it on the PJRT runtime.
+//!
+//! Per-layer step emission lives in the layer-ops registry
+//! ([`crate::ops`]): this module only walks the network (forward, then
+//! the loss unit, then the reverse BP/WU walk) and asks each layer's
+//! descriptor for its steps, threading the geometry chain through a
+//! [`StepCtx`](crate::ops::StepCtx).  The per-batch steps (ring
+//! all-reduce + weight update) are network-global and stay here.
 
-use crate::config::{DesignVars, Layer, Loss, Network};
+use crate::config::{DesignVars, Loss, Network};
 use crate::hw::mac_array::Phase;
+use crate::ops::{for_layer, Geom, StepCtx, W16, W32};
 
 /// What a schedule step does (1:1 with the artifact kinds emitted by
 /// `python/compile/aot.py`).
@@ -34,6 +42,14 @@ pub enum OpKind {
     FcFp,
     FcBp,
     FcWu,
+    /// Integer batch-norm forward: normalize with the running
+    /// statistics and stream per-image channel sums to the DRAM
+    /// statistic accumulators (golden-backend-only; no artifact).
+    BnFp,
+    /// Integer batch-norm backward: scale the gradient by the constant
+    /// per-channel scale and fold dgamma/dbeta into their accumulators
+    /// in the same pass (golden-backend-only; no artifact).
+    BnBp,
     LossGrad,
     WeightUpdate,
     /// One ring step of the cluster gradient all-reduce (per batch,
@@ -58,6 +74,12 @@ pub struct Step {
     pub dram_write_bytes: u64,
     /// DMA descriptor count for the step's transfers.
     pub tiles: u64,
+    /// Shape of the tensor this step produces (activation/gradient
+    /// carrier for FP/BP ops, weight-gradient shape for WU ops).  The
+    /// per-op runtime walk reads this instead of re-deriving geometry
+    /// from the layer list (e.g. FcBp's re-entry into the feature-map
+    /// domain used to scan backwards for the last pool layer).
+    pub out_shape: Vec<usize>,
 }
 
 /// Complete schedule for one network + design point.
@@ -69,74 +91,34 @@ pub struct Schedule {
     pub per_batch: Vec<Step>,
 }
 
-const W16: u64 = 2; // bytes per 16-bit word
-const W32: u64 = 4; // bytes per 32-bit gradient accumulator word
-
-fn ceil_div(a: usize, b: usize) -> usize {
-    a.div_ceil(b)
-}
-
-/// DMA tile count for a (C, H, W) tensor moved `tile_rows` rows at a time,
-/// `pof` maps per burst.
-fn act_tiles(dv: &DesignVars, c: usize, h: usize) -> u64 {
-    (ceil_div(c, dv.pof) * ceil_div(h, dv.tile_rows)) as u64
+/// Input geometry of every layer (the geometry chain the registry
+/// descriptors consume).
+fn in_geoms(net: &Network) -> Vec<Geom> {
+    let mut geoms = Vec::with_capacity(net.layers.len());
+    let (c, h, w) = net.input;
+    let mut geom = Geom { c, h, w };
+    for l in &net.layers {
+        geoms.push(geom);
+        geom = for_layer(l).out_geom(l);
+    }
+    geoms
 }
 
 /// Build the full schedule.
 pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
     let tag = net.scale_tag();
+    let geoms = in_geoms(net);
     let mut per_image = Vec::new();
 
     // ---------------- FP phase ----------------
-    for l in &net.layers {
-        match l {
-            Layer::Conv { name, cin, cout, h, w, k, .. } => {
-                let in_b = (cin * h * w) as u64 * W16;
-                let w_b = ((cout * cin * k * k) + cout) as u64 * W16;
-                let out_b = (cout * h * w) as u64 * W16;
-                per_image.push(Step {
-                    phase: Phase::Fp,
-                    layer: name.clone(),
-                    op: OpKind::ConvFp,
-                    key: true,
-                    artifact: Some(format!("conv_fp_{name}_{tag}")),
-                    dram_read_bytes: in_b + w_b,
-                    dram_write_bytes: out_b,
-                    tiles: act_tiles(dv, *cin, *h)
-                        + act_tiles(dv, *cout, *h)
-                        + ceil_div(*cout, dv.pof) as u64,
-                });
-                // ReLU is affiliated (fused in the artifact); masks stay on
-                // chip, so no separate step/traffic.
-            }
-            Layer::Pool { name, c, h, w, k } => {
-                let in_b = (c * h * w) as u64 * W16;
-                let out_b = (c * (h / k) * (w / k)) as u64 * W16;
-                per_image.push(Step {
-                    phase: Phase::Fp,
-                    layer: name.clone(),
-                    op: OpKind::Pool,
-                    key: true,
-                    artifact: Some(format!("pool_{name}_{tag}")),
-                    dram_read_bytes: in_b,
-                    dram_write_bytes: out_b,
-                    tiles: act_tiles(dv, *c, *h),
-                });
-            }
-            Layer::Fc { name, cin, cout } => {
-                let w_b = ((cin * cout) + cout) as u64 * W16;
-                per_image.push(Step {
-                    phase: Phase::Fp,
-                    layer: name.clone(),
-                    op: OpKind::FcFp,
-                    key: true,
-                    artifact: Some(format!("fc_fp_{tag}")),
-                    dram_read_bytes: (*cin as u64) * W16 + w_b,
-                    dram_write_bytes: (*cout as u64) * W16,
-                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 + 1,
-                });
-            }
-        }
+    for (i, l) in net.layers.iter().enumerate() {
+        let ctx = StepCtx {
+            tag,
+            in_geom: geoms[i],
+            is_first: i == 0,
+            below: i.checked_sub(1).map(|j| &net.layers[j]),
+        };
+        per_image.extend(for_layer(l).fp_steps(l, dv, &ctx));
     }
 
     // loss unit (affiliated: logits are already on chip)
@@ -153,114 +135,18 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
         dram_read_bytes: (net.nclass as u64) * W16,
         dram_write_bytes: (net.nclass as u64) * W16,
         tiles: 1,
+        out_shape: vec![net.nclass],
     });
 
     // ---------------- BP + WU phases (reverse walk) ----------------
-    let rev: Vec<&Layer> = net.layers.iter().rev().collect();
-    for (i, l) in rev.iter().enumerate() {
-        match l {
-            Layer::Fc { name, cin, cout } => {
-                // WU: outer product; gradients accumulate in DRAM (i32)
-                let dw_elems = (cin * cout) as u64;
-                per_image.push(Step {
-                    phase: Phase::Wu,
-                    layer: name.clone(),
-                    op: OpKind::FcWu,
-                    key: true,
-                    artifact: Some(format!("fc_wu_{tag}")),
-                    dram_read_bytes: (*cin as u64) * W16 + dw_elems * W32,
-                    dram_write_bytes: dw_elems * W32
-                        + (*cout as u64) * W32,
-                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 * 2,
-                });
-                // BP: transposed weights
-                per_image.push(Step {
-                    phase: Phase::Bp,
-                    layer: name.clone(),
-                    op: OpKind::FcBp,
-                    key: true,
-                    artifact: Some(format!("fc_bp_{tag}")),
-                    dram_read_bytes: ((cin * cout) as u64
-                        + *cout as u64)
-                        * W16,
-                    dram_write_bytes: (*cin as u64) * W16,
-                    tiles: ceil_div(*cin, dv.pof * dv.tile_rows) as u64 + 1,
-                });
-            }
-            Layer::Pool { name, c, h, w, k } => {
-                // upsample + scale: reads pooled gradient, writes expanded;
-                // indices and masks live on chip (affiliated scaling)
-                let in_b = (c * (h / k) * (w / k)) as u64 * W16;
-                let out_b = (c * h * w) as u64 * W16;
-                per_image.push(Step {
-                    phase: Phase::Bp,
-                    layer: name.clone(),
-                    op: OpKind::Upsample,
-                    key: true,
-                    artifact: Some(format!("ups_{name}_{tag}")),
-                    dram_read_bytes: in_b,
-                    dram_write_bytes: out_b,
-                    tiles: act_tiles(dv, *c, *h),
-                });
-            }
-            Layer::Conv { name, cin, cout, h, w, k, .. } => {
-                let is_first_conv = i == rev.len() - 1;
-                // WU: read input acts + local grads + old accumulated
-                // grads; write new accumulated grads (i32 in DRAM)
-                let dw_elems = (cout * cin * k * k) as u64;
-                per_image.push(Step {
-                    phase: Phase::Wu,
-                    layer: name.clone(),
-                    op: OpKind::ConvWu,
-                    key: true,
-                    artifact: Some(format!("conv_wu_{name}_{tag}")),
-                    dram_read_bytes: ((cin * h * w) + (cout * h * w))
-                        as u64
-                        * W16
-                        + dw_elems * W32,
-                    dram_write_bytes: dw_elems * W32
-                        + (*cout as u64) * W32,
-                    tiles: act_tiles(dv, *cin, *h)
-                        + act_tiles(dv, *cout, *h)
-                        + 2 * ceil_div(*cout, dv.pof) as u64,
-                });
-                if !is_first_conv {
-                    // BP conv through transposable weights
-                    per_image.push(Step {
-                        phase: Phase::Bp,
-                        layer: name.clone(),
-                        op: OpKind::ConvBp,
-                        key: true,
-                        artifact: Some(format!("conv_bp_{name}_{tag}")),
-                        dram_read_bytes: ((cout * h * w)
-                            + (cout * cin * k * k))
-                            as u64
-                            * W16,
-                        dram_write_bytes: (cin * h * w) as u64 * W16,
-                        tiles: act_tiles(dv, *cout, *h)
-                            + act_tiles(dv, *cin, *h)
-                            + ceil_div(*cout, dv.pof) as u64,
-                    });
-                    // scaling unit when the layer below is a conv(+relu)
-                    if let Some(Layer::Conv { name: below, .. }) =
-                        rev.get(i + 1)
-                    {
-                        per_image.push(Step {
-                            phase: Phase::Bp,
-                            layer: name.clone(),
-                            op: OpKind::ScaleMask,
-                            key: false,
-                            artifact: Some(format!(
-                                "smask_{below}_{tag}"
-                            )),
-                            dram_read_bytes: 0,
-                            dram_write_bytes: 0,
-                            tiles: 0,
-                        });
-                    }
-                }
-            }
-        }
+    for (i, l) in net.layers.iter().enumerate().rev() {
+        let ctx = StepCtx {
+            tag,
+            in_geom: geoms[i],
+            is_first: i == 0,
+            below: i.checked_sub(1).map(|j| &net.layers[j]),
+        };
+        per_image.extend(for_layer(l).bp_wu_steps(l, dv, &ctx));
     }
 
     // ---------------- per-batch cluster all-reduce ----------------
@@ -271,12 +157,14 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
     // DRAM and writes the received chunk back.
     let mut per_batch = Vec::new();
     if dv.cluster > 1 {
-        let grad_words = net.param_count() as u64;
+        // every accumulator the cluster engine reduces: gradient words
+        // plus BN statistic words (Network::ring_words)
+        let grad_words = net.ring_words() as u64;
         let chunk_words = grad_words.div_ceil(dv.cluster as u64);
         let chunk_bytes = chunk_words * W32;
         let half = dv.cluster - 1;
-        let tiles = (2 * ceil_div(chunk_words as usize,
-                                  dv.pof * dv.tile_rows * 64)
+        let tiles = (2 * (chunk_words as usize)
+            .div_ceil(dv.pof * dv.tile_rows * 64)
             .max(1)) as u64;
         for s in 0..2 * half {
             let layer = if s < half {
@@ -293,6 +181,7 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
                 dram_read_bytes: chunk_bytes,
                 dram_write_bytes: chunk_bytes,
                 tiles,
+                out_shape: vec![chunk_words as usize],
             });
         }
     }
@@ -314,9 +203,12 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
             artifact: None, // runs on the rust weight-update unit
             dram_read_bytes: we * W16 + (we + be) * W32 * 2,
             dram_write_bytes: we * W16 + (we + be) * W32,
-            tiles: 4 * ceil_div(we as usize,
-                                dv.pof * dv.tile_rows * 64)
+            tiles: 4 * (we as usize)
+                .div_ceil(dv.pof * dv.tile_rows * 64)
                 .max(1) as u64,
+            out_shape: for_layer(l)
+                .weight_shape(l)
+                .unwrap_or_default(),
         });
     }
 
@@ -490,6 +382,92 @@ mod tests {
         assert!(last_ring < first_wu);
         // weight updates themselves are unchanged
         assert_eq!(s.per_batch.len(), 6 + 7);
+    }
+
+    #[test]
+    fn steps_carry_their_geometry() {
+        // the per-op runtime reads step.out_shape instead of re-deriving
+        // geometry from the layer list; pin the load-bearing cases
+        let s = sched1x();
+        let fcbp = s
+            .per_image
+            .iter()
+            .find(|st| st.op == OpKind::FcBp)
+            .unwrap();
+        // fc consumes p3's output: the gradient re-enters (64, 4, 4)
+        assert_eq!(fcbp.out_shape, vec![64, 4, 4]);
+        let c1fp = s
+            .per_image
+            .iter()
+            .find(|st| st.layer == "c1" && st.op == OpKind::ConvFp)
+            .unwrap();
+        assert_eq!(c1fp.out_shape, vec![16, 32, 32]);
+        let p2bp = s
+            .per_image
+            .iter()
+            .find(|st| st.layer == "p2" && st.op == OpKind::Upsample)
+            .unwrap();
+        assert_eq!(p2bp.out_shape, vec![32, 16, 16]);
+    }
+
+    #[test]
+    fn bn_network_schedules_bnfp_and_bnbp() {
+        let net = Network::cifar_bn(1);
+        let s = build(&net, &DesignVars::for_scale(1));
+        let fp: Vec<(&str, OpKind)> = s
+            .per_image
+            .iter()
+            .filter(|st| st.phase == Phase::Fp)
+            .map(|st| (st.layer.as_str(), st.op))
+            .collect();
+        // bn follows its conv in FP order
+        assert_eq!(fp[0], ("c1", OpKind::ConvFp));
+        assert_eq!(fp[1], ("n1", OpKind::BnFp));
+        let bnfp =
+            s.per_image.iter().filter(|st| st.op == OpKind::BnFp).count();
+        let bnbp =
+            s.per_image.iter().filter(|st| st.op == OpKind::BnBp).count();
+        assert_eq!(bnfp, 6);
+        assert_eq!(bnbp, 6);
+        // BN is golden-backend-only: its steps carry no AOT artifact
+        for st in s
+            .per_image
+            .iter()
+            .filter(|st| matches!(st.op, OpKind::BnFp | OpKind::BnBp))
+        {
+            assert!(st.artifact.is_none(), "{}", st.layer);
+            assert!(st.dram_read_bytes > 0);
+            assert!(st.tiles > 0);
+        }
+        // every bn layer also gets a per-batch gamma/beta weight update
+        let wu_layers: Vec<&str> = s
+            .per_batch
+            .iter()
+            .map(|st| st.layer.as_str())
+            .collect();
+        for n in ["n1", "n2", "n3", "n4", "n5", "n6"] {
+            assert!(wu_layers.contains(&n), "{n} missing batch update");
+        }
+        // 6 conv + 6 bn + 1 fc updates
+        assert_eq!(s.per_batch.len(), 13);
+    }
+
+    #[test]
+    fn bn_scale_mask_rides_the_conv_above() {
+        // c2 propagates into n1's (relu-fused) output: the walk emits a
+        // ScaleMask step for it, artifact-less (golden-only mask)
+        let net = Network::cifar_bn(1);
+        let s = build(&net, &DesignVars::for_scale(1));
+        let sm: Vec<&Step> = s
+            .per_image
+            .iter()
+            .filter(|st| st.op == OpKind::ScaleMask)
+            .collect();
+        assert!(!sm.is_empty());
+        assert!(sm.iter().all(|st| st.artifact.is_none()));
+        assert!(sm.iter().any(|st| st.layer == "c2"));
+        // c1 emits no BP (first layer), hence no mask step either
+        assert!(!sm.iter().any(|st| st.layer == "c1"));
     }
 
     #[test]

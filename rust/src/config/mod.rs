@@ -42,6 +42,10 @@ pub enum Layer {
     Pool { name: String, c: usize, h: usize, w: usize, k: usize },
     /// Fully-connected classifier (flatten is an affiliated layer).
     Fc { name: String, cin: usize, cout: usize },
+    /// Integer batch normalization (§IV-B extension, after FxpNet):
+    /// per-channel scale/shift against running statistics, with an
+    /// optionally fused ReLU (an affiliated layer, like conv's).
+    Bn { name: String, c: usize, h: usize, w: usize, relu: bool },
 }
 
 impl Layer {
@@ -49,65 +53,51 @@ impl Layer {
         match self {
             Layer::Conv { name, .. }
             | Layer::Pool { name, .. }
-            | Layer::Fc { name, .. } => name,
+            | Layer::Fc { name, .. }
+            | Layer::Bn { name, .. } => name,
         }
     }
+
+    // The per-kind semantics below live in the layer-ops registry
+    // (`crate::ops`) — these delegates keep the call sites ergonomic
+    // while the registry stays the single source of truth.
 
     /// Output activation element count (what FP writes to DRAM).
     pub fn out_elems(&self) -> usize {
-        match *self {
-            Layer::Conv { cout, h, w, .. } => cout * h * w,
-            Layer::Pool { c, h, w, k, .. } => c * (h / k) * (w / k),
-            Layer::Fc { cout, .. } => cout,
-        }
+        crate::ops::for_layer(self).out_geom(self).elems()
     }
 
-    /// Weight parameter count (0 for pool).
+    /// Weight parameter count (0 for pool; gamma for bn).
     pub fn weight_elems(&self) -> usize {
-        match *self {
-            Layer::Conv { cin, cout, k, .. } => cout * cin * k * k,
-            Layer::Fc { cin, cout, .. } => cout * cin,
-            Layer::Pool { .. } => 0,
-        }
+        crate::ops::for_layer(self).weight_elems(self)
     }
 
-    /// Bias parameter count.
+    /// Bias parameter count (beta for bn).
     pub fn bias_elems(&self) -> usize {
-        match *self {
-            Layer::Conv { cout, .. } | Layer::Fc { cout, .. } => cout,
-            Layer::Pool { .. } => 0,
-        }
+        crate::ops::for_layer(self).bias_elems(self)
     }
 
     /// MAC count of the FP pass through this layer.
     pub fn macs_fp(&self) -> u64 {
-        match *self {
-            Layer::Conv { cin, cout, h, w, k, .. } => {
-                (cout * h * w * cin * k * k) as u64
-            }
-            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
-            Layer::Pool { .. } => 0,
-        }
+        crate::ops::for_layer(self).macs_fp(self)
     }
 
-    /// MAC count of the BP convolution (zero for the first conv layer is
+    /// MAC count of the BP pass (zero for the first conv layer is
     /// handled by the caller; structurally it equals the FP count with
     /// if/of interchanged, i.e. the same product).
     pub fn macs_bp(&self) -> u64 {
-        self.macs_fp()
+        crate::ops::for_layer(self).macs_bp(self)
     }
 
-    /// MAC count of the weight-gradient (WU) convolution.
+    /// MAC count of the weight-gradient (WU) pass.
     pub fn macs_wu(&self) -> u64 {
-        match *self {
-            // every (of, if) kernel-gradient plane convolves a full
-            // gradient map: Nof*Nif*Nk*Nk output taps x Noy*Nox each
-            Layer::Conv { cin, cout, h, w, k, .. } => {
-                (cout * cin * k * k * h * w) as u64
-            }
-            Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
-            Layer::Pool { .. } => 0,
-        }
+        crate::ops::for_layer(self).macs_wu(self)
+    }
+
+    /// Whether the layer fuses a ReLU on its output (conv's `relu`
+    /// flag, bn's `relu` flag) — drives the activation-gradient mask.
+    pub fn fused_relu(&self) -> bool {
+        crate::ops::for_layer(self).fused_relu(self)
     }
 }
 
@@ -177,6 +167,62 @@ impl Network {
         }
     }
 
+    /// The CIFAR-10 family with integer batch normalization: every conv
+    /// drops its fused ReLU and is followed by a BN layer that fuses it
+    /// instead (`conv -> bn+relu -> [pool] -> ... -> fc`).  This is the
+    /// §IV-B extension topology; it trains on the golden backend only
+    /// until Pallas BN kernels land in `python/compile/`.
+    pub fn cifar_bn(scale: usize) -> Network {
+        assert!(matches!(scale, 1 | 2 | 4), "scale must be 1, 2 or 4");
+        let widths: Vec<usize> =
+            [16, 16, 32, 32, 64, 64].iter().map(|w| w * scale).collect();
+        let mut layers = Vec::new();
+        let (mut cin, mut h) = (3usize, 32usize);
+        for (i, &cout) in widths.iter().enumerate() {
+            layers.push(Layer::Conv {
+                name: format!("c{}", i + 1),
+                cin,
+                cout,
+                h,
+                w: h,
+                k: 3,
+                pad: 1,
+                stride: 1,
+                relu: false, // the bn layer fuses the relu instead
+            });
+            layers.push(Layer::Bn {
+                name: format!("n{}", i + 1),
+                c: cout,
+                h,
+                w: h,
+                relu: true,
+            });
+            cin = cout;
+            if i % 2 == 1 {
+                layers.push(Layer::Pool {
+                    name: format!("p{}", i / 2 + 1),
+                    c: cout,
+                    h,
+                    w: h,
+                    k: 2,
+                });
+                h /= 2;
+            }
+        }
+        layers.push(Layer::Fc {
+            name: "fc".into(),
+            cin: cin * h * h,
+            cout: 10,
+        });
+        Network {
+            name: format!("cifar10-bn-{scale}x"),
+            input: (3, 32, 32),
+            layers,
+            nclass: 10,
+            loss: Loss::SquareHinge,
+        }
+    }
+
     /// Scale name used in artifact files ("1x", "2x", "4x").
     pub fn scale_tag(&self) -> &str {
         if self.name.ends_with("4x") {
@@ -206,6 +252,68 @@ impl Network {
             }
         }
         names
+    }
+
+    /// Per-batch statistic accumulator names (BN shard sums), in layer
+    /// order — these merge across workers/accelerators exactly like
+    /// gradient accumulators (fixed-order wrapping-i32 merge) and fold
+    /// into the running statistics at batch end.
+    pub fn stat_order(&self) -> Vec<String> {
+        self.layers
+            .iter()
+            .flat_map(|l| {
+                crate::ops::for_layer(l)
+                    .stat_tensors(l)
+                    .into_iter()
+                    .map(|(n, _)| n)
+            })
+            .collect()
+    }
+
+    /// Persistent non-SGD state tensor names (BN running mean/var), in
+    /// layer order; they live in the parameter set and ride in
+    /// checkpoints alongside the trainable parameters.
+    pub fn state_order(&self) -> Vec<String> {
+        self.layers
+            .iter()
+            .flat_map(|l| {
+                crate::ops::for_layer(l)
+                    .state_tensors(l)
+                    .into_iter()
+                    .map(|(n, _)| n)
+            })
+            .collect()
+    }
+
+    /// Canonical accumulator order for the batch engine: trainable
+    /// parameters first, then the per-batch statistic accumulators.
+    /// This is the order the per-image step emits gradients in and the
+    /// order the trainer's optimizer/stat states are kept in.
+    pub fn accum_order(&self) -> Vec<String> {
+        let mut order = self.param_order();
+        order.extend(self.stat_order());
+        order
+    }
+
+    /// Whether any layer maintains batch statistics (BN present).
+    pub fn has_stats(&self) -> bool {
+        self.layers.iter().any(|l| {
+            !crate::ops::for_layer(l).stat_tensors(l).is_empty()
+        })
+    }
+
+    /// Total i32 words the cluster ring all-reduces per batch: one
+    /// gradient-accumulator word per trainable parameter plus every
+    /// BN statistic-accumulator word (the cluster engine flattens and
+    /// reduces both — the modeled ring must match).
+    pub fn ring_words(&self) -> usize {
+        let stats: usize = self
+            .layers
+            .iter()
+            .flat_map(|l| crate::ops::for_layer(l).stat_tensors(l))
+            .map(|(_, shape)| shape.iter().product::<usize>())
+            .sum();
+        self.param_count() + stats
     }
 
     /// Total training operations per image, counted as the paper counts
@@ -309,6 +417,36 @@ impl Network {
                         relu,
                     });
                     cur_c = cout;
+                }
+                "bn" => {
+                    if input.is_none() {
+                        bail!("{}: `input` must precede layers", ctx());
+                    }
+                    if matches!(layers.last(), Some(Layer::Fc { .. })) {
+                        bail!("{}: bn must precede the fc classifier \
+                               (it normalizes feature maps)",
+                              ctx());
+                    }
+                    let lname = toks
+                        .get(1)
+                        .ok_or_else(|| anyhow!("{}: missing layer name", ctx()))?
+                        .to_string();
+                    let mut relu = false;
+                    for t in &toks[2..] {
+                        if *t == "relu" {
+                            relu = true;
+                        } else {
+                            bail!("{}: unknown bn attribute `{t}`", ctx());
+                        }
+                    }
+                    layers.push(Layer::Bn {
+                        name: lname,
+                        c: cur_c,
+                        h: cur_h,
+                        w: cur_h,
+                        relu,
+                    });
+                    // elementwise: geometry unchanged
                 }
                 "pool" => {
                     let lname = toks
@@ -530,6 +668,128 @@ loss hinge
             .is_err());
         assert!(Network::parse("input 3 32 32\nbogus x").is_err());
         assert!(Network::parse("input 3 32 32\nconv c1 16").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_nonunit_stride() {
+        // the grammar accepts a stride token but the RTL library (and
+        // nn/conv) only implement stride-1 same convs: s2 must be a
+        // clear error, not silently trained as stride 1
+        let err = Network::parse(
+            "input 3 32 32\nconv c1 16 k3 s2 p1 relu\nfc f 10",
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stride-1"), "{msg}");
+        // stride 1 spelled explicitly stays fine
+        assert!(Network::parse(
+            "input 3 32 32\nconv c1 16 k3 s1 p1 relu\n\
+             conv c2 16 k3 s1 p1 relu\npool p 2\nfc f 10"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_indivisible_pool() {
+        // 9 % 2 != 0: the h/k geometry math would silently truncate a
+        // row; the parser must reject it instead
+        let err = Network::parse("input 3 9 9\npool p 2\nfc f 10")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("divisible"), "{msg}");
+        assert!(msg.contains("line 2"), "{msg}");
+        // divisible windows parse
+        assert!(Network::parse("input 3 9 9\npool p 3\nfc f 10").is_ok());
+    }
+
+    #[test]
+    fn parse_roundtrip_cifar_bn_1x() {
+        let cfg = "\
+name cifar10-bn-1x
+input 3 32 32
+conv c1 16 k3 s1 p1
+bn n1 relu
+conv c2 16 k3 s1 p1
+bn n2 relu
+pool p1 2
+conv c3 32 k3 s1 p1
+bn n3 relu
+conv c4 32 k3 s1 p1
+bn n4 relu
+pool p2 2
+conv c5 64 k3 s1 p1
+bn n5 relu
+conv c6 64 k3 s1 p1
+bn n6 relu
+pool p3 2
+fc fc 10
+loss hinge
+";
+        let parsed = Network::parse(cfg).unwrap();
+        let built = Network::cifar_bn(1);
+        assert_eq!(parsed.layers, built.layers);
+        assert_eq!(parsed.name, built.name);
+    }
+
+    #[test]
+    fn parse_rejects_bad_bn() {
+        // bn before input
+        assert!(Network::parse("bn n1 relu").is_err());
+        // unknown attribute
+        assert!(Network::parse("input 3 8 8\nbn n1 glu\nfc f 10")
+            .is_err());
+        // bn after the classifier
+        let err = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1\nfc f 10\nbn n1 relu",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("classifier"));
+    }
+
+    #[test]
+    fn cifar_bn_structure() {
+        let n = Network::cifar_bn(1);
+        // 6 conv + 6 bn + 3 pool + 1 fc
+        assert_eq!(n.layers.len(), 16);
+        assert_eq!(n.scale_tag(), "1x");
+        // every conv's relu moved into the bn that follows it
+        for l in &n.layers {
+            match l {
+                Layer::Conv { relu, .. } => assert!(!relu),
+                Layer::Bn { relu, c, h, .. } => {
+                    assert!(*relu);
+                    assert!(*c > 0 && *h > 0);
+                }
+                _ => {}
+            }
+        }
+        // (6 conv + 6 bn + 1 fc) * (w + b)
+        assert_eq!(n.param_order().len(), 26);
+        // 2 stat accumulators and 2 running-state tensors per bn layer
+        assert_eq!(n.stat_order().len(), 12);
+        assert_eq!(n.state_order().len(), 12);
+        assert!(n.has_stats());
+        assert_eq!(n.accum_order().len(), 26 + 12);
+        assert!(n.stat_order()[0].starts_with("sm_"));
+        assert!(n.state_order()[1].starts_with("rv_"));
+    }
+
+    #[test]
+    fn plain_nets_have_no_stats() {
+        let n = Network::cifar(1);
+        assert!(!n.has_stats());
+        assert!(n.stat_order().is_empty());
+        assert!(n.state_order().is_empty());
+        assert_eq!(n.accum_order(), n.param_order());
+        // without statistics the ring reduces exactly the gradients
+        assert_eq!(n.ring_words(), n.param_count());
+    }
+
+    #[test]
+    fn bn_ring_words_cover_statistics() {
+        let n = Network::cifar_bn(1);
+        // 2 stat words per bn channel: (16+16+32+32+64+64) * 2
+        assert_eq!(n.ring_words(), n.param_count() + 448);
     }
 
     #[test]

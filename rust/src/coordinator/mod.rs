@@ -38,10 +38,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ckpt::{Checkpoint, Cursor};
 use crate::compiler::{Accelerator, OpKind, RtlCompiler};
-use crate::config::{DesignVars, Layer, Network};
+use crate::config::{DesignVars, Network};
 use crate::data::{Sample, Synthetic};
 use crate::engine::cluster::{run_batch_cluster, ClusterReport};
 use crate::engine::{self, EngineReport, StepOut};
+use crate::nn::bn;
 use crate::nn::golden;
 use crate::nn::loss::encode_label;
 use crate::nn::pool::relu_mask;
@@ -141,6 +142,18 @@ pub struct EpochStats {
     pub batches: u64,
 }
 
+/// Per-BN-layer bookkeeping for the batch-end statistic refresh: the
+/// names of the layer's shard-sum accumulators (`sm_*`/`sq_*`, kept in
+/// the trainer's states) and of its running statistics (`rm_*`/`rv_*`,
+/// kept in the parameter set).
+#[derive(Debug, Clone)]
+struct BnMeta {
+    sm: String,
+    sq: String,
+    rm: String,
+    rv: String,
+}
+
 /// The trainer: compiled accelerator + parameters + optimizer state +
 /// (optionally) the PJRT runtime.
 pub struct Trainer {
@@ -175,10 +188,14 @@ pub struct Trainer {
     /// parameters only change at end_batch, so their host->literal
     /// conversion is hoisted out of the per-image loop)
     param_lits: HashMap<String, Prepared>,
-    /// pool layer -> conv layer feeding it (for mask lookup)
-    pool_prev: HashMap<String, String>,
-    /// conv layer -> layer below it in FP order (None for the first)
+    /// pool layer -> (acts-producing layer feeding it, fused-relu?)
+    /// for the per-op upsample mask lookup
+    pool_prev: HashMap<String, (String, bool)>,
+    /// conv/fc layer -> layer below it in FP order (None for the
+    /// first); the bool records whether the below layer fuses a ReLU
     conv_below: HashMap<String, Option<(String, bool)>>,
+    /// per-BN-layer statistic bookkeeping (empty for BN-free nets)
+    bn_meta: Vec<BnMeta>,
 }
 
 impl Trainer {
@@ -188,6 +205,14 @@ impl Trainer {
     pub fn new(net: &Network, dv: &DesignVars, batch: usize, lr: f64,
                momentum: f64, backend: Backend,
                artifacts: Option<&Path>) -> Result<Trainer> {
+        if backend != Backend::Golden && net.has_stats() {
+            bail!(
+                "network `{}` contains batch-norm layers, which are \
+                 golden-backend-only until Pallas BN kernels land in \
+                 python/compile/ — train with the golden backend",
+                net.name
+            );
+        }
         let acc = RtlCompiler::default().compile(net, dv)?;
         let runtime = match backend {
             Backend::Golden => None,
@@ -217,6 +242,9 @@ impl Trainer {
             crate::nn::init::init_params(net, 1234)
         };
 
+        // optimizer states for the trainable params, then statistic
+        // accumulators for the BN layers — exactly the accum_order the
+        // per-image step emits its tensors in
         let mut states = Vec::new();
         for name in net.param_order() {
             let kind = if name.starts_with("w_") {
@@ -226,6 +254,37 @@ impl Trainer {
             };
             let shape = params.get(&name)?.shape().to_vec();
             states.push((name, ParamState::new(kind, &shape)));
+        }
+        let mut bn_meta = Vec::new();
+        for l in &net.layers {
+            let ops = crate::ops::for_layer(l);
+            let stats = ops.stat_tensors(l);
+            if stats.is_empty() {
+                continue;
+            }
+            let running = ops.state_tensors(l);
+            // the registry's order contract: [moment-sum, square-sum]
+            // paired with [running-mean, running-variance]
+            if stats.len() != 2 || running.len() != 2 {
+                bail!(
+                    "layer `{}`: statistic descriptor must provide \
+                     exactly 2 accumulators and 2 running states \
+                     (got {} / {})",
+                    l.name(),
+                    stats.len(),
+                    running.len()
+                );
+            }
+            bn_meta.push(BnMeta {
+                sm: stats[0].0.clone(),
+                sq: stats[1].0.clone(),
+                rm: running[0].0.clone(),
+                rv: running[1].0.clone(),
+            });
+            for (name, shape) in stats {
+                states.push((name,
+                             ParamState::new(ParamKind::Stat, &shape)));
+            }
         }
 
         let report: SimReport = simulate(&acc, batch);
@@ -237,23 +296,34 @@ impl Trainer {
                                     report.allreduce.latency_cycles
                                         as f64));
 
+        // below-layer maps for the per-op runtime walk: which layer's
+        // cached activations feed each conv/fc/pool, and whether that
+        // producer fuses a ReLU (drives mask vs all-ones semantics,
+        // matching golden::backward's fused_mask rule)
         let mut pool_prev = HashMap::new();
         let mut conv_below = HashMap::new();
-        let mut prev: Option<(String, bool)> = None; // (name, is_conv)
+        // (name, produces cached acts?, fused relu?)
+        let mut prev: Option<(String, bool, bool)> = None;
         for l in &net.layers {
-            match l {
-                Layer::Conv { name, .. } => {
-                    conv_below.insert(name.clone(), prev.clone());
-                    prev = Some((name.clone(), true));
+            let ops = crate::ops::for_layer(l);
+            let entry = || {
+                prev.as_ref().map(|(n, _, r)| (n.clone(), *r))
+            };
+            match ops.kind() {
+                "conv" | "fc" => {
+                    conv_below.insert(l.name().to_string(), entry());
                 }
-                Layer::Pool { name, .. } => {
-                    if let Some((p, true)) = &prev {
-                        pool_prev.insert(name.clone(), p.clone());
+                "pool" => {
+                    if let Some((p, true, r)) = &prev {
+                        pool_prev.insert(l.name().to_string(),
+                                         (p.clone(), *r));
                     }
-                    prev = Some((name.clone(), false));
                 }
-                Layer::Fc { .. } => {}
+                _ => {}
             }
+            let produces_acts = ops.kind() != "fc";
+            prev = Some((l.name().to_string(), produces_acts,
+                         ops.fused_relu(l)));
         }
 
         Ok(Trainer {
@@ -274,6 +344,7 @@ impl Trainer {
             param_lits: HashMap::new(),
             pool_prev,
             conv_below,
+            bn_meta,
         })
     }
 
@@ -399,7 +470,10 @@ impl Trainer {
     /// into the serialized payload ([`Checkpoint::into_bytes`]).
     pub fn save_checkpoint(&self, path: &Path, cursor: Cursor)
                            -> Result<()> {
-        let order = self.acc.net.param_order();
+        // trainable params, then the BN running statistics — both must
+        // restore for a bit-identical resume
+        let mut order = self.acc.net.param_order();
+        order.extend(self.acc.net.state_order());
         let mut params = Vec::with_capacity(order.len());
         for name in &order {
             params.push((name.clone(), self.params.get(name)?.clone()));
@@ -435,7 +509,8 @@ impl Trainer {
         }
         // validate everything before mutating anything, so a bad file
         // can never leave the trainer half-restored
-        let order = self.acc.net.param_order();
+        let mut order = self.acc.net.param_order();
+        order.extend(self.acc.net.state_order());
         if ck.params.len() != order.len()
             || ck.states.len() != self.states.len()
         {
@@ -638,15 +713,59 @@ impl Trainer {
         Ok(loss)
     }
 
-    /// End-of-batch weight update (the weight update unit, §III-E).
+    /// End-of-batch weight update (the weight update unit, §III-E) plus
+    /// the BN statistic refresh: SGD steps every trainable parameter
+    /// from its merged gradient accumulator, then the merged BN shard
+    /// sums fold into the running statistics (`nn::bn::ema_update`).
+    /// Both run on accumulators merged in fixed order, so the result is
+    /// bit-identical at any worker/accelerator grouping.
     pub fn end_batch(&mut self) -> Result<()> {
         for (name, st) in &mut self.states {
+            if st.kind == ParamKind::Stat {
+                continue; // consumed by the statistic refresh below
+            }
             let p = self.params.get_mut(name)?;
             st.apply(p, &self.hyper);
         }
+        self.refresh_bn_stats()?;
         self.param_lits.clear(); // parameters changed (§Perf cache)
         self.metrics.batches += 1;
         self.metrics.sim_cycles += self.batch_cycles;
+        Ok(())
+    }
+
+    /// Fold each BN layer's merged per-batch statistic accumulators
+    /// into its running mean/variance and clear the accumulators.  The
+    /// accumulators hold wrapping sums of per-image channel moments,
+    /// merged across shards in fixed index order before this runs —
+    /// the deterministic BN statistics merge rule (see DESIGN.md).
+    fn refresh_bn_stats(&mut self) -> Result<()> {
+        for meta in &self.bn_meta {
+            let take = |states: &mut Vec<(String, ParamState)>,
+                        name: &str|
+             -> Result<(Vec<i32>, usize)> {
+                let (_, st) = states
+                    .iter_mut()
+                    .find(|(n, _)| n == name)
+                    .ok_or_else(|| {
+                        anyhow!("no statistic state `{name}`")
+                    })?;
+                let acc = st.grad_acc.data().to_vec();
+                let count = st.count;
+                st.reset();
+                Ok((acc, count))
+            };
+            let (sm_acc, count) = take(&mut self.states, &meta.sm)?;
+            let (sq_acc, _) = take(&mut self.states, &meta.sq)?;
+            if count == 0 {
+                continue;
+            }
+            let mut rm = self.params.get(&meta.rm)?.clone();
+            let mut rv = self.params.get(&meta.rv)?.clone();
+            bn::ema_update(&mut rm, &mut rv, &sm_acc, &sq_acc, count);
+            *self.params.get_mut(&meta.rm)? = rm;
+            *self.params.get_mut(&meta.rv)? = rv;
+        }
         Ok(())
     }
 
@@ -704,7 +823,7 @@ impl Trainer {
     fn train_batch_engine(&mut self, samples: &[Sample]) -> Result<f64> {
         let net = &self.acc.net;
         let params = &self.params;
-        let order = net.param_order();
+        let order = net.accum_order();
         let step = |s: &Sample| golden_step(net, params, &order, s);
         let (loss_sum, report) =
             engine::run_batch(samples, self.workers, &mut self.states,
@@ -733,7 +852,7 @@ impl Trainer {
             self.cluster_allreduce_cycles(self.accelerators)?;
         let net = &self.acc.net;
         let params = &self.params;
-        let order = net.param_order();
+        let order = net.accum_order();
         let step = |s: &Sample| golden_step(net, params, &order, s);
         let (loss_sum, report) = run_batch_cluster(
             samples, self.accelerators, self.workers, &mut self.states,
@@ -779,7 +898,9 @@ impl Trainer {
     fn step_golden(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
         let (loss, _logits, grads) =
             golden::train_step(&self.acc.net, &self.params, x, y)?;
-        for name in self.acc.net.param_order() {
+        // parameter gradients AND per-image BN statistics, in the same
+        // accumulator order as the engine path
+        for name in self.acc.net.accum_order() {
             let g = grads
                 .get(&name)
                 .ok_or_else(|| anyhow!("missing grad {name}"))?
@@ -820,7 +941,6 @@ impl Trainer {
     fn step_per_op(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
         let tag = self.acc.net.scale_tag().to_string();
         let steps = self.acc.schedule.per_image.clone();
-        let net = self.acc.net.clone();
         let mut env: HashMap<String, Tensor> = HashMap::new();
         let mut cur = x.clone(); // FP activation / BP gradient carrier
         let mut flat: Option<Tensor> = None;
@@ -897,19 +1017,9 @@ impl Trainer {
                     let outs = self.runtime()?.execute_prepared(
                         &format!("fc_bp_{tag}"), &[In::T(g), In::P(w)])?;
                     let gf = outs.into_iter().next().unwrap();
-                    // reshape to the last pool's output geometry
-                    let lp = net
-                        .layers
-                        .iter()
-                        .rev()
-                        .find_map(|l| match l {
-                            Layer::Pool { c, h, w, k, .. } => {
-                                Some([*c, h / k, w / k])
-                            }
-                            _ => None,
-                        })
-                        .ok_or_else(|| anyhow!("no pool before fc"))?;
-                    cur = gf.reshape(&lp);
+                    // the schedule step carries the geometry the
+                    // gradient re-enters (the fc layer's input geometry)
+                    cur = gf.reshape(&step.out_shape);
                 }
                 OpKind::Upsample => {
                     let art = step.artifact.as_ref().unwrap();
@@ -917,11 +1027,21 @@ impl Trainer {
                         .get(&format!("idx_{lname}"))
                         .ok_or_else(|| anyhow!("no idx for {lname}"))?
                         .clone();
-                    let prev = self
+                    let (prev, fused) = self
                         .pool_prev
                         .get(&lname)
-                        .ok_or_else(|| anyhow!("no prev conv"))?;
-                    let mask = relu_mask(&env[&format!("a_{prev}")]);
+                        .ok_or_else(|| anyhow!("no prev layer"))?;
+                    let act = env
+                        .get(&format!("a_{prev}"))
+                        .ok_or_else(|| anyhow!("no acts for {prev}"))?;
+                    // mask only when the producer fuses a ReLU —
+                    // all-ones otherwise (golden's fused_mask rule)
+                    let mask = if *fused {
+                        relu_mask(act)
+                    } else {
+                        Tensor::from_vec(act.shape(),
+                                         vec![1; act.len()])
+                    };
                     let outs = self
                         .runtime()?
                         .execute(art, &[&cur, &idx, &mask])?;
@@ -951,13 +1071,21 @@ impl Trainer {
                 }
                 OpKind::ScaleMask => {
                     let art = step.artifact.as_ref().unwrap();
-                    let below = self.conv_below[&lname]
-                        .clone()
+                    let below = self
+                        .conv_below
+                        .get(&lname)
+                        .and_then(|b| b.clone())
                         .ok_or_else(|| anyhow!("scale without below"))?;
                     let mask = relu_mask(&env[&format!("a_{}", below.0)]);
                     let outs =
                         self.runtime()?.execute(art, &[&cur, &mask])?;
                     cur = outs.into_iter().next().unwrap();
+                }
+                OpKind::BnFp | OpKind::BnBp => {
+                    bail!(
+                        "batch-norm ops have no PJRT artifacts yet — \
+                         BN networks are golden-backend-only"
+                    )
                 }
                 OpKind::WeightUpdate | OpKind::AllReduce => {
                     unreachable!("per-batch only")
@@ -1169,6 +1297,90 @@ mod tests {
         cl.train_batch(&batch).unwrap();
         assert_eq!(seq.flat_params(), cl.flat_params());
         assert_eq!(cl.last_cluster.as_ref().unwrap().instances, 2);
+    }
+
+    fn tiny_bn_net() -> Network {
+        Network::parse(
+            "input 3 8 8\nconv c1 8 k3 s1 p1\nbn n1 relu\nconv c2 8 k3 \
+             s1 p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap()
+    }
+
+    fn tiny_bn_trainer() -> Trainer {
+        Trainer::new(&tiny_bn_net(), &DesignVars::for_scale(1), 4, 0.02,
+                     0.9, Backend::Golden, None)
+            .unwrap()
+    }
+
+    #[test]
+    fn bn_net_trains_and_refreshes_statistics() {
+        let mut t = tiny_bn_trainer();
+        // param states cover params + stat accumulators
+        assert_eq!(t.param_states().len(),
+                   t.acc.net.accum_order().len());
+        let rv0 = t.params.get("rv_n1").unwrap().clone();
+        let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+        let batch = data.batch(0, 4);
+        let first = t.train_batch(&batch).unwrap();
+        // the batch-end refresh moved the running statistics off init
+        // (synthetic activations do not have exactly unit variance)
+        assert_ne!(t.params.get("rv_n1").unwrap(), &rv0,
+                   "running variance never updated");
+        // stat accumulators were consumed and reset
+        for (name, st) in t.param_states() {
+            if name.starts_with("sm_") || name.starts_with("sq_") {
+                assert_eq!(st.count, 0, "{name} not reset");
+                assert!(st.grad_acc.data().iter().all(|&v| v == 0));
+            }
+        }
+        // and training makes progress
+        let mut last = first;
+        for _ in 0..6 {
+            last = t.train_batch(&batch).unwrap();
+        }
+        assert!(last < first, "bn loss {first} -> {last}");
+    }
+
+    #[test]
+    fn bn_manual_image_loop_matches_engine_path() {
+        // the name-addressed train_image path and the positional engine
+        // path must agree on params AND running statistics
+        let data = Synthetic::new(10, (3, 8, 8), 9, 0.3);
+        let batch = data.batch(0, 6);
+        let mut manual = tiny_bn_trainer();
+        for s in &batch {
+            manual.train_image(s).unwrap();
+        }
+        manual.end_batch().unwrap();
+        let mut sharded = tiny_bn_trainer().with_workers(3);
+        sharded.train_batch(&batch).unwrap();
+        assert_eq!(manual.flat_params(), sharded.flat_params());
+        for name in manual.acc.net.state_order() {
+            assert_eq!(manual.params.get(&name).unwrap(),
+                       sharded.params.get(&name).unwrap(),
+                       "{name} diverged");
+        }
+    }
+
+    #[test]
+    fn bn_requires_golden_backend() {
+        let err = match Trainer::new(&tiny_bn_net(),
+                                     &DesignVars::for_scale(1), 4, 0.02,
+                                     0.9, Backend::PerOp,
+                                     Some(Path::new("artifacts"))) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("golden-backend-only"),
+                "{err:#}");
+    }
+
+    #[test]
+    fn bn_fingerprint_differs_from_plain_topology() {
+        let plain = tiny_trainer().fingerprint();
+        let bn = tiny_bn_trainer().fingerprint();
+        assert_ne!(plain, bn);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! reports usage in Mbit, which is what [`BufferPlan::total_mbits`]
 //! reproduces.
 
-use crate::config::{DesignVars, Layer, Network};
+use crate::config::{DesignVars, Network};
 
 /// M20K block capacity in bits.
 pub const M20K_BITS: u64 = 20 * 1024;
@@ -34,6 +34,9 @@ pub enum BufferGroup {
     WeightGradient,
     PoolIndex,
     ActGradientMask,
+    /// Per-channel BN statistic/parameter registers (mean, variance,
+    /// precomputed scale, beta).
+    BnStats,
 }
 
 impl BufferSpec {
@@ -67,16 +70,14 @@ impl BufferPlan {
     pub fn plan(net: &Network, dv: &DesignVars) -> BufferPlan {
         let bits = dv.data_bits as u64;
         let mut buffers = Vec::new();
+        // per-kind row widths / tile depths come from the layer-ops
+        // registry; this function only takes maxima and assembles specs
 
         // widest activation row across the network (input tiles)
         let max_row_words = net
             .layers
             .iter()
-            .map(|l| match *l {
-                Layer::Conv { cin, w, .. } => (cin * (w + 2)) as u64,
-                Layer::Pool { c, w, .. } => (c * w) as u64,
-                Layer::Fc { cin, .. } => cin as u64,
-            })
+            .map(|l| crate::ops::for_layer(l).input_row_words(l))
             .max()
             .unwrap_or(0);
         buffers.push(BufferSpec {
@@ -91,11 +92,7 @@ impl BufferPlan {
         let max_out_row = net
             .layers
             .iter()
-            .map(|l| match *l {
-                Layer::Conv { w, .. } => w as u64,
-                Layer::Pool { w, k, .. } => (w / k) as u64,
-                Layer::Fc { cout, .. } => cout as u64,
-            })
+            .map(|l| crate::ops::for_layer(l).output_row_words(l))
             .max()
             .unwrap_or(0);
         buffers.push(BufferSpec {
@@ -127,12 +124,8 @@ impl BufferPlan {
         let max_wg_tile = net
             .layers
             .iter()
-            .map(|l| match *l {
-                Layer::Conv { cin, k, .. } => {
-                    (dv.pof * cin * k * k) as u64
-                }
-                Layer::Fc { cin, .. } => (dv.pof * cin) as u64,
-                Layer::Pool { .. } => 0,
+            .map(|l| {
+                crate::ops::for_layer(l).weight_grad_tile_words(l, dv)
             })
             .max()
             .unwrap_or(0);
@@ -144,31 +137,9 @@ impl BufferPlan {
             double: dv.double_buffer,
         });
 
-        // per-pool-layer index buffers (2 bits for 2x2 windows)
+        // layer-private buffers (pool indices, relu masks, bn registers)
         for l in &net.layers {
-            if let Layer::Pool { name, c, h, w, k } = l {
-                let idx_bits = ((k * k) as f64).log2().ceil() as u64;
-                buffers.push(BufferSpec {
-                    name: format!("idx_{name}"),
-                    group: BufferGroup::PoolIndex,
-                    words: (c * (h / k) * (w / k)) as u64,
-                    bits_per_word: idx_bits.max(1),
-                    double: false,
-                });
-            }
-        }
-
-        // per-relu-layer binary activation-gradient buffers
-        for l in &net.layers {
-            if let Layer::Conv { name, cout, h, w, relu: true, .. } = l {
-                buffers.push(BufferSpec {
-                    name: format!("mask_{name}"),
-                    group: BufferGroup::ActGradientMask,
-                    words: (cout * h * w) as u64,
-                    bits_per_word: 1,
-                    double: false,
-                });
-            }
+            crate::ops::for_layer(l).layer_buffers(l, dv, &mut buffers);
         }
 
         BufferPlan { buffers }
@@ -190,7 +161,7 @@ impl BufferPlan {
     pub fn bits_by_group(&self) -> Vec<(BufferGroup, u64)> {
         use BufferGroup::*;
         [Input, Output, Weight, WeightGradient, PoolIndex,
-         ActGradientMask]
+         ActGradientMask, BnStats]
             .iter()
             .map(|g| {
                 (
@@ -299,6 +270,29 @@ mod tests {
         assert_eq!(overlap_latency(100, 60, true, 5), 105);
         assert_eq!(overlap_latency(100, 60, false, 5), 160);
         assert_eq!(overlap_latency(60, 100, true, 0), 100);
+    }
+
+    #[test]
+    fn bn_layers_get_stat_registers_and_masks() {
+        let net = Network::cifar_bn(1);
+        let plan = BufferPlan::plan(&net, &DesignVars::for_scale(1));
+        let bn1 =
+            plan.buffers.iter().find(|b| b.name == "bn_n1").unwrap();
+        assert_eq!(bn1.group, BufferGroup::BnStats);
+        assert_eq!(bn1.words, 4 * 16); // mean/var/scale/beta x 16 ch
+        assert_eq!(bn1.bits_per_word, 32);
+        // the bn layer fuses the relu, so it owns the mask buffer
+        assert!(plan.buffers.iter().any(|b| b.name == "mask_n1"));
+        // its conv dropped the relu, so no conv mask
+        assert!(!plan.buffers.iter().any(|b| b.name == "mask_c1"));
+        // bn registers are a rounding error next to activation tiles
+        let bn_bits: u64 = plan
+            .buffers
+            .iter()
+            .filter(|b| b.group == BufferGroup::BnStats)
+            .map(|b| b.bits())
+            .sum();
+        assert!(bn_bits * 20 < plan.total_bits());
     }
 
     #[test]

@@ -104,34 +104,21 @@ pub fn pool_cycles(dv: &DesignVars, c: usize, h: usize, w: usize, k: usize)
     (ceil_div(c, dv.pof) * (h / k) * (w / k)) as u64
 }
 
-/// Logic cycles for a layer in a phase (pool layers cost only in FP —
-/// index bookkeeping — and BP — upsampling); `None` when the phase does
-/// not visit the layer (e.g. BP through the first conv layer).
+/// Batch-normalization cycles: one normalized pixel per cycle per
+/// channel lane through the Pof-wide multiply + shift + add datapath
+/// (same shape in FP and in the statistics-as-constants BP).
+pub fn bn_cycles(dv: &DesignVars, c: usize, h: usize, w: usize) -> u64 {
+    (ceil_div(c, dv.pof) * h * w) as u64
+}
+
+/// Logic cycles for a layer in a phase; `None` when the phase does not
+/// visit the layer (e.g. BP through the first conv layer, WU through a
+/// pool).  Per-kind formulas live in the layer-ops registry
+/// ([`crate::ops`]); this is the mac-array-facing delegate.
 pub fn layer_cycles(dv: &DesignVars, layer: &Layer, phase: Phase,
                     is_first_conv: bool) -> Option<LogicCost> {
-    match (layer, phase) {
-        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Fp) => {
-            Some(conv_cycles(dv, *cin, *cout, *h, *w, *k))
-        }
-        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Bp) => {
-            if is_first_conv {
-                None
-            } else {
-                // if/of interchange: same loop volume
-                Some(conv_cycles(dv, *cout, *cin, *h, *w, *k))
-            }
-        }
-        (Layer::Conv { cin, cout, h, w, k, .. }, Phase::Wu) => {
-            Some(wu_cycles(dv, *cin, *cout, *h, *w, *k))
-        }
-        (Layer::Pool { c, h, w, k, .. }, Phase::Fp)
-        | (Layer::Pool { c, h, w, k, .. }, Phase::Bp) => {
-            let cycles = pool_cycles(dv, *c, *h, *w, *k);
-            Some(LogicCost { cycles, useful_macs: 0, utilization: 0.0 })
-        }
-        (Layer::Pool { .. }, Phase::Wu) => None,
-        (Layer::Fc { cin, cout, .. }, _) => Some(fc_cycles(dv, *cin, *cout)),
-    }
+    crate::ops::for_layer(layer).phase_cost(dv, layer, phase,
+                                            is_first_conv)
 }
 
 #[cfg(test)]
@@ -202,6 +189,24 @@ mod tests {
         };
         assert!(layer_cycles(&dv1x(), &l, Phase::Bp, true).is_none());
         assert!(layer_cycles(&dv1x(), &l, Phase::Bp, false).is_some());
+    }
+
+    #[test]
+    fn bn_visits_fp_and_bp_only() {
+        let l = Layer::Bn {
+            name: "n1".into(),
+            c: 16,
+            h: 32,
+            w: 32,
+            relu: true,
+        };
+        let fp = layer_cycles(&dv1x(), &l, Phase::Fp, false).unwrap();
+        // 16 channels / Pof 16 -> one lane pass over 32x32 pixels
+        assert_eq!(fp.cycles, 32 * 32);
+        let bp = layer_cycles(&dv1x(), &l, Phase::Bp, false).unwrap();
+        assert_eq!(bp.cycles, fp.cycles);
+        // gamma/beta gradients ride the BP pass: no separate WU visit
+        assert!(layer_cycles(&dv1x(), &l, Phase::Wu, false).is_none());
     }
 
     #[test]

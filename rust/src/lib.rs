@@ -36,5 +36,6 @@ pub mod hw;
 pub mod jsonx;
 pub mod metrics;
 pub mod nn;
+pub mod ops;
 pub mod runtime;
 pub mod sim;

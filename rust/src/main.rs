@@ -155,13 +155,19 @@ fn load_network(args: &Args) -> Result<Network> {
         return Network::parse(&text);
     }
     let scale = args.get_or("scale", "1x");
-    let s = match scale.as_str() {
+    // "bnNx" selects the §IV-B batch-norm topology at scale N
+    let (bn, tag) = match scale.strip_prefix("bn") {
+        Some(rest) => (true, rest),
+        None => (false, scale.as_str()),
+    };
+    let s = match tag {
         "1x" | "1" => 1,
         "2x" | "2" => 2,
         "4x" | "4" => 4,
-        other => bail!("unknown scale `{other}` (use 1x|2x|4x or --net)"),
+        _ => bail!("unknown scale `{scale}` \
+                    (use 1x|2x|4x|bn1x|bn2x|bn4x or --net)"),
     };
-    Ok(Network::cifar(s))
+    Ok(if bn { Network::cifar_bn(s) } else { Network::cifar(s) })
 }
 
 fn design_vars(args: &Args, net: &Network) -> Result<DesignVars> {
@@ -459,6 +465,8 @@ USAGE: stratus <command> [flags]
 
 COMMANDS:
   compile   --scale 1x|2x|4x | --net FILE   run the RTL compiler
+            (--scale bn1x|bn2x|bn4x selects the batch-norm topology;
+             BN networks train on the golden backend only)
             [--pox N --poy N --pof N --clock-mhz F --emit-verilog OUT]
             [--no-load-balance --no-double-buffer]
             [--accelerators N  compile an N-instance cluster: emits the

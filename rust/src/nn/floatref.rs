@@ -190,11 +190,16 @@ fn upsample_scale(g: &FTensor, idx: &[usize], below: &FTensor, k: usize)
     out
 }
 
-/// Float parameters + momentum for the whole network.
+/// Float parameters + momentum for the whole network.  BN layers carry
+/// their (dequantized) running statistics too; like the fixed model,
+/// the float reference treats them as constants within a batch
+/// (statistics-as-constants backward).
 pub struct FloatTrainer {
     net: Network,
     weights: HashMap<String, FTensor>,
     biases: HashMap<String, Vec<f32>>,
+    bn_mean: HashMap<String, Vec<f32>>,
+    bn_var: HashMap<String, Vec<f32>>,
     mw: HashMap<String, Vec<f32>>,
     mb: HashMap<String, Vec<f32>>,
     lr: f32,
@@ -207,15 +212,19 @@ impl FloatTrainer {
                        beta: f64) -> Result<FloatTrainer> {
         let mut weights = HashMap::new();
         let mut biases = HashMap::new();
+        let mut bn_mean = HashMap::new();
+        let mut bn_var = HashMap::new();
         let mut mw = HashMap::new();
         let mut mb = HashMap::new();
         for l in &net.layers {
-            if matches!(l, Layer::Pool { .. }) {
+            if l.weight_elems() == 0 {
                 continue;
             }
             let n = l.name();
             let w = params.get(&format!("w_{n}"))?;
             let b = params.get(&format!("b_{n}"))?;
+            // bn gamma lives at FW like weights; beta at FA+FW like
+            // biases — the generic dequantization covers both kinds
             let wf = FTensor::from_fixed(w, FW);
             let bf: Vec<f32> = b
                 .data()
@@ -226,16 +235,46 @@ impl FloatTrainer {
             mb.insert(n.to_string(), vec![0.0; bf.len()]);
             weights.insert(n.to_string(), wf);
             biases.insert(n.to_string(), bf);
+            if let Layer::Bn { name, .. } = l {
+                let rm = params.get(&format!("rm_{name}"))?;
+                let rv = params.get(&format!("rv_{name}"))?;
+                bn_mean.insert(
+                    name.clone(),
+                    rm.data()
+                        .iter()
+                        .map(|&q| dequantize(q, FA) as f32)
+                        .collect(),
+                );
+                bn_var.insert(
+                    name.clone(),
+                    rv.data()
+                        .iter()
+                        .map(|&q| dequantize(q, 2 * FA) as f32)
+                        .collect(),
+                );
+            }
         }
         Ok(FloatTrainer {
             net: net.clone(),
             weights,
             biases,
+            bn_mean,
+            bn_var,
             mw,
             mb,
             lr: lr as f32,
             beta: beta as f32,
         })
+    }
+
+    /// Per-channel `gamma / sqrt(var + eps)` scales of a BN layer.
+    fn bn_scales(&self, name: &str) -> Vec<f32> {
+        self.weights[name]
+            .data
+            .iter()
+            .zip(&self.bn_var[name])
+            .map(|(&g, &v)| g / (v.max(0.0) + 1e-5).sqrt())
+            .collect()
     }
 
     /// Forward pass; returns (logits, cache of activations, pool indices,
@@ -254,6 +293,28 @@ impl FloatTrainer {
                 Layer::Conv { name, pad, relu, .. } => {
                     a = conv_fp(&a, &self.weights[name],
                                 &self.biases[name], *pad, *relu);
+                    acts.insert(name.clone(), a.clone());
+                }
+                Layer::Bn { name, relu, .. } => {
+                    let scales = self.bn_scales(name);
+                    let mu = &self.bn_mean[name];
+                    let beta = &self.biases[name];
+                    let (c, hh, ww) =
+                        (a.shape[0], a.shape[1], a.shape[2]);
+                    let mut out = FTensor::zeros(&a.shape);
+                    for ci in 0..c {
+                        let base = ci * hh * ww;
+                        for i in 0..hh * ww {
+                            let mut y = (a.data[base + i] - mu[ci])
+                                * scales[ci]
+                                + beta[ci];
+                            if *relu && y < 0.0 {
+                                y = 0.0;
+                            }
+                            out.data[base + i] = y;
+                        }
+                    }
+                    a = out;
                     acts.insert(name.clone(), a.clone());
                 }
                 Layer::Pool { name, k, .. } => {
@@ -338,7 +399,7 @@ impl FloatTrainer {
             })
             .collect();
 
-        // reverse conv/pool walk (same structure as golden::backward)
+        // reverse feature-map walk (same structure as golden::backward)
         let rev: Vec<&Layer> = self
             .net
             .layers
@@ -346,20 +407,89 @@ impl FloatTrainer {
             .filter(|l| !matches!(l, Layer::Fc { .. }))
             .rev()
             .collect();
-        let (lc, lh, lk) = match rev.first() {
-            Some(Layer::Pool { c, h, k, .. }) => (*c, *h, *k),
-            _ => panic!("expected pool before fc"),
-        };
+        let &last = rev.first().expect("a feature-map layer before fc");
+        let geom = crate::ops::for_layer(last).out_geom(last);
         let mut grad = FTensor {
-            shape: vec![lc, lh / lk, lh / lk],
+            shape: vec![geom.c, geom.h, geom.w],
             data: g_flat,
         };
+        // consumer-applies-the-mask convention, mirroring golden: a
+        // layer's fused ReLU is applied by whoever propagates into it
+        let mask_below = |grad: &mut FTensor, b: &Layer| {
+            if b.fused_relu() {
+                let ba = &acts[b.name()];
+                for (gv, &av) in grad.data.iter_mut().zip(&ba.data) {
+                    if av <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+            }
+        };
+        // fc consumes `last`'s output: apply its fused-ReLU mask (if
+        // any) before walking down, mirroring golden::backward
+        mask_below(&mut grad, last);
         for (i, l) in rev.iter().enumerate() {
             match l {
                 Layer::Pool { name, k, .. } => {
-                    let below = rev[i + 1].name();
+                    // upsample_scale masks on mask_src > 0: feed the
+                    // below layer's activations only when it fuses a
+                    // ReLU, all-ones otherwise (golden's fused_mask
+                    // rule; ones also covers pool-on-input)
+                    let ones;
+                    let mask_src: &FTensor = match rev.get(i + 1) {
+                        Some(&b) if b.fused_relu() => &acts[b.name()],
+                        Some(&b) => {
+                            let ba = &acts[b.name()];
+                            ones = FTensor {
+                                shape: ba.shape.clone(),
+                                data: vec![1.0; ba.data.len()],
+                            };
+                            &ones
+                        }
+                        None => {
+                            ones = FTensor {
+                                shape: x.shape.clone(),
+                                data: vec![1.0; x.data.len()],
+                            };
+                            &ones
+                        }
+                    };
                     grad = upsample_scale(&grad, &idxs[name],
-                                          &acts[below], *k);
+                                          mask_src, *k);
+                }
+                Layer::Bn { name, .. } => {
+                    let below = rev.get(i + 1);
+                    let x_in: &FTensor = match below {
+                        None => x,
+                        Some(b) => &acts[b.name()],
+                    };
+                    let scales = self.bn_scales(name);
+                    let mu = &self.bn_mean[name];
+                    let var = &self.bn_var[name];
+                    let c = grad.shape[0];
+                    let hw = grad.shape[1] * grad.shape[2];
+                    let mut dgamma = FTensor::zeros(&[c]);
+                    let mut db = vec![0.0f32; c];
+                    for ci in 0..c {
+                        let inv =
+                            1.0 / (var[ci].max(0.0) + 1e-5).sqrt();
+                        let base = ci * hw;
+                        let mut dg = 0.0f32;
+                        for i in 0..hw {
+                            let gv = grad.data[base + i];
+                            let xhat =
+                                (x_in.data[base + i] - mu[ci]) * inv;
+                            dg += gv * xhat;
+                            db[ci] += gv;
+                            grad.data[base + i] = gv * scales[ci];
+                        }
+                        dgamma.data[ci] = dg;
+                    }
+                    dws.insert(name.clone(), dgamma);
+                    dbs.insert(name.clone(), db);
+                    if let Some(&b) = below {
+                        mask_below(&mut grad, b);
+                    }
                 }
                 Layer::Conv { name, pad, .. } => {
                     let below = rev.get(i + 1);
@@ -370,18 +500,9 @@ impl FloatTrainer {
                     let (dw, db) = conv_wu(x_in, &grad, *pad);
                     dws.insert(name.clone(), dw);
                     dbs.insert(name.clone(), db);
-                    if let Some(b) = below {
+                    if let Some(&b) = below {
                         grad = conv_bp(&grad, &self.weights[name], *pad);
-                        if let Layer::Conv { .. } = b {
-                            let ba = &acts[b.name()];
-                            for (gv, &av) in
-                                grad.data.iter_mut().zip(&ba.data)
-                            {
-                                if av <= 0.0 {
-                                    *gv = 0.0;
-                                }
-                            }
-                        }
+                        mask_below(&mut grad, b);
                     }
                 }
                 Layer::Fc { .. } => unreachable!(),
@@ -489,6 +610,52 @@ mod tests {
             let cos = dot / (na.sqrt() * nb.sqrt() + 1e-12);
             assert!(cos > 0.99, "{lname}: cos = {cos}");
             let _ = FG;
+        }
+    }
+
+    #[test]
+    fn float_gradients_track_fixed_through_bn() {
+        // the fidelity claim must survive a BN layer in the chain: at
+        // init the integer BN is near-identity (gamma 1, var 1), so the
+        // dequantized fixed conv gradients must still track the float
+        // reference closely
+        let net = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1\nbn n1 relu\nconv c2 4 k3 \
+             s1 p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap();
+        let params = init_params(&net, 3);
+        let ft = FloatTrainer::from_params(&net, &params, 0.01, 0.9)
+            .unwrap();
+        let mut rng = Lcg::new(8);
+        let x = randi(&mut rng, &[3, 8, 8], 200);
+        let y = encode_label(2, 10);
+        let (_, _, fixed_grads) =
+            golden::train_step(&net, &params, &x, &y).unwrap();
+        let (_, dws, dbs) = ft.grads(&image_f32(&x), 2);
+        for lname in ["c1", "c2", "fc"] {
+            let fg = &fixed_grads[&format!("w_{lname}")];
+            let fl = &dws[lname];
+            let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+            for (&q, &f) in fg.data().iter().zip(&fl.data) {
+                let a = dequantize(q, FWG);
+                let b = f as f64;
+                dot += a * b;
+                na += a * a;
+                nb += b * b;
+            }
+            let cos = dot / (na.sqrt() * nb.sqrt() + 1e-12);
+            assert!(cos > 0.9, "{lname}: cos = {cos}");
+        }
+        // beta gradients are plain sums of the masked local gradient:
+        // dequantized fixed dbeta must track the float one per channel
+        let fb = &fixed_grads["b_n1"];
+        let flb = &dbs["n1"];
+        for (&q, &f) in fb.data().iter().zip(flb) {
+            let a = dequantize(q, FG);
+            let d = (a - f64::from(f)).abs();
+            assert!(d <= 0.1 * f64::from(f).abs() + 0.5,
+                    "dbeta {a} vs {f}");
         }
     }
 

@@ -8,6 +8,7 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Result};
 
 use crate::config::{Layer, Network};
+use crate::nn::bn;
 use crate::nn::conv::{conv_bp, conv_fp_std, conv_wu};
 use crate::nn::fc::{fc_bp, fc_fp, fc_wu};
 use crate::nn::loss::loss_grad;
@@ -56,13 +57,16 @@ impl Params {
 }
 
 /// Everything the accelerator stores during FP for reuse in BP/WU:
-/// post-ReLU activations (whence the binary activation-gradient masks)
-/// and max-pool indices.
+/// post-ReLU activations (whence the binary activation-gradient masks),
+/// max-pool indices, and per-image BN input statistics (channel mean at
+/// FA, channel second moment at 2*FA — what the BnFp step streams to
+/// the DRAM statistic accumulators).
 #[derive(Debug, Clone)]
 pub struct FwdCache {
     pub x: Tensor,
     pub acts: HashMap<String, Tensor>,
     pub idxs: HashMap<String, Tensor>,
+    pub bn_stats: HashMap<String, (Tensor, Tensor)>,
     pub flat: Vec<i32>,
 }
 
@@ -76,6 +80,7 @@ pub fn forward(net: &Network, params: &Params, x: &Tensor)
         x: x.clone(),
         acts: HashMap::new(),
         idxs: HashMap::new(),
+        bn_stats: HashMap::new(),
         flat: Vec::new(),
     };
     let mut a = x.clone();
@@ -86,6 +91,22 @@ pub fn forward(net: &Network, params: &Params, x: &Tensor)
                 let w = params.get(&format!("w_{name}"))?;
                 let b = params.get(&format!("b_{name}"))?;
                 a = conv_fp_std(&a, w, b.data(), *relu);
+                cache.acts.insert(name.clone(), a.clone());
+            }
+            Layer::Bn { name, relu, .. } => {
+                // normalize against the running statistics, frozen for
+                // the whole batch (the statistic refresh happens at
+                // batch end — that is what keeps sharded batches
+                // bit-identical); record this image's input statistics
+                // for the batch-end EMA
+                let gamma = params.get(&format!("w_{name}"))?;
+                let beta = params.get(&format!("b_{name}"))?;
+                let rm = params.get(&format!("rm_{name}"))?;
+                let rv = params.get(&format!("rv_{name}"))?;
+                cache
+                    .bn_stats
+                    .insert(name.clone(), bn::image_stats(&a));
+                a = bn::forward_affine(&a, gamma, beta, rm, rv, *relu);
                 cache.acts.insert(name.clone(), a.clone());
             }
             Layer::Pool { name, k, .. } => {
@@ -119,28 +140,77 @@ pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
                  Tensor::from_vec(&[db_fc.len()], db_fc));
     let g_flat = fc_bp(g_out, w_fc);
 
-    // walk conv/pool layers in reverse
+    // walk the feature-map layers in reverse
     let rev: Vec<&Layer> = net
         .layers
         .iter()
         .filter(|l| !matches!(l, Layer::Fc { .. }))
         .rev()
         .collect();
-    let (lc, lh, lw, lk) = match rev.first() {
-        Some(Layer::Pool { c, h, w, k, .. }) => (*c, *h, *w, *k),
-        _ => return Err(anyhow!("expected pool before fc")),
+    let &last = rev
+        .first()
+        .ok_or_else(|| anyhow!("expected a feature-map layer before fc"))?;
+    let geom = crate::ops::for_layer(last).out_geom(last);
+    let mut g = Tensor::from_vec(&[geom.c, geom.h, geom.w], g_flat);
+
+    // The mask convention: a layer's fused ReLU is applied by its
+    // *consumer* — the pool's upsampler, or the scaling unit after the
+    // conv/bn above propagates its gradient.  `fused_mask` derives the
+    // below layer's binary activation-gradient mask (all-ones when the
+    // layer fuses no ReLU).
+    let fused_mask = |b: &Layer| -> Result<Tensor> {
+        let act = cache
+            .acts
+            .get(b.name())
+            .ok_or_else(|| anyhow!("no cached acts for {}", b.name()))?;
+        if b.fused_relu() {
+            Ok(relu_mask(act))
+        } else {
+            Ok(Tensor::from_vec(act.shape(), vec![1; act.len()]))
+        }
     };
-    let mut g = Tensor::from_vec(&[lc, lh / lk, lw / lk], g_flat);
+
+    // the fc layer consumes `last`'s output: if that layer fuses a
+    // ReLU (e.g. a conv-relu or bn-relu directly before fc, with no
+    // pool in between), fc applies its mask here — same convention
+    if last.fused_relu() {
+        g = scale_mask(&g, &fused_mask(last)?);
+    }
 
     for (i, l) in rev.iter().enumerate() {
         match l {
             Layer::Pool { name, k, .. } => {
-                let below = match rev.get(i + 1) {
-                    Some(Layer::Conv { name, .. }) => name,
-                    _ => return Err(anyhow!("pool must follow a conv")),
+                let mask = match rev.get(i + 1) {
+                    Some(&b) => fused_mask(b)?,
+                    None => {
+                        let n = cache.x.len();
+                        Tensor::from_vec(cache.x.shape(), vec![1; n])
+                    }
                 };
-                let mask = relu_mask(&cache.acts[below]);
                 g = upsample_scale(&g, &cache.idxs[name], &mask, *k);
+            }
+            Layer::Bn { name, .. } => {
+                // the consumer above already applied this layer's own
+                // fused-ReLU mask, so `g` is dL/d(pre-ReLU bn output)
+                let below = rev.get(i + 1);
+                let x_in: &Tensor = match below {
+                    None => &cache.x,
+                    Some(b) => &cache.acts[b.name()],
+                };
+                let gamma = params.get(&format!("w_{name}"))?;
+                let rm = params.get(&format!("rm_{name}"))?;
+                let rv = params.get(&format!("rv_{name}"))?;
+                let (dgamma, dbeta) =
+                    bn::backward_params(&g, x_in, rm, rv);
+                grads.insert(format!("w_{name}"), dgamma);
+                grads.insert(format!("b_{name}"),
+                             Tensor::from_vec(&[dbeta.len()], dbeta));
+                g = bn::backward_input(&g, gamma, rv);
+                if let Some(&b) = below {
+                    if b.fused_relu() {
+                        g = scale_mask(&g, &fused_mask(b)?);
+                    }
+                }
             }
             Layer::Conv { name, pad, .. } => {
                 let below = rev.get(i + 1);
@@ -152,12 +222,11 @@ pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
                 grads.insert(format!("w_{name}"), dw);
                 grads.insert(format!("b_{name}"),
                              Tensor::from_vec(&[db.len()], db));
-                if let Some(b) = below {
+                if let Some(&b) = below {
                     let w = params.get(&format!("w_{name}"))?;
                     g = conv_bp(&g, w, *pad);
-                    if matches!(b, Layer::Conv { .. }) {
-                        let mask = relu_mask(&cache.acts[b.name()]);
-                        g = scale_mask(&g, &mask);
+                    if b.fused_relu() {
+                        g = scale_mask(&g, &fused_mask(b)?);
                     }
                 }
             }
@@ -167,12 +236,20 @@ pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
     Ok(grads)
 }
 
-/// One whole per-image FP + loss + BP + WU pass.
+/// One whole per-image FP + loss + BP + WU pass.  Besides the `w_*` /
+/// `b_*` parameter gradients, the returned map carries the per-image BN
+/// statistic contributions (`sm_*` channel means, `sq_*` channel second
+/// moments) — they accumulate across the batch exactly like gradients
+/// and fold into the running statistics at batch end.
 pub fn train_step(net: &Network, params: &Params, x: &Tensor, y: &[i32])
                   -> Result<(i32, Vec<i32>, Grads)> {
     let (logits, cache) = forward(net, params, x)?;
     let (g, loss) = loss_grad(net.loss, &logits, y);
-    let grads = backward(net, params, &cache, &g)?;
+    let mut grads = backward(net, params, &cache, &g)?;
+    for (name, (sm, sq)) in cache.bn_stats {
+        grads.insert(format!("sm_{name}"), sm);
+        grads.insert(format!("sq_{name}"), sq);
+    }
     Ok((loss, logits, grads))
 }
 
@@ -241,6 +318,85 @@ mod tests {
         // rust analogue of test_loss_decreases_under_sgd in python
         use crate::fixed::{FG, FW, FWG};
         let net = tiny_net();
+        let mut params = init_params(&net, 5);
+        let mut rng = Lcg::new(6);
+        let x = randi(&mut rng, &[3, 8, 8], 128);
+        let y = encode_label(2, 10);
+        let loss_of = |p: &Params| {
+            let (logits, _) = forward(&net, p, &x).unwrap();
+            loss_grad(net.loss, &logits, &y).1
+        };
+        let l0 = loss_of(&params);
+        for _ in 0..4 {
+            let (_, _, grads) = train_step(&net, &params, &x, &y).unwrap();
+            for name in net.param_order() {
+                let g = &grads[&name];
+                let sh = if name.starts_with("w_") {
+                    FWG - FW + 6
+                } else {
+                    FG - FW + 6
+                };
+                let p = params.get_mut(&name).unwrap();
+                for (pv, gv) in p.data_mut().iter_mut().zip(g.data()) {
+                    *pv = crate::fixed::sat16(*pv - (gv >> sh));
+                }
+            }
+        }
+        assert!(loss_of(&params) <= l0, "loss did not decrease");
+    }
+
+    fn tiny_bn_net() -> Network {
+        Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1\nbn n1 relu\nconv c2 4 k3 \
+             s1 p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bn_forward_shapes_and_stats() {
+        let net = tiny_bn_net();
+        let params = init_params(&net, 2);
+        let mut rng = Lcg::new(4);
+        let x = randi(&mut rng, &[3, 8, 8], 256);
+        let (logits, cache) = forward(&net, &params, &x).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert_eq!(cache.acts["n1"].shape(), &[4, 8, 8]);
+        assert_eq!(cache.acts["n2"].shape(), &[4, 8, 8]);
+        // the fused relu lives on the bn output, not the conv
+        assert!(cache.acts["n1"].data().iter().all(|&v| v >= 0));
+        // per-image statistics recorded for both bn layers
+        let (sm, sq) = &cache.bn_stats["n1"];
+        assert_eq!(sm.shape(), &[4]);
+        assert_eq!(sq.shape(), &[4]);
+        assert!(sq.data().iter().all(|&v| v >= 0));
+    }
+
+    #[test]
+    fn bn_train_step_emits_param_grads_and_stats() {
+        let net = tiny_bn_net();
+        let params = init_params(&net, 3);
+        let mut rng = Lcg::new(5);
+        let x = randi(&mut rng, &[3, 8, 8], 200);
+        let y = encode_label(1, 10);
+        let (loss, _, grads) = train_step(&net, &params, &x, &y).unwrap();
+        assert!(loss >= 0);
+        // every trainable parameter has a gradient of matching shape
+        for name in net.param_order() {
+            assert_eq!(grads[&name].shape(),
+                       params.get(&name).unwrap().shape(),
+                       "{name}");
+        }
+        // and every bn layer contributed its statistic tensors
+        for name in net.stat_order() {
+            assert_eq!(grads[&name].shape(), &[4], "{name}");
+        }
+    }
+
+    #[test]
+    fn bn_loss_decreases_under_plain_sgd() {
+        use crate::fixed::{FG, FW, FWG};
+        let net = tiny_bn_net();
         let mut params = init_params(&net, 5);
         let mut rng = Lcg::new(6);
         let x = randi(&mut rng, &[3, 8, 8], 128);

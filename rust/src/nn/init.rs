@@ -7,12 +7,16 @@
 //! (sum of uniforms), quantized to the FW grid.
 
 use crate::config::{Layer, Network};
-use crate::fixed::{quantize, FW};
+use crate::fixed::{quantize, FA, FW};
 use crate::nn::golden::Params;
 use crate::nn::tensor::Tensor;
 use crate::nn::testutil::Lcg;
 
 /// Deterministic He-init of all parameters of `net` (biases zero).
+/// BN layers get the standard deterministic constants — gamma 1.0,
+/// beta 0, running mean 0, running variance 1.0 — and consume no LCG
+/// draws, so the weight streams of the other layers are unchanged by
+/// inserting BN into a topology.
 pub fn init_params(net: &Network, seed: u64) -> Params {
     let mut rng = Lcg::new(seed);
     let mut params = Params::default();
@@ -24,6 +28,20 @@ pub fn init_params(net: &Network, seed: u64) -> Params {
             Layer::Fc { name, cin, cout, .. } => {
                 (name, *cin, vec![*cout, *cin])
             }
+            Layer::Bn { name, c, .. } => {
+                // gamma 1.0 at FW, beta 0 at FA+FW
+                params.insert(&format!("w_{name}"),
+                              Tensor::from_vec(&[*c],
+                                               vec![1 << FW; *c]));
+                params.insert(&format!("b_{name}"), Tensor::zeros(&[*c]));
+                // running mean 0 at FA, running variance 1.0 at 2*FA
+                params.insert(&format!("rm_{name}"),
+                              Tensor::zeros(&[*c]));
+                params.insert(&format!("rv_{name}"),
+                              Tensor::from_vec(&[*c],
+                                               vec![1 << (2 * FA); *c]));
+                continue;
+            }
             Layer::Pool { .. } => continue,
         };
         let std = (2.0 / fan_in as f64).sqrt();
@@ -34,7 +52,8 @@ pub fn init_params(net: &Network, seed: u64) -> Params {
         params.insert(&format!("w_{name}"), Tensor::from_vec(&wshape, data));
         let nb = match l {
             Layer::Conv { cout, .. } | Layer::Fc { cout, .. } => *cout,
-            Layer::Pool { .. } => unreachable!(),
+            // pool/bn `continue`d above (bn initializes its own params)
+            Layer::Pool { .. } | Layer::Bn { .. } => unreachable!(),
         };
         params.insert(&format!("b_{name}"), Tensor::zeros(&[nb]));
     }
@@ -80,6 +99,31 @@ mod tests {
         let p = init_params(&net, 4);
         for name in net.param_order() {
             assert!(p.get(&name).is_ok(), "{name}");
+        }
+    }
+
+    #[test]
+    fn bn_init_is_identity_and_burns_no_rng() {
+        use crate::fixed::FA;
+        let net = Network::cifar_bn(1);
+        let p = init_params(&net, 9);
+        // params + running statistics all present
+        for name in net.param_order().iter().chain(&net.state_order()) {
+            assert!(p.get(name).is_ok(), "{name}");
+        }
+        assert!(p.get("w_n1").unwrap().data().iter()
+            .all(|&v| v == 1 << FW));
+        assert!(p.get("b_n1").unwrap().data().iter().all(|&v| v == 0));
+        assert!(p.get("rm_n1").unwrap().data().iter().all(|&v| v == 0));
+        assert!(p.get("rv_n1").unwrap().data().iter()
+            .all(|&v| v == 1 << (2 * FA)));
+        // bn layers consume no LCG draws: the conv weights match the
+        // bn-free topology's exactly (same names, same dims, same seed)
+        let plain = init_params(&Network::cifar(1), 9);
+        for l in ["c1", "c3", "c6"] {
+            assert_eq!(p.get(&format!("w_{l}")).unwrap(),
+                       plain.get(&format!("w_{l}")).unwrap(),
+                       "{l}");
         }
     }
 }

@@ -38,12 +38,15 @@ impl SgdHyper {
     }
 }
 
-/// Whether a parameter is a weight (i16, frac FW) or a bias (i32
-/// accumulator-resident, frac FA+FW).
+/// Whether a parameter is a weight (i16, frac FW), a bias (i32
+/// accumulator-resident, frac FA+FW), or a batch-statistic accumulator
+/// (BN shard sums: merged like gradients but consumed by the BN
+/// statistic refresh at batch end, never by the SGD step).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ParamKind {
     Weight,
     Bias,
+    Stat,
 }
 
 /// Gradient accumulator + momentum state for one parameter tensor.
@@ -134,8 +137,12 @@ impl ParamState {
     }
 
     /// End-of-batch weight update, Eq. (6).  Mutates `param` in place and
-    /// clears the accumulator.
+    /// clears the accumulator.  Statistic accumulators take no SGD step
+    /// (the coordinator folds them into the BN running statistics via
+    /// `nn::bn::ema_update` and resets them itself).
     pub fn apply(&mut self, param: &mut Tensor, hy: &SgdHyper) {
+        assert_ne!(self.kind, ParamKind::Stat,
+                   "statistic accumulators are not SGD-stepped");
         assert_eq!(param.shape(), self.grad_acc.shape());
         let recip = hy.recip_q15();
         let lr = i64::from(hy.lr_q16);
@@ -173,6 +180,7 @@ impl ParamState {
                     *p = (i64::from(*p) + vn)
                         .clamp(-(1 << 28), 1 << 28) as i32;
                 }
+                ParamKind::Stat => unreachable!("guarded above"),
             }
         }
         self.reset();

@@ -1,0 +1,1056 @@
+//! The layer-ops registry: one descriptor per layer kind that owns that
+//! kind's semantics end to end — naming, parameter/statistic inventory,
+//! output geometry, MAC counts for every training phase, on-chip buffer
+//! requirements, RTL module selection, control-ROM words, schedule-step
+//! emission, and simulated cycle costs.
+//!
+//! Before this module existed, those facts were duplicated as
+//! `match Layer::` arms across `config`, `compiler/{module_library,
+//! schedule, codegen, adaptive}`, `sim`, `hw/{bram, mac_array}` and the
+//! coordinator; adding a layer kind meant touching every one of them in
+//! sync.  Now `compiler/`, `sim/` and `hw/` consult [`for_layer`] — the
+//! single dispatch point — and adding a layer kind is one descriptor in
+//! this file plus its golden-model numerics (see [`BnOps`], the first
+//! layer added this way).  This is the modular per-layer-descriptor
+//! architecture the accelerator-compiler literature uses to scale layer
+//! coverage (TinyCNN, arXiv:1911.06777; Chung & Abdelrahman,
+//! arXiv:2203.04015).
+//!
+//! The descriptors are stateless: every method takes the concrete
+//! [`Layer`] value and reads its dimensions.  Schedule emission receives
+//! a [`StepCtx`] carrying what the walk knows (the consumed geometry,
+//! the layer below, first-layer-ness), and every emitted [`Step`] records
+//! its output geometry — downstream consumers (e.g. the per-op runtime
+//! walk) read `step.out_shape` instead of re-deriving geometry from the
+//! layer list.
+
+use crate::compiler::codegen::ControlWord;
+use crate::compiler::module_library::Module;
+use crate::compiler::schedule::{OpKind, Step};
+use crate::config::{DesignVars, Layer};
+use crate::hw::bram::{BufferGroup, BufferSpec};
+use crate::hw::mac_array::{self, LogicCost, Phase};
+
+/// Bytes per 16-bit data word.
+pub const W16: u64 = 2;
+/// Bytes per 32-bit gradient/statistic accumulator word.
+pub const W32: u64 = 4;
+
+/// DMA tile count for a (C, H, W) tensor moved `tile_rows` rows at a
+/// time, `pof` maps per burst.
+pub fn act_tiles(dv: &DesignVars, c: usize, h: usize) -> u64 {
+    (c.div_ceil(dv.pof) * h.div_ceil(dv.tile_rows)) as u64
+}
+
+/// A (C, H, W) feature-map geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geom {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Geom {
+    pub fn elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        vec![self.c, self.h, self.w]
+    }
+}
+
+/// What the schedule walk knows when it asks a descriptor to emit steps.
+pub struct StepCtx<'a> {
+    /// Artifact-name scale tag ("1x"/"2x"/"4x").
+    pub tag: &'a str,
+    /// Geometry this layer consumes (the layer below's output geometry,
+    /// or the network input for the first layer).
+    pub in_geom: Geom,
+    /// True for the first layer of the network (BP stops here).
+    pub is_first: bool,
+    /// The layer below in FP order (`None` for the first layer).
+    pub below: Option<&'a Layer>,
+}
+
+/// Everything one layer kind knows about itself.  Default methods cover
+/// the common cases (no parameters, no statistics, no extra buffers);
+/// each descriptor overrides what applies.
+pub trait LayerOps: Sync {
+    /// Kind tag ("conv" / "pool" / "fc" / "bn") — also the control-ROM
+    /// kind string.
+    fn kind(&self) -> &'static str;
+
+    /// Output feature-map geometry.
+    fn out_geom(&self, l: &Layer) -> Geom;
+
+    /// Shape of the weight tensor (`None` for parameterless layers).
+    fn weight_shape(&self, l: &Layer) -> Option<Vec<usize>>;
+
+    fn weight_elems(&self, l: &Layer) -> usize {
+        self.weight_shape(l).map_or(0, |s| s.iter().product())
+    }
+
+    fn bias_elems(&self, l: &Layer) -> usize;
+
+    /// MAC count of the FP pass.
+    fn macs_fp(&self, l: &Layer) -> u64;
+
+    /// MAC count of the BP pass (defaults to the FP volume — the if/of
+    /// interchange preserves the loop product).
+    fn macs_bp(&self, l: &Layer) -> u64 {
+        self.macs_fp(l)
+    }
+
+    /// MAC count of the weight-gradient pass.
+    fn macs_wu(&self, l: &Layer) -> u64;
+
+    /// Whether the layer fuses a ReLU on its output (drives the
+    /// activation-gradient mask both in the golden model and in the
+    /// schedule's scaling-unit steps).
+    fn fused_relu(&self, l: &Layer) -> bool {
+        let _ = l;
+        false
+    }
+
+    /// Trainable parameter names in canonical order (`w_*` then `b_*`).
+    fn param_names(&self, l: &Layer) -> Vec<String> {
+        if self.weight_elems(l) > 0 {
+            vec![format!("w_{}", l.name()), format!("b_{}", l.name())]
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Per-batch statistic accumulators `(name, shape)` this layer
+    /// needs (merged across shards exactly like gradients; empty for
+    /// layers without batch statistics).  **Order contract:** when
+    /// non-empty, exactly `[moment-sum, square-sum]` — the trainer's
+    /// batch-end refresh binds them positionally.
+    fn stat_tensors(&self, l: &Layer) -> Vec<(String, Vec<usize>)> {
+        let _ = l;
+        Vec::new()
+    }
+
+    /// Persistent (non-SGD) state tensors `(name, shape)` this layer
+    /// keeps in the parameter set — e.g. BN running statistics.  They
+    /// ride in checkpoints alongside the parameters.  **Order
+    /// contract:** when non-empty, exactly `[running-mean,
+    /// running-variance]`, paired with [`LayerOps::stat_tensors`].
+    fn state_tensors(&self, l: &Layer) -> Vec<(String, Vec<usize>)> {
+        let _ = l;
+        Vec::new()
+    }
+
+    /// RTL library modules this layer requires beyond the base set.
+    fn modules(&self, l: &Layer) -> Vec<Module>;
+
+    /// Per-image FP-phase schedule steps.
+    fn fp_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                -> Vec<Step>;
+
+    /// Per-image BP/WU-phase schedule steps (reverse walk), in
+    /// execution order.
+    fn bp_wu_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                   -> Vec<Step>;
+
+    /// Logic cycles the MAC array / function units spend on one
+    /// scheduled op of this layer.  The default covers the per-batch
+    /// weight update (Pof-wide update datapath); ops a kind does not
+    /// emit cost zero.
+    fn logic_cycles(&self, dv: &DesignVars, l: &Layer, op: OpKind)
+                    -> u64 {
+        match op {
+            OpKind::WeightUpdate => {
+                (self.weight_elems(l) as u64).div_ceil(dv.pof as u64)
+            }
+            _ => 0,
+        }
+    }
+
+    /// Logic cost of one whole phase through this layer (`None` when
+    /// the phase does not visit it) — the analytic form the mac-array
+    /// model exposes.
+    fn phase_cost(&self, dv: &DesignVars, l: &Layer, phase: Phase,
+                  is_first: bool) -> Option<LogicCost>;
+
+    /// Input-tile row width in words (drives the shared input buffer).
+    fn input_row_words(&self, l: &Layer) -> u64;
+
+    /// Output-tile row width in words (drives the shared output buffer).
+    fn output_row_words(&self, l: &Layer) -> u64;
+
+    /// Weight-gradient accumulation tile depth in i32 words.
+    fn weight_grad_tile_words(&self, l: &Layer, dv: &DesignVars) -> u64;
+
+    /// Layer-private buffers (pool indices, ReLU masks, BN statistic
+    /// registers); appended to the buffer plan.
+    fn layer_buffers(&self, l: &Layer, dv: &DesignVars,
+                     out: &mut Vec<BufferSpec>) {
+        let _ = (l, dv, out);
+    }
+
+    /// Control-ROM word for the global control logic.
+    fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord;
+}
+
+/// The registry dispatch: the one place a layer kind maps to its
+/// descriptor.  Everything in `compiler/`, `sim/` and `hw/` reaches
+/// layer semantics through this function.
+pub fn for_layer(l: &Layer) -> &'static dyn LayerOps {
+    match l {
+        Layer::Conv { .. } => &ConvOps,
+        Layer::Pool { .. } => &PoolOps,
+        Layer::Fc { .. } => &FcOps,
+        Layer::Bn { .. } => &BnOps,
+    }
+}
+
+// ---------------------------------------------------------------- conv
+
+pub struct ConvOps;
+
+impl LayerOps for ConvOps {
+    fn kind(&self) -> &'static str {
+        "conv"
+    }
+
+    fn out_geom(&self, l: &Layer) -> Geom {
+        let Layer::Conv { cout, h, w, .. } = *l else { unreachable!() };
+        Geom { c: cout, h, w }
+    }
+
+    fn weight_shape(&self, l: &Layer) -> Option<Vec<usize>> {
+        let Layer::Conv { cin, cout, k, .. } = *l else { unreachable!() };
+        Some(vec![cout, cin, k, k])
+    }
+
+    fn bias_elems(&self, l: &Layer) -> usize {
+        let Layer::Conv { cout, .. } = *l else { unreachable!() };
+        cout
+    }
+
+    fn macs_fp(&self, l: &Layer) -> u64 {
+        let Layer::Conv { cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        (cout * h * w * cin * k * k) as u64
+    }
+
+    fn macs_wu(&self, l: &Layer) -> u64 {
+        let Layer::Conv { cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        // every (of, if) kernel-gradient plane convolves a full
+        // gradient map: Nof*Nif*Nk*Nk output taps x Noy*Nox each
+        (cout * cin * k * k * h * w) as u64
+    }
+
+    fn fused_relu(&self, l: &Layer) -> bool {
+        let Layer::Conv { relu, .. } = *l else { unreachable!() };
+        relu
+    }
+
+    fn modules(&self, l: &Layer) -> Vec<Module> {
+        if self.fused_relu(l) {
+            vec![Module::ReluUnit, Module::ScalingUnit]
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn fp_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                -> Vec<Step> {
+        let Layer::Conv { ref name, cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        let in_b = (cin * h * w) as u64 * W16;
+        let w_b = ((cout * cin * k * k) + cout) as u64 * W16;
+        let out_b = (cout * h * w) as u64 * W16;
+        // ReLU is affiliated (fused in the artifact); masks stay on
+        // chip, so no separate step/traffic.
+        vec![Step {
+            phase: Phase::Fp,
+            layer: name.clone(),
+            op: OpKind::ConvFp,
+            key: true,
+            artifact: Some(format!("conv_fp_{name}_{}", ctx.tag)),
+            dram_read_bytes: in_b + w_b,
+            dram_write_bytes: out_b,
+            tiles: act_tiles(dv, cin, h)
+                + act_tiles(dv, cout, h)
+                + cout.div_ceil(dv.pof) as u64,
+            out_shape: vec![cout, h, w],
+        }]
+    }
+
+    fn bp_wu_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                   -> Vec<Step> {
+        let Layer::Conv { ref name, cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        let mut steps = Vec::new();
+        // WU: read input acts + local grads + old accumulated grads;
+        // write new accumulated grads (i32 in DRAM)
+        let dw_elems = (cout * cin * k * k) as u64;
+        steps.push(Step {
+            phase: Phase::Wu,
+            layer: name.clone(),
+            op: OpKind::ConvWu,
+            key: true,
+            artifact: Some(format!("conv_wu_{name}_{}", ctx.tag)),
+            dram_read_bytes: ((cin * h * w) + (cout * h * w)) as u64
+                * W16
+                + dw_elems * W32,
+            dram_write_bytes: dw_elems * W32 + (cout as u64) * W32,
+            tiles: act_tiles(dv, cin, h)
+                + act_tiles(dv, cout, h)
+                + 2 * cout.div_ceil(dv.pof) as u64,
+            out_shape: vec![cout, cin, k, k],
+        });
+        if !ctx.is_first {
+            // BP conv through transposable weights
+            steps.push(Step {
+                phase: Phase::Bp,
+                layer: name.clone(),
+                op: OpKind::ConvBp,
+                key: true,
+                artifact: Some(format!("conv_bp_{name}_{}", ctx.tag)),
+                dram_read_bytes: ((cout * h * w) + (cout * cin * k * k))
+                    as u64
+                    * W16,
+                dram_write_bytes: (cin * h * w) as u64 * W16,
+                tiles: act_tiles(dv, cout, h)
+                    + act_tiles(dv, cin, h)
+                    + cout.div_ceil(dv.pof) as u64,
+                out_shape: vec![cin, h, w],
+            });
+            // scaling unit when the layer below fuses a ReLU (its
+            // binary activation-gradient mask scales the propagated
+            // gradient); only conv masks have AOT artifacts
+            if let Some(b) = ctx.below {
+                let b_ops = for_layer(b);
+                if b_ops.fused_relu(b) {
+                    let artifact = if b_ops.kind() == "conv" {
+                        Some(format!("smask_{}_{}", b.name(), ctx.tag))
+                    } else {
+                        None // BN masks are golden-backend-only
+                    };
+                    steps.push(Step {
+                        phase: Phase::Bp,
+                        layer: name.clone(),
+                        op: OpKind::ScaleMask,
+                        key: false,
+                        artifact,
+                        dram_read_bytes: 0,
+                        dram_write_bytes: 0,
+                        tiles: 0,
+                        out_shape: vec![cin, h, w],
+                    });
+                }
+            }
+        }
+        steps
+    }
+
+    fn logic_cycles(&self, dv: &DesignVars, l: &Layer, op: OpKind)
+                    -> u64 {
+        let Layer::Conv { cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        match op {
+            OpKind::ConvFp => {
+                mac_array::conv_cycles(dv, cin, cout, h, w, k).cycles
+            }
+            OpKind::ConvBp => {
+                mac_array::conv_cycles(dv, cout, cin, h, w, k).cycles
+            }
+            OpKind::ConvWu => {
+                mac_array::wu_cycles(dv, cin, cout, h, w, k).cycles
+            }
+            OpKind::WeightUpdate => {
+                (self.weight_elems(l) as u64).div_ceil(dv.pof as u64)
+            }
+            _ => 0,
+        }
+    }
+
+    fn phase_cost(&self, dv: &DesignVars, l: &Layer, phase: Phase,
+                  is_first: bool) -> Option<LogicCost> {
+        let Layer::Conv { cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        match phase {
+            Phase::Fp => Some(mac_array::conv_cycles(dv, cin, cout, h,
+                                                     w, k)),
+            Phase::Bp => {
+                if is_first {
+                    None
+                } else {
+                    // if/of interchange: same loop volume
+                    Some(mac_array::conv_cycles(dv, cout, cin, h, w, k))
+                }
+            }
+            Phase::Wu => Some(mac_array::wu_cycles(dv, cin, cout, h, w,
+                                                   k)),
+        }
+    }
+
+    fn input_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Conv { cin, w, .. } = *l else { unreachable!() };
+        (cin * (w + 2)) as u64
+    }
+
+    fn output_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Conv { w, .. } = *l else { unreachable!() };
+        w as u64
+    }
+
+    fn weight_grad_tile_words(&self, l: &Layer, dv: &DesignVars) -> u64 {
+        let Layer::Conv { cin, k, .. } = *l else { unreachable!() };
+        (dv.pof * cin * k * k) as u64
+    }
+
+    fn layer_buffers(&self, l: &Layer, _dv: &DesignVars,
+                     out: &mut Vec<BufferSpec>) {
+        let Layer::Conv { ref name, cout, h, w, relu, .. } = *l else {
+            unreachable!()
+        };
+        // per-relu-layer binary activation-gradient buffer
+        if relu {
+            out.push(BufferSpec {
+                name: format!("mask_{name}"),
+                group: BufferGroup::ActGradientMask,
+                words: (cout * h * w) as u64,
+                bits_per_word: 1,
+                double: false,
+            });
+        }
+    }
+
+    fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord {
+        let Layer::Conv { ref name, cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        ControlWord {
+            layer: name.clone(),
+            kind: "conv",
+            nif: cin,
+            nof: cout,
+            nox: w,
+            noy: h,
+            nkx: k,
+            tiles_y: h.div_ceil(dv.tile_rows),
+            tiles_of: cout.div_ceil(dv.pof),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- pool
+
+pub struct PoolOps;
+
+impl LayerOps for PoolOps {
+    fn kind(&self) -> &'static str {
+        "pool"
+    }
+
+    fn out_geom(&self, l: &Layer) -> Geom {
+        let Layer::Pool { c, h, w, k, .. } = *l else { unreachable!() };
+        Geom { c, h: h / k, w: w / k }
+    }
+
+    fn weight_shape(&self, _l: &Layer) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn bias_elems(&self, _l: &Layer) -> usize {
+        0
+    }
+
+    fn macs_fp(&self, _l: &Layer) -> u64 {
+        0
+    }
+
+    fn macs_wu(&self, _l: &Layer) -> u64 {
+        0
+    }
+
+    fn modules(&self, _l: &Layer) -> Vec<Module> {
+        vec![Module::MaxPoolUnit, Module::UpsampleUnit]
+    }
+
+    fn fp_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                -> Vec<Step> {
+        let Layer::Pool { ref name, c, h, w, k } = *l else {
+            unreachable!()
+        };
+        let in_b = (c * h * w) as u64 * W16;
+        let out_b = (c * (h / k) * (w / k)) as u64 * W16;
+        vec![Step {
+            phase: Phase::Fp,
+            layer: name.clone(),
+            op: OpKind::Pool,
+            key: true,
+            artifact: Some(format!("pool_{name}_{}", ctx.tag)),
+            dram_read_bytes: in_b,
+            dram_write_bytes: out_b,
+            tiles: act_tiles(dv, c, h),
+            out_shape: vec![c, h / k, w / k],
+        }]
+    }
+
+    fn bp_wu_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                   -> Vec<Step> {
+        let Layer::Pool { ref name, c, h, w, k } = *l else {
+            unreachable!()
+        };
+        // upsample + scale: reads pooled gradient, writes expanded;
+        // indices and masks live on chip (affiliated scaling)
+        let in_b = (c * (h / k) * (w / k)) as u64 * W16;
+        let out_b = (c * h * w) as u64 * W16;
+        vec![Step {
+            phase: Phase::Bp,
+            layer: name.clone(),
+            op: OpKind::Upsample,
+            key: true,
+            artifact: Some(format!("ups_{name}_{}", ctx.tag)),
+            dram_read_bytes: in_b,
+            dram_write_bytes: out_b,
+            tiles: act_tiles(dv, c, h),
+            out_shape: vec![c, h, w],
+        }]
+    }
+
+    fn logic_cycles(&self, dv: &DesignVars, l: &Layer, op: OpKind)
+                    -> u64 {
+        let Layer::Pool { c, h, w, k, .. } = *l else { unreachable!() };
+        match op {
+            OpKind::Pool | OpKind::Upsample => {
+                mac_array::pool_cycles(dv, c, h, w, k)
+            }
+            _ => 0,
+        }
+    }
+
+    fn phase_cost(&self, dv: &DesignVars, l: &Layer, phase: Phase,
+                  _is_first: bool) -> Option<LogicCost> {
+        let Layer::Pool { c, h, w, k, .. } = *l else { unreachable!() };
+        match phase {
+            Phase::Fp | Phase::Bp => {
+                let cycles = mac_array::pool_cycles(dv, c, h, w, k);
+                Some(LogicCost { cycles, useful_macs: 0,
+                                 utilization: 0.0 })
+            }
+            Phase::Wu => None,
+        }
+    }
+
+    fn input_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Pool { c, w, .. } = *l else { unreachable!() };
+        (c * w) as u64
+    }
+
+    fn output_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Pool { w, k, .. } = *l else { unreachable!() };
+        (w / k) as u64
+    }
+
+    fn weight_grad_tile_words(&self, _l: &Layer, _dv: &DesignVars)
+                              -> u64 {
+        0
+    }
+
+    fn layer_buffers(&self, l: &Layer, _dv: &DesignVars,
+                     out: &mut Vec<BufferSpec>) {
+        let Layer::Pool { ref name, c, h, w, k } = *l else {
+            unreachable!()
+        };
+        // per-pool-layer index buffer (2 bits for 2x2 windows)
+        let idx_bits = ((k * k) as f64).log2().ceil() as u64;
+        out.push(BufferSpec {
+            name: format!("idx_{name}"),
+            group: BufferGroup::PoolIndex,
+            words: (c * (h / k) * (w / k)) as u64,
+            bits_per_word: idx_bits.max(1),
+            double: false,
+        });
+    }
+
+    fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord {
+        let Layer::Pool { ref name, c, h, w, k } = *l else {
+            unreachable!()
+        };
+        ControlWord {
+            layer: name.clone(),
+            kind: "pool",
+            nif: c,
+            nof: c,
+            nox: w / k,
+            noy: h / k,
+            nkx: k,
+            tiles_y: h.div_ceil(dv.tile_rows),
+            tiles_of: c.div_ceil(dv.pof),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ fc
+
+pub struct FcOps;
+
+impl LayerOps for FcOps {
+    fn kind(&self) -> &'static str {
+        "fc"
+    }
+
+    fn out_geom(&self, l: &Layer) -> Geom {
+        let Layer::Fc { cout, .. } = *l else { unreachable!() };
+        Geom { c: cout, h: 1, w: 1 }
+    }
+
+    fn weight_shape(&self, l: &Layer) -> Option<Vec<usize>> {
+        let Layer::Fc { cin, cout, .. } = *l else { unreachable!() };
+        Some(vec![cout, cin])
+    }
+
+    fn bias_elems(&self, l: &Layer) -> usize {
+        let Layer::Fc { cout, .. } = *l else { unreachable!() };
+        cout
+    }
+
+    fn macs_fp(&self, l: &Layer) -> u64 {
+        let Layer::Fc { cin, cout, .. } = *l else { unreachable!() };
+        (cin * cout) as u64
+    }
+
+    fn macs_wu(&self, l: &Layer) -> u64 {
+        self.macs_fp(l)
+    }
+
+    fn modules(&self, _l: &Layer) -> Vec<Module> {
+        vec![Module::FlattenUnit, Module::FcUnit]
+    }
+
+    fn fp_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                -> Vec<Step> {
+        let Layer::Fc { ref name, cin, cout } = *l else {
+            unreachable!()
+        };
+        let w_b = ((cin * cout) + cout) as u64 * W16;
+        vec![Step {
+            phase: Phase::Fp,
+            layer: name.clone(),
+            op: OpKind::FcFp,
+            key: true,
+            artifact: Some(format!("fc_fp_{}", ctx.tag)),
+            dram_read_bytes: (cin as u64) * W16 + w_b,
+            dram_write_bytes: (cout as u64) * W16,
+            tiles: cin.div_ceil(dv.pof * dv.tile_rows) as u64 + 1,
+            out_shape: vec![cout],
+        }]
+    }
+
+    fn bp_wu_steps(&self, l: &Layer, dv: &DesignVars, ctx: &StepCtx)
+                   -> Vec<Step> {
+        let Layer::Fc { ref name, cin, cout } = *l else {
+            unreachable!()
+        };
+        // WU: outer product; gradients accumulate in DRAM (i32)
+        let dw_elems = (cin * cout) as u64;
+        let mut steps = vec![
+            Step {
+                phase: Phase::Wu,
+                layer: name.clone(),
+                op: OpKind::FcWu,
+                key: true,
+                artifact: Some(format!("fc_wu_{}", ctx.tag)),
+                dram_read_bytes: (cin as u64) * W16 + dw_elems * W32,
+                dram_write_bytes: dw_elems * W32 + (cout as u64) * W32,
+                tiles: cin.div_ceil(dv.pof * dv.tile_rows) as u64 * 2,
+                out_shape: vec![cout, cin],
+            },
+            // BP: transposed weights; the gradient re-enters the
+            // feature-map domain with the geometry this layer consumed
+            Step {
+                phase: Phase::Bp,
+                layer: name.clone(),
+                op: OpKind::FcBp,
+                key: true,
+                artifact: Some(format!("fc_bp_{}", ctx.tag)),
+                dram_read_bytes: ((cin * cout) as u64 + cout as u64)
+                    * W16,
+                dram_write_bytes: (cin as u64) * W16,
+                tiles: cin.div_ceil(dv.pof * dv.tile_rows) as u64 + 1,
+                out_shape: ctx.in_geom.shape(),
+            },
+        ];
+        // consumer-applies-the-mask: a relu-fused layer directly below
+        // fc (no pool in between) gets its scaling-unit step here,
+        // matching golden::backward's fc-side mask
+        if let Some(b) = ctx.below {
+            let b_ops = for_layer(b);
+            if b_ops.fused_relu(b) {
+                let artifact = if b_ops.kind() == "conv" {
+                    Some(format!("smask_{}_{}", b.name(), ctx.tag))
+                } else {
+                    None // BN masks are golden-backend-only
+                };
+                steps.push(Step {
+                    phase: Phase::Bp,
+                    layer: name.clone(),
+                    op: OpKind::ScaleMask,
+                    key: false,
+                    artifact,
+                    dram_read_bytes: 0,
+                    dram_write_bytes: 0,
+                    tiles: 0,
+                    out_shape: ctx.in_geom.shape(),
+                });
+            }
+        }
+        steps
+    }
+
+    fn logic_cycles(&self, dv: &DesignVars, l: &Layer, op: OpKind)
+                    -> u64 {
+        let Layer::Fc { cin, cout, .. } = *l else { unreachable!() };
+        match op {
+            OpKind::FcFp | OpKind::FcBp | OpKind::FcWu => {
+                mac_array::fc_cycles(dv, cin, cout).cycles
+            }
+            OpKind::WeightUpdate => {
+                (self.weight_elems(l) as u64).div_ceil(dv.pof as u64)
+            }
+            _ => 0,
+        }
+    }
+
+    fn phase_cost(&self, dv: &DesignVars, l: &Layer, _phase: Phase,
+                  _is_first: bool) -> Option<LogicCost> {
+        let Layer::Fc { cin, cout, .. } = *l else { unreachable!() };
+        Some(mac_array::fc_cycles(dv, cin, cout))
+    }
+
+    fn input_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Fc { cin, .. } = *l else { unreachable!() };
+        cin as u64
+    }
+
+    fn output_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Fc { cout, .. } = *l else { unreachable!() };
+        cout as u64
+    }
+
+    fn weight_grad_tile_words(&self, l: &Layer, dv: &DesignVars) -> u64 {
+        let Layer::Fc { cin, .. } = *l else { unreachable!() };
+        (dv.pof * cin) as u64
+    }
+
+    fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord {
+        let Layer::Fc { ref name, cin, cout } = *l else {
+            unreachable!()
+        };
+        ControlWord {
+            layer: name.clone(),
+            kind: "fc",
+            nif: cin,
+            nof: cout,
+            nox: 1,
+            noy: 1,
+            nkx: 1,
+            tiles_y: 1,
+            tiles_of: cout.div_ceil(dv.pof),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ bn
+
+/// Integer batch normalization (§IV-B, after FxpNet) — the first layer
+/// added purely through the registry.  FP normalizes with the running
+/// statistics (one multiply + shift + add per pixel; statistics refresh
+/// only at batch end, off the critical path) and streams per-image
+/// channel sums to the DRAM statistic accumulators; BP scales the
+/// gradient by the same constant and accumulates the gamma/beta
+/// gradients in the same pass.  Golden-backend numerics live in
+/// `nn::bn`.
+pub struct BnOps;
+
+impl LayerOps for BnOps {
+    fn kind(&self) -> &'static str {
+        "bn"
+    }
+
+    fn out_geom(&self, l: &Layer) -> Geom {
+        let Layer::Bn { c, h, w, .. } = *l else { unreachable!() };
+        Geom { c, h, w }
+    }
+
+    fn weight_shape(&self, l: &Layer) -> Option<Vec<usize>> {
+        let Layer::Bn { c, .. } = *l else { unreachable!() };
+        Some(vec![c]) // gamma
+    }
+
+    fn bias_elems(&self, l: &Layer) -> usize {
+        let Layer::Bn { c, .. } = *l else { unreachable!() };
+        c // beta
+    }
+
+    fn macs_fp(&self, l: &Layer) -> u64 {
+        let Layer::Bn { c, h, w, .. } = *l else { unreachable!() };
+        (c * h * w) as u64 // one multiply per pixel
+    }
+
+    fn macs_wu(&self, l: &Layer) -> u64 {
+        // the gamma-gradient multiply (g * xhat) per pixel
+        self.macs_fp(l)
+    }
+
+    fn fused_relu(&self, l: &Layer) -> bool {
+        let Layer::Bn { relu, .. } = *l else { unreachable!() };
+        relu
+    }
+
+    fn stat_tensors(&self, l: &Layer) -> Vec<(String, Vec<usize>)> {
+        let Layer::Bn { ref name, c, .. } = *l else { unreachable!() };
+        // per-batch accumulators of per-image channel means (FA) and
+        // second moments (2*FA); merged like gradients, folded into the
+        // running statistics at batch end (nn::bn::ema_update)
+        vec![
+            (format!("sm_{name}"), vec![c]),
+            (format!("sq_{name}"), vec![c]),
+        ]
+    }
+
+    fn state_tensors(&self, l: &Layer) -> Vec<(String, Vec<usize>)> {
+        let Layer::Bn { ref name, c, .. } = *l else { unreachable!() };
+        // running mean (FA) and variance (2*FA)
+        vec![
+            (format!("rm_{name}"), vec![c]),
+            (format!("rv_{name}"), vec![c]),
+        ]
+    }
+
+    fn modules(&self, l: &Layer) -> Vec<Module> {
+        let mut mods = vec![Module::BatchNormUnit];
+        if self.fused_relu(l) {
+            mods.push(Module::ReluUnit);
+            mods.push(Module::ScalingUnit);
+        }
+        mods
+    }
+
+    fn fp_steps(&self, l: &Layer, dv: &DesignVars, _ctx: &StepCtx)
+                -> Vec<Step> {
+        let Layer::Bn { ref name, c, h, w, .. } = *l else {
+            unreachable!()
+        };
+        let act_b = (c * h * w) as u64 * W16;
+        // per-channel mean/var/gamma/beta registers in, per-image
+        // statistic contributions out (i32 accumulators in DRAM)
+        let par_b = 4 * c as u64 * W16;
+        let stat_b = 2 * c as u64 * W32;
+        vec![Step {
+            phase: Phase::Fp,
+            layer: name.clone(),
+            op: OpKind::BnFp,
+            key: true,
+            artifact: None, // golden-backend-only (no Pallas kernel yet)
+            dram_read_bytes: act_b + par_b,
+            dram_write_bytes: act_b + stat_b,
+            tiles: act_tiles(dv, c, h) + 1,
+            out_shape: vec![c, h, w],
+        }]
+    }
+
+    fn bp_wu_steps(&self, l: &Layer, dv: &DesignVars, _ctx: &StepCtx)
+                   -> Vec<Step> {
+        let Layer::Bn { ref name, c, h, w, .. } = *l else {
+            unreachable!()
+        };
+        let act_b = (c * h * w) as u64 * W16;
+        // statistics-as-constants backward: scale the gradient and
+        // fold dgamma/dbeta into their i32 DRAM accumulators in the
+        // same pass (read scale + old accumulators, write both back)
+        vec![Step {
+            phase: Phase::Bp,
+            layer: name.clone(),
+            op: OpKind::BnBp,
+            key: true,
+            artifact: None, // golden-backend-only
+            dram_read_bytes: act_b + c as u64 * W16 + 2 * c as u64 * W32,
+            dram_write_bytes: act_b + 2 * c as u64 * W32,
+            tiles: act_tiles(dv, c, h) + 1,
+            out_shape: vec![c, h, w],
+        }]
+    }
+
+    fn logic_cycles(&self, dv: &DesignVars, l: &Layer, op: OpKind)
+                    -> u64 {
+        let Layer::Bn { c, h, w, .. } = *l else { unreachable!() };
+        match op {
+            OpKind::BnFp | OpKind::BnBp => {
+                mac_array::bn_cycles(dv, c, h, w)
+            }
+            OpKind::WeightUpdate => {
+                (self.weight_elems(l) as u64).div_ceil(dv.pof as u64)
+            }
+            _ => 0,
+        }
+    }
+
+    fn phase_cost(&self, dv: &DesignVars, l: &Layer, phase: Phase,
+                  _is_first: bool) -> Option<LogicCost> {
+        let Layer::Bn { c, h, w, .. } = *l else { unreachable!() };
+        match phase {
+            Phase::Fp | Phase::Bp => {
+                let cycles = mac_array::bn_cycles(dv, c, h, w);
+                let useful = (c * h * w) as u64;
+                Some(LogicCost {
+                    cycles,
+                    useful_macs: useful,
+                    utilization: useful as f64
+                        / (cycles as f64 * dv.mac_count() as f64),
+                })
+            }
+            // gamma/beta gradients ride the BnBp pass
+            Phase::Wu => None,
+        }
+    }
+
+    fn input_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Bn { c, w, .. } = *l else { unreachable!() };
+        (c * w) as u64 // elementwise: no halo
+    }
+
+    fn output_row_words(&self, l: &Layer) -> u64 {
+        let Layer::Bn { w, .. } = *l else { unreachable!() };
+        w as u64
+    }
+
+    fn weight_grad_tile_words(&self, l: &Layer, _dv: &DesignVars)
+                              -> u64 {
+        let Layer::Bn { c, .. } = *l else { unreachable!() };
+        2 * c as u64 // dgamma + dbeta accumulators
+    }
+
+    fn layer_buffers(&self, l: &Layer, _dv: &DesignVars,
+                     out: &mut Vec<BufferSpec>) {
+        let Layer::Bn { ref name, c, h, w, relu } = *l else {
+            unreachable!()
+        };
+        // per-channel statistic/parameter registers: mean, variance,
+        // precomputed scale, beta (i32 words so the variance fits)
+        out.push(BufferSpec {
+            name: format!("bn_{name}"),
+            group: BufferGroup::BnStats,
+            words: 4 * c as u64,
+            bits_per_word: 32,
+            double: false,
+        });
+        if relu {
+            out.push(BufferSpec {
+                name: format!("mask_{name}"),
+                group: BufferGroup::ActGradientMask,
+                words: (c * h * w) as u64,
+                bits_per_word: 1,
+                double: false,
+            });
+        }
+    }
+
+    fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord {
+        let Layer::Bn { ref name, c, h, w, .. } = *l else {
+            unreachable!()
+        };
+        ControlWord {
+            layer: name.clone(),
+            kind: "bn",
+            nif: c,
+            nof: c,
+            nox: w,
+            noy: h,
+            nkx: 1,
+            tiles_y: h.div_ceil(dv.tile_rows),
+            tiles_of: c.div_ceil(dv.pof),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Network;
+
+    #[test]
+    fn registry_agrees_with_layer_delegates() {
+        // the Layer convenience methods delegate here; the two views
+        // must be the same numbers on every layer of both topologies
+        for net in [Network::cifar(1), Network::cifar_bn(1)] {
+            for l in &net.layers {
+                let ops = for_layer(l);
+                assert_eq!(ops.out_geom(l).elems(), l.out_elems(),
+                           "{}", l.name());
+                assert_eq!(ops.weight_elems(l), l.weight_elems());
+                assert_eq!(ops.bias_elems(l), l.bias_elems());
+                assert_eq!(ops.macs_fp(l), l.macs_fp());
+                assert_eq!(ops.macs_bp(l), l.macs_bp());
+                assert_eq!(ops.macs_wu(l), l.macs_wu());
+                assert_eq!(ops.fused_relu(l), l.fused_relu());
+            }
+        }
+    }
+
+    #[test]
+    fn kinds_and_geometry_chain() {
+        let net = Network::cifar_bn(1);
+        let kinds: Vec<&str> = net
+            .layers
+            .iter()
+            .map(|l| for_layer(l).kind())
+            .collect();
+        assert_eq!(&kinds[..5], &["conv", "bn", "conv", "bn", "pool"]);
+        assert_eq!(*kinds.last().unwrap(), "fc");
+        // geometry chains down to the classifier
+        let mut geom = Geom { c: 3, h: 32, w: 32 };
+        for l in &net.layers {
+            assert!(geom.elems() > 0, "degenerate input to {}", l.name());
+            geom = for_layer(l).out_geom(l);
+        }
+        assert_eq!(geom, Geom { c: 10, h: 1, w: 1 });
+    }
+
+    #[test]
+    fn bn_descriptor_inventory() {
+        let net = Network::cifar_bn(1);
+        let bn = net
+            .layers
+            .iter()
+            .find(|l| for_layer(l).kind() == "bn")
+            .unwrap();
+        let ops = for_layer(bn);
+        assert_eq!(ops.weight_elems(bn), 16); // gamma
+        assert_eq!(ops.bias_elems(bn), 16); // beta
+        assert!(ops.fused_relu(bn));
+        let stats = ops.stat_tensors(bn);
+        assert_eq!(stats.len(), 2);
+        assert!(stats[0].0.starts_with("sm_"));
+        assert!(stats[1].0.starts_with("sq_"));
+        assert_eq!(stats[0].1, vec![16]);
+        let states = ops.state_tensors(bn);
+        assert_eq!(states.len(), 2);
+        assert!(states[0].0.starts_with("rm_"));
+        assert!(states[1].0.starts_with("rv_"));
+        assert!(ops.modules(bn).contains(&Module::BatchNormUnit));
+    }
+
+    #[test]
+    fn conv_and_fc_have_no_stats() {
+        let net = Network::cifar(1);
+        for l in &net.layers {
+            assert!(for_layer(l).stat_tensors(l).is_empty());
+            assert!(for_layer(l).state_tensors(l).is_empty());
+        }
+    }
+}

@@ -13,11 +13,10 @@ pub mod event;
 use std::collections::HashMap;
 
 use crate::compiler::{Accelerator, OpKind, Step};
-use crate::config::Layer;
 use crate::hw::bram::overlap_latency;
 use crate::hw::dram::DramModel;
 use crate::hw::link::LinkModel;
-use crate::hw::mac_array::{self, Phase};
+use crate::hw::mac_array::Phase;
 
 /// Cost of one scheduled step.
 #[derive(Debug, Clone, Copy, Default)]
@@ -171,63 +170,28 @@ impl SimReport {
 const PIPELINE_FILL: u64 = 16;
 
 /// Logic cycles for one scheduled step (shared with the event-driven
-/// model in [`event`]).
+/// model in [`event`]).  Per-layer op costs come from the layer-ops
+/// registry; only the layer-less ops (the loss/scaling function units
+/// and the cluster ring) are costed here.
 pub fn logic_cycles_for_step(acc: &Accelerator, step: &Step) -> u64 {
-    let dv = &acc.dv;
-    let layer = acc
-        .net
-        .layers
-        .iter()
-        .find(|l| l.name() == step.layer);
     match step.op {
-        OpKind::ConvFp => {
-            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
-            else {
-                return 0;
-            };
-            mac_array::conv_cycles(dv, *cin, *cout, *h, *w, *k).cycles
-        }
-        OpKind::ConvBp => {
-            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
-            else {
-                return 0;
-            };
-            mac_array::conv_cycles(dv, *cout, *cin, *h, *w, *k).cycles
-        }
-        OpKind::ConvWu => {
-            let Some(Layer::Conv { cin, cout, h, w, k, .. }) = layer
-            else {
-                return 0;
-            };
-            mac_array::wu_cycles(dv, *cin, *cout, *h, *w, *k).cycles
-        }
-        OpKind::Pool | OpKind::Upsample => {
-            let Some(Layer::Pool { c, h, w, k, .. }) = layer else {
-                return 0;
-            };
-            mac_array::pool_cycles(dv, *c, *h, *w, *k)
-        }
-        OpKind::FcFp | OpKind::FcBp | OpKind::FcWu => {
-            let Some(Layer::Fc { cin, cout, .. }) = layer else {
-                return 0;
-            };
-            mac_array::fc_cycles(dv, *cin, *cout).cycles
-        }
         OpKind::ScaleMask | OpKind::LossGrad => {
             // affiliated elementwise units keep pace with the datapath
             8
         }
-        OpKind::WeightUpdate => {
-            // new-weight computation: one MAC-ish op per weight through
-            // the Pof-wide update unit
-            let Some(l) = layer else { return 0 };
-            (l.weight_elems() as u64).div_ceil(dv.pof as u64)
-        }
         OpKind::AllReduce => {
             // fold the received gradient chunk into the local
             // accumulator through the Pof-wide update datapath
-            (step.dram_write_bytes / 4).div_ceil(dv.pof as u64)
+            (step.dram_write_bytes / 4).div_ceil(acc.dv.pof as u64)
         }
+        op => acc
+            .net
+            .layers
+            .iter()
+            .find(|l| l.name() == step.layer)
+            .map_or(0, |l| {
+                crate::ops::for_layer(l).logic_cycles(&acc.dv, l, op)
+            }),
     }
 }
 
@@ -523,6 +487,37 @@ mod tests {
         assert_eq!(r4.cluster_cycles_per_iteration()
                        - r4.sharded_cycles_per_iteration(4),
                    r4.allreduce.latency_cycles);
+    }
+
+    #[test]
+    fn bn_network_simulates_with_bn_costs() {
+        let acc = RtlCompiler::default()
+            .compile(&Network::cifar_bn(1), &DesignVars::for_scale(1))
+            .unwrap();
+        let r = simulate(&acc, 40);
+        // every bn layer costs cycles in FP and BP
+        let bn_fp: u64 = r
+            .steps
+            .iter()
+            .filter(|(_, _, op, _)| *op == OpKind::BnFp)
+            .map(|(_, _, _, c)| c.latency_cycles)
+            .sum();
+        let bn_bp: u64 = r
+            .steps
+            .iter()
+            .filter(|(_, _, op, _)| *op == OpKind::BnBp)
+            .map(|(_, _, _, c)| c.latency_cycles)
+            .sum();
+        assert!(bn_fp > 0 && bn_bp > 0);
+        // elementwise normalization is cheap next to the convolutions
+        let plain = sim(1, 40);
+        let ratio = r.cycles_per_image() / plain.cycles_per_image();
+        assert!(ratio > 1.0 && ratio < 1.6, "bn overhead ratio {ratio}");
+        // and the per-layer table covers the bn layers
+        let t = per_layer_latency(&r);
+        for l in ["n1", "n3", "n6"] {
+            assert!(t.contains_key(l), "{l} missing");
+        }
     }
 
     #[test]

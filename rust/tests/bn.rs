@@ -1,0 +1,306 @@
+//! End-to-end integer batch-norm coverage (ISSUE 4 acceptance): a BN
+//! network parses, compiles, simulates, and trains with loss
+//! decreasing; training is bit-identical across every tested
+//! workers x accelerators grouping (the BN statistic merge rule rides
+//! the same fixed-order accumulator machinery as gradients); and a BN
+//! checkpoint kill-and-resume round trip — params, optimizer state,
+//! running statistics, metrics — is bit-for-bit identical to never
+//! having stopped.
+
+use std::path::PathBuf;
+
+use stratus::ckpt::Cursor;
+use stratus::compiler::{OpKind, RtlCompiler};
+use stratus::config::{DesignVars, Network};
+use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
+use stratus::data::Synthetic;
+use stratus::sim::simulate;
+
+const SEED: u64 = 7;
+const BATCH: usize = 4;
+const IMAGES: u64 = 12; // 3 batches per epoch
+const EPOCHS: u64 = 2;
+const KILL_AFTER: u64 = 2;
+
+const TINY_BN_CFG: &str = "\
+name tinybn
+input 3 8 8
+conv c1 8 k3 s1 p1
+bn n1 relu
+conv c2 8 k3 s1 p1
+bn n2 relu
+pool p1 2
+fc fc 10
+loss hinge
+";
+
+fn tiny_bn_net() -> Network {
+    Network::parse(TINY_BN_CFG).unwrap()
+}
+
+fn trainer(workers: usize, accelerators: usize) -> Trainer {
+    Trainer::new(&tiny_bn_net(), &DesignVars::for_scale(1), BATCH, 0.02,
+                 0.9, Backend::Golden, None)
+        .unwrap()
+        .with_workers(workers)
+        .with_accelerators(accelerators)
+}
+
+fn tmp_ckpt(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stratus_bn_test_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join("ckpt.stratus")
+}
+
+/// Everything the BN bit-identity contract covers: parameters, the
+/// running statistics, the full optimizer/stat accumulator state, and
+/// the deterministic metrics.
+#[derive(Debug, PartialEq)]
+struct Signature {
+    params: Vec<i32>,
+    running: Vec<Vec<i32>>,
+    grad_accs: Vec<Vec<i32>>,
+    momenta: Vec<Vec<i32>>,
+    counts: Vec<usize>,
+    images: u64,
+    batches: u64,
+    loss_sum_bits: u64,
+}
+
+fn signature(t: &Trainer) -> Signature {
+    Signature {
+        params: t.flat_params(),
+        running: t
+            .acc
+            .net
+            .state_order()
+            .iter()
+            .map(|n| t.params.get(n).unwrap().data().to_vec())
+            .collect(),
+        grad_accs: t
+            .param_states()
+            .iter()
+            .map(|(_, s)| s.grad_acc.data().to_vec())
+            .collect(),
+        momenta: t
+            .param_states()
+            .iter()
+            .map(|(_, s)| s.momentum.data().to_vec())
+            .collect(),
+        counts: t.param_states().iter().map(|(_, s)| s.count).collect(),
+        images: t.metrics.images,
+        batches: t.metrics.batches,
+        loss_sum_bits: t.metrics.loss_sum.to_bits(),
+    }
+}
+
+#[test]
+fn bn_net_parses_compiles_simulates_and_trains() {
+    let net = tiny_bn_net();
+    // compiles with BN steps in the schedule
+    let acc = RtlCompiler::default()
+        .compile(&net, &DesignVars::for_scale(1))
+        .unwrap();
+    assert!(acc
+        .schedule
+        .per_image
+        .iter()
+        .any(|s| s.op == OpKind::BnFp));
+    assert!(acc
+        .schedule
+        .per_image
+        .iter()
+        .any(|s| s.op == OpKind::BnBp));
+    // simulates with nonzero cycles
+    let r = simulate(&acc, BATCH);
+    assert!(r.cycles_per_image() > 0.0);
+    // trains with loss decreasing over epochs
+    let mut t = trainer(1, 1);
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let batch = data.batch(0, BATCH);
+    let first = t.train_batch(&batch).unwrap();
+    let mut last = first;
+    for _ in 0..8 {
+        last = t.train_batch(&batch).unwrap();
+    }
+    assert!(last < first, "bn loss {first} -> {last}");
+    // and the running statistics left their init values
+    let rv = t.params.get("rv_n1").unwrap();
+    assert!(rv.data().iter().any(|&v| v != 1 << 16),
+            "running variance never moved");
+}
+
+#[test]
+fn bn_training_bit_identical_across_parallelism() {
+    // the acceptance grid: {1,2,4} workers x {1,3} accelerators must
+    // produce bit-identical params, running stats, optimizer state,
+    // and exact loss sums after multiple batches (stats refresh between
+    // batches, so divergence would compound and be caught)
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let batch = data.batch(0, 10);
+    let mut reference = trainer(1, 1);
+    for _ in 0..3 {
+        reference.train_batch(&batch).unwrap();
+    }
+    let want = signature(&reference);
+    for &workers in &[1usize, 2, 4] {
+        for &accels in &[1usize, 3] {
+            if (workers, accels) == (1, 1) {
+                continue;
+            }
+            let mut t = trainer(workers, accels);
+            for _ in 0..3 {
+                t.train_batch(&batch).unwrap();
+            }
+            let got = signature(&t);
+            assert_eq!(got, want,
+                       "{workers}w x {accels}a diverged from 1x1");
+        }
+    }
+}
+
+#[test]
+fn bn_kill_and_resume_is_bit_identical() {
+    // train K batches, checkpoint, drop the trainer, resume in a fresh
+    // one, finish: equal to the uninterrupted run — including the BN
+    // running statistics and stat accumulators
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let cfg_plain = TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: None,
+        max_batches: None,
+    };
+    for &(workers, accels) in &[(1usize, 1usize), (2, 3)] {
+        let tag = format!("w{workers}a{accels}");
+        let mut full = trainer(workers, accels);
+        let end = full
+            .run(&data, &cfg_plain, Cursor::start(SEED, IMAGES),
+                 |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(end, Cursor { epoch: EPOCHS, batch: 0, seed: SEED,
+                                 images: IMAGES });
+
+        let path = tmp_ckpt(&tag);
+        let killed_cfg = TrainRun {
+            checkpoint: Some(CheckpointPolicy {
+                path: path.clone(),
+                every_batches: KILL_AFTER,
+            }),
+            max_batches: Some(KILL_AFTER),
+            ..cfg_plain.clone()
+        };
+        let mut killed = trainer(workers, accels);
+        let stopped = killed
+            .run(&data, &killed_cfg, Cursor::start(SEED, IMAGES),
+                 |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(stopped.batch, KILL_AFTER, "{tag}");
+        drop(killed); // the "crash"
+
+        let mut resumed = trainer(workers, accels);
+        let cur = resumed.resume_from(&path).unwrap();
+        assert_eq!(cur, stopped, "{tag}: cursor did not round-trip");
+        // the restored running statistics match a fresh partial run
+        let mut partial = trainer(workers, accels);
+        let partial_cfg = TrainRun {
+            max_batches: Some(KILL_AFTER),
+            ..cfg_plain.clone()
+        };
+        partial
+            .run(&data, &partial_cfg, Cursor::start(SEED, IMAGES),
+                 |_, _| Ok(()))
+            .unwrap();
+        for name in resumed.acc.net.state_order() {
+            assert_eq!(resumed.params.get(&name).unwrap(),
+                       partial.params.get(&name).unwrap(),
+                       "{tag}: {name} not restored bit-exactly");
+        }
+
+        let end2 = resumed
+            .run(&data, &cfg_plain, cur, |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(end2, end);
+        assert_eq!(signature(&full), signature(&resumed),
+                   "{tag}: resumed run diverged from uninterrupted");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}
+
+#[test]
+fn bn_checkpoint_resumes_at_different_parallelism() {
+    // a BN checkpoint taken at 1x1 resumes at 4x3: grouping is
+    // irrelevant to gradients AND to the statistic merge
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let cfg = TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: None,
+        max_batches: None,
+    };
+    let mut full = trainer(1, 1);
+    full.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(()))
+        .unwrap();
+
+    let path = tmp_ckpt("cross");
+    let killed_cfg = TrainRun {
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: KILL_AFTER,
+        }),
+        max_batches: Some(KILL_AFTER),
+        ..cfg.clone()
+    };
+    let mut killed = trainer(1, 1);
+    killed
+        .run(&data, &killed_cfg, Cursor::start(SEED, IMAGES),
+             |_, _| Ok(()))
+        .unwrap();
+    drop(killed);
+
+    let mut resumed = trainer(4, 3);
+    let cur = resumed.resume_from(&path).unwrap();
+    resumed.run(&data, &cfg, cur, |_, _| Ok(())).unwrap();
+    assert_eq!(full.flat_params(), resumed.flat_params());
+    for name in full.acc.net.state_order() {
+        assert_eq!(full.params.get(&name).unwrap(),
+                   resumed.params.get(&name).unwrap(),
+                   "{name} diverged across parallelism");
+    }
+    assert_eq!(full.metrics.loss_sum.to_bits(),
+               resumed.metrics.loss_sum.to_bits());
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn bn_checkpoint_refuses_plain_topology() {
+    // a BN checkpoint must not restore into the bn-free twin (layer
+    // list differs => fingerprint differs)
+    let data = Synthetic::new(10, (3, 8, 8), SEED, 0.3);
+    let path = tmp_ckpt("fpr");
+    let cfg = TrainRun {
+        epochs: 1,
+        images: IMAGES,
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 1,
+        }),
+        max_batches: Some(1),
+    };
+    let mut t = trainer(1, 1);
+    t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(()))
+        .unwrap();
+
+    let plain = Network::parse(
+        "name tinybn\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 \
+         k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+    .unwrap();
+    let mut other = Trainer::new(&plain, &DesignVars::for_scale(1),
+                                 BATCH, 0.02, 0.9, Backend::Golden, None)
+        .unwrap();
+    let err = other.resume_from(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
