@@ -13,31 +13,39 @@
 
 use anyhow::Result;
 
-use stratus::compiler::RtlCompiler;
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
 use stratus::fixed::dequantize;
+use stratus::session::{Session, Spec};
 
 fn main() -> Result<()> {
     // 1. a conv -> bn+relu topology in the text grammar (`bn <name>
-    //    [relu]`); Network::cifar_bn(1|2|4) builds the full-size family
-    let net = Network::parse(
-        "name tinybn\n\
-         input 3 8 8\n\
-         conv c1 8 k3 s1 p1\n\
-         bn n1 relu\n\
-         conv c2 8 k3 s1 p1\n\
-         bn n2 relu\n\
-         pool p1 2\n\
-         fc fc 10\n\
-         loss hinge\n",
-    )?;
-    let dv = DesignVars::for_scale(1);
+    //    [relu]`) inside one spec; `.preset("bn1x"|"bn2x"|"bn4x")`
+    //    selects the full-size family instead.  The builder is also
+    //    where BN's golden-backend-only rule is enforced — a
+    //    `.backend(Backend::PerOp)` here would be a typed SpecError.
+    let spec = Spec::builder()
+        .net_inline(
+            "name tinybn\n\
+             input 3 8 8\n\
+             conv c1 8 k3 s1 p1\n\
+             bn n1 relu\n\
+             conv c2 8 k3 s1 p1\n\
+             bn n2 relu\n\
+             pool p1 2\n\
+             fc fc 10\n\
+             loss hinge\n",
+        )
+        .batch(8)
+        .lr(0.02)
+        .momentum(0.9)
+        .workers(2)
+        .build()?;
+    let session = Session::new(spec)?;
+    let net = session.network();
 
     // 2. the registry gives bn layers schedule steps, buffers, a
     //    control-ROM word, and a batchnorm_unit in the module list
-    let acc = RtlCompiler::default().compile(&net, &dv)?;
+    let acc = session.compile()?;
     println!("compiled {}: {} layers, {} per-image steps, modules: {}",
              net.name,
              net.layers.len(),
@@ -50,9 +58,7 @@ fn main() -> Result<()> {
 
     // 3. train: per-image schedule + batch-end weight update + the
     //    deterministic BN statistic refresh
-    let mut trainer =
-        Trainer::new(&net, &dv, 8, 0.02, 0.9, Backend::Golden, None)?
-            .with_workers(2);
+    let mut trainer = session.trainer()?;
     let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
     let batch = data.batch(0, 8);
     for step in 0..8 {

@@ -11,11 +11,10 @@
 
 use anyhow::Result;
 
-use stratus::compiler::{calibrate, RtlCompiler};
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::compiler::calibrate;
+use stratus::config::Network;
 use stratus::data::Synthetic;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "\
 name  tiny-vision-5x5
@@ -30,20 +29,27 @@ loss  euclid
 ";
 
 fn main() -> Result<()> {
-    let net = Network::parse(NET_CFG)?;
+    let net: Network = Network::parse(NET_CFG)?;
     println!("parsed `{}`: {} layers, {} parameters, loss {:?}",
              net.name, net.layers.len(), net.param_count(), net.loss);
 
-    let compiler = RtlCompiler::default();
+    // two design points over the same network: one spec each, the
+    // pof override riding on the per-scale defaults
     for (label, pof) in [("small array", 8), ("wide array", 32)] {
-        let mut dv = DesignVars::default();
-        dv.pof = pof;
-        let acc = compiler.compile(&net, &dv)?;
-        let sim = simulate(&acc, 16);
+        let session = Session::new(
+            Spec::builder()
+                .net_inline(NET_CFG)
+                .pof(pof)
+                .batch(16)
+                .build()?,
+        )?;
+        let acc = session.compile()?;
+        let sim = session.simulate()?;
         println!(
             "{label:<12} Pof={pof:<3} {} MACs: {} DSP, {:.1} Mbit, \
              {:.2} ms/image, {:.0} GOPS",
-            dv.mac_count(), acc.resources.dsp, acc.resources.bram_mbits,
+            session.design().mac_count(), acc.resources.dsp,
+            acc.resources.bram_mbits,
             sim.seconds_per_image() * 1e3, sim.gops()
         );
     }
@@ -55,8 +61,13 @@ fn main() -> Result<()> {
     println!("\nadaptive fixed-point calibration:\n{}", report.render());
 
     // train it (golden backend: no artifacts needed for custom nets)
-    let mut t = Trainer::new(&net, &DesignVars::default(), 8, 0.01, 0.9,
-                             Backend::Golden, None)?;
+    let spec = Spec::builder()
+        .net_inline(NET_CFG)
+        .batch(8)
+        .lr(0.01)
+        .momentum(0.9)
+        .build()?;
+    let mut t = Session::new(spec)?.trainer()?;
     let train = data.batch(0, 64);
     for epoch in 1..=4 {
         let mut loss = 0.0;

@@ -8,9 +8,8 @@
 
 use anyhow::Result;
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
+use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "\
 name  engine-demo
@@ -27,13 +26,11 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(8);
-    let net = Network::parse(NET_CFG)?;
-    let dv = DesignVars::for_scale(1);
     let data = Synthetic::new(10, (3, 16, 16), 7, 0.3);
     let batch = data.batch(0, 32);
 
-    println!("training {} for 3 batches of {} at each worker count",
-             net.name, batch.len());
+    println!("training engine-demo for 3 batches of {} at each worker \
+              count", batch.len());
     println!("{:<8} {:>10} {:>12} {:>16}", "workers", "images/s",
              "mean loss", "params");
 
@@ -42,9 +39,16 @@ fn main() -> Result<()> {
         .into_iter()
         .filter(|&w| w <= max_workers.max(1))
     {
-        let mut t = Trainer::new(&net, &dv, batch.len(), 0.02, 0.9,
-                                 Backend::Golden, None)?
-            .with_workers(workers);
+        // one spec per worker count — everything else identical, so
+        // the bit-identity comparison below is apples to apples
+        let spec = Spec::builder()
+            .net_inline(NET_CFG)
+            .batch(batch.len())
+            .lr(0.02)
+            .momentum(0.9)
+            .workers(workers)
+            .build()?;
+        let mut t = Session::new(spec)?.trainer()?;
         let mut loss = 0.0;
         for _ in 0..3 {
             loss = t.train_batch(&batch)?;

@@ -1,27 +1,34 @@
-//! Quickstart: compile the paper's CIFAR-10 1X accelerator, inspect the
-//! generated design, cycle-simulate it, and train a couple of batches
-//! through the golden backend (no artifacts needed).
+//! Quickstart: describe the paper's CIFAR-10 1X experiment as one
+//! `session::Spec`, compile the accelerator, inspect the generated
+//! design, cycle-simulate it, and train a couple of batches through
+//! the golden backend (no artifacts needed).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
 
 use stratus::compiler::RtlCompiler;
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec};
 
 fn main() -> Result<()> {
-    // 1. describe the network (or Network::parse a .cfg file) and the
-    //    FPGA design variables — the two inputs of the RTL compiler
-    let net = Network::cifar(1);
-    let dv = DesignVars::for_scale(1); // Pox=Poy=8, Pof=16, 240 MHz
+    // 1. one validated experiment description: the network preset (or
+    //    an inline/file network in the layer grammar), the design-
+    //    variable overrides, and the training hyper-parameters.
+    //    `spec.render()` serializes it — the same JSON `stratus train
+    //    --spec run.json` consumes.
+    let spec = Spec::builder()
+        .preset("1x") // Pox=Poy=8, Pof=16, 240 MHz per-scale defaults
+        .batch(10)
+        .lr(0.002)
+        .momentum(0.9)
+        .build()?;
+    let session = Session::new(spec)?;
+    let net = session.network();
 
     // 2. run the RTL compiler: module selection, schedule, buffers,
     //    resources, power, structural netlist
-    let compiler = RtlCompiler::default();
-    let acc = compiler.compile(&net, &dv)?;
+    let acc = session.compile()?;
     println!("compiled {}: {} modules, {} per-image schedule steps",
              net.name, acc.modules.len(), acc.schedule.per_image.len());
     println!("resources: {} DSP, {:.1} Mbit BRAM, {:.1} W total",
@@ -29,24 +36,24 @@ fn main() -> Result<()> {
              acc.power.total());
 
     // 3. cycle-simulate a training epoch (Table II methodology)
-    let sim = simulate(&acc, 40);
+    let sim = session.simulate()?;
     println!("simulated: {:.2} s / 50k-image epoch, {:.0} GOPS",
              sim.seconds_per_epoch(50_000), sim.gops());
 
     // 4. train two batches on the synthetic CIFAR-like task (golden
     //    backend: pure rust, bit-identical to the AOT artifacts)
-    let mut trainer = Trainer::new(&net, &dv, 10, 0.002, 0.9,
-                                   Backend::Golden, None)?;
+    let mut trainer = session.trainer()?;
+    let clock_hz = session.design().clock_mhz * 1e6;
     let data = Synthetic::cifar_like(7);
     for step in 0..2 {
         let batch = data.batch(step * 10, 10);
         let loss = trainer.train_batch(&batch)?;
         println!("batch {step}: mean loss {loss:.1} (simulated {:.1} ms)",
-                 trainer.metrics.sim_seconds(dv.clock_mhz * 1e6) * 1e3);
+                 trainer.metrics.sim_seconds(clock_hz) * 1e3);
     }
 
     // 5. emit the generated structural netlist
-    let verilog = compiler.verilog(&acc);
+    let verilog = RtlCompiler::default().verilog(&acc);
     println!("generated netlist: {} lines (see `stratus compile \
               --emit-verilog`)", verilog.lines().count());
     Ok(())

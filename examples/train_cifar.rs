@@ -19,10 +19,10 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::coordinator::Backend;
 use stratus::data::Synthetic;
 use stratus::nn::floatref::{image_f32, FTensor, FloatTrainer};
+use stratus::session::{Session, Spec};
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -47,18 +47,27 @@ fn main() -> Result<()> {
         bail!("artifacts missing — run `make artifacts` first");
     }
 
-    let net = Network::cifar(1);
-    let dv = DesignVars::for_scale(1);
-    let mut fixed =
-        Trainer::new(&net, &dv, batch, lr, 0.9, backend, Some(artifacts))?;
+    let spec = Spec::builder()
+        .preset("1x")
+        .backend(backend)
+        .artifacts(artifacts)
+        .batch(batch)
+        .lr(lr)
+        .momentum(0.9)
+        .build()?;
+    let session = Session::new(spec)?;
+    let clock_hz = session.design().clock_mhz * 1e6;
+    let mut fixed = session.trainer()?;
     // f32 reference starts from the SAME (dequantized) parameters
-    let mut float =
-        FloatTrainer::from_params(&net, &fixed.params, lr, 0.9)?;
+    let mut float = FloatTrainer::from_params(session.network(),
+                                              &fixed.params, lr, 0.9)?;
 
     let noise = env_f64("NOISE", 0.8);
     let data = Synthetic::new(10, (3, 32, 32), seed, noise);
     let train: Vec<_> = data.batch(0, images);
-    let test: Vec<_> = data.batch(1_000_000, 200);
+    // eval window right after the training window (the session
+    // convention: disjoint by construction at any IMAGES)
+    let test: Vec<_> = data.batch(images as u64, 200);
     let ftrain: Vec<(FTensor, usize)> = train
         .iter()
         .map(|s| (image_f32(&s.image), s.label))
@@ -95,7 +104,7 @@ fn main() -> Result<()> {
         println!("{:<6} {:>12.1} {:>9.1}% {:>9.1}% {:>12.2} {:>9.1}",
                  epoch, floss / nb as f64, acc_fixed * 100.0,
                  acc_float * 100.0,
-                 fixed.metrics.sim_seconds(dv.clock_mhz * 1e6),
+                 fixed.metrics.sim_seconds(clock_hz),
                  fixed.metrics.host_seconds);
     }
     println!("\ntrained {} images through {} PJRT step executions; \

@@ -8,20 +8,16 @@
 //! golden backend and reports accuracy + simulated epoch latency.
 //! `cargo bench --bench ablation_batch_size`
 
-use stratus::compiler::RtlCompiler;
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::config::Network;
 use stratus::data::Synthetic;
 use stratus::gpu_model::titan_xp;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec};
+
+const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
+                       conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
+                       loss hinge";
 
 fn main() {
-    let net = Network::parse(
-        "input 3 16 16\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
-         relu\npool p1 2\nfc fc 10\nloss hinge",
-    )
-    .unwrap();
-    let dv = DesignVars::default();
     let data = Synthetic::new(10, (3, 16, 16), 11, 0.4);
     let train = data.batch(0, 96);
     let test = data.batch(10_000, 100);
@@ -32,9 +28,14 @@ fn main() {
     println!("{:>5} {:>9} {:>10} {:>10}", "BS", "updates", "test acc",
              "mean loss");
     for bs in [2usize, 8, 32] {
-        let mut t = Trainer::new(&net, &dv, bs, 0.01, 0.9,
-                                 Backend::Golden, None)
+        let spec = Spec::builder()
+            .net_inline(NET_CFG)
+            .batch(bs)
+            .lr(0.01)
+            .momentum(0.9)
+            .build()
             .unwrap();
+        let mut t = Session::new(spec).unwrap().trainer().unwrap();
         let mut loss = 0.0;
         let mut n = 0;
         for _ in 0..budget_epochs {
@@ -52,11 +53,12 @@ fn main() {
     println!("\n=== throughput vs batch size (1X) ===");
     println!("{:>5} {:>12} {:>12}", "BS", "FPGA GOPS", "GPU GOPS");
     let cifar = Network::cifar(1);
-    let acc1 = RtlCompiler::default()
-        .compile(&cifar, &DesignVars::for_scale(1))
-        .unwrap();
     for bs in [1usize, 10, 40] {
-        let fpga = simulate(&acc1, bs).gops();
+        let paper = Session::new(
+            Spec::builder().preset("1x").batch(bs).build().unwrap(),
+        )
+        .unwrap();
+        let fpga = paper.simulate().unwrap().gops();
         let gpu = titan_xp(&cifar, bs).gops;
         println!("{:>5} {:>12.0} {:>12.1}", bs, fpga, gpu);
     }

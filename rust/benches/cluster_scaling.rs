@@ -13,11 +13,10 @@
 
 use std::time::Instant;
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
 use stratus::metrics::bench::{smoke_mode, ScalingBench};
 use stratus::metrics::cluster_scaling;
+use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
                        conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
@@ -25,8 +24,6 @@ const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
 
 fn main() {
     let smoke = smoke_mode();
-    let net = Network::parse(NET_CFG).unwrap();
-    let dv = DesignVars::for_scale(1);
     let data = Synthetic::new(10, (3, 16, 16), 23, 0.3);
     let batch_size = 32;
     let batches = if smoke { 1 } else { 4 };
@@ -38,14 +35,20 @@ fn main() {
              "images/s", "ms/image", "speedup", "vs 1 instance");
     let mut bench = ScalingBench::new("cluster_scaling", smoke);
     for instances in [1usize, 2, 4, 8] {
-        let mut t = Trainer::new(&net, &dv, batch_size, 0.02, 0.9,
-                                 Backend::Golden, None)
-            .unwrap()
-            .with_accelerators(instances);
+        let spec = Spec::builder()
+            .net_inline(NET_CFG)
+            .batch(batch_size)
+            .lr(0.02)
+            .momentum(0.9)
+            .accelerators(instances)
+            .build()
+            .unwrap();
+        let mut t = Session::new(spec).unwrap().trainer().unwrap();
         // warmup batch (identical across instance counts, so final
-        // params stay comparable): the first cluster batch pays a
-        // one-time compile+simulate for the all-reduce cost cache,
-        // which must not land in the timed region
+        // params stay comparable); the spec compiles the cluster
+        // design up front, so the all-reduce cost cache is already
+        // warm — the warmup keeps the measurement protocol symmetric
+        // with the engine bench
         t.train_batch(&train[..batch_size]).unwrap();
         let t0 = Instant::now();
         for chunk in train.chunks(batch_size) {

@@ -13,13 +13,10 @@
 
 use std::time::Instant;
 
-use stratus::compiler::RtlCompiler;
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
 use stratus::data::Synthetic;
 use stratus::metrics::bench::{smoke_mode, ScalingBench};
 use stratus::metrics::engine_scaling;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
                        conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
@@ -27,8 +24,6 @@ const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
 
 fn main() {
     let smoke = smoke_mode();
-    let net = Network::parse(NET_CFG).unwrap();
-    let dv = DesignVars::for_scale(1);
     let data = Synthetic::new(10, (3, 16, 16), 17, 0.3);
     let batch_size = 32;
     let batches = if smoke { 1 } else { 4 };
@@ -40,10 +35,15 @@ fn main() {
              "ms/image", "speedup", "vs sequential");
     let mut bench = ScalingBench::new("engine_throughput", smoke);
     for workers in [1usize, 2, 4, 8] {
-        let mut t = Trainer::new(&net, &dv, batch_size, 0.02, 0.9,
-                                 Backend::Golden, None)
-            .unwrap()
-            .with_workers(workers);
+        let spec = Spec::builder()
+            .net_inline(NET_CFG)
+            .batch(batch_size)
+            .lr(0.02)
+            .momentum(0.9)
+            .workers(workers)
+            .build()
+            .unwrap();
+        let mut t = Session::new(spec).unwrap().trainer().unwrap();
         // warmup batch (identical across worker counts, so final
         // params stay comparable); keeps the two scaling benches'
         // measurement protocol symmetric
@@ -64,10 +64,11 @@ fn main() {
               (1X @ BS 40) ===");
     println!("{}", engine_scaling(1, 40, &[1, 2, 4, 8, 16]));
 
-    let acc = RtlCompiler::default()
-        .compile(&Network::cifar(1), &DesignVars::for_scale(1))
-        .unwrap();
-    let r = simulate(&acc, 40);
+    let paper = Session::new(
+        Spec::builder().preset("1x").batch(40).build().unwrap(),
+    )
+    .unwrap();
+    let r = paper.simulate().unwrap();
     println!("single-instance per-image latency: {:.3} ms ({:.0} \
               images/s)",
              r.seconds_per_image() * 1e3, r.images_per_second());

@@ -6,16 +6,22 @@
 use std::path::Path;
 use std::time::Instant;
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::coordinator::Backend;
 use stratus::data::Synthetic;
+use stratus::session::{Session, Spec};
 
 fn bench_backend(backend: Backend, artifacts: Option<&Path>, n: usize)
                  -> Option<(f64, f64)> {
-    let net = Network::cifar(1);
-    let dv = DesignVars::for_scale(1);
-    let mut t =
-        Trainer::new(&net, &dv, n, 0.002, 0.9, backend, artifacts).ok()?;
+    let mut b = Spec::builder()
+        .preset("1x")
+        .backend(backend)
+        .batch(n)
+        .lr(0.002)
+        .momentum(0.9);
+    if let Some(dir) = artifacts {
+        b = b.artifacts(dir);
+    }
+    let mut t = Session::new(b.build().ok()?).ok()?.trainer().ok()?;
     let data = Synthetic::cifar_like(99);
     let batch = data.batch(0, n);
     // warmup (compiles artifacts on first use)

@@ -32,6 +32,7 @@
 //!   the artifacts; used for networks without artifacts, e.g. 2X/4X).
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -59,6 +60,45 @@ pub enum Backend {
     PerOp,
     Fused,
     Golden,
+}
+
+impl fmt::Display for Backend {
+    /// The canonical lowercase name, accepted back by [`FromStr`] —
+    /// used in spec files, CLI flags, and error messages.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Backend::Golden => "golden",
+            Backend::PerOp => "perop",
+            Backend::Fused => "fused",
+        })
+    }
+}
+
+/// Error from parsing a backend name (see [`Backend::from_str`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseBackendError(pub String);
+
+impl fmt::Display for ParseBackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown backend `{}` (golden|perop|fused)", self.0)
+    }
+}
+
+impl std::error::Error for ParseBackendError {}
+
+impl std::str::FromStr for Backend {
+    type Err = ParseBackendError;
+
+    /// Parse a backend name — shared by the CLI flag and the spec
+    /// parser, so the accepted spellings can never diverge.
+    fn from_str(s: &str) -> Result<Backend, ParseBackendError> {
+        match s {
+            "golden" => Ok(Backend::Golden),
+            "perop" | "per-op" => Ok(Backend::PerOp),
+            "fused" => Ok(Backend::Fused),
+            other => Err(ParseBackendError(other.to_string())),
+        }
+    }
 }
 
 /// Rolling training metrics.
@@ -169,6 +209,12 @@ pub struct Trainer {
     /// Engine worker shards for `train_batch` (1 = sequential, the
     /// hardware-faithful default; golden backend only beyond 1).
     pub workers: usize,
+    /// Dataset noise amplitude this run draws with.  Rides the
+    /// fingerprint (appended only when non-default) so a resume
+    /// cannot silently switch data distributions; the default is the
+    /// historical hard-coded CLI value, keeping pre-Spec checkpoints
+    /// byte-compatible.
+    pub noise: f64,
     /// Data-parallel accelerator instances for `train_batch` (1 = the
     /// single-device setup; golden backend only beyond 1).  Initialized
     /// from `dv.cluster`; results stay bit-identical at any count.
@@ -202,9 +248,14 @@ impl Trainer {
     /// Build a trainer.  `artifacts`: directory for PerOp/Fused backends;
     /// initial parameters load from the bundle when present, otherwise
     /// fall back to the deterministic rust init.
-    pub fn new(net: &Network, dv: &DesignVars, batch: usize, lr: f64,
-               momentum: f64, backend: Backend,
-               artifacts: Option<&Path>) -> Result<Trainer> {
+    ///
+    /// Crate-internal: the public construction path is
+    /// [`crate::session::Session::trainer`] (a validated
+    /// `session::Spec` drives every trainer), which keeps the 7
+    /// positional arguments from spreading to call sites again.
+    pub(crate) fn new(net: &Network, dv: &DesignVars, batch: usize,
+                      lr: f64, momentum: f64, backend: Backend,
+                      artifacts: Option<&Path>) -> Result<Trainer> {
         if backend != Backend::Golden && net.has_stats() {
             bail!(
                 "network `{}` contains batch-norm layers, which are \
@@ -336,6 +387,7 @@ impl Trainer {
             image_cycles,
             batch_cycles,
             workers: 1,
+            noise: crate::session::DEFAULT_NOISE,
             accelerators: dv.cluster.max(1),
             allreduce_cache,
             last_engine: None,
@@ -358,6 +410,14 @@ impl Trainer {
     /// same thing).
     pub fn with_workers(mut self, workers: usize) -> Trainer {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Set the dataset noise amplitude recorded in the fingerprint
+    /// (builder style; see the `noise` field).  Called by
+    /// `Session::trainer` with the spec's value.
+    pub fn with_noise(mut self, noise: f64) -> Trainer {
+        self.noise = noise;
         self
     }
 
@@ -431,36 +491,13 @@ impl Trainer {
     /// engine/cluster merge contract makes gradient grouping
     /// irrelevant, so a checkpoint taken at any `--workers` /
     /// `--accelerators` resumes at any other count.
+    /// The derivation (and the string format, byte-compatible with
+    /// pre-Spec checkpoints) lives in [`crate::session::fingerprint`]
+    /// — the canonical serialization of the fingerprint-relevant Spec
+    /// subset.
     pub fn fingerprint(&self) -> String {
-        let net = &self.acc.net;
-        let dv = &self.acc.dv;
-        let layers: Vec<String> =
-            net.layers.iter().map(|l| format!("{l:?}")).collect();
-        format!(
-            "stratus-ckpt net={} input={:?} nclass={} loss={:?} \
-             layers=[{}] hyper(lr_q16={},beta_q15={},batch={}) \
-             dv(pox={},poy={},pof={},clock_mhz={},dram_gbytes={},\
-             dram_efficiency={},load_balance={},double_buffer={},\
-             tile_rows={},data_bits={})",
-            net.name,
-            net.input,
-            net.nclass,
-            net.loss,
-            layers.join(";"),
-            self.hyper.lr_q16,
-            self.hyper.beta_q15,
-            self.hyper.batch,
-            dv.pox,
-            dv.poy,
-            dv.pof,
-            dv.clock_mhz,
-            dv.dram_gbytes,
-            dv.dram_efficiency,
-            dv.load_balance,
-            dv.double_buffer,
-            dv.tile_rows,
-            dv.data_bits,
-        )
+        crate::session::fingerprint(&self.acc.net, &self.acc.dv,
+                                    &self.hyper, self.noise)
     }
 
     /// Snapshot the complete training state (params, optimizer state,
@@ -1527,6 +1564,26 @@ mod tests {
                  |_, _| Ok(()))
             .unwrap_err();
         assert!(format!("{err:#}").contains("epoch width"), "{err:#}");
+    }
+
+    #[test]
+    fn backend_parses_and_displays_canonical_names() {
+        // FromStr/Display are shared by the CLI flag, the spec
+        // parser, and error messages — spellings must round-trip
+        for (name, backend) in [("golden", Backend::Golden),
+                                ("perop", Backend::PerOp),
+                                ("fused", Backend::Fused)] {
+            assert_eq!(name.parse::<Backend>().unwrap(), backend);
+            assert_eq!(backend.to_string(), name);
+        }
+        // the historical alias stays accepted
+        assert_eq!("per-op".parse::<Backend>().unwrap(),
+                   Backend::PerOp);
+        let err = "cuda".parse::<Backend>().unwrap_err();
+        assert_eq!(err.to_string(),
+                   "unknown backend `cuda` (golden|perop|fused)");
+        // parsing is case-sensitive like every other CLI token
+        assert!("Golden".parse::<Backend>().is_err());
     }
 
     #[test]

@@ -83,6 +83,97 @@ impl Json {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
     }
+
+    /// Render with two-space indentation and strict JSON string
+    /// escaping (control characters become `\uXXXX`), so the output is
+    /// always re-parseable — unlike [`fmt::Display`], which reuses
+    /// Rust's debug escapes.  Used for `--dump-spec` files meant to be
+    /// read back (and edited) by humans.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else {
+                "false"
+            }),
+            // JSON has no inf/NaN — fall back to null rather than
+            // emitting an unparseable token (callers that care
+            // validate finiteness before serializing, e.g.
+            // session::validate)
+            Json::Num(n) if !n.is_finite() => out.push_str("null"),
+            Json::Num(n) => out.push_str(&n.to_string()),
+            Json::Str(s) => escape_json(s, out),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    x.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    escape_json(k, out);
+                    out.push_str(": ");
+                    x.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+/// Escape `s` as a JSON string literal into `out`.
+fn escape_json(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl fmt::Display for Json {
@@ -333,6 +424,28 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\":1} x").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn pretty_output_reparses_identically() {
+        let j = Json::parse(
+            r#"{"a":[1,2,{"b":"line\nbreak","q":"say \"hi\""}],"c":{},"d":[],"e":null,"f":true}"#,
+        )
+        .unwrap();
+        let text = j.pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // readable: indented, one key per line
+        assert!(text.contains("\n  \"a\": ["));
+        assert!(text.ends_with("}\n"));
+    }
+
+    #[test]
+    fn pretty_escapes_control_characters_strictly() {
+        let j = Json::Str("ctl\u{1}tab\there".into());
+        let text = j.pretty();
+        assert!(text.contains("\\u0001"), "{text}");
+        assert!(text.contains("\\t"), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 
     #[test]

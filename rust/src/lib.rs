@@ -8,7 +8,9 @@
 //!   compiler ([`compiler`]), the accelerator's global control and
 //!   layer-by-layer training schedule ([`coordinator`]), the
 //!   batch-parallel training engine that shards batches across worker
-//!   threads with bit-identical results ([`engine`]), crash-safe
+//!   threads with bit-identical results ([`engine`]), the validated,
+//!   serializable experiment description that drives the CLI, library,
+//!   benches, and checkpoints ([`session`]), crash-safe
 //!   checkpoint/resume with bit-identical restarts ([`ckpt`]), a
 //!   cycle-accurate hardware model of the generated accelerator ([`hw`],
 //!   [`sim`]), and a PJRT runtime that executes the AOT-compiled
@@ -38,4 +40,5 @@ pub mod metrics;
 pub mod nn;
 pub mod ops;
 pub mod runtime;
+pub mod session;
 pub mod sim;

@@ -6,6 +6,15 @@
 //!   train     train a CNN through the coordinator (golden/perop/fused)
 //!   report    regenerate a paper table/figure (table2|table3|fig9|fig10)
 //!
+//! Every experiment-shaped subcommand (compile/simulate/train/
+//! calibrate) is a thin shell over [`stratus::session`]: flags build a
+//! validated `session::Spec`, and a `Session` does the actual work.
+//! compile/simulate/train additionally take `--spec run.json` (load a
+//! serialized spec; explicit flags still override it) and
+//! `--dump-spec out.json` (write the resolved spec and exit —
+//! `stratus train --spec out.json` then reproduces the identical run:
+//! same fingerprint, bit-identical training).
+//!
 //! Run `stratus` with no arguments for usage.  (The offline build
 //! environment vendors no CLI crates, so argument parsing is manual —
 //! but strict: every subcommand declares which flags take values and
@@ -13,18 +22,14 @@
 //! rather than a silent switch demotion, and unrecognized flags are
 //! rejected with a usage hint instead of being ignored.)
 
-use std::path::PathBuf;
+use std::path::Path;
 use std::process::exit;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use stratus::ckpt::Cursor;
 use stratus::compiler::{calibrate, RtlCompiler};
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
-use stratus::data::Synthetic;
 use stratus::metrics;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec, SpecBuilder, DEFAULT_SEED};
 
 /// Parsed arguments: `--key value` pairs, `--switch`es, positionals.
 struct Args {
@@ -77,42 +82,38 @@ impl Args {
             .map(|(_, v)| v.as_str())
     }
 
-    fn get_or(&self, key: &str, default: &str) -> String {
-        self.get(key).unwrap_or(default).to_string()
-    }
-
     fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
 
-    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .with_context(|| format!("--{key} wants an integer")),
-        }
+    /// The flag's value parsed as usize, `None` when absent.  (Range
+    /// validation — e.g. "workers must be at least 1" — lives in the
+    /// `SpecBuilder`, not here.)
+    fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .with_context(|| format!("--{key} wants an integer"))
+            })
+            .transpose()
     }
 
-    /// Like [`Args::usize_or`] but 0 is rejected — the one place zero
-    /// worker/instance/batch counts are normalized (the library-side
-    /// builders clamp 0 to 1; the CLI refuses it outright so a typo'd
-    /// `--workers 0` cannot silently train single-threaded).
-    fn usize_positive(&self, key: &str, default: usize) -> Result<usize> {
-        let v = self.usize_or(key, default)?;
-        if v == 0 {
-            bail!("--{key} must be at least 1");
-        }
-        Ok(v)
+    fn u64_opt(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .with_context(|| format!("--{key} wants an integer"))
+            })
+            .transpose()
     }
 
-    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
-        match self.get(key) {
-            None => Ok(default),
-            Some(v) => v
-                .parse()
-                .with_context(|| format!("--{key} wants a number")),
-        }
+    fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .with_context(|| format!("--{key} wants a number"))
+            })
+            .transpose()
     }
 }
 
@@ -120,10 +121,11 @@ impl Args {
 /// Anything not listed is rejected by [`Args::parse`].
 fn flag_spec(cmd: &str)
              -> Option<(Vec<&'static str>, Vec<&'static str>)> {
-    // design-point flags shared by compile/simulate/train
+    // design-point + spec-file flags shared by compile/simulate/train
     const DESIGN: &[&str] = &["net", "scale", "pox", "poy", "pof",
                               "clock-mhz", "dram-gbs", "tile-rows",
-                              "accelerators", "link-gbs"];
+                              "accelerators", "link-gbs", "spec",
+                              "dump-spec"];
     const DESIGN_SW: &[&str] = &["no-load-balance", "no-double-buffer"];
     let (design, extra, extra_sw): (bool, &[&str], &[&str]) = match cmd {
         "compile" => (true, &["emit-verilog"], &[]),
@@ -148,56 +150,117 @@ fn flag_spec(cmd: &str)
     Some((value_flags, switches))
 }
 
-fn load_network(args: &Args) -> Result<Network> {
+/// Flags -> spec: start from `--spec FILE` when given (defaults
+/// otherwise) and override with every explicitly present flag, so the
+/// precedence is always flag > spec file > default.  Args::parse has
+/// already gated which flags each subcommand accepts, so absent flags
+/// simply never fire here.
+fn build_spec(args: &Args) -> Result<Spec> {
+    let mut b: SpecBuilder = match args.get("spec") {
+        Some(file) => Spec::load(Path::new(file))?.to_builder(),
+        None => Spec::builder(),
+    };
     if let Some(file) = args.get("net") {
-        let text = std::fs::read_to_string(file)
-            .with_context(|| format!("reading {file}"))?;
-        return Network::parse(&text);
+        b = b.net_file(file);
+    } else if let Some(scale) = args.get("scale") {
+        b = b.preset(scale);
     }
-    let scale = args.get_or("scale", "1x");
-    // "bnNx" selects the §IV-B batch-norm topology at scale N
-    let (bn, tag) = match scale.strip_prefix("bn") {
-        Some(rest) => (true, rest),
-        None => (false, scale.as_str()),
-    };
-    let s = match tag {
-        "1x" | "1" => 1,
-        "2x" | "2" => 2,
-        "4x" | "4" => 4,
-        _ => bail!("unknown scale `{scale}` \
-                    (use 1x|2x|4x|bn1x|bn2x|bn4x or --net)"),
-    };
-    Ok(if bn { Network::cifar_bn(s) } else { Network::cifar(s) })
-}
-
-fn design_vars(args: &Args, net: &Network) -> Result<DesignVars> {
-    let scale = match net.scale_tag() {
-        "4x" => 4,
-        "2x" => 2,
-        _ => 1,
-    };
-    let mut dv = DesignVars::for_scale(scale);
-    dv.pox = args.usize_positive("pox", dv.pox)?;
-    dv.poy = args.usize_positive("poy", dv.poy)?;
-    dv.pof = args.usize_positive("pof", dv.pof)?;
-    dv.clock_mhz = args.f64_or("clock-mhz", dv.clock_mhz)?;
-    dv.dram_gbytes = args.f64_or("dram-gbs", dv.dram_gbytes)?;
-    dv.tile_rows = args.usize_positive("tile-rows", dv.tile_rows)?;
-    dv.cluster = args.usize_positive("accelerators", dv.cluster)?;
-    dv.link_gbytes = args.f64_or("link-gbs", dv.link_gbytes)?;
+    if let Some(v) = args.usize_opt("pox")? {
+        b = b.pox(v);
+    }
+    if let Some(v) = args.usize_opt("poy")? {
+        b = b.poy(v);
+    }
+    if let Some(v) = args.usize_opt("pof")? {
+        b = b.pof(v);
+    }
+    if let Some(v) = args.f64_opt("clock-mhz")? {
+        b = b.clock_mhz(v);
+    }
+    if let Some(v) = args.f64_opt("dram-gbs")? {
+        b = b.dram_gbytes(v);
+    }
+    if let Some(v) = args.usize_opt("tile-rows")? {
+        b = b.tile_rows(v);
+    }
+    if let Some(v) = args.usize_opt("accelerators")? {
+        b = b.accelerators(v);
+    }
+    if let Some(v) = args.f64_opt("link-gbs")? {
+        b = b.link_gbytes(v);
+    }
     if args.has("no-load-balance") {
-        dv.load_balance = false;
+        b = b.load_balance(false);
     }
     if args.has("no-double-buffer") {
-        dv.double_buffer = false;
+        b = b.double_buffer(false);
     }
-    Ok(dv)
+    if let Some(v) = args.usize_opt("batch")? {
+        b = b.batch(v);
+    }
+    if let Some(v) = args.u64_opt("epochs")? {
+        b = b.epochs(v);
+    }
+    if let Some(v) = args.u64_opt("images")? {
+        b = b.images(v);
+    }
+    if let Some(v) = args.usize_opt("eval")? {
+        b = b.eval(v);
+    }
+    if let Some(v) = args.f64_opt("lr")? {
+        b = b.lr(v);
+    }
+    if let Some(v) = args.f64_opt("momentum")? {
+        b = b.momentum(v);
+    }
+    if let Some(v) = args.u64_opt("seed")? {
+        b = b.seed(v);
+    }
+    if let Some(v) = args.usize_opt("workers")? {
+        b = b.workers(v);
+    }
+    if let Some(v) = args.get("backend") {
+        b = b.backend(v.parse()?);
+    }
+    if let Some(v) = args.get("artifacts") {
+        b = b.artifacts(v);
+    }
+    if let Some(v) = args.get("checkpoint-dir") {
+        b = b.checkpoint_dir(v);
+    }
+    if let Some(v) = args.u64_opt("checkpoint-every")? {
+        b = b.checkpoint_every(v);
+    }
+    if args.has("resume") {
+        b = b.resume(true);
+    }
+    Ok(b.build()?)
+}
+
+/// Handle `--dump-spec OUT`: write the resolved spec and skip the run.
+/// Returns true when the command is done.
+fn maybe_dump_spec(args: &Args, spec: &Spec) -> Result<bool> {
+    let Some(out) = args.get("dump-spec") else {
+        return Ok(false);
+    };
+    if out == "-" {
+        print!("{}", spec.render());
+    } else {
+        spec.save(Path::new(out))?;
+        println!("spec           : wrote {out} (rerun with --spec \
+                  {out})");
+    }
+    Ok(true)
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
-    let net = load_network(args)?;
-    let dv = design_vars(args, &net)?;
-    let acc = RtlCompiler::default().compile(&net, &dv)?;
+    let spec = build_spec(args)?;
+    if maybe_dump_spec(args, &spec)? {
+        return Ok(());
+    }
+    let session = Session::new(spec)?;
+    let (net, dv) = (session.network(), session.design());
+    let acc = session.compile()?;
     println!("== stratus RTL compiler ==");
     println!("network        : {} ({} layers, {} parameters)",
              net.name, net.layers.len(), net.param_count());
@@ -241,11 +304,14 @@ fn cmd_compile(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let net = load_network(args)?;
-    let dv = design_vars(args, &net)?;
-    let bs = args.usize_positive("batch", 40)?;
-    let acc = RtlCompiler::default().compile(&net, &dv)?;
-    let r = simulate(&acc, bs);
+    let spec = build_spec(args)?;
+    if maybe_dump_spec(args, &spec)? {
+        return Ok(());
+    }
+    let session = Session::new(spec)?;
+    let (net, dv) = (session.network(), session.design());
+    let bs = session.spec().batch;
+    let r = session.simulate()?;
     println!("== cycle simulation: {} @ BS {bs} ==", net.name);
     println!("{:<9} {:>12} {:>12} {:>12}", "phase", "logic cyc",
              "dram cyc", "latency cyc");
@@ -281,100 +347,42 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let net = load_network(args)?;
-    let dv = design_vars(args, &net)?;
-    let batch = args.usize_positive("batch", 40)?;
-    let epochs = args.usize_positive("epochs", 5)? as u64;
-    let images = args.usize_positive("images", 512)? as u64;
-    let eval_n = args.usize_positive("eval", 256)?;
-    let lr = args.f64_or("lr", 0.002)?;
-    let momentum = args.f64_or("momentum", 0.9)?;
-    let seed = args.usize_or("seed", 7)? as u64;
-    let workers = args.usize_positive("workers", 1)?;
-    let backend = match args.get_or("backend", "golden").as_str() {
-        "golden" => Backend::Golden,
-        "perop" | "per-op" => Backend::PerOp,
-        "fused" => Backend::Fused,
-        other => bail!("unknown backend `{other}`"),
-    };
-    let artifacts: Option<PathBuf> =
-        Some(PathBuf::from(args.get_or("artifacts", "artifacts")));
-    let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
-    let ckpt_every = args.usize_positive("checkpoint-every", 50)? as u64;
-    let resume = args.has("resume");
-    if ckpt_dir.is_none() && args.get("checkpoint-every").is_some() {
-        bail!("--checkpoint-every needs --checkpoint-dir (where the \
-               checkpoints go) — without it nothing would be saved");
+    let spec = build_spec(args)?;
+    if maybe_dump_spec(args, &spec)? {
+        return Ok(());
     }
-    let ckpt_path = ckpt_dir.as_ref().map(|d| d.join("ckpt.stratus"));
-
-    let mut t = Trainer::new(&net, &dv, batch, lr, momentum, backend,
-                             artifacts.as_deref())?
-        .with_workers(workers);
-    let start = if resume {
-        let path = ckpt_path.as_ref().ok_or_else(|| {
-            anyhow!("--resume needs --checkpoint-dir (where the \
-                     checkpoint lives)")
-        })?;
-        let cur = t.resume_from(path)?;
-        if args.get("seed").is_some() && cur.seed != seed {
-            bail!("--seed {seed} conflicts with the checkpoint's \
-                   recorded seed {}; drop --seed to continue the \
-                   recorded run",
-                  cur.seed);
-        }
-        if args.get("images").is_some() && cur.images != images {
-            bail!("--images {images} conflicts with the checkpoint's \
-                   recorded epoch width {}; drop --images to continue \
-                   the recorded run",
-                  cur.images);
-        }
+    let session = Session::new(spec)?;
+    let spec = session.spec();
+    let run = session.begin(spec.resume)?;
+    let start = run.start();
+    if spec.resume {
+        let path = session
+            .checkpoint_path()
+            .ok_or_else(|| anyhow!("resume requires a checkpoint"))?;
         println!("resumed        : {} -> epoch {}, batch {} (seed {}, \
                   {} images/epoch)",
-                 path.display(), cur.epoch + 1, cur.batch, cur.seed,
-                 cur.images);
-        cur
-    } else {
-        Cursor::start(seed, images)
-    };
-    // the cursor's recorded epoch width wins on resume (== `images`
-    // for fresh runs; an explicitly conflicting --images errored above)
-    let images = start.images;
-    println!("== training {} ({:?} backend, {} images, BS {batch}, \
-              {} accelerator{} x {} worker{}) ==",
-             net.name, backend, images, t.accelerators,
-             if t.accelerators == 1 { "" } else { "s" }, t.workers,
-             if t.workers == 1 { "" } else { "s" });
-    if let Some(dir) = &ckpt_dir {
-        std::fs::create_dir_all(dir).with_context(|| {
-            format!("creating checkpoint dir {}", dir.display())
-        })?;
+                 path.display(), start.epoch + 1, start.batch,
+                 start.seed, start.images);
     }
-    if start.epoch >= epochs {
-        if resume {
+    if run.finished() {
+        if spec.resume {
             println!("checkpoint already covers epoch {}; nothing to \
                       do (raise --epochs to train further)",
                      start.epoch);
         }
         return Ok(());
     }
-
-    let data = Synthetic::new(net.nclass, net.input, start.seed, 0.3);
-    let train: Vec<_> = data.batch(0, images as usize);
-    let test: Vec<_> = data.batch(1_000_000, eval_n);
-    let cfg = TrainRun {
-        epochs,
-        images,
-        checkpoint: ckpt_path.map(|path| CheckpointPolicy {
-            path,
-            every_batches: ckpt_every,
-        }),
-        max_batches: None,
-    };
-    let clock_hz = dv.clock_mhz * 1e6;
-    t.run(&data, &cfg, start, |tr, stats| {
-        let acc_tr = tr.evaluate(&train)?;
-        let acc_te = tr.evaluate(&test)?;
+    let t = run.trainer();
+    println!("== training {} ({} backend, {} images, BS {}, \
+              {} accelerator{} x {} worker{}) ==",
+             session.network().name, spec.backend, start.images,
+             spec.batch, t.accelerators,
+             if t.accelerators == 1 { "" } else { "s" }, t.workers,
+             if t.workers == 1 { "" } else { "s" });
+    let clock_hz = session.design().clock_mhz * 1e6;
+    run.execute(|tr, stats, ev| {
+        let acc_tr = tr.evaluate(ev.train)?;
+        let acc_te = tr.evaluate(ev.eval)?;
         println!(
             "epoch {:>3}: loss {:>10.1}  train-acc {:>5.1}%  \
              test-acc {:>5.1}%  sim {:>8.2}s  host {:>6.1}s  \
@@ -393,16 +401,30 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    // adaptive fixed-point calibration pass (paper §IV-B extension)
-    let net = load_network(args)?;
-    let n = args.usize_positive("samples", 16)?;
-    let seed = args.usize_or("seed", 7)? as u64;
-    let params = stratus::nn::init::init_params(&net, 1234);
+    // adaptive fixed-point calibration pass (paper §IV-B extension):
+    // the spec resolves the network; --samples stays command-local
+    let mut b = Spec::builder();
+    if let Some(file) = args.get("net") {
+        b = b.net_file(file);
+    } else if let Some(scale) = args.get("scale") {
+        b = b.preset(scale);
+    }
+    if let Some(v) = args.u64_opt("seed")? {
+        b = b.seed(v);
+    }
+    let session = Session::new(b.build()?)?;
+    let net = session.network();
+    let n = args.usize_opt("samples")?.unwrap_or(16);
+    if n == 0 {
+        bail!("--samples must be at least 1");
+    }
+    let seed = session.spec().seed.unwrap_or(DEFAULT_SEED);
+    let params = stratus::nn::init::init_params(net, 1234);
     let (c, h, w) = net.input;
     let data = stratus::data::Synthetic::new(net.nclass, (c, h, w), seed,
                                              0.3);
     let samples = data.batch(0, n);
-    let report = calibrate(&net, &params, &samples)?;
+    let report = calibrate(net, &params, &samples)?;
     println!("== adaptive fixed-point calibration: {} ({} samples) ==",
              net.name, report.samples);
     print!("{}", report.render());
@@ -463,6 +485,13 @@ stratus — compiler-based FPGA CNN-training accelerator (reproduction)
 
 USAGE: stratus <command> [flags]
 
+compile, simulate, and train also accept
+  --spec FILE       load a serialized session::Spec (JSON); explicit
+                    flags still override individual fields
+  --dump-spec OUT   write the resolved spec to OUT (or - for stdout)
+                    and exit without running — `--spec OUT` later
+                    reproduces the identical run
+
 COMMANDS:
   compile   --scale 1x|2x|4x | --net FILE   run the RTL compiler
             (--scale bn1x|bn2x|bn4x selects the batch-norm topology;
@@ -479,7 +508,12 @@ COMMANDS:
                                batch accumulation and weight update]
             [--link-gbs F      inter-accelerator link bandwidth, GB/s]
   train     --scale .. --backend golden|perop|fused --images N
-            --epochs N --batch N --lr F [--artifacts DIR --eval N]
+            --epochs N --batch N --lr F [--eval N]
+            [--artifacts DIR   AOT artifact bundle — required by the
+                               perop/fused backends (the golden
+                               backend runs artifact-free); the eval
+                               set is drawn right after the training
+                               window, so it never overlaps]
             [--workers N       shard each batch across N engine threads
                                (golden backend; bit-identical results)]
             [--accelerators N  train data-parallel across N simulated

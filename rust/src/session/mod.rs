@@ -1,0 +1,1429 @@
+//! `session` — one validated, serializable experiment description
+//! that drives the CLI, the library, the benches, and the checkpoints.
+//!
+//! The paper's pitch is an *automatic compiler*: the user states the
+//! network and the design constraints once and the toolchain derives
+//! everything else.  [`Spec`] is that single user-facing artifact on
+//! the training side: the network source (a named preset, inline
+//! grammar text, or a file), the [`DesignVars`] overrides, the SGD
+//! hyper-parameters, the backend, the parallelism, the synthetic-data
+//! parameters, and the checkpoint policy — all in one plain-data
+//! struct that serializes to JSON (via the vendored [`crate::jsonx`])
+//! and back without loss.
+//!
+//! Three layers:
+//!
+//! - [`SpecBuilder`] — the only construction path.  `build()` runs
+//!   every validation rule that used to be scattered through the CLI's
+//!   `cmd_train` (positive counts, backend-vs-batch-norm refusal,
+//!   checkpoint-cadence-without-a-directory, resume-without-a-
+//!   checkpoint, eval/train window overlap) and returns a typed
+//!   [`SpecError`] naming the exact constraint violated.
+//! - [`Spec`] — validated plain data.  `render()`/`parse()` round-trip
+//!   through JSON; `to_builder()` reopens a spec for overrides (the
+//!   CLI's `--spec file.json` + explicit-flag precedence).
+//! - [`Session`] — the execution facade: `compile()`, `simulate()`,
+//!   `trainer()`, and `train(observer)` / `resume(observer)` (or the
+//!   two-phase `begin(resume)` + [`Run::execute`] when the caller
+//!   wants to inspect the start cursor first, as the CLI does).
+//!
+//! # Fingerprint derivation
+//!
+//! [`fingerprint`] is the canonical serialization of the
+//! fingerprint-relevant subset of a resolved Spec — the network (every
+//! layer dimension), the loss, the quantized SGD hyper-parameters, and
+//! the design variables that feed the simulated-cycle metrics.  Worker
+//! and accelerator counts are deliberately excluded (the engine /
+//! cluster merge contract makes gradient grouping irrelevant), as are
+//! the data/checkpoint fields (the cursor carries those).  The format
+//! is byte-identical to the pre-Spec `Trainer::fingerprint` — which
+//! now delegates here — so existing `SCKP` version-1 checkpoints
+//! resume unchanged (pinned by `tests/session.rs`).
+//!
+//! # Eval window derivation
+//!
+//! The evaluation set is drawn *after* the training window: samples
+//! `[images, images + eval)` by default.  (The old CLI hard-coded
+//! offset 1'000'000, which collided with training data once `--images`
+//! reached it.)  An explicit `eval_offset` below the epoch width is
+//! rejected as [`SpecError::EvalOverlap`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use anyhow::{Context, Result};
+
+use crate::ckpt::Cursor;
+use crate::compiler::{Accelerator, RtlCompiler};
+use crate::config::{DesignVars, Network};
+use crate::coordinator::{Backend, CheckpointPolicy, EpochStats,
+                         ParseBackendError, TrainRun, Trainer};
+use crate::data::{Sample, Synthetic};
+use crate::jsonx::Json;
+use crate::nn::sgd::SgdHyper;
+use crate::sim::{simulate, SimReport};
+
+/// Spec file format version (the `"version"` key).
+pub const SPEC_VERSION: u32 = 1;
+
+/// Checkpoint file name inside a checkpoint directory.
+pub const CKPT_FILE: &str = "ckpt.stratus";
+
+/// Defaults applied by [`SpecBuilder::build`] (matching the historical
+/// CLI defaults, so flag-free invocations keep their meaning).
+pub const DEFAULT_BATCH: usize = 40;
+pub const DEFAULT_LR: f64 = 0.002;
+pub const DEFAULT_MOMENTUM: f64 = 0.9;
+pub const DEFAULT_EPOCHS: u64 = 5;
+pub const DEFAULT_IMAGES: u64 = 512;
+pub const DEFAULT_SEED: u64 = 7;
+pub const DEFAULT_EVAL: usize = 256;
+pub const DEFAULT_NOISE: f64 = 0.3;
+pub const DEFAULT_CKPT_EVERY: u64 = 50;
+
+// ---------------- typed validation errors ----------------
+
+/// Every constraint a [`Spec`] can violate, as a typed error.  The
+/// Display strings are part of the user-facing contract and pinned by
+/// `tests/session.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// A count field that must be >= 1 was 0.
+    NonPositive(&'static str),
+    /// A preset scale outside 1x|2x|4x|bn1x|bn2x|bn4x.
+    UnknownScale(String),
+    /// An unrecognized backend name.
+    Backend(ParseBackendError),
+    /// The network source failed to read or parse.
+    Net(String),
+    /// A runtime backend (perop/fused) with no artifacts directory.
+    BackendNeedsArtifacts(Backend),
+    /// A batch-norm network on a non-golden backend.
+    BnNeedsGolden { net: String, backend: Backend },
+    /// A checkpoint cadence with nowhere to write checkpoints.
+    CheckpointEveryWithoutDir,
+    /// Resume requested with no checkpoint directory configured.
+    ResumeWithoutCheckpoint,
+    /// An explicit seed conflicting with a checkpoint's recorded seed.
+    SeedConflict { given: u64, recorded: u64 },
+    /// An explicit epoch width conflicting with a checkpoint's.
+    ImagesConflict { given: u64, recorded: u64 },
+    /// An eval window that would overlap the training window.
+    EvalOverlap { offset: u64, images: u64 },
+    /// An unrecognized key in a spec JSON object (strict parsing, like
+    /// the CLI's strict flag handling: typos error, never no-op).
+    UnknownField { section: &'static str, key: String },
+    /// A spec JSON value of the wrong type.
+    FieldType { field: String, want: &'static str },
+    /// A required spec JSON field that was absent.
+    MissingField(&'static str),
+    /// A spec file written by a newer format.
+    UnsupportedVersion(i64),
+    /// A spec JSON node that should have been an object.
+    NotAnObject(&'static str),
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::NonPositive(name) => {
+                write!(f, "{name} must be at least 1")
+            }
+            SpecError::UnknownScale(s) => {
+                write!(f, "unknown scale `{s}` (use 1x|2x|4x|bn1x|bn2x|\
+                           bn4x, or an inline/file network)")
+            }
+            SpecError::Backend(e) => write!(f, "{e}"),
+            SpecError::Net(msg) => {
+                write!(f, "invalid network description: {msg}")
+            }
+            SpecError::BackendNeedsArtifacts(b) => {
+                write!(f, "backend {b} needs an artifacts directory \
+                           (pass --artifacts DIR or set \"artifacts\" \
+                           in the spec; the golden backend runs \
+                           artifact-free)")
+            }
+            SpecError::BnNeedsGolden { net, backend } => {
+                write!(f, "network `{net}` contains batch-norm layers, \
+                           which are golden-backend-only until Pallas \
+                           BN kernels land — backend {backend} cannot \
+                           train it")
+            }
+            SpecError::CheckpointEveryWithoutDir => {
+                write!(f, "checkpoint-every needs checkpoint-dir \
+                           (where the checkpoints go) — without it \
+                           nothing would be saved")
+            }
+            SpecError::ResumeWithoutCheckpoint => {
+                write!(f, "resume needs checkpoint-dir (where the \
+                           checkpoint lives)")
+            }
+            SpecError::SeedConflict { given, recorded } => {
+                write!(f, "seed {given} conflicts with the \
+                           checkpoint's recorded seed {recorded}; \
+                           drop the seed override to continue the \
+                           recorded run")
+            }
+            SpecError::ImagesConflict { given, recorded } => {
+                write!(f, "images {given} conflicts with the \
+                           checkpoint's recorded epoch width \
+                           {recorded}; drop the images override to \
+                           continue the recorded run")
+            }
+            SpecError::EvalOverlap { offset, images } => {
+                write!(f, "eval window starting at {offset} overlaps \
+                           the training window [0, {images}) — raise \
+                           eval_offset to at least the epoch width")
+            }
+            SpecError::UnknownField { section, key } => {
+                write!(f, "unknown field `{key}` in {section}")
+            }
+            SpecError::FieldType { field, want } => {
+                write!(f, "{field} wants {want}")
+            }
+            SpecError::MissingField(name) => {
+                write!(f, "missing required field {name}")
+            }
+            SpecError::UnsupportedVersion(v) => {
+                write!(f, "unsupported spec version {v} (this build \
+                           reads version {SPEC_VERSION})")
+            }
+            SpecError::NotAnObject(what) => {
+                write!(f, "{what} must be a JSON object")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+// ---------------- network source ----------------
+
+/// Where the network description comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetSource {
+    /// A named CIFAR-family preset: `1x|2x|4x` (and `bn1x|bn2x|bn4x`
+    /// for the §IV-B batch-norm topology).
+    Preset { scale: String },
+    /// Inline text in the layer grammar (see [`Network::parse`]).
+    Inline { text: String },
+    /// A `.cfg` file in the layer grammar, read at resolution time.
+    File { path: PathBuf },
+}
+
+impl NetSource {
+    pub fn preset(scale: impl Into<String>) -> NetSource {
+        NetSource::Preset { scale: scale.into() }
+    }
+
+    pub fn inline(text: impl Into<String>) -> NetSource {
+        NetSource::Inline { text: text.into() }
+    }
+
+    pub fn file(path: impl Into<PathBuf>) -> NetSource {
+        NetSource::File { path: path.into() }
+    }
+
+    /// Resolve to a [`Network`].
+    pub fn resolve(&self) -> Result<Network, SpecError> {
+        match self {
+            NetSource::Preset { scale } => {
+                let (bn, tag) = match scale.strip_prefix("bn") {
+                    Some(rest) => (true, rest),
+                    None => (false, scale.as_str()),
+                };
+                let s = match tag {
+                    "1x" | "1" => 1,
+                    "2x" | "2" => 2,
+                    "4x" | "4" => 4,
+                    _ => return Err(
+                        SpecError::UnknownScale(scale.clone())),
+                };
+                Ok(if bn {
+                    Network::cifar_bn(s)
+                } else {
+                    Network::cifar(s)
+                })
+            }
+            NetSource::Inline { text } => Network::parse(text)
+                .map_err(|e| SpecError::Net(format!("{e:#}"))),
+            NetSource::File { path } => {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    SpecError::Net(format!("reading {}: {e}",
+                                           path.display()))
+                })?;
+                Network::parse(&text).map_err(|e| {
+                    SpecError::Net(format!("{}: {e:#}", path.display()))
+                })
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            NetSource::Preset { scale } => {
+                m.insert("preset".to_string(), Json::Str(scale.clone()));
+            }
+            NetSource::Inline { text } => {
+                m.insert("inline".to_string(), Json::Str(text.clone()));
+            }
+            NetSource::File { path } => {
+                m.insert("file".to_string(),
+                         Json::Str(path.display().to_string()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<NetSource, SpecError> {
+        let m = j.as_obj().ok_or(SpecError::NotAnObject("net"))?;
+        check_keys(m, &["preset", "inline", "file"], "net")?;
+        match (m.get("preset"), m.get("inline"), m.get("file")) {
+            (Some(p), None, None) => Ok(NetSource::Preset {
+                scale: str_value(p, "net.preset")?,
+            }),
+            (None, Some(t), None) => Ok(NetSource::Inline {
+                text: str_value(t, "net.inline")?,
+            }),
+            (None, None, Some(f)) => Ok(NetSource::File {
+                path: PathBuf::from(str_value(f, "net.file")?),
+            }),
+            _ => Err(SpecError::FieldType {
+                field: "net".to_string(),
+                want: "exactly one of preset|inline|file",
+            }),
+        }
+    }
+}
+
+// ---------------- design overrides ----------------
+
+/// Sparse [`DesignVars`] overrides.  Unset fields keep the per-scale
+/// defaults (`DesignVars::for_scale` from the network's scale tag), so
+/// a spec stays minimal and scale-portable.  `cluster` is the
+/// data-parallel accelerator-instance count (the CLI's
+/// `--accelerators`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DesignOverrides {
+    pub pox: Option<usize>,
+    pub poy: Option<usize>,
+    pub pof: Option<usize>,
+    pub clock_mhz: Option<f64>,
+    pub dram_gbytes: Option<f64>,
+    pub tile_rows: Option<usize>,
+    pub cluster: Option<usize>,
+    pub link_gbytes: Option<f64>,
+    pub load_balance: Option<bool>,
+    pub double_buffer: Option<bool>,
+}
+
+impl DesignOverrides {
+    /// Apply onto per-scale defaults.
+    pub fn apply(&self, dv: &mut DesignVars) {
+        if let Some(v) = self.pox { dv.pox = v; }
+        if let Some(v) = self.poy { dv.poy = v; }
+        if let Some(v) = self.pof { dv.pof = v; }
+        if let Some(v) = self.clock_mhz { dv.clock_mhz = v; }
+        if let Some(v) = self.dram_gbytes { dv.dram_gbytes = v; }
+        if let Some(v) = self.tile_rows { dv.tile_rows = v; }
+        if let Some(v) = self.cluster { dv.cluster = v; }
+        if let Some(v) = self.link_gbytes { dv.link_gbytes = v; }
+        if let Some(v) = self.load_balance { dv.load_balance = v; }
+        if let Some(v) = self.double_buffer { dv.double_buffer = v; }
+    }
+
+    fn is_empty(&self) -> bool {
+        *self == DesignOverrides::default()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut us = |k: &str, v: Option<usize>| {
+            if let Some(v) = v {
+                m.insert(k.to_string(), Json::Num(v as f64));
+            }
+        };
+        us("pox", self.pox);
+        us("poy", self.poy);
+        us("pof", self.pof);
+        us("tile_rows", self.tile_rows);
+        us("cluster", self.cluster);
+        let mut fs = |k: &str, v: Option<f64>| {
+            if let Some(v) = v {
+                m.insert(k.to_string(), Json::Num(v));
+            }
+        };
+        fs("clock_mhz", self.clock_mhz);
+        fs("dram_gbytes", self.dram_gbytes);
+        fs("link_gbytes", self.link_gbytes);
+        if let Some(v) = self.load_balance {
+            m.insert("load_balance".to_string(), Json::Bool(v));
+        }
+        if let Some(v) = self.double_buffer {
+            m.insert("double_buffer".to_string(), Json::Bool(v));
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<DesignOverrides, SpecError> {
+        let m = j.as_obj().ok_or(SpecError::NotAnObject("design"))?;
+        check_keys(m,
+                   &["pox", "poy", "pof", "clock_mhz", "dram_gbytes",
+                     "tile_rows", "cluster", "link_gbytes",
+                     "load_balance", "double_buffer"],
+                   "design")?;
+        Ok(DesignOverrides {
+            pox: usize_key(m, "pox", "design")?,
+            poy: usize_key(m, "poy", "design")?,
+            pof: usize_key(m, "pof", "design")?,
+            clock_mhz: f64_key(m, "clock_mhz", "design")?,
+            dram_gbytes: f64_key(m, "dram_gbytes", "design")?,
+            tile_rows: usize_key(m, "tile_rows", "design")?,
+            cluster: usize_key(m, "cluster", "design")?,
+            link_gbytes: f64_key(m, "link_gbytes", "design")?,
+            load_balance: bool_key(m, "load_balance", "design")?,
+            double_buffer: bool_key(m, "double_buffer", "design")?,
+        })
+    }
+}
+
+/// Checkpoint policy: where checkpoints go and how often.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointSpec {
+    /// Directory holding `ckpt.stratus` (created on first use).
+    pub dir: PathBuf,
+    /// Save every N batches (epoch ends always save).
+    pub every_batches: u64,
+}
+
+// ---------------- the spec ----------------
+
+/// One validated experiment description.  Construct through
+/// [`Spec::builder`] (or [`Spec::parse`] for JSON text) — both run the
+/// full validation rule set, so a `Spec` value in hand is always
+/// internally consistent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub net: NetSource,
+    pub backend: Backend,
+    /// AOT artifact bundle for the perop/fused backends; required for
+    /// them, optional (and unused by the numerics) for golden.
+    pub artifacts: Option<PathBuf>,
+    pub design: DesignOverrides,
+    pub batch: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub epochs: u64,
+    /// Epoch width in images.  `None` means "the default
+    /// ([`DEFAULT_IMAGES`]) for fresh runs, the recorded width for
+    /// resumed ones" — an explicit value conflicting with a resumed
+    /// checkpoint is refused ([`SpecError::ImagesConflict`]).
+    pub images: Option<u64>,
+    /// Dataset seed, with the same explicit-vs-recorded semantics as
+    /// `images` ([`SpecError::SeedConflict`]).
+    pub seed: Option<u64>,
+    /// Evaluation set size.
+    pub eval: usize,
+    /// First eval sample index; `None` derives the epoch width (the
+    /// eval window starts where the training window ends).
+    pub eval_offset: Option<u64>,
+    /// Synthetic dataset noise amplitude.
+    pub noise: f64,
+    /// Engine worker threads per accelerator instance.
+    pub workers: usize,
+    pub checkpoint: Option<CheckpointSpec>,
+    pub resume: bool,
+}
+
+impl Spec {
+    pub fn builder() -> SpecBuilder {
+        SpecBuilder::default()
+    }
+
+    /// Reopen for overrides (e.g. `--spec file.json` + explicit flags).
+    pub fn to_builder(&self) -> SpecBuilder {
+        SpecBuilder {
+            net: Some(self.net.clone()),
+            backend: Some(self.backend),
+            artifacts: self.artifacts.clone(),
+            design: self.design.clone(),
+            batch: Some(self.batch),
+            lr: Some(self.lr),
+            momentum: Some(self.momentum),
+            epochs: Some(self.epochs),
+            images: self.images,
+            seed: self.seed,
+            eval: Some(self.eval),
+            eval_offset: self.eval_offset,
+            noise: Some(self.noise),
+            workers: Some(self.workers),
+            checkpoint_dir: self.checkpoint.as_ref()
+                .map(|c| c.dir.clone()),
+            checkpoint_every: self.checkpoint.as_ref()
+                .map(|c| c.every_batches),
+            resume: self.resume,
+        }
+    }
+
+    /// Serialize to the spec JSON schema (see DESIGN.md §Session API).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(),
+                    Json::Num(f64::from(SPEC_VERSION)));
+        root.insert("net".to_string(), self.net.to_json());
+        root.insert("backend".to_string(),
+                    Json::Str(self.backend.to_string()));
+        if let Some(a) = &self.artifacts {
+            root.insert("artifacts".to_string(),
+                        Json::Str(a.display().to_string()));
+        }
+        if !self.design.is_empty() {
+            root.insert("design".to_string(), self.design.to_json());
+        }
+        let mut hyper = BTreeMap::new();
+        hyper.insert("batch".to_string(),
+                     Json::Num(self.batch as f64));
+        hyper.insert("lr".to_string(), Json::Num(self.lr));
+        hyper.insert("momentum".to_string(), Json::Num(self.momentum));
+        root.insert("hyper".to_string(), Json::Obj(hyper));
+        let mut run = BTreeMap::new();
+        run.insert("epochs".to_string(),
+                   Json::Num(self.epochs as f64));
+        if let Some(v) = self.images {
+            run.insert("images".to_string(), Json::Num(v as f64));
+        }
+        if let Some(v) = self.seed {
+            run.insert("seed".to_string(), Json::Num(v as f64));
+        }
+        run.insert("eval".to_string(), Json::Num(self.eval as f64));
+        if let Some(v) = self.eval_offset {
+            run.insert("eval_offset".to_string(), Json::Num(v as f64));
+        }
+        run.insert("noise".to_string(), Json::Num(self.noise));
+        run.insert("workers".to_string(),
+                   Json::Num(self.workers as f64));
+        root.insert("run".to_string(), Json::Obj(run));
+        if let Some(ck) = &self.checkpoint {
+            let mut c = BTreeMap::new();
+            c.insert("dir".to_string(),
+                     Json::Str(ck.dir.display().to_string()));
+            c.insert("every_batches".to_string(),
+                     Json::Num(ck.every_batches as f64));
+            if self.resume {
+                c.insert("resume".to_string(), Json::Bool(true));
+            }
+            root.insert("checkpoint".to_string(), Json::Obj(c));
+        }
+        Json::Obj(root)
+    }
+
+    /// Pretty-printed, re-parseable JSON (what `--dump-spec` writes).
+    pub fn render(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// Parse and validate spec JSON text.
+    pub fn parse(text: &str) -> Result<Spec> {
+        let j = Json::parse(text).context("parsing spec JSON")?;
+        Ok(Spec::from_json(&j)?)
+    }
+
+    /// Read, parse, and validate a spec file.
+    pub fn load(path: &Path) -> Result<Spec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Spec::parse(&text)
+            .with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Write the rendered spec to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Build a validated spec from a parsed JSON value.  Strict: an
+    /// unknown key anywhere is an error, never a silent no-op.
+    pub fn from_json(j: &Json) -> Result<Spec, SpecError> {
+        let root = j.as_obj().ok_or(SpecError::NotAnObject("spec"))?;
+        check_keys(root,
+                   &["version", "net", "backend", "artifacts",
+                     "design", "hyper", "run", "checkpoint"],
+                   "the spec")?;
+        if let Some(v) = root.get("version") {
+            let n = v.as_f64().ok_or(SpecError::FieldType {
+                field: "version".to_string(),
+                want: "an integer",
+            })?;
+            if n != f64::from(SPEC_VERSION) {
+                return Err(SpecError::UnsupportedVersion(n as i64));
+            }
+        }
+        let mut b = Spec::builder();
+        let net = root.get("net").ok_or(SpecError::MissingField("net"))?;
+        b = b.net(NetSource::from_json(net)?);
+        if let Some(v) = root.get("backend") {
+            let s = str_value(v, "backend")?;
+            b = b.backend(Backend::from_str(&s)
+                .map_err(SpecError::Backend)?);
+        }
+        if let Some(v) = root.get("artifacts") {
+            b = b.artifacts(str_value(v, "artifacts")?);
+        }
+        if let Some(v) = root.get("design") {
+            b = b.design(DesignOverrides::from_json(v)?);
+        }
+        if let Some(v) = root.get("hyper") {
+            let m = v.as_obj().ok_or(SpecError::NotAnObject("hyper"))?;
+            check_keys(m, &["batch", "lr", "momentum"], "hyper")?;
+            if let Some(x) = usize_key(m, "batch", "hyper")? {
+                b = b.batch(x);
+            }
+            if let Some(x) = f64_key(m, "lr", "hyper")? {
+                b = b.lr(x);
+            }
+            if let Some(x) = f64_key(m, "momentum", "hyper")? {
+                b = b.momentum(x);
+            }
+        }
+        if let Some(v) = root.get("run") {
+            let m = v.as_obj().ok_or(SpecError::NotAnObject("run"))?;
+            check_keys(m,
+                       &["epochs", "images", "seed", "eval",
+                         "eval_offset", "noise", "workers"],
+                       "run")?;
+            if let Some(x) = u64_key(m, "epochs", "run")? {
+                b = b.epochs(x);
+            }
+            if let Some(x) = u64_key(m, "images", "run")? {
+                b = b.images(x);
+            }
+            if let Some(x) = u64_key(m, "seed", "run")? {
+                b = b.seed(x);
+            }
+            if let Some(x) = usize_key(m, "eval", "run")? {
+                b = b.eval(x);
+            }
+            if let Some(x) = u64_key(m, "eval_offset", "run")? {
+                b = b.eval_offset(x);
+            }
+            if let Some(x) = f64_key(m, "noise", "run")? {
+                b = b.noise(x);
+            }
+            if let Some(x) = usize_key(m, "workers", "run")? {
+                b = b.workers(x);
+            }
+        }
+        if let Some(v) = root.get("checkpoint") {
+            let m = v.as_obj()
+                .ok_or(SpecError::NotAnObject("checkpoint"))?;
+            check_keys(m, &["dir", "every_batches", "resume"],
+                       "checkpoint")?;
+            let dir = m.get("dir")
+                .ok_or(SpecError::MissingField("checkpoint.dir"))?;
+            b = b.checkpoint_dir(str_value(dir, "checkpoint.dir")?);
+            if let Some(x) = u64_key(m, "every_batches", "checkpoint")? {
+                b = b.checkpoint_every(x);
+            }
+            if let Some(x) = bool_key(m, "resume", "checkpoint")? {
+                b = b.resume(x);
+            }
+        }
+        b.build()
+    }
+}
+
+// ---------------- strict-JSON helpers ----------------
+
+fn check_keys(m: &BTreeMap<String, Json>, allowed: &[&str],
+              section: &'static str) -> Result<(), SpecError> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(SpecError::UnknownField {
+                section,
+                key: k.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn qualify(section: &str, key: &str) -> String {
+    format!("{section}.{key}")
+}
+
+fn str_value(j: &Json, field: &str) -> Result<String, SpecError> {
+    j.as_str().map(str::to_string).ok_or(SpecError::FieldType {
+        field: field.to_string(),
+        want: "a string",
+    })
+}
+
+fn f64_key(m: &BTreeMap<String, Json>, key: &str, section: &str)
+           -> Result<Option<f64>, SpecError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(j) => j.as_f64().map(Some).ok_or(SpecError::FieldType {
+            field: qualify(section, key),
+            want: "a number",
+        }),
+    }
+}
+
+/// Largest u64 a JSON number (f64) represents exactly; bigger values
+/// would silently round on serialization, so both the parser and
+/// [`validate`] refuse them.
+const MAX_EXACT_JSON_INT: u64 = 1 << 53;
+
+fn u64_key(m: &BTreeMap<String, Json>, key: &str, section: &str)
+           -> Result<Option<u64>, SpecError> {
+    match f64_key(m, key, section)? {
+        None => Ok(None),
+        Some(n) if n >= 0.0
+            && n.fract() == 0.0
+            && n <= MAX_EXACT_JSON_INT as f64 =>
+        {
+            Ok(Some(n as u64))
+        }
+        Some(_) => Err(SpecError::FieldType {
+            field: qualify(section, key),
+            want: "a non-negative integer at most 2^53",
+        }),
+    }
+}
+
+fn usize_key(m: &BTreeMap<String, Json>, key: &str, section: &str)
+             -> Result<Option<usize>, SpecError> {
+    Ok(u64_key(m, key, section)?.map(|v| v as usize))
+}
+
+fn bool_key(m: &BTreeMap<String, Json>, key: &str, section: &str)
+            -> Result<Option<bool>, SpecError> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(SpecError::FieldType {
+            field: qualify(section, key),
+            want: "a boolean",
+        }),
+    }
+}
+
+// ---------------- the builder ----------------
+
+/// Builder for [`Spec`] — the single construction path.  Unset fields
+/// default per the `DEFAULT_*` constants; `build()` validates every
+/// constraint and returns a typed [`SpecError`] on violation.
+#[derive(Debug, Clone, Default)]
+pub struct SpecBuilder {
+    net: Option<NetSource>,
+    backend: Option<Backend>,
+    artifacts: Option<PathBuf>,
+    design: DesignOverrides,
+    batch: Option<usize>,
+    lr: Option<f64>,
+    momentum: Option<f64>,
+    epochs: Option<u64>,
+    images: Option<u64>,
+    seed: Option<u64>,
+    eval: Option<usize>,
+    eval_offset: Option<u64>,
+    noise: Option<f64>,
+    workers: Option<usize>,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_every: Option<u64>,
+    resume: bool,
+}
+
+impl SpecBuilder {
+    pub fn net(mut self, src: NetSource) -> SpecBuilder {
+        self.net = Some(src);
+        self
+    }
+
+    /// Named preset: `1x|2x|4x|bn1x|bn2x|bn4x`.
+    pub fn preset(self, scale: impl Into<String>) -> SpecBuilder {
+        self.net(NetSource::preset(scale))
+    }
+
+    /// Inline network text in the layer grammar.
+    pub fn net_inline(self, text: impl Into<String>) -> SpecBuilder {
+        self.net(NetSource::inline(text))
+    }
+
+    /// Network `.cfg` file path.
+    pub fn net_file(self, path: impl Into<PathBuf>) -> SpecBuilder {
+        self.net(NetSource::file(path))
+    }
+
+    pub fn backend(mut self, backend: Backend) -> SpecBuilder {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> SpecBuilder {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Replace the whole override set (spec-file parsing).
+    pub fn design(mut self, d: DesignOverrides) -> SpecBuilder {
+        self.design = d;
+        self
+    }
+
+    pub fn pox(mut self, v: usize) -> SpecBuilder {
+        self.design.pox = Some(v);
+        self
+    }
+
+    pub fn poy(mut self, v: usize) -> SpecBuilder {
+        self.design.poy = Some(v);
+        self
+    }
+
+    pub fn pof(mut self, v: usize) -> SpecBuilder {
+        self.design.pof = Some(v);
+        self
+    }
+
+    pub fn clock_mhz(mut self, v: f64) -> SpecBuilder {
+        self.design.clock_mhz = Some(v);
+        self
+    }
+
+    pub fn dram_gbytes(mut self, v: f64) -> SpecBuilder {
+        self.design.dram_gbytes = Some(v);
+        self
+    }
+
+    pub fn tile_rows(mut self, v: usize) -> SpecBuilder {
+        self.design.tile_rows = Some(v);
+        self
+    }
+
+    /// Data-parallel accelerator instances (`DesignVars::cluster`).
+    pub fn accelerators(mut self, v: usize) -> SpecBuilder {
+        self.design.cluster = Some(v);
+        self
+    }
+
+    pub fn link_gbytes(mut self, v: f64) -> SpecBuilder {
+        self.design.link_gbytes = Some(v);
+        self
+    }
+
+    pub fn load_balance(mut self, v: bool) -> SpecBuilder {
+        self.design.load_balance = Some(v);
+        self
+    }
+
+    pub fn double_buffer(mut self, v: bool) -> SpecBuilder {
+        self.design.double_buffer = Some(v);
+        self
+    }
+
+    pub fn batch(mut self, v: usize) -> SpecBuilder {
+        self.batch = Some(v);
+        self
+    }
+
+    pub fn lr(mut self, v: f64) -> SpecBuilder {
+        self.lr = Some(v);
+        self
+    }
+
+    pub fn momentum(mut self, v: f64) -> SpecBuilder {
+        self.momentum = Some(v);
+        self
+    }
+
+    pub fn epochs(mut self, v: u64) -> SpecBuilder {
+        self.epochs = Some(v);
+        self
+    }
+
+    pub fn images(mut self, v: u64) -> SpecBuilder {
+        self.images = Some(v);
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> SpecBuilder {
+        self.seed = Some(v);
+        self
+    }
+
+    pub fn eval(mut self, v: usize) -> SpecBuilder {
+        self.eval = Some(v);
+        self
+    }
+
+    pub fn eval_offset(mut self, v: u64) -> SpecBuilder {
+        self.eval_offset = Some(v);
+        self
+    }
+
+    pub fn noise(mut self, v: f64) -> SpecBuilder {
+        self.noise = Some(v);
+        self
+    }
+
+    pub fn workers(mut self, v: usize) -> SpecBuilder {
+        self.workers = Some(v);
+        self
+    }
+
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>)
+                          -> SpecBuilder {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn checkpoint_every(mut self, v: u64) -> SpecBuilder {
+        self.checkpoint_every = Some(v);
+        self
+    }
+
+    pub fn resume(mut self, v: bool) -> SpecBuilder {
+        self.resume = v;
+        self
+    }
+
+    /// Apply defaults, validate every constraint, and produce the
+    /// [`Spec`].
+    pub fn build(self) -> Result<Spec, SpecError> {
+        if self.checkpoint_dir.is_none()
+            && self.checkpoint_every.is_some()
+        {
+            return Err(SpecError::CheckpointEveryWithoutDir);
+        }
+        let spec = Spec {
+            net: self.net
+                .unwrap_or_else(|| NetSource::preset("1x")),
+            backend: self.backend.unwrap_or(Backend::Golden),
+            artifacts: self.artifacts,
+            design: self.design,
+            batch: self.batch.unwrap_or(DEFAULT_BATCH),
+            lr: self.lr.unwrap_or(DEFAULT_LR),
+            momentum: self.momentum.unwrap_or(DEFAULT_MOMENTUM),
+            epochs: self.epochs.unwrap_or(DEFAULT_EPOCHS),
+            images: self.images,
+            seed: self.seed,
+            eval: self.eval.unwrap_or(DEFAULT_EVAL),
+            eval_offset: self.eval_offset,
+            noise: self.noise.unwrap_or(DEFAULT_NOISE),
+            workers: self.workers.unwrap_or(1),
+            checkpoint: self.checkpoint_dir.map(|dir| CheckpointSpec {
+                dir,
+                every_batches: self.checkpoint_every
+                    .unwrap_or(DEFAULT_CKPT_EVERY),
+            }),
+            resume: self.resume,
+        };
+        validate(&spec)?;
+        Ok(spec)
+    }
+}
+
+/// The full validation rule set (shared by [`SpecBuilder::build`] and
+/// [`Session::new`]); returns the resolved network + design variables.
+fn validate(spec: &Spec) -> Result<(Network, DesignVars), SpecError> {
+    fn positive(v: usize, name: &'static str) -> Result<(), SpecError> {
+        if v == 0 {
+            Err(SpecError::NonPositive(name))
+        } else {
+            Ok(())
+        }
+    }
+    positive(spec.batch, "batch")?;
+    positive(spec.eval, "eval")?;
+    positive(spec.workers, "workers")?;
+    if spec.epochs == 0 {
+        return Err(SpecError::NonPositive("epochs"));
+    }
+    if spec.images == Some(0) {
+        return Err(SpecError::NonPositive("images"));
+    }
+    if let Some(ck) = &spec.checkpoint {
+        if ck.every_batches == 0 {
+            return Err(SpecError::NonPositive("checkpoint-every"));
+        }
+    }
+    if spec.resume && spec.checkpoint.is_none() {
+        return Err(SpecError::ResumeWithoutCheckpoint);
+    }
+    // serializability guards: u64 fields must survive the JSON f64
+    // round trip exactly, and floats must be finite (JSON has no
+    // inf/NaN — a dumped spec would not parse back)
+    for (v, name) in [(Some(spec.epochs), "epochs"),
+                      (spec.images, "images"),
+                      (spec.seed, "seed"),
+                      (spec.eval_offset, "eval_offset")] {
+        if let Some(v) = v {
+            if v > MAX_EXACT_JSON_INT {
+                return Err(SpecError::FieldType {
+                    field: name.to_string(),
+                    want: "an integer at most 2^53 (JSON numbers \
+                           round-trip exactly only up to that)",
+                });
+            }
+        }
+    }
+    for (v, name) in [(Some(spec.lr), "lr"),
+                      (Some(spec.momentum), "momentum"),
+                      (Some(spec.noise), "noise"),
+                      (spec.design.clock_mhz, "clock_mhz"),
+                      (spec.design.dram_gbytes, "dram_gbytes"),
+                      (spec.design.link_gbytes, "link_gbytes")] {
+        if let Some(v) = v {
+            if !v.is_finite() {
+                return Err(SpecError::FieldType {
+                    field: name.to_string(),
+                    want: "a finite number",
+                });
+            }
+        }
+    }
+    if spec.backend != Backend::Golden && spec.artifacts.is_none() {
+        return Err(SpecError::BackendNeedsArtifacts(spec.backend));
+    }
+    for (v, name) in [(spec.design.pox, "pox"),
+                      (spec.design.poy, "poy"),
+                      (spec.design.pof, "pof"),
+                      (spec.design.tile_rows, "tile-rows"),
+                      (spec.design.cluster, "accelerators")] {
+        if v == Some(0) {
+            return Err(SpecError::NonPositive(name));
+        }
+    }
+    let net = spec.net.resolve()?;
+    if net.has_stats() && spec.backend != Backend::Golden {
+        return Err(SpecError::BnNeedsGolden {
+            net: net.name.clone(),
+            backend: spec.backend,
+        });
+    }
+    if let (Some(offset), Some(images)) =
+        (spec.eval_offset, spec.images)
+    {
+        if offset < images {
+            return Err(SpecError::EvalOverlap { offset, images });
+        }
+    }
+    let scale = match net.scale_tag() {
+        "4x" => 4,
+        "2x" => 2,
+        _ => 1,
+    };
+    let mut dv = DesignVars::for_scale(scale);
+    spec.design.apply(&mut dv);
+    Ok((net, dv))
+}
+
+// ---------------- fingerprint ----------------
+
+/// Canonical serialization of the fingerprint-relevant Spec subset:
+/// everything that must match for a resumed run to continue
+/// bit-identically — the network (every layer dimension), the loss,
+/// the quantized SGD hyper-parameters, the design variables that
+/// feed the simulated-cycle metrics, and the dataset noise amplitude
+/// (the one data parameter not already recorded in the cursor; a
+/// resume with a different `noise` would silently train on different
+/// pixels).  Worker and accelerator counts are deliberately
+/// **excluded** — the engine/cluster merge contract makes gradient
+/// grouping irrelevant, so a checkpoint taken at any
+/// `workers`/`accelerators` resumes at any other.  The format is
+/// byte-compatible with pre-Spec checkpoints (`Trainer::fingerprint`
+/// delegates here; pinned by `tests/session.rs`): the noise term is
+/// appended only when it differs from the historical hard-coded
+/// [`DEFAULT_NOISE`], so every checkpoint written before noise was
+/// configurable still matches default-noise runs byte-for-byte.
+pub fn fingerprint(net: &Network, dv: &DesignVars, hyper: &SgdHyper,
+                   noise: f64) -> String {
+    let layers: Vec<String> =
+        net.layers.iter().map(|l| format!("{l:?}")).collect();
+    let mut s = format!(
+        "stratus-ckpt net={} input={:?} nclass={} loss={:?} \
+         layers=[{}] hyper(lr_q16={},beta_q15={},batch={}) \
+         dv(pox={},poy={},pof={},clock_mhz={},dram_gbytes={},\
+         dram_efficiency={},load_balance={},double_buffer={},\
+         tile_rows={},data_bits={})",
+        net.name,
+        net.input,
+        net.nclass,
+        net.loss,
+        layers.join(";"),
+        hyper.lr_q16,
+        hyper.beta_q15,
+        hyper.batch,
+        dv.pox,
+        dv.poy,
+        dv.pof,
+        dv.clock_mhz,
+        dv.dram_gbytes,
+        dv.dram_efficiency,
+        dv.load_balance,
+        dv.double_buffer,
+        dv.tile_rows,
+        dv.data_bits,
+    );
+    if noise != DEFAULT_NOISE {
+        s.push_str(&format!(" data(noise={noise})"));
+    }
+    s
+}
+
+// ---------------- the session facade ----------------
+
+/// A [`Spec`] resolved against its network and design point, ready to
+/// compile, simulate, or train.
+pub struct Session {
+    spec: Spec,
+    net: Network,
+    dv: DesignVars,
+}
+
+/// The sample sets a [`Run`] evaluates against, handed to the epoch
+/// observer: the training window and the (non-overlapping) eval
+/// window.
+pub struct EvalData<'a> {
+    pub train: &'a [Sample],
+    pub eval: &'a [Sample],
+}
+
+/// What a completed (or already-complete) run hands back.
+pub struct TrainOutcome {
+    /// The trained (or restored) trainer, for inspection.
+    pub trainer: Trainer,
+    /// Where the run started (fresh: epoch 0; resumed: the
+    /// checkpoint's cursor).
+    pub start: Cursor,
+    /// Where the run ended.
+    pub end: Cursor,
+}
+
+/// A prepared training run: trainer built (and restored, when
+/// resuming), dataset + eval windows derived, checkpoint directory
+/// created.  [`Run::execute`] drives it to completion.
+pub struct Run {
+    trainer: Trainer,
+    start: Cursor,
+    data: Synthetic,
+    cfg: TrainRun,
+    train_set: Vec<Sample>,
+    eval_set: Vec<Sample>,
+}
+
+impl Run {
+    pub fn start(&self) -> Cursor {
+        self.start
+    }
+
+    /// True when the start cursor already covers every requested epoch
+    /// (a resume of a finished run); `execute` is then a no-op.
+    pub fn finished(&self) -> bool {
+        self.start.epoch >= self.cfg.epochs
+    }
+
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    pub fn train_set(&self) -> &[Sample] {
+        &self.train_set
+    }
+
+    pub fn eval_set(&self) -> &[Sample] {
+        &self.eval_set
+    }
+
+    /// Train to completion, invoking `on_epoch` at every epoch
+    /// boundary (after that epoch's checkpoint is on disk).
+    pub fn execute(
+        self,
+        mut on_epoch: impl FnMut(&mut Trainer, &EpochStats, &EvalData)
+                             -> Result<()>,
+    ) -> Result<TrainOutcome> {
+        let Run { mut trainer, start, data, cfg, train_set, eval_set } =
+            self;
+        if start.epoch >= cfg.epochs {
+            return Ok(TrainOutcome { trainer, start, end: start });
+        }
+        let end = trainer.run(&data, &cfg, start, |t, stats| {
+            let ev = EvalData { train: &train_set, eval: &eval_set };
+            on_epoch(t, stats, &ev)
+        })?;
+        Ok(TrainOutcome { trainer, start, end })
+    }
+}
+
+impl Session {
+    /// Resolve and re-validate a spec (specs from `SpecBuilder::build`
+    /// / `Spec::parse` are already valid; this also covers hand-built
+    /// `Spec` values).
+    pub fn new(spec: Spec) -> Result<Session> {
+        let (net, dv) = validate(&spec)?;
+        Ok(Session { spec, net, dv })
+    }
+
+    pub fn spec(&self) -> &Spec {
+        &self.spec
+    }
+
+    /// The resolved network description.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The resolved design variables (per-scale defaults + overrides).
+    pub fn design(&self) -> &DesignVars {
+        &self.dv
+    }
+
+    /// The checkpoint file this session reads/writes, if any.
+    pub fn checkpoint_path(&self) -> Option<PathBuf> {
+        self.spec.checkpoint.as_ref().map(|c| c.dir.join(CKPT_FILE))
+    }
+
+    /// This session's run fingerprint (see [`fingerprint`]); equal to
+    /// `self.trainer()?.fingerprint()` without building a trainer.
+    pub fn fingerprint(&self) -> String {
+        let hyper = SgdHyper::new(self.spec.lr, self.spec.momentum,
+                                  self.spec.batch);
+        fingerprint(&self.net, &self.dv, &hyper, self.spec.noise)
+    }
+
+    /// Run the RTL compiler on the resolved (network, design) pair.
+    pub fn compile(&self) -> Result<Accelerator> {
+        RtlCompiler::default().compile(&self.net, &self.dv)
+    }
+
+    /// Cycle-simulate the compiled design at the spec's batch size.
+    pub fn simulate(&self) -> Result<SimReport> {
+        Ok(simulate(&self.compile()?, self.spec.batch))
+    }
+
+    /// Build the configured trainer (the only construction path for
+    /// `Trainer` outside this crate): backend, artifacts, hyper, and
+    /// worker count from the spec; the accelerator-instance count
+    /// rides in through `DesignVars::cluster`.
+    pub fn trainer(&self) -> Result<Trainer> {
+        Ok(Trainer::new(&self.net, &self.dv, self.spec.batch,
+                        self.spec.lr, self.spec.momentum,
+                        self.spec.backend,
+                        self.spec.artifacts.as_deref())?
+            .with_workers(self.spec.workers)
+            .with_noise(self.spec.noise))
+    }
+
+    /// Prepare a run: build the trainer (restoring the checkpoint when
+    /// `resume`), resolve the start cursor, refuse explicit
+    /// seed/images conflicting with a resumed checkpoint, derive the
+    /// eval window from the epoch width, and create the checkpoint
+    /// directory.
+    pub fn begin(&self, resume: bool) -> Result<Run> {
+        let mut trainer = self.trainer()?;
+        let ckpt_path = self.checkpoint_path();
+        let start = if resume {
+            let path = ckpt_path.as_ref()
+                .ok_or(SpecError::ResumeWithoutCheckpoint)?;
+            let cur = trainer.resume_from(path)?;
+            if let Some(seed) = self.spec.seed {
+                if seed != cur.seed {
+                    return Err(SpecError::SeedConflict {
+                        given: seed,
+                        recorded: cur.seed,
+                    }
+                    .into());
+                }
+            }
+            if let Some(images) = self.spec.images {
+                if images != cur.images {
+                    return Err(SpecError::ImagesConflict {
+                        given: images,
+                        recorded: cur.images,
+                    }
+                    .into());
+                }
+            }
+            cur
+        } else {
+            Cursor::start(self.spec.seed.unwrap_or(DEFAULT_SEED),
+                          self.spec.images.unwrap_or(DEFAULT_IMAGES))
+        };
+        let images = start.images;
+        let eval_offset = self.spec.eval_offset.unwrap_or(images);
+        if eval_offset < images {
+            return Err(SpecError::EvalOverlap {
+                offset: eval_offset,
+                images,
+            }
+            .into());
+        }
+        if let Some(ck) = &self.spec.checkpoint {
+            std::fs::create_dir_all(&ck.dir).with_context(|| {
+                format!("creating checkpoint dir {}", ck.dir.display())
+            })?;
+        }
+        let data = Synthetic::new(self.net.nclass, self.net.input,
+                                  start.seed, self.spec.noise);
+        let train_set = data.batch(0, images as usize);
+        let eval_set = data.batch(eval_offset, self.spec.eval);
+        let cfg = TrainRun {
+            epochs: self.spec.epochs,
+            images,
+            checkpoint: self.spec.checkpoint.as_ref().map(|ck| {
+                CheckpointPolicy {
+                    path: ckpt_path.clone()
+                        .expect("checkpoint dir implies a path"),
+                    every_batches: ck.every_batches,
+                }
+            }),
+            max_batches: None,
+        };
+        Ok(Run { trainer, start, data, cfg, train_set, eval_set })
+    }
+
+    /// Train a fresh run to completion.
+    pub fn train(
+        &self,
+        on_epoch: impl FnMut(&mut Trainer, &EpochStats, &EvalData)
+                         -> Result<()>,
+    ) -> Result<TrainOutcome> {
+        self.begin(false)?.execute(on_epoch)
+    }
+
+    /// Resume from the configured checkpoint and train to completion.
+    pub fn resume(
+        &self,
+        on_epoch: impl FnMut(&mut Trainer, &EpochStats, &EvalData)
+                         -> Result<()>,
+    ) -> Result<TrainOutcome> {
+        self.begin(true)?.execute(on_epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 \
+                        relu\nconv c2 8 k3 s1 p1 relu\npool p1 2\n\
+                        fc fc 10\nloss hinge";
+
+    #[test]
+    fn defaults_match_the_historical_cli() {
+        let spec = Spec::builder().build().unwrap();
+        assert_eq!(spec.net, NetSource::preset("1x"));
+        assert_eq!(spec.backend, Backend::Golden);
+        assert_eq!(spec.batch, 40);
+        assert_eq!(spec.lr, 0.002);
+        assert_eq!(spec.momentum, 0.9);
+        assert_eq!(spec.epochs, 5);
+        assert_eq!(spec.images, None);
+        assert_eq!(spec.seed, None);
+        assert_eq!(spec.eval, 256);
+        assert_eq!(spec.workers, 1);
+        assert!(spec.checkpoint.is_none());
+        assert!(!spec.resume);
+    }
+
+    #[test]
+    fn design_overrides_apply_onto_scale_defaults() {
+        let spec = Spec::builder()
+            .preset("2x")
+            .pox(4)
+            .clock_mhz(100.0)
+            .accelerators(3)
+            .load_balance(false)
+            .build()
+            .unwrap();
+        let s = Session::new(spec).unwrap();
+        let dv = s.design();
+        assert_eq!(dv.pox, 4);
+        assert_eq!(dv.poy, 8); // untouched default
+        assert_eq!(dv.pof, 32); // 2x scale default
+        assert_eq!(dv.clock_mhz, 100.0);
+        assert_eq!(dv.cluster, 3);
+        assert!(!dv.load_balance);
+        assert!(dv.double_buffer);
+    }
+
+    #[test]
+    fn inline_and_preset_sources_resolve() {
+        let net = NetSource::inline(TINY).resolve().unwrap();
+        assert_eq!(net.name, "tiny");
+        let net = NetSource::preset("bn2x").resolve().unwrap();
+        assert!(net.has_stats());
+        assert_eq!(net.scale_tag(), "2x");
+        let err = NetSource::preset("9x").resolve().unwrap_err();
+        assert!(err.to_string().contains("unknown scale `9x`"));
+    }
+
+    #[test]
+    fn to_builder_round_trips_every_field() {
+        let spec = Spec::builder()
+            .net_inline(TINY)
+            .backend(Backend::Golden)
+            .batch(8)
+            .lr(0.02)
+            .momentum(0.8)
+            .epochs(3)
+            .images(24)
+            .seed(9)
+            .eval(16)
+            .eval_offset(64)
+            .noise(0.25)
+            .workers(2)
+            .accelerators(3)
+            .pof(32)
+            .checkpoint_dir("/tmp/ck")
+            .checkpoint_every(2)
+            .build()
+            .unwrap();
+        assert_eq!(spec.to_builder().build().unwrap(), spec);
+    }
+
+    #[test]
+    fn checkpoint_json_rides_resume_flag() {
+        let spec = Spec::builder()
+            .net_inline(TINY)
+            .checkpoint_dir("/tmp/ck")
+            .resume(true)
+            .build()
+            .unwrap();
+        let back = Spec::parse(&spec.render()).unwrap();
+        assert!(back.resume);
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn strict_json_rejects_unknown_and_mistyped_fields() {
+        let err = Spec::parse(
+            r#"{"net":{"preset":"1x"},"runn":{"epochs":1}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown field `runn`"),
+                "{err:#}");
+        let err = Spec::parse(
+            r#"{"net":{"preset":"1x"},"hyper":{"batch":1.5}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}")
+                    .contains("hyper.batch wants a non-negative"),
+                "{err:#}");
+        let err = Spec::parse(r#"{"net":{"preset":"1x"},"version":7}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported spec version"),
+                "{err:#}");
+        let err =
+            Spec::parse(r#"{"net":{"preset":"1x","inline":"x"}}"#)
+                .unwrap_err();
+        assert!(format!("{err:#}")
+                    .contains("exactly one of preset|inline|file"),
+                "{err:#}");
+    }
+}

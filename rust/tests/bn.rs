@@ -10,11 +10,10 @@
 use std::path::PathBuf;
 
 use stratus::ckpt::Cursor;
-use stratus::compiler::{OpKind, RtlCompiler};
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
+use stratus::compiler::OpKind;
+use stratus::coordinator::{CheckpointPolicy, TrainRun, Trainer};
 use stratus::data::Synthetic;
-use stratus::sim::simulate;
+use stratus::session::{Session, Spec};
 
 const SEED: u64 = 7;
 const BATCH: usize = 4;
@@ -34,16 +33,21 @@ fc fc 10
 loss hinge
 ";
 
-fn tiny_bn_net() -> Network {
-    Network::parse(TINY_BN_CFG).unwrap()
+fn bn_session(workers: usize, accelerators: usize) -> Session {
+    let spec = Spec::builder()
+        .net_inline(TINY_BN_CFG)
+        .batch(BATCH)
+        .lr(0.02)
+        .momentum(0.9)
+        .workers(workers)
+        .accelerators(accelerators)
+        .build()
+        .unwrap();
+    Session::new(spec).unwrap()
 }
 
 fn trainer(workers: usize, accelerators: usize) -> Trainer {
-    Trainer::new(&tiny_bn_net(), &DesignVars::for_scale(1), BATCH, 0.02,
-                 0.9, Backend::Golden, None)
-        .unwrap()
-        .with_workers(workers)
-        .with_accelerators(accelerators)
+    bn_session(workers, accelerators).trainer().unwrap()
 }
 
 fn tmp_ckpt(tag: &str) -> PathBuf {
@@ -97,11 +101,9 @@ fn signature(t: &Trainer) -> Signature {
 
 #[test]
 fn bn_net_parses_compiles_simulates_and_trains() {
-    let net = tiny_bn_net();
+    let session = bn_session(1, 1);
     // compiles with BN steps in the schedule
-    let acc = RtlCompiler::default()
-        .compile(&net, &DesignVars::for_scale(1))
-        .unwrap();
+    let acc = session.compile().unwrap();
     assert!(acc
         .schedule
         .per_image
@@ -112,8 +114,8 @@ fn bn_net_parses_compiles_simulates_and_trains() {
         .per_image
         .iter()
         .any(|s| s.op == OpKind::BnBp));
-    // simulates with nonzero cycles
-    let r = simulate(&acc, BATCH);
+    // simulates with nonzero cycles (at the spec's batch size)
+    let r = session.simulate().unwrap();
     assert!(r.cycles_per_image() > 0.0);
     // trains with loss decreasing over epochs
     let mut t = trainer(1, 1);
@@ -292,14 +294,18 @@ fn bn_checkpoint_refuses_plain_topology() {
     t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(()))
         .unwrap();
 
-    let plain = Network::parse(
-        "name tinybn\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 \
-         k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
-    )
-    .unwrap();
-    let mut other = Trainer::new(&plain, &DesignVars::for_scale(1),
-                                 BATCH, 0.02, 0.9, Backend::Golden, None)
+    let plain_spec = Spec::builder()
+        .net_inline(
+            "name tinybn\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv \
+             c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .batch(BATCH)
+        .lr(0.02)
+        .momentum(0.9)
+        .build()
         .unwrap();
+    let mut other =
+        Session::new(plain_spec).unwrap().trainer().unwrap();
     let err = other.resume_from(&path).unwrap_err();
     assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
     let _ = std::fs::remove_dir_all(path.parent().unwrap());

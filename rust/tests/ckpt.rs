@@ -10,9 +10,9 @@
 use std::path::PathBuf;
 
 use stratus::ckpt::{Checkpoint, Cursor};
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, CheckpointPolicy, TrainRun, Trainer};
+use stratus::coordinator::{CheckpointPolicy, TrainRun, Trainer};
 use stratus::data::Synthetic;
+use stratus::session::{Session, Spec};
 
 const SEED: u64 = 7;
 const BATCH: usize = 4;
@@ -20,20 +20,21 @@ const IMAGES: u64 = 12; // 3 batches per epoch
 const EPOCHS: u64 = 2;
 const KILL_AFTER: u64 = 2; // batches into epoch 0
 
-fn tiny_net() -> Network {
-    Network::parse(
-        "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 \
-         s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
-    )
-    .unwrap()
-}
+const TINY_CFG: &str = "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 \
+                        relu\nconv c2 8 k3 s1 p1 relu\npool p1 2\n\
+                        fc fc 10\nloss hinge";
 
 fn trainer(workers: usize, accelerators: usize) -> Trainer {
-    Trainer::new(&tiny_net(), &DesignVars::for_scale(1), BATCH, 0.02,
-                 0.9, Backend::Golden, None)
-        .unwrap()
-        .with_workers(workers)
-        .with_accelerators(accelerators)
+    let spec = Spec::builder()
+        .net_inline(TINY_CFG)
+        .batch(BATCH)
+        .lr(0.02)
+        .momentum(0.9)
+        .workers(workers)
+        .accelerators(accelerators)
+        .build()
+        .unwrap();
+    Session::new(spec).unwrap().trainer().unwrap()
 }
 
 fn tmp_ckpt(tag: &str) -> PathBuf {
@@ -258,22 +259,31 @@ fn resume_refuses_a_different_network_or_hyper() {
     t.run(&data, &cfg, Cursor::start(SEED, IMAGES), |_, _| Ok(())).unwrap();
 
     // different network (wider conv): fingerprint mismatch
-    let other_net = Network::parse(
-        "name tiny\ninput 3 8 8\nconv c1 12 k3 s1 p1 relu\nconv c2 12 \
-         k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
-    )
-    .unwrap();
-    let mut other = Trainer::new(&other_net, &DesignVars::for_scale(1),
-                                 BATCH, 0.02, 0.9, Backend::Golden, None)
+    let other_spec = Spec::builder()
+        .net_inline(
+            "name tiny\ninput 3 8 8\nconv c1 12 k3 s1 p1 relu\nconv \
+             c2 12 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .batch(BATCH)
+        .lr(0.02)
+        .momentum(0.9)
+        .build()
         .unwrap();
+    let mut other =
+        Session::new(other_spec).unwrap().trainer().unwrap();
     let err = other.resume_from(&path).unwrap_err();
     assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
 
     // same network, different learning rate: also refused
-    let mut other_lr = Trainer::new(&tiny_net(),
-                                    &DesignVars::for_scale(1), BATCH,
-                                    0.05, 0.9, Backend::Golden, None)
+    let lr_spec = Spec::builder()
+        .net_inline(TINY_CFG)
+        .batch(BATCH)
+        .lr(0.05)
+        .momentum(0.9)
+        .build()
         .unwrap();
+    let mut other_lr =
+        Session::new(lr_spec).unwrap().trainer().unwrap();
     let err = other_lr.resume_from(&path).unwrap_err();
     assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
 

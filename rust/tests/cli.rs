@@ -234,21 +234,23 @@ fn unknown_flags_are_rejected_with_a_hint() {
 fn zero_parallelism_counts_are_rejected() {
     // ISSUE 3 satellite: `--workers 0` / `--accelerators 0` error
     // instead of silently training with one
+    // (the messages come from the SpecBuilder's typed NonPositive
+    // errors now — one rule set shared by flags and spec files)
     let (ok, _, err) = stratus(&[
         "train", "--workers", "0", "--backend", "golden",
     ]);
     assert!(!ok);
-    assert!(err.contains("--workers must be at least 1"), "{err}");
+    assert!(err.contains("workers must be at least 1"), "{err}");
     let (ok, _, err) =
         stratus(&["simulate", "--accelerators", "0"]);
     assert!(!ok);
-    assert!(err.contains("--accelerators must be at least 1"), "{err}");
+    assert!(err.contains("accelerators must be at least 1"), "{err}");
     // a zero epoch count would silently train nothing
     let (ok, _, err) = stratus(&[
         "train", "--epochs", "0", "--backend", "golden",
     ]);
     assert!(!ok);
-    assert!(err.contains("--epochs must be at least 1"), "{err}");
+    assert!(err.contains("epochs must be at least 1"), "{err}");
 }
 
 #[test]
@@ -304,7 +306,7 @@ fn train_checkpoint_resume_end_to_end() {
     argv.extend_from_slice(&["--epochs", "2", "--resume"]);
     let (ok, _, err) = stratus(&argv);
     assert!(!ok);
-    assert!(err.contains("--checkpoint-dir"), "{err}");
+    assert!(err.contains("resume needs checkpoint-dir"), "{err}");
     // a conflicting explicit --images on resume is refused (the cursor
     // records the epoch width; silently shrinking the data window
     // would break the bit-identity contract)
@@ -313,7 +315,7 @@ fn train_checkpoint_resume_end_to_end() {
                              &dir_s, "--resume", "--images", "99"]);
     let (ok, _, err) = stratus(&argv);
     assert!(!ok);
-    assert!(err.contains("--images 99 conflicts"), "{err}");
+    assert!(err.contains("images 99 conflicts"), "{err}");
     let _ = std::fs::remove_file(&tmp);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -325,8 +327,111 @@ fn checkpoint_every_without_dir_is_an_error() {
         "train", "--backend", "golden", "--checkpoint-every", "5",
     ]);
     assert!(!ok);
-    assert!(err.contains("--checkpoint-every needs --checkpoint-dir"),
+    assert!(err.contains("checkpoint-every needs checkpoint-dir"),
             "{err}");
+}
+
+#[test]
+fn runtime_backends_require_explicit_artifacts() {
+    // artifacts are backend-conditional now: golden runs without any,
+    // and perop/fused without --artifacts is a clear error instead of
+    // a silently assumed "artifacts" directory
+    let (ok, _, err) = stratus(&["train", "--backend", "perop"]);
+    assert!(!ok);
+    assert!(err.contains("backend perop needs an artifacts directory"),
+            "{err}");
+    let (ok, _, err) = stratus(&["train", "--backend", "nope"]);
+    assert!(!ok);
+    assert!(err.contains("unknown backend `nope` (golden|perop|fused)"),
+            "{err}");
+}
+
+#[test]
+fn dump_spec_round_trips_and_flags_override() {
+    // ISSUE 5 acceptance: `train --spec run.json` reproduces the same
+    // fingerprint and bit-identical training as the equivalent flag
+    // invocation; explicit flags override spec-file fields
+    let cfg = std::env::temp_dir().join("stratus_cli_spec_net.cfg");
+    std::fs::write(
+        &cfg,
+        "name tiny\ninput 3 8 8\nconv c1 4 k3 s1 p1 relu\n\
+         conv c2 4 k3 s1 p1 relu\npool p1 2\nfc fc 10\nloss hinge\n",
+    )
+    .unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("stratus_cli_spec_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec_path = dir.join("run.json");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir_s = dir.to_str().unwrap().to_string();
+    let spec_s = spec_path.to_str().unwrap().to_string();
+    let base: Vec<&str> = vec![
+        "train", "--net", cfg.to_str().unwrap(), "--backend", "golden",
+        "--images", "8", "--epochs", "2", "--batch", "4", "--eval", "8",
+        "--workers", "2",
+    ];
+    let run = |extra: &[&str]| {
+        let mut argv = base.clone();
+        argv.extend_from_slice(extra);
+        let (ok, out, err) = stratus(&argv);
+        assert!(ok, "{out}\n{err}");
+        out
+    };
+    // --dump-spec writes the resolved spec and does NOT train
+    let dumped = run(&["--dump-spec", &spec_s]);
+    assert!(!dumped.contains("epoch"), "dump-spec trained:\n{dumped}");
+    assert!(spec_path.exists());
+    // flag run vs pure spec run: identical epoch lines
+    let flag_out = run(&[]);
+    let (ok, spec_out, err) = stratus(&["train", "--spec", &spec_s]);
+    assert!(ok, "{spec_out}\n{err}");
+    let s_flag = epoch_stats(&flag_out);
+    assert_eq!(s_flag.len(), 2);
+    assert_eq!(s_flag, epoch_stats(&spec_out),
+               "spec run diverged:\n{flag_out}\n{spec_out}");
+    // explicit flags override the spec file: --epochs 1 wins over 2
+    let (ok, one, err) =
+        stratus(&["train", "--spec", &spec_s, "--epochs", "1"]);
+    assert!(ok, "{one}\n{err}");
+    let s_one = epoch_stats(&one);
+    assert_eq!(s_one.len(), 1, "{one}");
+    assert_eq!(s_one[0], s_flag[0]);
+    // a spec run resumes a FLAG run's checkpoint: the fingerprints
+    // match across the two construction paths, and the continued
+    // epoch 2 is bit-identical to the uninterrupted run's
+    run(&["--epochs", "1", "--checkpoint-dir", &dir_s,
+          "--checkpoint-every", "1"]);
+    let (ok, resumed, err) = stratus(&[
+        "train", "--spec", &spec_s, "--checkpoint-dir", &dir_s,
+        "--resume",
+    ]);
+    assert!(ok, "{resumed}\n{err}");
+    assert!(resumed.contains("resumed"), "{resumed}");
+    let s_res = epoch_stats(&resumed);
+    assert_eq!(s_res.len(), 1, "resume replayed epoch 1:\n{resumed}");
+    assert_eq!(s_res[0], s_flag[1],
+               "resumed epoch 2 diverged:\n{flag_out}\n{resumed}");
+    let _ = std::fs::remove_file(&cfg);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spec_file_errors_are_strict_and_cited() {
+    // unknown keys in a spec file are rejected (typo safety), and the
+    // offending file is named in the error
+    let path = std::env::temp_dir().join(format!(
+        "stratus_cli_badspec_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path,
+                   "{\"net\":{\"preset\":\"1x\"},\"runn\":{}}")
+        .unwrap();
+    let (ok, _, err) =
+        stratus(&["train", "--spec", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("unknown field `runn`"), "{err}");
+    assert!(err.contains("badspec"), "{err}");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

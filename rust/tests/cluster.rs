@@ -8,31 +8,36 @@
 
 use stratus::compiler::RtlCompiler;
 use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::coordinator::Trainer;
 use stratus::data::Synthetic;
+use stratus::session::{NetSource, Session, Spec};
 use stratus::sim::event::simulate_cluster_events;
 use stratus::sim::simulate;
 
-fn trainer(net: &Network, batch: usize, accelerators: usize,
+/// Session-built trainer: the accelerator-instance count rides in
+/// through the spec's design overrides (`DesignVars::cluster`).
+fn trainer(src: &NetSource, batch: usize, accelerators: usize,
            workers: usize) -> Trainer {
-    let scale = match net.scale_tag() {
-        "4x" => 4,
-        "2x" => 2,
-        _ => 1,
-    };
-    Trainer::new(net, &DesignVars::for_scale(scale), batch, 0.002, 0.9,
-                 Backend::Golden, None)
-        .unwrap()
-        .with_accelerators(accelerators)
-        .with_workers(workers)
+    let spec = Spec::builder()
+        .net(src.clone())
+        .batch(batch)
+        .lr(0.002)
+        .momentum(0.9)
+        .accelerators(accelerators)
+        .workers(workers)
+        .build()
+        .unwrap();
+    Session::new(spec).unwrap().trainer().unwrap()
 }
 
-fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
-                     accelerators: usize, workers: usize) {
+fn assert_equivalent(src: &NetSource, batch_images: usize,
+                     batches: usize, accelerators: usize,
+                     workers: usize) {
+    let net: Network = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
     let stream = data.batch(0, batch_images * batches);
-    let mut seq = trainer(net, batch_images, 1, 1);
-    let mut par = trainer(net, batch_images, accelerators, workers);
+    let mut seq = trainer(src, batch_images, 1, 1);
+    let mut par = trainer(src, batch_images, accelerators, workers);
     for chunk in stream.chunks(batch_images) {
         let l_seq = seq.train_batch(chunk).unwrap();
         let l_par = par.train_batch(chunk).unwrap();
@@ -52,12 +57,11 @@ fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
     assert_eq!(seq.metrics.loss_sum, par.metrics.loss_sum);
 }
 
-fn tiny_net() -> Network {
-    Network::parse(
+fn tiny_net() -> NetSource {
+    NetSource::inline(
         "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
          relu\npool p1 2\nfc fc 10\nloss hinge",
     )
-    .unwrap()
 }
 
 #[test]
@@ -85,15 +89,16 @@ fn tiny_net_instances_and_workers_compose() {
 #[test]
 fn cifar_1x_two_instances_one_batch() {
     // the paper-scale network (32x32 input, 14 parameter tensors)
-    assert_equivalent(&Network::cifar(1), 4, 1, 2, 1);
+    assert_equivalent(&NetSource::preset("1x"), 4, 1, 2, 1);
 }
 
 #[test]
 fn cluster_report_reflects_ring() {
-    let net = tiny_net();
+    let src = tiny_net();
+    let net = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 5, 0.3);
     let batch = data.batch(0, 10);
-    let mut t = trainer(&net, 10, 4, 1);
+    let mut t = trainer(&src, 10, 4, 1);
     t.train_batch(&batch).unwrap();
     let rep = t.last_cluster.as_ref().unwrap();
     assert_eq!(rep.instances, 4);
@@ -103,7 +108,7 @@ fn cluster_report_reflects_ring() {
     assert!(rep.ring_words > 0);
     assert!(rep.wall_seconds >= 0.0);
     // single-instance batches never populate the cluster report
-    let mut t1 = trainer(&net, 10, 1, 1);
+    let mut t1 = trainer(&src, 10, 1, 1);
     t1.train_batch(&batch).unwrap();
     assert!(t1.last_cluster.is_none());
     assert!(t1.last_engine.is_some());
@@ -142,11 +147,12 @@ fn allreduce_cycles_appear_in_event_timeline_and_scale() {
 fn cluster_simulated_time_beats_sequential() {
     // the whole point: 4 instances finish a batch in fewer simulated
     // cycles than 1, even after paying for the ring
-    let net = tiny_net();
+    let src = tiny_net();
+    let net = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 9, 0.3);
     let batch = data.batch(0, 8);
-    let mut seq = trainer(&net, 8, 1, 1);
-    let mut par = trainer(&net, 8, 4, 1);
+    let mut seq = trainer(&src, 8, 1, 1);
+    let mut par = trainer(&src, 8, 4, 1);
     seq.train_batch(&batch).unwrap();
     par.train_batch(&batch).unwrap();
     assert!(par.metrics.sim_cycles < seq.metrics.sim_cycles,

@@ -5,28 +5,32 @@
 //! Exercises the paper-scale 1X network, uneven shard splits, and
 //! multi-epoch momentum state.
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::config::Network;
+use stratus::coordinator::Trainer;
 use stratus::data::Synthetic;
+use stratus::session::{NetSource, Session, Spec};
 
-fn trainer(net: &Network, batch: usize, workers: usize) -> Trainer {
-    let scale = match net.scale_tag() {
-        "4x" => 4,
-        "2x" => 2,
-        _ => 1,
-    };
-    Trainer::new(net, &DesignVars::for_scale(scale), batch, 0.002, 0.9,
-                 Backend::Golden, None)
-        .unwrap()
-        .with_workers(workers)
+/// Session-built trainer (the per-scale design defaults are resolved
+/// by the spec from the network's scale tag).
+fn trainer(src: &NetSource, batch: usize, workers: usize) -> Trainer {
+    let spec = Spec::builder()
+        .net(src.clone())
+        .batch(batch)
+        .lr(0.002)
+        .momentum(0.9)
+        .workers(workers)
+        .build()
+        .unwrap();
+    Session::new(spec).unwrap().trainer().unwrap()
 }
 
-fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
-                     workers: usize) {
+fn assert_equivalent(src: &NetSource, batch_images: usize,
+                     batches: usize, workers: usize) {
+    let net: Network = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
     let stream = data.batch(0, batch_images * batches);
-    let mut seq = trainer(net, batch_images, 1);
-    let mut par = trainer(net, batch_images, workers);
+    let mut seq = trainer(src, batch_images, 1);
+    let mut par = trainer(src, batch_images, workers);
     for chunk in stream.chunks(batch_images) {
         let l_seq = seq.train_batch(chunk).unwrap();
         let l_par = par.train_batch(chunk).unwrap();
@@ -46,12 +50,11 @@ fn assert_equivalent(net: &Network, batch_images: usize, batches: usize,
     assert_eq!(seq.metrics.sim_cycles, par.metrics.sim_cycles);
 }
 
-fn tiny_net() -> Network {
-    Network::parse(
+fn tiny_net() -> NetSource {
+    NetSource::inline(
         "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
          relu\npool p1 2\nfc fc 10\nloss hinge",
     )
-    .unwrap()
 }
 
 #[test]
@@ -73,15 +76,16 @@ fn tiny_net_more_workers_than_batch() {
 #[test]
 fn cifar_1x_two_workers_one_batch() {
     // the paper-scale network (32x32 input, 14 parameter tensors)
-    assert_equivalent(&Network::cifar(1), 4, 1, 2);
+    assert_equivalent(&NetSource::preset("1x"), 4, 1, 2);
 }
 
 #[test]
 fn engine_report_reflects_sharding() {
-    let net = tiny_net();
+    let src = tiny_net();
+    let net = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 5, 0.3);
     let batch = data.batch(0, 10);
-    let mut t = trainer(&net, 10, 4);
+    let mut t = trainer(&src, 10, 4);
     t.train_batch(&batch).unwrap();
     let rep = t.last_engine.as_ref().unwrap();
     assert_eq!(rep.workers, 4);

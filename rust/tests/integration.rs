@@ -7,9 +7,10 @@
 
 use std::path::{Path, PathBuf};
 
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::{Backend, Trainer};
+use stratus::config::Network;
+use stratus::coordinator::Backend;
 use stratus::data::Synthetic;
+use stratus::session::{Session, Spec};
 use stratus::fixed::FA;
 use stratus::nn::conv::{conv_bp, conv_fp_std, conv_wu};
 use stratus::nn::golden;
@@ -141,15 +142,23 @@ fn all_backends_produce_identical_parameters() {
     // parameters must be IDENTICAL integers across all three
     let Some(dir) = artifacts_dir() else { return };
     let net = Network::cifar(1);
-    let dv = DesignVars::for_scale(1);
     let data = Synthetic::cifar_like(21);
     let batch = data.batch(0, 2);
 
     let mut final_params: Vec<Vec<i32>> = Vec::new();
     for backend in [Backend::Golden, Backend::PerOp, Backend::Fused] {
-        let mut t = Trainer::new(&net, &dv, 2, 0.002, 0.9, backend,
-                                 Some(&dir))
+        // artifacts ride along for golden too (ignored by its
+        // numerics) so all three specs describe the same run shape
+        let spec = Spec::builder()
+            .preset("1x")
+            .backend(backend)
+            .artifacts(&dir)
+            .batch(2)
+            .lr(0.002)
+            .momentum(0.9)
+            .build()
             .unwrap();
+        let mut t = Session::new(spec).unwrap().trainer().unwrap();
         if backend == Backend::Golden {
             // Golden falls back to rust init; force the bundle params so
             // all three start identical
@@ -172,11 +181,16 @@ fn all_backends_produce_identical_parameters() {
 #[test]
 fn per_op_training_reduces_loss() {
     let Some(dir) = artifacts_dir() else { return };
-    let net = Network::cifar(1);
-    let dv = DesignVars::for_scale(1);
-    let mut t = Trainer::new(&net, &dv, 4, 0.01, 0.9, Backend::PerOp,
-                             Some(&dir))
+    let spec = Spec::builder()
+        .preset("1x")
+        .backend(Backend::PerOp)
+        .artifacts(&dir)
+        .batch(4)
+        .lr(0.01)
+        .momentum(0.9)
+        .build()
         .unwrap();
+    let mut t = Session::new(spec).unwrap().trainer().unwrap();
     let data = Synthetic::cifar_like(31);
     let batch = data.batch(0, 4);
     let first = t.train_batch(&batch).unwrap();

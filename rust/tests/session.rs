@@ -1,0 +1,387 @@
+//! Session/Spec integration suite (ISSUE 5 acceptance): the spec
+//! round-trips through JSON with an identical fingerprint, the builder
+//! rejects every invalid configuration with its pinned typed error,
+//! spec-driven training is bit-identical to directly-built training,
+//! the fingerprint format stays byte-compatible with pre-Spec
+//! checkpoints, and the eval window is derived from the epoch width
+//! (never overlapping the training data).
+
+use std::path::PathBuf;
+
+use stratus::coordinator::Backend;
+use stratus::data::Synthetic;
+use stratus::session::{Session, Spec, SpecBuilder};
+
+const TINY: &str = "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 relu\n\
+                    conv c2 8 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
+                    loss hinge";
+
+fn tiny_builder() -> SpecBuilder {
+    Spec::builder()
+        .net_inline(TINY)
+        .batch(4)
+        .lr(0.02)
+        .momentum(0.9)
+        .epochs(2)
+        .images(12)
+        .seed(7)
+        .eval(4)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stratus_session_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn spec_round_trips_with_identical_fingerprint() {
+    // build -> serialize -> parse: structurally identical spec AND an
+    // identical run fingerprint (the acceptance criterion's core)
+    let spec = tiny_builder()
+        .workers(2)
+        .accelerators(3)
+        .pox(4)
+        .clock_mhz(120.5)
+        .noise(0.25)
+        .checkpoint_dir("/tmp/stratus-rt")
+        .checkpoint_every(2)
+        .build()
+        .unwrap();
+    let text = spec.render();
+    let back = Spec::parse(&text).unwrap();
+    assert_eq!(back, spec, "round trip changed the spec:\n{text}");
+    let s1 = Session::new(spec).unwrap();
+    let s2 = Session::new(back).unwrap();
+    assert_eq!(s1.fingerprint(), s2.fingerprint());
+    // and the rendered form is itself stable (canonical key order)
+    assert_eq!(s2.spec().render(), text);
+}
+
+#[test]
+fn builder_rejection_table() {
+    // every validation rule, with its user-facing message pinned
+    let artifacts = || Spec::builder().net_inline(TINY).artifacts("a");
+    let cases: Vec<(SpecBuilder, &str)> = vec![
+        (Spec::builder().batch(0), "batch must be at least 1"),
+        (Spec::builder().epochs(0), "epochs must be at least 1"),
+        (Spec::builder().images(0), "images must be at least 1"),
+        (Spec::builder().eval(0), "eval must be at least 1"),
+        (Spec::builder().workers(0), "workers must be at least 1"),
+        (Spec::builder().accelerators(0),
+         "accelerators must be at least 1"),
+        (Spec::builder().pox(0), "pox must be at least 1"),
+        (Spec::builder().poy(0), "poy must be at least 1"),
+        (Spec::builder().pof(0), "pof must be at least 1"),
+        (Spec::builder().tile_rows(0), "tile-rows must be at least 1"),
+        (Spec::builder().checkpoint_dir("/tmp/x").checkpoint_every(0),
+         "checkpoint-every must be at least 1"),
+        (Spec::builder().preset("3x"),
+         "unknown scale `3x` (use 1x|2x|4x|bn1x|bn2x|bn4x"),
+        (Spec::builder().net_inline("input 3 8 8\nconv c1 4 k3 s2 p1\n\
+                                     fc fc 10"),
+         "invalid network description"),
+        (Spec::builder().backend(Backend::PerOp),
+         "backend perop needs an artifacts directory"),
+        (Spec::builder().backend(Backend::Fused),
+         "backend fused needs an artifacts directory"),
+        (artifacts().preset("bn1x").backend(Backend::Fused),
+         "golden-backend-only until Pallas BN kernels land"),
+        (Spec::builder().checkpoint_every(5),
+         "checkpoint-every needs checkpoint-dir"),
+        (Spec::builder().resume(true),
+         "resume needs checkpoint-dir"),
+        (Spec::builder().images(12).eval_offset(4),
+         "eval window starting at 4 overlaps the training window \
+          [0, 12)"),
+        // serializability guards: JSON numbers are f64
+        (Spec::builder().seed(1u64 << 60),
+         "seed wants an integer at most 2^53"),
+        (Spec::builder().images(1u64 << 60),
+         "images wants an integer at most 2^53"),
+        (Spec::builder().lr(f64::INFINITY),
+         "lr wants a finite number"),
+        (Spec::builder().noise(f64::NAN),
+         "noise wants a finite number"),
+    ];
+    for (builder, want) in cases {
+        let err = builder.build().expect_err(want);
+        let msg = err.to_string();
+        assert!(msg.contains(want), "`{msg}` does not pin `{want}`");
+    }
+    // eval_offset == epoch width is the boundary: disjoint, accepted
+    assert!(Spec::builder()
+        .net_inline(TINY)
+        .images(12)
+        .eval_offset(12)
+        .build()
+        .is_ok());
+}
+
+#[test]
+fn spec_driven_training_is_bit_identical_to_direct() {
+    // the same description through two construction paths — builder
+    // object vs parsed JSON text (what `--spec run.json` does) — must
+    // produce the same fingerprint and bit-identical training
+    let train = |spec: Spec| -> (String, Vec<i32>, u64) {
+        let session = Session::new(spec).unwrap();
+        let fp = session.fingerprint();
+        let out = session.train(|_, _, _| Ok(())).unwrap();
+        (fp, out.trainer.flat_params(),
+         out.trainer.metrics.loss_sum.to_bits())
+    };
+    let direct = tiny_builder().workers(2).build().unwrap();
+    let parsed = Spec::parse(&direct.render()).unwrap();
+    let (f1, p1, l1) = train(direct);
+    let (f2, p2, l2) = train(parsed);
+    assert_eq!(f1, f2, "fingerprint diverged");
+    assert_eq!(p1, p2, "parameters diverged");
+    assert_eq!(l1, l2, "loss sums diverged");
+}
+
+#[test]
+fn fingerprint_matches_trainer_and_pins_ckpt_format() {
+    // Session::fingerprint == Trainer::fingerprint (no drift between
+    // the facade and the checkpoint layer) ...
+    let session = Session::new(tiny_builder().build().unwrap()).unwrap();
+    assert_eq!(session.fingerprint(),
+               session.trainer().unwrap().fingerprint());
+    // ... and the format is byte-compatible with pre-Spec SCKP v1
+    // checkpoints — this literal is the historical format; a mismatch
+    // means existing checkpoints would be refused (migration gate)
+    let fc_only = Session::new(
+        Spec::builder()
+            .net_inline("input 3 8 8\nfc fc 10\nloss hinge")
+            .batch(4)
+            .lr(0.002)
+            .momentum(0.9)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        fc_only.fingerprint(),
+        "stratus-ckpt net=custom input=(3, 8, 8) nclass=10 \
+         loss=SquareHinge layers=[Fc { name: \"fc\", cin: 192, \
+         cout: 10 }] hyper(lr_q16=131,beta_q15=29491,batch=4) \
+         dv(pox=8,poy=8,pof=16,clock_mhz=240,dram_gbytes=16.9,\
+         dram_efficiency=0.6,load_balance=true,double_buffer=true,\
+         tile_rows=8,data_bits=16)"
+    );
+}
+
+#[test]
+fn session_resume_continues_bit_identically() {
+    // spec-driven checkpointed run resumed by a freshly parsed spec:
+    // equal to the uninterrupted run (params + exact loss sums)
+    let dir = tmp_dir("resume");
+    let with = |epochs: u64, resume: bool| {
+        tiny_builder()
+            .epochs(epochs)
+            .checkpoint_dir(&dir)
+            .checkpoint_every(1)
+            .resume(resume)
+            .build()
+            .unwrap()
+    };
+    let full = Session::new(tiny_builder().build().unwrap())
+        .unwrap()
+        .train(|_, _, _| Ok(()))
+        .unwrap();
+    Session::new(with(1, false))
+        .unwrap()
+        .train(|_, _, _| Ok(()))
+        .unwrap();
+    // the resuming session goes through serialize -> parse first, as
+    // `stratus train --spec run.json --resume` would
+    let resumed_spec = Spec::parse(&with(2, true).render()).unwrap();
+    let resumed = Session::new(resumed_spec)
+        .unwrap()
+        .resume(|_, _, _| Ok(()))
+        .unwrap();
+    assert_eq!(resumed.start.epoch, 1, "did not resume at epoch 2");
+    assert_eq!(full.trainer.flat_params(), resumed.trainer.flat_params());
+    assert_eq!(full.trainer.metrics.loss_sum.to_bits(),
+               resumed.trainer.metrics.loss_sum.to_bits());
+    assert_eq!(full.end, resumed.end);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_conflicts_are_typed_and_pinned() {
+    let dir = tmp_dir("conflict");
+    Session::new(
+        tiny_builder()
+            .epochs(1)
+            .checkpoint_dir(&dir)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .train(|_, _, _| Ok(()))
+    .unwrap();
+    // conflicting explicit seed
+    let err = Session::new(
+        tiny_builder()
+            .seed(9)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap_err();
+    assert!(format!("{err:#}")
+                .contains("seed 9 conflicts with the checkpoint's \
+                           recorded seed 7"),
+            "{err:#}");
+    // conflicting explicit epoch width
+    let err = Session::new(
+        tiny_builder()
+            .images(99)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap_err();
+    assert!(format!("{err:#}")
+                .contains("images 99 conflicts with the checkpoint's \
+                           recorded epoch width 12"),
+            "{err:#}");
+    // dropping the overrides resumes cleanly (recorded values win)
+    let ok = Session::new(
+        Spec::builder()
+            .net_inline(TINY)
+            .batch(4)
+            .lr(0.02)
+            .momentum(0.9)
+            .epochs(2)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap();
+    assert_eq!(ok.end.epoch, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_a_different_noise() {
+    // noise is the one data parameter the cursor does not record, so
+    // it rides the fingerprint (appended only when non-default) — a
+    // resume that would silently train on different pixels is refused
+    let dir = tmp_dir("noise");
+    Session::new(
+        tiny_builder()
+            .epochs(1)
+            .noise(0.5)
+            .checkpoint_dir(&dir)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .train(|_, _, _| Ok(()))
+    .unwrap();
+    // default-noise spec against the 0.5-noise checkpoint: refused
+    let err = Session::new(
+        tiny_builder()
+            .epochs(2)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    // the matching noise resumes cleanly
+    let ok = Session::new(
+        tiny_builder()
+            .epochs(2)
+            .noise(0.5)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap();
+    assert_eq!(ok.end.epoch, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eval_window_derives_from_epoch_width() {
+    // the eval set starts right where the training window ends — at
+    // ANY epoch width (the old CLI's hardcoded offset 1_000_000
+    // collided once --images reached it)
+    let spec = tiny_builder().images(8).eval(3).build().unwrap();
+    let session = Session::new(spec).unwrap();
+    let run = session.begin(false).unwrap();
+    assert_eq!(run.train_set().len(), 8);
+    assert_eq!(run.eval_set().len(), 3);
+    let data = Synthetic::new(10, (3, 8, 8), 7, 0.3);
+    for (i, s) in run.eval_set().iter().enumerate() {
+        let want = data.sample(8 + i as u64);
+        assert_eq!(s.image, want.image, "eval[{i}] not at offset 8+{i}");
+        assert_eq!(s.label, want.label);
+    }
+    // an explicit offset clear of the window is honored
+    let spec = tiny_builder()
+        .images(8)
+        .eval(2)
+        .eval_offset(100)
+        .build()
+        .unwrap();
+    let run = Session::new(spec).unwrap().begin(false).unwrap();
+    assert_eq!(run.eval_set()[0].image, data.sample(100).image);
+}
+
+#[test]
+fn finished_resume_is_a_no_op() {
+    let dir = tmp_dir("finished");
+    Session::new(
+        tiny_builder()
+            .epochs(1)
+            .checkpoint_dir(&dir)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .train(|_, _, _| Ok(()))
+    .unwrap();
+    let session = Session::new(
+        tiny_builder()
+            .epochs(1)
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let run = session.begin(true).unwrap();
+    assert!(run.finished());
+    let before = run.trainer().flat_params();
+    let mut epochs_seen = 0;
+    let out = run
+        .execute(|_, _, _| {
+            epochs_seen += 1;
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(epochs_seen, 0, "a finished run must not train");
+    assert_eq!(out.trainer.flat_params(), before);
+    assert_eq!(out.start, out.end);
+    let _ = std::fs::remove_dir_all(&dir);
+}
