@@ -1,0 +1,492 @@
+//! Static fixed-point range analysis: prove, at compile time, which
+//! Q-format accumulators of a compiled network can never wrap an i32 —
+//! and name the first batch size at which the ones that can, do.
+//!
+//! The paper's premise is 16-bit fixed-point training (FA=8 activation,
+//! FW=12 weight, FG=12 gradient fractional bits) with i32 accumulation.
+//! Nothing in the compiler *proved* the chosen formats safe for a given
+//! net, batch size, and DesignVars; PR 4 hit exactly that bug by hand
+//! (BN second moments wrapped the i32 batch sum and were patched to
+//! `2*FA - FQ_SHIFT` headroom).  This pass makes the bound machine-
+//! checked, the way compile-time bit-width verification is a core pass
+//! in the CNN-accelerator-compiler literature (arXiv:2203.04015;
+//! quantization-range analysis as the precondition for credible
+//! fixed-point accelerators, arXiv:1712.08934).
+//!
+//! ## Model
+//!
+//! Every layer descriptor publishes [`AccContract`]s — the exact
+//! worst-case magnitude each of its i32 accumulators reaches under
+//! fully ±i16-saturated inputs (chain length × largest tap, from the
+//! layer geometry: `nif·k·k` for conv FP, `nof·k·k` for BP, `Noy·Nox`
+//! products per weight-gradient tap, per-image statistic bounds for
+//! BN).  This pass propagates them through the requant shifts
+//! (`SHIFT_CONV_FP/BP`, `SHIFT_WU_STORE`, BN's `FQ_SHIFT` headroom)
+//! and the batch accumulation, and renders a per-layer, per-phase
+//! bit-width table with one verdict per accumulator:
+//!
+//! - `proven` / `headroom(N bits)` — fits i32 at the analyzed batch
+//!   size, with N spare magnitude bits;
+//! - `wrap-by-contract` — the bound exceeds i32, but wrapping here is
+//!   the documented deterministic contract: per-image MAC chains and
+//!   the gradient accumulators share exact wrapping-i32 semantics with
+//!   the XLA-lowered kernels on every path (engine shards, cluster
+//!   ring), so a wrap is bit-identical everywhere and reproducible —
+//!   reported, never refused;
+//! - `overflow-possible(>= K images)` — a **must-stay-exact**
+//!   accumulator (the BN statistic sums, which feed `inv_std` and the
+//!   running-statistics EMA where a wrap silently poisons training)
+//!   can wrap: K is the first image count that can exceed `i32::MAX`.
+//!
+//! The cluster ring merge adds no magnitude beyond the full-batch sum:
+//! `engine::cluster` splits the batch across instances and the ring
+//! all-reduce's partial sums are each a subset of the per-image
+//! contributions, so the batch bound already covers any accelerator
+//! count — which is exactly why bit-identity holds at any
+//! workers × accelerators.  The report still records the cluster size
+//! it was derived under.
+//!
+//! `session::validate` runs this pass on every spec build and refuses
+//! (typed [`crate::session::SpecError`]) any spec with an
+//! overflow-possible verdict; `stratus analyze` renders the full table
+//! (`--json` for the CI artifact form) without refusing, via
+//! `Spec::resolve_for_analysis`.
+
+use std::collections::BTreeMap;
+
+use crate::config::{DesignVars, Network};
+use crate::hw::mac_array::Phase;
+use crate::jsonx::Json;
+use crate::nn::bn::FQ_SHIFT;
+use crate::ops::{self, AccContract};
+
+/// Largest value a wrapping i32 batch accumulator may reach while
+/// staying exact.  (The negative range holds one more, so using the
+/// positive bound is conservative by a single count.)
+pub const I32_SAFE: i64 = i32::MAX as i64;
+
+/// Model knobs for historical/what-if layouts.  The default models the
+/// kernels as shipped; the PR-4 regression test swaps
+/// `bn_moment_shift` to 0 to re-derive the pre-fix overflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Model {
+    /// Headroom shift applied to per-image BN second moments before
+    /// they enter the i32 batch sum (`nn::bn::FQ_SHIFT` as shipped;
+    /// 0 models the pre-PR-4 layout that stored them at full 2·FA).
+    pub bn_moment_shift: u32,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Model { bn_moment_shift: FQ_SHIFT }
+    }
+}
+
+/// One analyzed accumulator: a layer × phase × accumulator row of the
+/// report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AccRow {
+    pub layer: String,
+    pub phase: Phase,
+    /// Accumulator tag from the op's contract (`fp-mac`, `wgrad-sum`,
+    /// `moment-sum`, ...).
+    pub acc: &'static str,
+    /// Worst |value| one image contributes (the raw chain peak for
+    /// per-image accumulators; the post-store-shift contribution for
+    /// batch accumulators).
+    pub per_image: i64,
+    /// Worst |value| the i32 accumulator can mathematically reach at
+    /// the analyzed batch size (i128: the point is describing values
+    /// that do not fit).
+    pub worst: i128,
+    /// Bit-width needed to hold `worst` exactly (magnitude + sign).
+    pub bits: u32,
+    pub per_batch: bool,
+    pub must_stay_exact: bool,
+    pub verdict: Verdict,
+}
+
+/// The analyzer's per-accumulator conclusion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Fits i32 at the analyzed batch size with N spare magnitude bits.
+    Proven { headroom_bits: u32 },
+    /// Exceeds i32, but wrapping is the documented deterministic
+    /// contract for this accumulator class.
+    WrapByContract,
+    /// A must-stay-exact accumulator can wrap; `first_wrap_images` is
+    /// the smallest image count whose worst-case sum exceeds i32.
+    OverflowPossible { first_wrap_images: u64 },
+}
+
+impl Verdict {
+    pub fn is_overflow(&self) -> bool {
+        matches!(self, Verdict::OverflowPossible { .. })
+    }
+
+    /// The pinned rendering (`proven`, `headroom(N bits)`,
+    /// `wrap-by-contract`, `overflow-possible(>= K images)`) — CI greps
+    /// for `overflow-possible`.
+    pub fn label(&self) -> String {
+        match self {
+            Verdict::Proven { headroom_bits: 0 } => "proven".into(),
+            Verdict::Proven { headroom_bits } => {
+                format!("headroom({headroom_bits} bits)")
+            }
+            Verdict::WrapByContract => "wrap-by-contract".into(),
+            Verdict::OverflowPossible { first_wrap_images } => {
+                format!("overflow-possible(>= {first_wrap_images} \
+                         images)")
+            }
+        }
+    }
+}
+
+/// The full range-analysis report for one (network, design, batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeReport {
+    pub net: String,
+    pub batch: usize,
+    pub cluster: usize,
+    pub rows: Vec<AccRow>,
+}
+
+fn phase_tag(p: Phase) -> &'static str {
+    match p {
+        Phase::Fp => "FP",
+        Phase::Bp => "BP",
+        Phase::Wu => "WU",
+    }
+}
+
+/// Magnitude + sign bits needed to hold `worst` exactly (0 -> 1 bit).
+fn bits_for(worst: i128) -> u32 {
+    debug_assert!(worst >= 0);
+    (128 - worst.leading_zeros()) + 1
+}
+
+fn analyze_contract(c: &AccContract, batch: usize) -> (i64, i128) {
+    if c.per_batch {
+        let per_image = c.per_image_stored();
+        (per_image, i128::from(per_image) * batch as i128)
+    } else {
+        (c.per_image_raw, i128::from(c.per_image_raw))
+    }
+}
+
+/// Run the pass with the as-shipped kernel model.
+pub fn analyze(net: &Network, dv: &DesignVars, batch: usize)
+               -> RangeReport {
+    analyze_model(net, dv, batch, &Model::default())
+}
+
+/// Run the pass with explicit model knobs (regression tests of
+/// historical layouts).
+pub fn analyze_model(net: &Network, dv: &DesignVars, batch: usize,
+                     model: &Model) -> RangeReport {
+    let mut rows = Vec::new();
+    for l in &net.layers {
+        for mut c in ops::for_layer(l).range_contracts(l) {
+            if c.acc == "moment-sum" {
+                c.store_shift = model.bn_moment_shift;
+            }
+            let (per_image, worst) = analyze_contract(&c, batch);
+            let bits = bits_for(worst);
+            let verdict = if worst <= i128::from(I32_SAFE) {
+                // 32 bits total = magnitude 31: headroom counts spare
+                // magnitude bits below the i32 limit
+                Verdict::Proven { headroom_bits: 32 - bits }
+            } else if c.must_stay_exact {
+                let first_wrap =
+                    (I32_SAFE / per_image) as u64 + 1;
+                Verdict::OverflowPossible {
+                    first_wrap_images: first_wrap,
+                }
+            } else {
+                Verdict::WrapByContract
+            };
+            rows.push(AccRow {
+                layer: l.name().to_string(),
+                phase: c.phase,
+                acc: c.acc,
+                per_image,
+                worst,
+                bits,
+                per_batch: c.per_batch,
+                must_stay_exact: c.must_stay_exact,
+                verdict,
+            });
+        }
+    }
+    RangeReport {
+        net: net.name.clone(),
+        batch,
+        cluster: dv.cluster,
+        rows,
+    }
+}
+
+impl RangeReport {
+    /// The first overflow-possible row, if any — what the spec gate
+    /// reports and refuses on.
+    pub fn first_overflow(&self) -> Option<&AccRow> {
+        self.rows.iter().find(|r| r.verdict.is_overflow())
+    }
+
+    pub fn overflow_count(&self) -> usize {
+        self.rows.iter().filter(|r| r.verdict.is_overflow()).count()
+    }
+
+    /// Smallest headroom among the proven must-stay-exact batch
+    /// accumulators — how close the analyzed batch sails to the limit.
+    pub fn min_exact_headroom_bits(&self) -> Option<u32> {
+        self.rows
+            .iter()
+            .filter(|r| r.must_stay_exact)
+            .filter_map(|r| match r.verdict {
+                Verdict::Proven { headroom_bits } => Some(headroom_bits),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// The human table `stratus analyze` prints.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "range analysis: {} · batch {} · {} accelerator(s)\n\
+             worst-case i32 accumulator magnitudes under fully \
+             ±i16-saturated inputs\n\n",
+            self.net, self.batch, self.cluster
+        );
+        out.push_str(&format!(
+            "{:<6} {:<5} {:<11} {:>16} {:>20} {:>5}  {}\n",
+            "layer", "phase", "accumulator", "per-image", "worst-case",
+            "bits", "verdict"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<6} {:<5} {:<11} {:>16} {:>20} {:>5}  {}\n",
+                r.layer,
+                phase_tag(r.phase),
+                r.acc,
+                r.per_image,
+                r.worst,
+                r.bits,
+                r.verdict.label()
+            ));
+        }
+        let proven = self
+            .rows
+            .iter()
+            .filter(|r| matches!(r.verdict, Verdict::Proven { .. }))
+            .count();
+        let wrap = self
+            .rows
+            .iter()
+            .filter(|r| r.verdict == Verdict::WrapByContract)
+            .count();
+        out.push_str(&format!(
+            "\n{} accumulators: {} proven, {} wrap-by-contract, {} \
+             overflow-possible\n",
+            self.rows.len(),
+            proven,
+            wrap,
+            self.overflow_count()
+        ));
+        if let Some(bits) = self.min_exact_headroom_bits() {
+            out.push_str(&format!(
+                "exact-class headroom at batch {}: {} bit(s)\n",
+                self.batch, bits
+            ));
+        }
+        out
+    }
+
+    /// The machine-readable report (`stratus analyze --json`; CI
+    /// uploads these per preset).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("layer".into(), Json::Str(r.layer.clone()));
+                m.insert(
+                    "phase".into(),
+                    Json::Str(phase_tag(r.phase).into()),
+                );
+                m.insert("acc".into(), Json::Str(r.acc.into()));
+                // i128 worst cases exceed f64's exact-integer range;
+                // strings keep the report lossless
+                m.insert(
+                    "per_image".into(),
+                    Json::Str(r.per_image.to_string()),
+                );
+                m.insert("worst".into(), Json::Str(r.worst.to_string()));
+                m.insert("bits".into(), Json::Num(f64::from(r.bits)));
+                m.insert("per_batch".into(), Json::Bool(r.per_batch));
+                m.insert(
+                    "must_stay_exact".into(),
+                    Json::Bool(r.must_stay_exact),
+                );
+                m.insert(
+                    "verdict".into(),
+                    Json::Str(r.verdict.label()),
+                );
+                if let Verdict::OverflowPossible { first_wrap_images } =
+                    r.verdict
+                {
+                    m.insert(
+                        "first_wrap_images".into(),
+                        Json::Num(first_wrap_images as f64),
+                    );
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("net".into(), Json::Str(self.net.clone()));
+        m.insert("batch".into(), Json::Num(self.batch as f64));
+        m.insert("cluster".into(), Json::Num(self.cluster as f64));
+        m.insert("rows".into(), Json::Arr(rows));
+        m.insert(
+            "overflow_possible".into(),
+            Json::Num(self.overflow_count() as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{SAT_MAX, TAP_MAX};
+
+    fn dv() -> DesignVars {
+        DesignVars::for_scale(1)
+    }
+
+    #[test]
+    fn all_presets_clean_at_default_batch() {
+        for net in [
+            Network::cifar(1),
+            Network::cifar(2),
+            Network::cifar(4),
+            Network::cifar_bn(1),
+            Network::cifar_bn(2),
+            Network::cifar_bn(4),
+        ] {
+            let report =
+                analyze(&net, &dv(), crate::session::DEFAULT_BATCH);
+            assert_eq!(report.overflow_count(), 0, "{}", net.name);
+            assert!(report.first_overflow().is_none());
+            // every layer with accumulators is represented
+            assert!(report.rows.len() >= net.layers.len() - 3);
+        }
+    }
+
+    #[test]
+    fn bn_moment_sum_wraps_at_128_images() {
+        let net = Network::cifar_bn(1);
+        // 127 worst-case images fit exactly...
+        assert_eq!(analyze(&net, &dv(), 127).overflow_count(), 0);
+        // ...and 128 is the first wrapping count
+        let report = analyze(&net, &dv(), 128);
+        let row = report.first_overflow().expect("moment-sum flagged");
+        assert_eq!(row.acc, "moment-sum");
+        assert_eq!(row.layer, "n1");
+        assert_eq!(
+            row.verdict,
+            Verdict::OverflowPossible { first_wrap_images: 128 }
+        );
+    }
+
+    #[test]
+    fn pre_pr4_moment_layout_is_rediscovered() {
+        // the PR-4 bug: second moments stored at full 2·FA (no
+        // FQ_SHIFT headroom) wrap the i32 batch sum at 2 saturated
+        // images — the analyzer must rediscover this automatically
+        let net = Network::cifar_bn(1);
+        let legacy = Model { bn_moment_shift: 0 };
+        let report = analyze_model(&net, &dv(), 128, &legacy);
+        let row = report.first_overflow().expect("legacy layout flagged");
+        assert_eq!(row.acc, "moment-sum");
+        assert_eq!(
+            row.verdict,
+            Verdict::OverflowPossible { first_wrap_images: 2 }
+        );
+        // even batch 2 is refusable under the legacy layout
+        assert_eq!(
+            analyze_model(&net, &dv(), 2, &legacy).overflow_count(),
+            1
+        );
+        assert_eq!(
+            analyze_model(&net, &dv(), 1, &legacy).overflow_count(),
+            0
+        );
+    }
+
+    #[test]
+    fn conv_chain_bounds_match_geometry() {
+        let net = Network::cifar(1);
+        let report = analyze(&net, &dv(), 40);
+        // c1: cin=3, k=3 -> 27 taps + bias seed
+        let fp = report
+            .rows
+            .iter()
+            .find(|r| r.layer == "c1" && r.acc == "fp-mac")
+            .unwrap();
+        assert_eq!(
+            i128::from((1i64 << 28) + 27 * TAP_MAX),
+            fp.worst
+        );
+        assert_eq!(fp.verdict, Verdict::WrapByContract);
+        // c1 bias-grad: 32·32 pixels × sat bound × batch
+        let bg = report
+            .rows
+            .iter()
+            .find(|r| r.layer == "c1" && r.acc == "bgrad-sum")
+            .unwrap();
+        assert_eq!(bg.worst, i128::from(1024 * SAT_MAX) * 40);
+    }
+
+    #[test]
+    fn verdict_labels_are_pinned() {
+        assert_eq!(Verdict::Proven { headroom_bits: 0 }.label(),
+                   "proven");
+        assert_eq!(Verdict::Proven { headroom_bits: 7 }.label(),
+                   "headroom(7 bits)");
+        assert_eq!(Verdict::WrapByContract.label(), "wrap-by-contract");
+        assert_eq!(
+            Verdict::OverflowPossible { first_wrap_images: 128 }
+                .label(),
+            "overflow-possible(>= 128 images)"
+        );
+    }
+
+    #[test]
+    fn bits_and_headroom_are_exact() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 2);
+        assert_eq!(bits_for(i128::from(i32::MAX)), 32);
+        assert_eq!(bits_for(1 << 31), 33);
+        // a batch-40 moment sum: 40 · 2^24 needs 31 bits incl. sign
+        assert_eq!(bits_for(40 << 24), 31);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let net = Network::cifar_bn(1);
+        let json = analyze(&net, &dv(), 40).to_json();
+        assert_eq!(json.get("net").and_then(Json::as_str),
+                   Some("cifar10-bn-1x"));
+        let rows = json.get("rows").and_then(Json::as_arr).unwrap();
+        assert!(!rows.is_empty());
+        let first = rows[0].get("verdict").and_then(Json::as_str);
+        assert!(first.is_some());
+        assert_eq!(
+            json.get("overflow_possible").and_then(Json::as_f64),
+            Some(0.0)
+        );
+    }
+}

@@ -8,6 +8,8 @@
 //! matching what XLA emits for the lowered Pallas kernels, so the rust
 //! golden model and the PJRT artifacts agree to the last bit.
 
+#![warn(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 /// Fraction bits of activations (range ±128, resolution 1/256).
 pub const FA: u32 = 8;
 /// Fraction bits of weights and biases.
@@ -56,6 +58,8 @@ pub fn requant(acc: i32, shift: u32) -> i32 {
 /// Float -> fixed grid at `frac` fraction bits (build-time/test helper;
 /// rounds half away from zero like numpy's `round`).
 #[inline]
+// clamp() bounds v to [-32768.0, 32767.0] before the cast narrows.
+#[allow(clippy::cast_possible_truncation)]
 pub fn quantize(x: f64, frac: u32) -> i32 {
     let v = (x * f64::from(1u32 << frac)).round();
     v.clamp(f64::from(I16_MIN), f64::from(I16_MAX)) as i32
@@ -74,6 +78,9 @@ pub fn mul_q(a: i32, b: i32, shift: u32) -> i32 {
 }
 
 #[cfg(test)]
+// Test vectors narrow deliberately (an LCG sliced to ~±2^30, clamped
+// float references): the casts are the point of the tests.
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
 

@@ -26,6 +26,7 @@
 //! See DESIGN.md for the full system inventory and the experiment index
 //! (every table and figure of the paper mapped to a bench target).
 
+pub mod analysis;
 pub mod ckpt;
 pub mod compiler;
 pub mod config;

@@ -2,13 +2,14 @@
 //!
 //! Subcommands:
 //!   compile   run the RTL compiler on a network, print the design report
+//!   analyze   static fixed-point range analysis of every accumulator
 //!   simulate  cycle-simulate a design point (Table II style numbers)
 //!   train     train a CNN through the coordinator (golden/perop/fused)
 //!   report    regenerate a paper table/figure (table2|table3|fig9|fig10)
 //!
-//! Every experiment-shaped subcommand (compile/simulate/train/
-//! calibrate) is a thin shell over [`stratus::session`]: flags build a
-//! validated `session::Spec`, and a `Session` does the actual work.
+//! Every experiment-shaped subcommand (compile/analyze/simulate/
+//! train/calibrate) is a thin shell over [`stratus::session`]: flags
+//! build a validated `session::Spec`, and a `Session` does the work.
 //! compile/simulate/train additionally take `--spec run.json` (load a
 //! serialized spec; explicit flags still override it) and
 //! `--dump-spec out.json` (write the resolved spec and exit —
@@ -27,6 +28,7 @@ use std::process::exit;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use stratus::analysis;
 use stratus::compiler::{calibrate, RtlCompiler};
 use stratus::metrics;
 use stratus::session::{Session, Spec, SpecBuilder, DEFAULT_SEED};
@@ -130,6 +132,7 @@ fn flag_spec(cmd: &str)
     let (design, extra, extra_sw): (bool, &[&str], &[&str]) = match cmd {
         "compile" => (true, &["emit-verilog"], &[]),
         "simulate" => (true, &["batch"], &[]),
+        "analyze" => (true, &["batch"], &["json"]),
         "train" => (true,
                     &["batch", "epochs", "images", "eval", "lr",
                       "momentum", "seed", "workers", "backend",
@@ -156,6 +159,13 @@ fn flag_spec(cmd: &str)
 /// already gated which flags each subcommand accepts, so absent flags
 /// simply never fire here.
 fn build_spec(args: &Args) -> Result<Spec> {
+    Ok(spec_builder(args)?.build()?)
+}
+
+/// The flag -> builder wiring shared by [`build_spec`] and
+/// `cmd_analyze` (which finishes with the gate-free
+/// `build_for_analysis` so it can report on specs `build` refuses).
+fn spec_builder(args: &Args) -> Result<SpecBuilder> {
     let mut b: SpecBuilder = match args.get("spec") {
         Some(file) => Spec::load(Path::new(file))?.to_builder(),
         None => Spec::builder(),
@@ -234,7 +244,7 @@ fn build_spec(args: &Args) -> Result<Spec> {
     if args.has("resume") {
         b = b.resume(true);
     }
-    Ok(b.build()?)
+    Ok(b)
 }
 
 /// Handle `--dump-spec OUT`: write the resolved spec and skip the run.
@@ -299,6 +309,26 @@ fn cmd_compile(args: &Args) -> Result<()> {
         std::fs::write(out, &v)
             .with_context(|| format!("writing {out}"))?;
         println!("netlist        : wrote {} bytes to {out}", v.len());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let (spec, net, dv) = spec_builder(args)?.build_for_analysis()?;
+    if maybe_dump_spec(args, &spec)? {
+        return Ok(());
+    }
+    let report = analysis::analyze(&net, &dv, spec.batch);
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if let Some(row) = report.first_overflow() {
+        bail!("{} overflow-possible accumulator(s); first is the {} \
+               of layer `{}` — `stratus train`/`compile` will refuse \
+               this spec",
+              report.overflow_count(), row.acc, row.layer);
     }
     Ok(())
 }
@@ -485,7 +515,7 @@ stratus — compiler-based FPGA CNN-training accelerator (reproduction)
 
 USAGE: stratus <command> [flags]
 
-compile, simulate, and train also accept
+compile, analyze, simulate, and train also accept
   --spec FILE       load a serialized session::Spec (JSON); explicit
                     flags still override individual fields
   --dump-spec OUT   write the resolved spec to OUT (or - for stdout)
@@ -502,6 +532,14 @@ COMMANDS:
                                ring all-reduce schedule + control-ROM
                                word and reports aggregate resources]
             [--link-gbs F      inter-accelerator link bandwidth, GB/s]
+  analyze   --scale .. [--batch N] [--json]  static fixed-point range
+            analysis: worst-case magnitude and bit-width of every i32
+            accumulator (FP/BP/WU, per-image and per-batch), with a
+            per-row verdict — proven / headroom(N bits) /
+            wrap-by-contract / overflow-possible(>= K images).  Exits
+            non-zero when any accumulator is overflow-possible (the
+            same condition `compile`/`train` refuse at spec-build
+            time).  --json emits the machine-readable report
   simulate  --scale .. --batch N            cycle-level simulation
             [--accelerators N  project N data-parallel instances with a
                                ring all-reduce of WU gradients between
@@ -552,6 +590,7 @@ fn run_cli(argv: &[String]) -> Result<()> {
         })?;
     match cmd {
         "compile" => cmd_compile(&args),
+        "analyze" => cmd_analyze(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
         "report" => cmd_report(&args),

@@ -52,12 +52,16 @@ pub const FQ_SHIFT: u32 = 6;
 /// i16 range (the BN unit's wide product register in front of the
 /// output saturator).
 #[inline(always)]
+// clamp() bounds the shifted product to the i16 range before the cast.
+#[allow(clippy::cast_possible_truncation)]
 fn requant64(acc: i64, shift: u32) -> i32 {
     ((acc + (1i64 << (shift - 1))) >> shift).clamp(-32768, 32767) as i32
 }
 
 /// Per-channel integer scale `gamma / sqrt(var + eps)` at FS, i32-wide
 /// (the scale refresh runs once per batch, off the critical path).
+// clamp(±2^28) bounds the rounded f64 before the cast narrows.
+#[allow(clippy::cast_possible_truncation)]
 pub fn scales_q(gamma: &Tensor, rv: &Tensor) -> Vec<i32> {
     gamma
         .data()
@@ -76,6 +80,8 @@ pub fn scales_q(gamma: &Tensor, rv: &Tensor) -> Vec<i32> {
 
 /// Per-channel inverse standard deviation `1 / sqrt(var + eps)` at FS
 /// (the xhat factor of the gamma gradient).
+// clamp(±2^28) bounds the rounded f64 before the cast narrows.
+#[allow(clippy::cast_possible_truncation)]
 pub fn inv_std_q(rv: &Tensor) -> Vec<i32> {
     rv.data()
         .iter()
@@ -95,6 +101,9 @@ pub fn inv_std_q(rv: &Tensor) -> Vec<i32> {
 /// These are what the per-image schedule streams into the DRAM
 /// statistic accumulators; averaging them over a batch gives the batch
 /// statistics (every image contributes the same pixel count).
+// the mean of i16-saturated pixels fits i16; the moment is clamped to
+// i32::MAX before the cast narrows.
+#[allow(clippy::cast_possible_truncation)]
 pub fn image_stats(x: &Tensor) -> (Tensor, Tensor) {
     let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     let n = (h * w) as i64;
@@ -208,6 +217,9 @@ pub fn backward_params(g: &Tensor, x_in: &Tensor, rm: &Tensor,
 /// moments, then the Q15 EMA (`r = m*r + (1-m)*batch`).  Pure integer
 /// arithmetic — deterministic at any worker/accelerator grouping
 /// because the accumulators merge in fixed order before this runs.
+// the Q15 EMA of two i32-range operands is bounded by the larger one,
+// so the >> 15 result fits i32 before the cast narrows.
+#[allow(clippy::cast_possible_truncation)]
 pub fn ema_update(rm: &mut Tensor, rv: &mut Tensor, sm_acc: &[i32],
                   sq_acc: &[i32], count: usize) {
     if count == 0 {
@@ -254,6 +266,8 @@ pub struct IntBatchNorm {
 }
 
 impl IntBatchNorm {
+    // ema is a momentum in [0, 1]; its Q15 image fits i16.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn new(channels: usize, ema: f64) -> IntBatchNorm {
         let mut bn = IntBatchNorm {
             mean: vec![0; channels],
@@ -279,6 +293,9 @@ impl IntBatchNorm {
 
     /// Update running statistics from one (C, H, W) activation tensor
     /// (per-image EMA — images stream one at a time on the accelerator).
+    // means of i16-saturated pixels fit i16, the variance is clamped to
+    // i32::MAX, and the Q15 EMA is bounded by its operands.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn observe(&mut self, x: &Tensor) {
         let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
         assert_eq!(c, self.mean.len());
@@ -353,6 +370,9 @@ impl IntBatchNorm {
 }
 
 #[cfg(test)]
+// Test fixtures narrow small hand-picked constants; the casts are
+// value-checked by the assertions themselves.
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::nn::testutil::{randi, Lcg};

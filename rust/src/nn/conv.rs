@@ -137,6 +137,9 @@ pub fn conv_wu(x: &Tensor, g: &Tensor, pad: usize) -> (Tensor, Vec<i32>) {
 }
 
 #[cfg(test)]
+// The float-reference comparisons narrow small in-range values; the
+// assertions value-check the casts.
+#[allow(clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::nn::testutil::{randi, Lcg};

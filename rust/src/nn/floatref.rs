@@ -32,6 +32,9 @@ impl FTensor {
         }
     }
 
+    // dequantized 16-bit values (< 2^16 with <= 16 fraction bits) are
+    // exactly representable in f32.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn from_fixed(t: &Tensor, frac: u32) -> FTensor {
         FTensor {
             shape: t.shape().to_vec(),
@@ -208,6 +211,10 @@ pub struct FloatTrainer {
 
 impl FloatTrainer {
     /// Start from the SAME (dequantized) parameters as a fixed trainer.
+    // dequantized fixed-point values and the (small) hyper-parameters
+    // round to f32 within the reference model's own tolerance; this is
+    // the float baseline, not the bit-exact path.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn from_params(net: &Network, params: &Params, lr: f64,
                        beta: f64) -> Result<FloatTrainer> {
         let mut weights = HashMap::new();

@@ -3,6 +3,8 @@
 //! fixed-point verification model), tensor/IO utilities, and the
 //! SGD-with-momentum weight-update arithmetic.
 
+#![warn(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 pub mod bn;
 pub mod conv;
 pub mod fc;

@@ -7,6 +7,8 @@ use crate::nn::tensor::Tensor;
 /// k x k max pooling with flat window-argmax indices (row-major within the
 /// window: idx = dy * k + dx).  Ties pick the first maximum, matching
 /// `jnp.argmax`.
+// the window-local index is < k*k (k is 2 or 3), far inside i32.
+#[allow(clippy::cast_possible_truncation)]
 pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
     let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     assert!(h % k == 0 && w % k == 0);
@@ -37,6 +39,8 @@ pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
 
 /// Upsample pooled gradients through the stored indices (demultiplexer)
 /// and scale by the binary ReLU activation gradient.
+// stored argmax indices are in [0, k*k) by construction in `maxpool`.
+#[allow(clippy::cast_sign_loss)]
 pub fn upsample_scale(g: &Tensor, idx: &Tensor, mask: &Tensor, k: usize)
                       -> Tensor {
     let (c, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);

@@ -24,6 +24,9 @@ pub struct SgdHyper {
 }
 
 impl SgdHyper {
+    // lr and beta are small training hyper-parameters (|x| << 2^14);
+    // their Q16/Q15 images fit i32 by orders of magnitude.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn new(lr: f64, beta: f64, batch: usize) -> SgdHyper {
         SgdHyper {
             lr_q16: (lr * f64::from(1 << 16)).round() as i32,
@@ -33,6 +36,8 @@ impl SgdHyper {
     }
 
     /// Q15 reciprocal of the batch size.
+    // 2^15 / batch <= 2^15: the rounded value always fits i64.
+    #[allow(clippy::cast_possible_truncation)]
     fn recip_q15(&self) -> i64 {
         ((f64::from(1 << 15)) / self.batch as f64).round() as i64
     }
@@ -140,6 +145,9 @@ impl ParamState {
     /// clears the accumulator.  Statistic accumulators take no SGD step
     /// (the coordinator folds them into the BN running statistics via
     /// `nn::bn::ema_update` and resets them itself).
+    // every narrowing cast sits behind a clamp to the i32 (or ±2^28
+    // bias) range, so the cast can never change the value.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn apply(&mut self, param: &mut Tensor, hy: &SgdHyper) {
         assert_ne!(self.kind, ParamKind::Stat,
                    "statistic accumulators are not SGD-stepped");

@@ -108,6 +108,9 @@ impl Bundle {
     }
 
     /// Serialize to bytes (same layout the python writer produces).
+    // the u32 length fields mirror the on-disk format; entry counts,
+    // name lengths and tensor dims are all far below 2^32.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);

@@ -34,7 +34,10 @@ impl Lcg {
     }
 
     /// Uniform in [-amp, amp].
+    // 2*amp+1 is positive for any sane amplitude, and the sampled
+    // value is < 2*amp+1, so both casts preserve the value.
     #[inline]
+    #[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
     pub fn int_pm(&mut self, amp: i32) -> i32 {
         (self.below((2 * amp + 1) as u64) as i32) - amp
     }

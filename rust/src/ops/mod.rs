@@ -28,8 +28,10 @@ use crate::compiler::codegen::ControlWord;
 use crate::compiler::module_library::Module;
 use crate::compiler::schedule::{OpKind, Step};
 use crate::config::{DesignVars, Layer};
+use crate::fixed::{SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE};
 use crate::hw::bram::{BufferGroup, BufferSpec};
 use crate::hw::mac_array::{self, LogicCost, Phase};
+use crate::nn::bn::FQ_SHIFT;
 
 /// Bytes per 16-bit data word.
 pub const W16: u64 = 2;
@@ -71,6 +73,64 @@ pub struct StepCtx<'a> {
     pub is_first: bool,
     /// The layer below in FP order (`None` for the first layer).
     pub below: Option<&'a Layer>,
+}
+
+// ------------------------------------------------ range contracts
+
+/// Largest |x · w| one 16-bit MAC tap can produce: the asymmetric i16
+/// range pairs 32768 (`i16::MIN` magnitude) with 32767.
+pub const TAP_MAX: i64 = 32768 * 32767;
+/// Largest |value| a `sat16`-bounded word can carry (`|i16::MIN|`).
+pub const SAT_MAX: i64 = 32768;
+/// SGD clamps bias parameters (held at FA+FW) to ±2^28
+/// (`nn::sgd::ParamState::apply`), so a bias seeding a MAC accumulator
+/// is bounded by this, not by the i32 range.
+pub const BIAS_MAX: i64 = 1 << 28;
+
+/// The worst-case range contract of one i32 accumulator a layer's
+/// kernels drive — the per-op input to the static fixed-point range
+/// analyzer (`crate::analysis`).  Magnitudes are exact worst cases
+/// under fully ±i16-saturated inputs, in i64 so the contract itself
+/// cannot overflow while describing an overflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccContract {
+    /// Short accumulator tag (`fp-mac`, `wgrad-sum`, `moment-sum`, ...).
+    pub acc: &'static str,
+    /// Training phase whose pass drives this accumulator.
+    pub phase: Phase,
+    /// Worst |value| the accumulator reaches while processing ONE
+    /// image, before any store shift.
+    pub per_image_raw: i64,
+    /// Round-half-up right shift applied when the per-image result is
+    /// handed on (`SHIFT_CONV_FP/BP` requant, `SHIFT_WU_STORE`,
+    /// `FQ_SHIFT`); 0 when stored unshifted.
+    pub store_shift: u32,
+    /// True: the shifted per-image results accumulate across the whole
+    /// batch in one wrapping i32 (DRAM gradient / statistic
+    /// accumulators).  False: the accumulator is reset per image.
+    pub per_batch: bool,
+    /// True: a wrap silently corrupts semantics (BN statistic sums feed
+    /// `inv_std`/EMA), so the analyzer must prove exactness and the
+    /// spec gate refuses batch sizes that can wrap it.  False: wrapping
+    /// is the documented deterministic i32 contract shared with the
+    /// XLA-lowered kernels (reported, never refused).
+    pub must_stay_exact: bool,
+}
+
+impl AccContract {
+    /// Worst |value| one image contributes to a batch accumulator,
+    /// after the store shift.  An i32 chain can never hand more than
+    /// `2^31 >> shift` to the store, whatever the raw chain bound says
+    /// — the cap models the wrap.
+    pub fn per_image_stored(&self) -> i64 {
+        let shifted = if self.store_shift == 0 {
+            self.per_image_raw
+        } else {
+            (self.per_image_raw + (1i64 << (self.store_shift - 1)))
+                >> self.store_shift
+        };
+        shifted.min((1i64 << 31) >> self.store_shift)
+    }
 }
 
 /// Everything one layer kind knows about itself.  Default methods cover
@@ -192,6 +252,16 @@ pub trait LayerOps: Sync {
 
     /// Control-ROM word for the global control logic.
     fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord;
+
+    /// Worst-case range contracts for every i32 accumulator this
+    /// layer's kernels drive (see [`AccContract`]); the static range
+    /// analyzer propagates these through batch size and cluster merge.
+    /// Default: none (pool is compare/route only — `sat16` on the
+    /// mask multiply, no accumulation).
+    fn range_contracts(&self, l: &Layer) -> Vec<AccContract> {
+        let _ = l;
+        Vec::new()
+    }
 }
 
 /// The registry dispatch: the one place a layer kind maps to its
@@ -443,6 +513,66 @@ impl LayerOps for ConvOps {
             tiles_y: h.div_ceil(dv.tile_rows),
             tiles_of: cout.div_ceil(dv.pof),
         }
+    }
+
+    fn range_contracts(&self, l: &Layer) -> Vec<AccContract> {
+        let Layer::Conv { cin, cout, h, w, k, .. } = *l else {
+            unreachable!()
+        };
+        let hw = (h * w) as i64;
+        let taps_fp = (cin * k * k) as i64;
+        let taps_bp = (cout * k * k) as i64;
+        vec![
+            // FP MAC chain: the bias (at FA+FW) seeds the accumulator,
+            // then nif·k·k taps; requant+sat16 on store
+            AccContract {
+                acc: "fp-mac",
+                phase: Phase::Fp,
+                per_image_raw: BIAS_MAX + taps_fp * TAP_MAX,
+                store_shift: SHIFT_CONV_FP,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            // BP through transposed/flipped weights: nof·k·k taps
+            AccContract {
+                acc: "bp-mac",
+                phase: Phase::Bp,
+                per_image_raw: taps_bp * TAP_MAX,
+                store_shift: SHIFT_CONV_BP,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            // WU per-tap chain: one gradient map (Noy·Nox products)
+            // per (of, if, ky, kx) kernel-gradient element
+            AccContract {
+                acc: "wu-mac",
+                phase: Phase::Wu,
+                per_image_raw: hw * TAP_MAX,
+                store_shift: SHIFT_WU_STORE,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            // the i32 DRAM weight-gradient accumulator: shift_round of
+            // each image's wu-mac chain, summed over the whole batch
+            AccContract {
+                acc: "wgrad-sum",
+                phase: Phase::Wu,
+                per_image_raw: hw * TAP_MAX,
+                store_shift: SHIFT_WU_STORE,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+            // bias gradient: plain sum of gradients over Noy·Nox per
+            // image, over the batch
+            AccContract {
+                acc: "bgrad-sum",
+                phase: Phase::Wu,
+                per_image_raw: hw * SAT_MAX,
+                store_shift: 0,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+        ]
     }
 }
 
@@ -763,6 +893,47 @@ impl LayerOps for FcOps {
             tiles_of: cout.div_ceil(dv.pof),
         }
     }
+
+    fn range_contracts(&self, l: &Layer) -> Vec<AccContract> {
+        let Layer::Fc { cin, cout, .. } = *l else { unreachable!() };
+        vec![
+            AccContract {
+                acc: "fp-mac",
+                phase: Phase::Fp,
+                per_image_raw: BIAS_MAX + cin as i64 * TAP_MAX,
+                store_shift: SHIFT_CONV_FP,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            AccContract {
+                acc: "bp-mac",
+                phase: Phase::Bp,
+                per_image_raw: cout as i64 * TAP_MAX,
+                store_shift: SHIFT_CONV_BP,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            // fc WU is a single g·x product per weight element, so the
+            // only chain is the batch accumulator itself
+            AccContract {
+                acc: "wgrad-sum",
+                phase: Phase::Wu,
+                per_image_raw: TAP_MAX,
+                store_shift: SHIFT_WU_STORE,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+            // db = g directly, one gradient word per image
+            AccContract {
+                acc: "bgrad-sum",
+                phase: Phase::Wu,
+                per_image_raw: SAT_MAX,
+                store_shift: 0,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+        ]
+    }
 }
 
 // ------------------------------------------------------------------ bn
@@ -976,6 +1147,67 @@ impl LayerOps for BnOps {
             tiles_of: c.div_ceil(dv.pof),
         }
     }
+
+    fn range_contracts(&self, l: &Layer) -> Vec<AccContract> {
+        let Layer::Bn { h, w, .. } = *l else { unreachable!() };
+        let hw = (h * w) as i64;
+        vec![
+            // sm_* batch accumulator: per-image channel means at FA
+            // (hard-bounded by the i16 input range — the per-image sum
+            // itself is i64 in `image_stats`, so only the batch sum is
+            // an i32).  A wrap poisons the running statistics: gate
+            // class.
+            AccContract {
+                acc: "mean-sum",
+                phase: Phase::Fp,
+                per_image_raw: SAT_MAX,
+                store_shift: 0,
+                per_batch: true,
+                must_stay_exact: true,
+            },
+            // sq_* batch accumulator: per-image second moments, hard-
+            // bounded by 32768² (a fully saturated image) and stored at
+            // 2FA - FQ_SHIFT for wrap headroom.  This is the PR-4 bug
+            // class: without the shift the i32 batch sum wraps at 2
+            // worst-case images; with it, at 128.
+            AccContract {
+                acc: "moment-sum",
+                phase: Phase::Fp,
+                per_image_raw: SAT_MAX * SAT_MAX,
+                store_shift: FQ_SHIFT,
+                per_batch: true,
+                must_stay_exact: true,
+            },
+            // dgamma per-image chain: Noy·Nox g·xhat products
+            // (`backward_params`), shift_round into the i32 DRAM
+            // accumulator
+            AccContract {
+                acc: "wu-mac",
+                phase: Phase::Bp,
+                per_image_raw: hw * TAP_MAX,
+                store_shift: SHIFT_WU_STORE,
+                per_batch: false,
+                must_stay_exact: false,
+            },
+            AccContract {
+                acc: "wgrad-sum",
+                phase: Phase::Bp,
+                per_image_raw: hw * TAP_MAX,
+                store_shift: SHIFT_WU_STORE,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+            // dbeta: plain gradient sum over Noy·Nox per image
+            AccContract {
+                acc: "bgrad-sum",
+                phase: Phase::Bp,
+                per_image_raw: hw * SAT_MAX,
+                store_shift: 0,
+                per_batch: true,
+                must_stay_exact: false,
+            },
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -1052,5 +1284,50 @@ mod tests {
             assert!(for_layer(l).stat_tensors(l).is_empty());
             assert!(for_layer(l).state_tensors(l).is_empty());
         }
+    }
+
+    #[test]
+    fn range_contracts_cover_every_accumulating_layer() {
+        let net = Network::cifar_bn(1);
+        for l in &net.layers {
+            let ops = for_layer(l);
+            let contracts = ops.range_contracts(l);
+            match ops.kind() {
+                "pool" => assert!(contracts.is_empty(), "{}", l.name()),
+                kind => {
+                    assert!(!contracts.is_empty(), "{}", l.name());
+                    // every parameterized layer has batch gradient
+                    // accumulators; only bn has gate-class rows
+                    assert!(contracts.iter().any(|c| c.per_batch));
+                    assert_eq!(
+                        contracts.iter().any(|c| c.must_stay_exact),
+                        kind == "bn",
+                        "{}", l.name()
+                    );
+                }
+            }
+            for c in &contracts {
+                assert!(c.per_image_raw > 0, "{} {}", l.name(), c.acc);
+                assert!(c.per_image_stored() <= c.per_image_raw);
+            }
+        }
+    }
+
+    #[test]
+    fn bn_moment_contract_matches_the_kernel_headroom() {
+        // the sq_* contract must agree with nn::bn's documented bound:
+        // a saturated image contributes 2^(2·FA_bits) >> FQ_SHIFT =
+        // 2^24, so the i32 batch sum first wraps at 128 images
+        let l = Layer::Bn {
+            name: "n".into(), c: 4, h: 8, w: 8, relu: true,
+        };
+        let moment = for_layer(&l)
+            .range_contracts(&l)
+            .into_iter()
+            .find(|c| c.acc == "moment-sum")
+            .unwrap();
+        assert!(moment.must_stay_exact);
+        assert_eq!(moment.per_image_stored(), 1 << 24);
+        assert_eq!(i64::from(i32::MAX) / moment.per_image_stored(), 127);
     }
 }

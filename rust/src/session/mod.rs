@@ -112,6 +112,16 @@ pub enum SpecError {
     ImagesConflict { given: u64, recorded: u64 },
     /// An eval window that would overlap the training window.
     EvalOverlap { offset: u64, images: u64 },
+    /// A batch size whose worst-case accumulation provably wraps a
+    /// must-stay-exact i32 accumulator — the static range analyzer's
+    /// spec gate (see `crate::analysis`; today this fires on the BN
+    /// statistic sums of `bn*` nets).
+    AccumulatorOverflow {
+        layer: String,
+        acc: &'static str,
+        batch: usize,
+        first_wrap: u64,
+    },
     /// An unrecognized key in a spec JSON object (strict parsing, like
     /// the CLI's strict flag handling: typos error, never no-op).
     UnknownField { section: &'static str, key: String },
@@ -176,6 +186,20 @@ impl fmt::Display for SpecError {
                 write!(f, "eval window starting at {offset} overlaps \
                            the training window [0, {images}) — raise \
                            eval_offset to at least the epoch width")
+            }
+            SpecError::AccumulatorOverflow {
+                layer,
+                acc,
+                batch,
+                first_wrap,
+            } => {
+                write!(f, "batch {batch} can wrap the i32 {acc} \
+                           accumulator of layer `{layer}` (worst-case \
+                           exactness is lost at {first_wrap} images \
+                           per batch) — use batch {} or smaller, or \
+                           run `stratus analyze` for the full range \
+                           report",
+                       first_wrap - 1)
             }
             SpecError::UnknownField { section, key } => {
                 write!(f, "unknown field `{key}` in {section}")
@@ -441,6 +465,17 @@ pub struct Spec {
 impl Spec {
     pub fn builder() -> SpecBuilder {
         SpecBuilder::default()
+    }
+
+    /// Resolve the network and design variables with every structural
+    /// rule applied EXCEPT the range-analyzer overflow gate —
+    /// `stratus analyze` reports on wrapping specs instead of refusing
+    /// to look at them.  [`SpecBuilder::build`] and [`Session::new`]
+    /// run the gate on top of this.
+    pub fn resolve_for_analysis(
+        &self,
+    ) -> Result<(Network, DesignVars), SpecError> {
+        resolve(self)
     }
 
     /// Reopen for overrides (e.g. `--spec file.json` + explicit flags).
@@ -895,6 +930,30 @@ impl SpecBuilder {
     /// Apply defaults, validate every constraint, and produce the
     /// [`Spec`].
     pub fn build(self) -> Result<Spec, SpecError> {
+        let spec = self.assemble()?;
+        validate(&spec)?;
+        Ok(spec)
+    }
+
+    /// Like [`SpecBuilder::build`], but stops short of the range
+    /// analyzer's overflow gate: structural validation still runs
+    /// (unknown preset, zero batch, checkpoint wiring, ...), while a
+    /// spec whose accumulators provably wrap is *returned* rather
+    /// than refused, together with the resolved network and design
+    /// variables.  This is what `stratus analyze` uses so it can
+    /// report on exactly the specs that [`SpecBuilder::build`] would
+    /// reject.
+    pub fn build_for_analysis(
+        self,
+    ) -> Result<(Spec, Network, DesignVars), SpecError> {
+        let spec = self.assemble()?;
+        let (net, dv) = resolve(&spec)?;
+        Ok((spec, net, dv))
+    }
+
+    /// Apply defaults and produce the raw [`Spec`] (no resolution or
+    /// range analysis beyond builder-local consistency checks).
+    fn assemble(self) -> Result<Spec, SpecError> {
         if self.checkpoint_dir.is_none()
             && self.checkpoint_every.is_some()
         {
@@ -923,14 +982,40 @@ impl SpecBuilder {
             }),
             resume: self.resume,
         };
-        validate(&spec)?;
         Ok(spec)
     }
 }
 
 /// The full validation rule set (shared by [`SpecBuilder::build`] and
 /// [`Session::new`]); returns the resolved network + design variables.
+/// On top of the structural rules in [`Spec::resolve_for_analysis`]
+/// this runs the static fixed-point range analyzer and refuses any
+/// spec whose must-stay-exact accumulators can provably wrap — the
+/// PR-4 BN moment overflow class becomes a typed build-time error
+/// instead of silently poisoned statistics.
 fn validate(spec: &Spec) -> Result<(Network, DesignVars), SpecError> {
+    let (net, dv) = resolve(spec)?;
+    let report = crate::analysis::analyze(&net, &dv, spec.batch);
+    if let Some(row) = report.first_overflow() {
+        let crate::analysis::Verdict::OverflowPossible {
+            first_wrap_images,
+        } = row.verdict
+        else {
+            unreachable!("first_overflow returns overflow rows only")
+        };
+        return Err(SpecError::AccumulatorOverflow {
+            layer: row.layer.clone(),
+            acc: row.acc,
+            batch: spec.batch,
+            first_wrap: first_wrap_images,
+        });
+    }
+    Ok((net, dv))
+}
+
+/// The structural rule set: everything [`validate`] checks except the
+/// range-analyzer overflow gate.
+fn resolve(spec: &Spec) -> Result<(Network, DesignVars), SpecError> {
     fn positive(v: usize, name: &'static str) -> Result<(), SpecError> {
         if v == 0 {
             Err(SpecError::NonPositive(name))

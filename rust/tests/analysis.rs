@@ -1,0 +1,270 @@
+//! Adversarial soundness tests for the static fixed-point range
+//! analyzer: drive the golden kernels with fully ±i16-saturated inputs
+//! while an i64 mirror of each accumulation chain records the peak
+//! magnitude actually reached, and assert the observed peak never
+//! exceeds the bound the layer's `AccContract` promises.  Plus the
+//! regression the analyzer exists for: the pre-PR-4 BN moment layout
+//! must be rediscovered as overflow-possible, and the spec gate must
+//! refuse a provably wrapping batch size with a typed error naming the
+//! layer.
+
+use stratus::analysis::{analyze, analyze_model, Model, I32_SAFE};
+use stratus::config::{DesignVars, Layer, Network};
+use stratus::fixed::{
+    requant, shift_round, SHIFT_CONV_FP, SHIFT_WU_STORE,
+};
+use stratus::nn::bn::{image_stats, FQ_SHIFT};
+use stratus::nn::conv::{conv_fp, conv_wu};
+use stratus::nn::fc::fc_fp;
+use stratus::nn::tensor::Tensor;
+use stratus::ops;
+use stratus::session::Spec;
+
+/// The contract rows of one layer, keyed by accumulator tag.
+fn contract(l: &Layer, acc: &str) -> ops::AccContract {
+    ops::for_layer(l)
+        .range_contracts(l)
+        .into_iter()
+        .find(|c| c.acc == acc)
+        .unwrap_or_else(|| panic!("no `{acc}` contract on {}", l.name()))
+}
+
+#[test]
+fn conv_fp_saturated_peak_within_contract() {
+    // worst case: every activation at i16::MIN, every weight at
+    // i16::MAX, bias at the SGD clamp — all taps push one direction
+    let (cin, cout, h, w, k, pad) = (2, 3, 4, 4, 3, 1);
+    let l = Layer::Conv {
+        name: "cx".into(),
+        cin,
+        cout,
+        h,
+        w,
+        k,
+        pad,
+        stride: 1,
+        relu: false,
+    };
+    let c = contract(&l, "fp-mac");
+    let x = Tensor::from_vec(&[cin, h, w], vec![-32768; cin * h * w]);
+    let wt = Tensor::from_vec(&[cout, cin, k, k],
+                              vec![32767; cout * cin * k * k]);
+    let b = vec![-(1 << 28); cout];
+
+    // i64 mirror of conv_fp's accumulation, tracking the running peak
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let mut peak: i64 = 0;
+    let mut mirror = vec![0i64; h * w];
+    for of in 0..cout {
+        for m in mirror.iter_mut() {
+            *m = i64::from(b[of]);
+        }
+        for ci in 0..cin {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let tap = i64::from(wt.at4(of, ci, ky, kx));
+                    for oy in 0..h {
+                        for ox in 0..w {
+                            let xv = xp.data()
+                                [(ci * hp + oy + ky) * wp + kx + ox];
+                            let m = &mut mirror[oy * w + ox];
+                            *m += tap * i64::from(xv);
+                            peak = peak.max(m.unsigned_abs() as i64);
+                        }
+                    }
+                }
+            }
+        }
+        // the mirror, wrapped to i32 and requantized, must reproduce
+        // the kernel exactly — otherwise the mirror proves nothing
+        let out = conv_fp(&x, &wt, &b, pad, false, SHIFT_CONV_FP);
+        for oy in 0..h {
+            for ox in 0..w {
+                let wrapped = mirror[oy * w + ox] as i32;
+                assert_eq!(out.at3(of, oy, ox),
+                           requant(wrapped, SHIFT_CONV_FP));
+            }
+        }
+    }
+    assert!(peak > 0);
+    assert!(
+        peak <= c.per_image_raw,
+        "observed fp-mac peak {peak} exceeds predicted {}",
+        c.per_image_raw
+    );
+}
+
+#[test]
+fn conv_wu_saturated_peaks_within_contracts() {
+    let (cin, cout, h, w, k, pad) = (2, 2, 6, 6, 3, 1);
+    let l = Layer::Conv {
+        name: "cx".into(),
+        cin,
+        cout,
+        h,
+        w,
+        k,
+        pad,
+        stride: 1,
+        relu: false,
+    };
+    let wu = contract(&l, "wu-mac");
+    let bg = contract(&l, "bgrad-sum");
+    let x = Tensor::from_vec(&[cin, h, w], vec![-32768; cin * h * w]);
+    let g = Tensor::from_vec(&[cout, h, w], vec![32767; cout * h * w]);
+
+    // i64 mirror of the center-tap chain (ky = kx = pad: every output
+    // pixel overlaps a real input pixel, the worst chain of the pass)
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let mut acc: i64 = 0;
+    let mut peak: i64 = 0;
+    for y in 0..h {
+        for xx in 0..w {
+            let gv = i64::from(g.at3(0, y, xx));
+            let xv = i64::from(xp.data()[(y + pad) * wp + pad + xx]);
+            acc += gv * xv;
+            peak = peak.max(acc.unsigned_abs() as i64);
+        }
+    }
+    assert!(
+        peak <= wu.per_image_raw,
+        "observed wu-mac peak {peak} exceeds predicted {}",
+        wu.per_image_raw
+    );
+    // the kernel's center tap equals the wrapped, store-shifted mirror
+    let (dw, db) = conv_wu(&x, &g, pad);
+    assert_eq!(dw.at4(0, 0, pad, pad),
+               shift_round(acc as i32, SHIFT_WU_STORE));
+
+    // bias-gradient sum: h·w saturated gradients per image
+    let observed_db: i64 = (0..h * w)
+        .map(|i| i64::from(g.data()[i]))
+        .sum();
+    assert!(observed_db.abs() <= bg.per_image_raw);
+    assert_eq!(db[0], observed_db as i32, "no wrap expected here");
+}
+
+#[test]
+fn fc_saturated_peak_within_contract() {
+    let (cin, cout) = (64, 10);
+    let l = Layer::Fc { name: "fc".into(), cin, cout };
+    let c = contract(&l, "fp-mac");
+    let x = vec![-32768; cin];
+    let wt = Tensor::from_vec(&[cout, cin], vec![32767; cout * cin]);
+    let b = vec![-(1 << 28); cout];
+    let mut acc: i64 = 0;
+    let mut peak: i64 = 0;
+    for &xv in &x {
+        acc += i64::from(xv) * 32767;
+        peak = peak.max(acc.unsigned_abs() as i64);
+    }
+    acc += i64::from(b[0]);
+    peak = peak.max(acc.unsigned_abs() as i64);
+    assert!(
+        peak <= c.per_image_raw,
+        "observed fc fp-mac peak {peak} exceeds predicted {}",
+        c.per_image_raw
+    );
+    // faithfulness: the kernel output is the wrapped mirror, requantized
+    let out = fc_fp(&x, &wt, &b);
+    assert_eq!(out[0], requant(acc as i32, SHIFT_CONV_FP));
+}
+
+#[test]
+fn bn_saturated_statistics_within_contracts() {
+    let (ch, h, w) = (1, 8, 8);
+    let l = Layer::Bn { name: "nx".into(), c: ch, h, w, relu: true };
+    let mean_c = contract(&l, "mean-sum");
+    let mom_c = contract(&l, "moment-sum");
+    // a fully saturated image is the worst statistic producer
+    let x = Tensor::from_vec(&[ch, h, w], vec![-32768; ch * h * w]);
+    let (m, q) = image_stats(&x);
+    let observed_mean = i64::from(m.data()[0]).abs();
+    let observed_moment = i64::from(q.data()[0]);
+    assert!(observed_mean <= mean_c.per_image_stored());
+    assert!(observed_moment <= mom_c.per_image_stored());
+    // the analyzer's exact moment bound: 2^(2·16-2) >> FQ_SHIFT
+    assert_eq!(mom_c.per_image_stored(), 1 << (30 - FQ_SHIFT));
+    // and its first-wrap arithmetic: 127 worst images fit, 128 do not
+    let per = mom_c.per_image_stored();
+    assert!(127 * per <= I32_SAFE);
+    assert!(128 * per > I32_SAFE);
+}
+
+#[test]
+fn analyzer_rediscovers_the_pre_pr4_bn_overflow() {
+    let net = Network::cifar_bn(1);
+    let dv = DesignVars::for_scale(1);
+    // as shipped: the moment sum is the binding constraint, first
+    // wrapping at exactly 128 worst-case images
+    assert_eq!(analyze(&net, &dv, 127).overflow_count(), 0);
+    let report = analyze(&net, &dv, 128);
+    let row = report.first_overflow().expect("flagged at 128");
+    assert_eq!(row.acc, "moment-sum");
+    assert_eq!(row.layer, "n1");
+    assert!(row.verdict.label().contains("overflow-possible(>= 128"));
+    // pre-PR-4 layout (moments stored at full 2·FA, no headroom
+    // shift): wraps at 2 saturated images — the bug the analyzer
+    // exists to catch before it ships again
+    let legacy = Model { bn_moment_shift: 0 };
+    let flagged = analyze_model(&net, &dv, 128, &legacy);
+    let row = flagged.first_overflow().expect("legacy layout flagged");
+    assert!(row.verdict.label().contains("overflow-possible(>= 2"));
+}
+
+#[test]
+fn spec_gate_refuses_wrapping_batch_with_typed_error() {
+    // bn preset at batch 128: the moment-sum accumulator of the first
+    // BN layer can wrap, so the build must refuse with the pinned
+    // message naming layer and first wrapping count
+    let err = Spec::builder()
+        .preset("bn1x")
+        .batch(128)
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains(
+            "can wrap the i32 moment-sum accumulator of layer `n1`"
+        ),
+        "unexpected message: {msg}"
+    );
+    assert!(msg.contains("128 images"), "unexpected message: {msg}");
+    assert!(msg.contains("batch 127"), "unexpected message: {msg}");
+
+    // one image under the wrap bound builds fine...
+    assert!(Spec::builder().preset("bn1x").batch(127).build().is_ok());
+    // ...and non-BN nets have no must-stay-exact accumulators to
+    // protect, so the same batch size is accepted there
+    assert!(Spec::builder().preset("1x").batch(128).build().is_ok());
+}
+
+#[test]
+fn analyze_reports_all_presets_clean_at_defaults() {
+    // the acceptance sweep CI runs through the CLI, in-process
+    let dv = DesignVars::for_scale(1);
+    for (preset, bn) in [
+        ("1x", false),
+        ("2x", false),
+        ("4x", false),
+        ("bn1x", true),
+        ("bn2x", true),
+        ("bn4x", true),
+    ] {
+        let spec = Spec::builder().preset(preset).build().unwrap();
+        let (net, _) = spec.resolve_for_analysis().unwrap();
+        let report = analyze(&net, &dv, spec.batch);
+        assert_eq!(report.overflow_count(), 0, "{preset}");
+        let table = report.render();
+        assert!(!table.contains("overflow-possible"), "{preset}");
+        assert!(table.contains("wrap-by-contract"), "{preset}");
+        // BN nets carry proven must-stay-exact statistic rows
+        assert_eq!(
+            report.min_exact_headroom_bits().is_some(),
+            bn,
+            "{preset}"
+        );
+    }
+}

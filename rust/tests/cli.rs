@@ -75,6 +75,46 @@ fn simulate_prints_phase_table() {
 }
 
 #[test]
+fn analyze_prints_range_table_for_every_preset() {
+    for scale in ["1x", "2x", "4x", "bn1x", "bn2x", "bn4x"] {
+        let (ok, out, err) = stratus(&["analyze", "--scale", scale]);
+        assert!(ok, "{scale}: {out}\n{err}");
+        assert!(out.contains("range analysis"), "{scale}: {out}");
+        assert!(out.contains("wrap-by-contract"), "{scale}: {out}");
+        // the acceptance bar: no preset is overflow-possible at the
+        // default batch size
+        assert!(!out.contains("overflow-possible"), "{scale}: {out}");
+    }
+    // --json emits the machine-readable report CI archives
+    let (ok, out, _) = stratus(&["analyze", "--scale", "bn1x", "--json"]);
+    assert!(ok);
+    assert!(out.contains("\"overflow_possible\": 0"), "{out}");
+    assert!(out.contains("\"rows\""), "{out}");
+}
+
+#[test]
+fn analyze_reports_wrapping_batch_and_exits_nonzero() {
+    // analyze renders the full table for a spec `train` would refuse,
+    // then exits non-zero so CI can gate on it
+    let (ok, out, err) =
+        stratus(&["analyze", "--scale", "bn1x", "--batch", "128"]);
+    assert!(!ok);
+    assert!(out.contains("overflow-possible(>= 128 images)"), "{out}");
+    assert!(err.contains("moment-sum"), "{err}");
+    assert!(err.contains("`n1`"), "{err}");
+    // the same spec is refused outright at spec-build time
+    let (ok, _, err) =
+        stratus(&["simulate", "--scale", "bn1x", "--batch", "128"]);
+    assert!(!ok);
+    assert!(
+        err.contains(
+            "can wrap the i32 moment-sum accumulator of layer `n1`"
+        ),
+        "{err}"
+    );
+}
+
+#[test]
 fn report_table2_has_three_networks() {
     let (ok, out, _) = stratus(&["report", "table2"]);
     assert!(ok);

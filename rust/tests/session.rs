@@ -96,6 +96,11 @@ fn builder_rejection_table() {
         (Spec::builder().images(12).eval_offset(4),
          "eval window starting at 4 overlaps the training window \
           [0, 12)"),
+        // the range-analyzer gate: a batch whose worst-case BN moment
+        // sum provably wraps the i32 statistic accumulator is refused
+        (Spec::builder().preset("bn1x").batch(128),
+         "batch 128 can wrap the i32 moment-sum accumulator of layer \
+          `n1`"),
         // serializability guards: JSON numbers are f64
         (Spec::builder().seed(1u64 << 60),
          "seed wants an integer at most 2^53"),
