@@ -1,61 +1,256 @@
-//! Hot-path performance bench (§Perf in EXPERIMENTS.md): host-side
-//! throughput of the three coordinator backends on the real 1X workload,
-//! plus PJRT dispatch overhead.  Requires `make artifacts` for the PJRT
-//! backends (golden-only otherwise).  `cargo bench --bench hotpath`
+//! Per-kernel hot-path bench (ISSUE 7 tentpole): tiled vs reference
+//! throughput of the golden-model kernels on the 1X workload shapes —
+//! conv FP/BP/WU across the six conv geometries, the FC triplet, and
+//! the BN per-pixel passes.  One rep of a kernel equals one image's
+//! worth of that kernel across the whole network, so every series is
+//! an images/s figure comparable with the engine benches.
+//!
+//! `cargo bench --bench hotpath [-- --smoke]`: smoke mode (also
+//! `BENCH_SMOKE=1`) shortens the rep counts for CI.  Writes
+//! `BENCH_hotpath.json` with per-kernel `<k>_ips` / `<k>_ref_ips` /
+//! `<k>_speedup` extras, and gates the composite plus each per-kernel
+//! series against `benches/baseline.json` (metrics::bench::
+//! finish_gated) — CI archives the record SHA-named for the perf
+//! trajectory.  The reference side runs the scalar oracles in
+//! `stratus::nn::reference` exactly as the pre-tiling golden model did
+//! (including one `transpose_flip` per BP call, which the tiled side
+//! amortizes through the Scratch flip cache).
 
-use std::path::Path;
+use std::hint::black_box;
 use std::time::Instant;
 
-use stratus::coordinator::Backend;
-use stratus::data::Synthetic;
-use stratus::session::{Session, Spec};
+use stratus::fixed::{FA, FW};
+use stratus::metrics::bench::{finish_gated, smoke_mode, BenchRecord};
+use stratus::nn::tensor::Tensor;
+use stratus::nn::testutil::{randi, Lcg};
+use stratus::nn::{bn, conv, fc, reference, Scratch};
 
-fn bench_backend(backend: Backend, artifacts: Option<&Path>, n: usize)
-                 -> Option<(f64, f64)> {
-    let mut b = Spec::builder()
-        .preset("1x")
-        .backend(backend)
-        .batch(n)
-        .lr(0.002)
-        .momentum(0.9);
-    if let Some(dir) = artifacts {
-        b = b.artifacts(dir);
-    }
-    let mut t = Session::new(b.build().ok()?).ok()?.trainer().ok()?;
-    let data = Synthetic::cifar_like(99);
-    let batch = data.batch(0, n);
-    // warmup (compiles artifacts on first use)
-    t.train_image(&batch[0]).ok()?;
+/// The 1X preset's conv stack: (cin, cout, spatial), k = 3, pad = 1.
+const CONVS: [(usize, usize, usize); 6] = [
+    (3, 16, 32),
+    (16, 16, 32),
+    (16, 32, 16),
+    (32, 32, 16),
+    (32, 64, 8),
+    (64, 64, 8),
+];
+
+/// One conv layer's bench inputs.
+struct ConvCase {
+    x: Tensor,
+    w: Tensor,
+    b: Vec<i32>,
+    /// Output/incoming gradient plane (cout, h, h), pool-sparse.
+    g: Tensor,
+    /// Output-shaped activation (cout, h, h) — the BN layer's input.
+    xo: Tensor,
+    /// Flip-cache key for the tiled BP path.
+    key: String,
+}
+
+fn conv_cases(rng: &mut Lcg) -> Vec<ConvCase> {
+    CONVS
+        .iter()
+        .enumerate()
+        .map(|(i, &(cin, cout, h))| {
+            let mut g = randi(rng, &[cout, h, h], 900);
+            // maxpool upsampling leaves 3/4 of gradient pixels zero;
+            // give the WU/BP zero-skip its realistic duty cycle
+            for v in g.data_mut() {
+                if rng.below(4) != 0 {
+                    *v = 0;
+                }
+            }
+            ConvCase {
+                x: randi(rng, &[cin, h, h], 900),
+                w: randi(rng, &[cout, cin, 3, 3], 150),
+                b: (0..cout).map(|_| rng.int_pm(1 << 16)).collect(),
+                g,
+                xo: randi(rng, &[cout, h, h], 900),
+                key: format!("conv{i}"),
+            }
+        })
+        .collect()
+}
+
+/// Seconds per rep of `f`, with the checksum kept live.
+fn time_per_rep<F: FnMut() -> i64>(reps: usize, mut f: F) -> f64 {
+    let mut sink = 0i64;
     let t0 = Instant::now();
-    for s in &batch {
-        t.train_image(s).ok()?;
+    for _ in 0..reps {
+        sink = sink.wrapping_add(f());
     }
     let dt = t0.elapsed().as_secs_f64();
-    Some((n as f64 / dt, dt / n as f64 * 1e3))
+    black_box(sink);
+    dt / reps as f64
+}
+
+fn sum_t(t: &Tensor) -> i64 {
+    t.data().iter().map(|&v| i64::from(v)).sum()
+}
+
+fn sum_v(v: &[i32]) -> i64 {
+    v.iter().map(|&x| i64::from(x)).sum()
+}
+
+struct Kernel {
+    name: &'static str,
+    ips: f64,
+    ref_ips: f64,
 }
 
 fn main() {
-    let artifacts = Path::new("artifacts");
-    let have = artifacts.join("manifest.json").exists();
-    let n = 16;
-    println!("=== coordinator hot path (1X, {n} images) ===");
-    println!("{:<10} {:>12} {:>14}", "backend", "images/s", "ms/image");
-    if let Some((ips, ms)) = bench_backend(Backend::Golden, None, n) {
-        println!("{:<10} {:>12.2} {:>14.2}", "golden", ips, ms);
-    }
-    if have {
-        for (name, b) in [("perop", Backend::PerOp),
-                          ("fused", Backend::Fused)] {
-            if let Some((ips, ms)) =
-                bench_backend(b, Some(artifacts), n)
-            {
-                println!("{:<10} {:>12.2} {:>14.2}", name, ips, ms);
+    let smoke = smoke_mode();
+    // rep counts sized so even the smoke run measures >> timer
+    // granularity (a conv rep is ~10M MACs)
+    let (conv_reps, fc_reps, bn_reps) =
+        if smoke { (3, 300, 5) } else { (20, 3000, 40) };
+
+    let mut rng = Lcg::new(1234);
+    let cases = conv_cases(&mut rng);
+    let mut scratch = Scratch::new();
+    let mut kernels: Vec<Kernel> = Vec::new();
+
+    // --- conv FP -----------------------------------------------------
+    let ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                s += sum_t(&conv::conv_fp_std_s(
+                    &c.x, &c.w, &c.b, true, &mut scratch,
+                ));
             }
+            s
+        });
+    let ref_ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                s += sum_t(&reference::conv_fp_std(
+                    &c.x, &c.w, &c.b, true,
+                ));
+            }
+            s
+        });
+    kernels.push(Kernel { name: "conv_fp", ips, ref_ips });
+
+    // --- conv BP (tiled side amortizes the flip via the cache) -------
+    let ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                s += sum_t(&conv::conv_bp_s(
+                    &c.g, &c.w, &c.key, 1, &mut scratch,
+                ));
+            }
+            s
+        });
+    let ref_ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                s += sum_t(&reference::conv_bp(&c.g, &c.w, 1));
+            }
+            s
+        });
+    kernels.push(Kernel { name: "conv_bp", ips, ref_ips });
+
+    // --- conv WU -----------------------------------------------------
+    let ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                let (dw, db) =
+                    conv::conv_wu_s(&c.x, &c.g, 1, &mut scratch);
+                s += sum_t(&dw) + sum_v(&db);
+            }
+            s
+        });
+    let ref_ips = 1.0
+        / time_per_rep(conv_reps, || {
+            let mut s = 0i64;
+            for c in &cases {
+                let (dw, db) = reference::conv_wu(&c.x, &c.g, 1);
+                s += sum_t(&dw) + sum_v(&db);
+            }
+            s
+        });
+    kernels.push(Kernel { name: "conv_wu", ips, ref_ips });
+
+    // --- fc (fp + bp + wu, the classifier head 1024 -> 10) -----------
+    let fx: Vec<i32> = (0..1024).map(|_| rng.int_pm(900)).collect();
+    let fw = randi(&mut rng, &[10, 1024], 150);
+    let fb: Vec<i32> = (0..10).map(|_| rng.int_pm(1 << 16)).collect();
+    let fg: Vec<i32> = (0..10).map(|_| rng.int_pm(900)).collect();
+    let ips = 1.0
+        / time_per_rep(fc_reps, || {
+            let y = fc::fc_fp(&fx, &fw, &fb);
+            let gx = fc::fc_bp(&fg, &fw);
+            let (dw, db) = fc::fc_wu(&fg, &fx);
+            sum_v(&y) + sum_v(&gx) + sum_t(&dw) + sum_v(&db)
+        });
+    let ref_ips = 1.0
+        / time_per_rep(fc_reps, || {
+            let y = reference::fc_fp(&fx, &fw, &fb);
+            let gx = reference::fc_bp(&fg, &fw);
+            let (dw, db) = reference::fc_wu(&fg, &fx);
+            sum_v(&y) + sum_v(&gx) + sum_t(&dw) + sum_v(&db)
+        });
+    kernels.push(Kernel { name: "fc", ips, ref_ips });
+
+    // --- bn (stats + forward + backward passes; channel-contiguous
+    // already, benched for the composite and its own floor) -----------
+    let bn_params: Vec<_> = CONVS
+        .iter()
+        .map(|&(_, cout, _)| {
+            (
+                Tensor::from_vec(&[cout], vec![1 << FW; cout]),
+                Tensor::zeros(&[cout]),
+                Tensor::zeros(&[cout]),
+                Tensor::from_vec(&[cout], vec![1 << (2 * FA); cout]),
+            )
+        })
+        .collect();
+    let bn_time = time_per_rep(bn_reps, || {
+        let mut s = 0i64;
+        for (c, (gamma, beta, rm, rv)) in
+            cases.iter().zip(&bn_params)
+        {
+            let (m, q) = bn::image_stats(&c.xo);
+            let y = bn::forward_affine(&c.xo, gamma, beta, rm, rv, true);
+            let gx = bn::backward_input(&c.g, gamma, rv);
+            let (dg, db) = bn::backward_params(&c.g, &c.xo, rm, rv);
+            s += sum_t(&m) + sum_t(&q) + sum_t(&y) + sum_t(&gx)
+                + sum_t(&dg) + sum_v(&db);
         }
-    } else {
-        println!("(PJRT backends skipped: run `make artifacts`)");
+        s
+    });
+    let bn_ips = 1.0 / bn_time;
+    kernels.push(Kernel { name: "bn", ips: bn_ips, ref_ips: bn_ips });
+
+    // --- report + record ---------------------------------------------
+    println!("=== per-kernel hot path (1X shapes{}) ===",
+             if smoke { ", smoke" } else { "" });
+    println!("{:<10} {:>12} {:>12} {:>9}", "kernel", "images/s",
+             "ref img/s", "speedup");
+    let mut rec = BenchRecord::new(
+        "hotpath",
+        1.0 / kernels.iter().map(|k| 1.0 / k.ips).sum::<f64>(),
+        smoke,
+    );
+    let mut gates: Vec<(String, f64)> = Vec::new();
+    for k in &kernels {
+        let speedup = k.ips / k.ref_ips;
+        println!("{:<10} {:>12.1} {:>12.1} {:>8.2}x", k.name, k.ips,
+                 k.ref_ips, speedup);
+        rec.push(&format!("{}_ips", k.name), k.ips);
+        rec.push(&format!("{}_ref_ips", k.name), k.ref_ips);
+        rec.push(&format!("{}_speedup", k.name), speedup);
+        gates.push((format!("hotpath_{}", k.name), k.ips));
     }
-    println!("\nsimulated accelerator reference: ~0.36 ms/image (1X, \
-              240 MHz) — host numerics are for validation, not on the \
-              modeled FPGA's critical path");
+    println!("composite      : {:.1} images/s (harmonic over the five \
+              kernel groups)", rec.images_per_second);
+    let gate_refs: Vec<(&str, f64)> =
+        gates.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    std::process::exit(finish_gated(&rec, &gate_refs));
 }

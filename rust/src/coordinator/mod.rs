@@ -47,6 +47,7 @@ use crate::nn::bn;
 use crate::nn::golden;
 use crate::nn::loss::encode_label;
 use crate::nn::pool::relu_mask;
+use crate::nn::scratch::Scratch;
 use crate::nn::sgd::{ParamKind, ParamState, SgdHyper};
 use crate::nn::tensor::Tensor;
 use crate::nn::tensorio::Bundle;
@@ -242,6 +243,11 @@ pub struct Trainer {
     conv_below: HashMap<String, Option<(String, bool)>>,
     /// per-BN-layer statistic bookkeeping (empty for BN-free nets)
     bn_meta: Vec<BnMeta>,
+    /// Reusable kernel workspace for the sequential golden paths
+    /// (`train_image`, `step_golden`); the engine paths create one per
+    /// worker shard instead.  Invalidated whenever parameters change
+    /// (end_batch, resume) — its flip cache is weight-derived.
+    scratch: Scratch,
 }
 
 impl Trainer {
@@ -397,6 +403,7 @@ impl Trainer {
             pool_prev,
             conv_below,
             bn_meta,
+            scratch: Scratch::for_net(net),
         })
     }
 
@@ -594,6 +601,7 @@ impl Trainer {
         self.states = ck.states;
         self.metrics = ck.metrics;
         self.param_lits.clear(); // parameters changed (§Perf cache)
+        self.scratch.invalidate(); // ditto for the flipped-kernel cache
         Ok(ck.cursor)
     }
 
@@ -766,6 +774,7 @@ impl Trainer {
         }
         self.refresh_bn_stats()?;
         self.param_lits.clear(); // parameters changed (§Perf cache)
+        self.scratch.invalidate(); // ditto for the flipped-kernel cache
         self.metrics.batches += 1;
         self.metrics.sim_cycles += self.batch_cycles;
         Ok(())
@@ -861,7 +870,9 @@ impl Trainer {
         let net = &self.acc.net;
         let params = &self.params;
         let order = net.accum_order();
-        let step = |s: &Sample| golden_step(net, params, &order, s);
+        let step = |s: &Sample, sc: &mut Scratch| {
+            golden_step(net, params, &order, s, sc)
+        };
         let (loss_sum, report) =
             engine::run_batch(samples, self.workers, &mut self.states,
                               &step)?;
@@ -890,7 +901,9 @@ impl Trainer {
         let net = &self.acc.net;
         let params = &self.params;
         let order = net.accum_order();
-        let step = |s: &Sample| golden_step(net, params, &order, s);
+        let step = |s: &Sample, sc: &mut Scratch| {
+            golden_step(net, params, &order, s, sc)
+        };
         let (loss_sum, report) = run_batch_cluster(
             samples, self.accelerators, self.workers, &mut self.states,
             &step)?;
@@ -914,9 +927,13 @@ impl Trainer {
             bail!("evaluate: empty sample set (accuracy undefined)");
         }
         let mut correct = 0usize;
+        // local workspace: evaluate is &self and must not disturb the
+        // trainer's batch-scoped flip cache
+        let mut scratch = Scratch::for_net(&self.acc.net);
         for s in samples {
-            let (logits, _) =
-                golden::forward(&self.acc.net, &self.params, &s.image)?;
+            let (logits, _) = golden::forward_s(&self.acc.net,
+                                                &self.params, &s.image,
+                                                &mut scratch)?;
             let pred = logits
                 .iter()
                 .enumerate()
@@ -934,7 +951,8 @@ impl Trainer {
 
     fn step_golden(&mut self, x: &Tensor, y: &[i32]) -> Result<i32> {
         let (loss, _logits, grads) =
-            golden::train_step(&self.acc.net, &self.params, x, y)?;
+            golden::train_step_s(&self.acc.net, &self.params, x, y,
+                                 &mut self.scratch)?;
         // parameter gradients AND per-image BN statistics, in the same
         // accumulator order as the engine path
         for name in self.acc.net.accum_order() {
@@ -1140,10 +1158,10 @@ impl Trainer {
 /// canonical `order` — shared by the engine and cluster batch paths so
 /// gradient ordering can never diverge between them.
 fn golden_step(net: &Network, params: &Params, order: &[String],
-               sample: &Sample) -> Result<StepOut> {
+               sample: &Sample, sc: &mut Scratch) -> Result<StepOut> {
     let y = encode_label(sample.label, net.nclass);
     let (loss, _logits, mut grads) =
-        golden::train_step(net, params, &sample.image, &y)?;
+        golden::train_step_s(net, params, &sample.image, &y, sc)?;
     let mut gs = Vec::with_capacity(order.len());
     for name in order {
         gs.push(grads.remove(name).ok_or_else(|| {

@@ -32,6 +32,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::Sample;
 use crate::engine::{self, shard_sizes, StepOut};
+use crate::nn::scratch::Scratch;
 use crate::nn::sgd::ParamState;
 
 /// What the cluster engine observed while running one batch.
@@ -144,7 +145,7 @@ pub fn run_batch_cluster<F>(samples: &[Sample], instances: usize,
                             states: &mut [(String, ParamState)], step: &F)
                             -> Result<(i64, ClusterReport)>
 where
-    F: Fn(&Sample) -> Result<StepOut> + Sync,
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
     if samples.is_empty() {
         anyhow::bail!("cluster: cannot run an empty batch");
@@ -270,7 +271,7 @@ mod tests {
             .collect()
     }
 
-    fn step(s: &Sample) -> Result<StepOut> {
+    fn step(s: &Sample, _: &mut Scratch) -> Result<StepOut> {
         Ok(StepOut { loss: s.label as i32, grads: vec![s.image.clone()] })
     }
 
@@ -390,11 +391,11 @@ mod tests {
     #[test]
     fn instance_errors_leave_states_untouched() {
         let batch = samples(8);
-        let failing = |s: &Sample| -> Result<StepOut> {
+        let failing = |s: &Sample, sc: &mut Scratch| -> Result<StepOut> {
             if s.label == 2 {
                 bail!("injected failure");
             }
-            step(s)
+            step(s, sc)
         };
         let mut st = fresh_states();
         let err = run_batch_cluster(&batch, 4, 1, &mut st, &failing)

@@ -25,9 +25,15 @@
 //!   sequential path at any worker count.  Loss totals are summed in
 //!   i64, which is exact.
 //!
-//! The step function is pluggable (`Fn(&Sample) -> Result<StepOut> +
-//! Sync`): the coordinator plugs in the golden model today, and any
-//! thread-safe runtime step can slot in without touching the engine.
+//! The step function is pluggable (`Fn(&Sample, &mut Scratch) ->
+//! Result<StepOut> + Sync`): the coordinator plugs in the golden model
+//! today, and any thread-safe runtime step can slot in without
+//! touching the engine.  Each shard owns one [`Scratch`] workspace for
+//! its whole slice, so per-image buffer allocations (padded conv
+//! planes, flipped BP kernels) amortize across the shard — scratch
+//! contents never influence results (bit-identity is asserted against
+//! scratch-free reference kernels in `tests/kernels.rs`), so sharding
+//! stays deterministic.
 //!
 //! One level up, [`cluster`] shards a batch across accelerator
 //! *instances* (data parallelism between devices rather than threads)
@@ -41,6 +47,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::Sample;
+use crate::nn::scratch::Scratch;
 use crate::nn::sgd::ParamState;
 use crate::nn::tensor::Tensor;
 
@@ -84,11 +91,13 @@ struct ShardOut {
 fn run_shard<F>(shard: &[Sample], mut states: Vec<ParamState>, step: &F)
                 -> Result<ShardOut>
 where
-    F: Fn(&Sample) -> Result<StepOut> + Sync,
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
+    // one workspace per shard: kernel buffers live for the whole slice
+    let mut scratch = Scratch::new();
     let mut loss_sum = 0i64;
     for s in shard {
-        let out = step(s)?;
+        let out = step(s, &mut scratch)?;
         if out.grads.len() != states.len() {
             bail!(
                 "engine: step produced {} gradients for {} parameters",
@@ -116,7 +125,7 @@ pub fn run_batch<F>(samples: &[Sample], workers: usize,
                     states: &mut [(String, ParamState)], step: &F)
                     -> Result<(i64, EngineReport)>
 where
-    F: Fn(&Sample) -> Result<StepOut> + Sync,
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
     if samples.is_empty() {
         bail!("engine: cannot run an empty batch");
@@ -204,7 +213,7 @@ mod tests {
     }
 
     /// Step under test: gradient = the image itself, loss = label.
-    fn step(s: &Sample) -> Result<StepOut> {
+    fn step(s: &Sample, _: &mut Scratch) -> Result<StepOut> {
         Ok(StepOut { loss: s.label as i32, grads: vec![s.image.clone()] })
     }
 
@@ -261,11 +270,11 @@ mod tests {
     #[test]
     fn step_errors_propagate_from_any_shard() {
         let batch = samples(8);
-        let failing = |s: &Sample| -> Result<StepOut> {
+        let failing = |s: &Sample, sc: &mut Scratch| -> Result<StepOut> {
             if s.label == 2 {
                 bail!("injected failure");
             }
-            step(s)
+            step(s, sc)
         };
         let mut st = fresh_states();
         let err = run_batch(&batch, 4, &mut st, &failing).unwrap_err();
@@ -279,7 +288,7 @@ mod tests {
     #[test]
     fn gradient_arity_mismatch_is_an_error() {
         let batch = samples(4);
-        let bad = |_: &Sample| -> Result<StepOut> {
+        let bad = |_: &Sample, _: &mut Scratch| -> Result<StepOut> {
             Ok(StepOut { loss: 0, grads: Vec::new() })
         };
         let mut st = fresh_states();

@@ -114,26 +114,61 @@ pub fn check_baseline(baseline: &Path, name: &str,
         return Ok(None);
     };
     let floor = base * (1.0 - MAX_DROP);
+    // measured/floor headroom: the number a ratchet decision reads
+    // straight from the CI log (ISSUE 7 satellite) — >> 1.0 means the
+    // floor is stale and should move up
+    let ratio = if floor > 0.0 {
+        images_per_second / floor
+    } else {
+        f64::INFINITY
+    };
     if images_per_second < floor {
         return Err(anyhow!(
             "perf regression: {name} at {images_per_second:.1} images/s \
              is more than {:.0}% below the baseline {base:.1} (floor \
-             {floor:.1}); investigate before ratcheting \
-             benches/baseline.json",
+             {floor:.1}, measured/floor {ratio:.2}x); investigate \
+             before ratcheting benches/baseline.json",
             MAX_DROP * 100.0
         ));
     }
     Ok(Some(format!(
         "{name}: {images_per_second:.1} images/s vs baseline {base:.1} \
-         (floor {floor:.1}) — ok"
+         (floor {floor:.1}, measured/floor {ratio:.2}x) — ok"
     )))
+}
+
+/// Headline images/s of the previous `BENCH_<name>.json` in `dir`, if
+/// one exists and parses — the last run's record on this machine (CI
+/// keeps the cross-run trajectory as SHA-named artifacts instead).
+pub fn previous_record(dir: &Path, name: &str) -> Option<f64> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text)
+        .ok()?
+        .get("images_per_second")
+        .and_then(Json::as_f64)
 }
 
 /// Bench epilogue: write the record next to the crate manifest and gate
 /// it against `benches/baseline.json`.  Returns the process exit code
 /// (0 ok, 1 on write failure or perf regression).
 pub fn finish(record: &BenchRecord) -> i32 {
+    finish_gated(record, &[])
+}
+
+/// Bench epilogue for a record carrying several gated series (the
+/// per-kernel hotpath bench): write the record, print the previous
+/// on-disk record's headline when one exists, then gate the headline
+/// *plus* every `(name, images_per_second)` in `extra_gates` against
+/// `benches/baseline.json`.  The record is written before any gate
+/// decides the exit code, so a regressed run still uploads its
+/// diagnostics in CI; all gates run even after one fails, so the log
+/// shows every verdict.  Returns the process exit code.
+pub fn finish_gated(record: &BenchRecord, extra_gates: &[(&str, f64)])
+                    -> i32 {
     let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    // read the previous record before overwriting it
+    let prev = previous_record(manifest, &record.name);
     match record.write(manifest) {
         Ok(p) => println!("bench record   : wrote {}", p.display()),
         Err(e) => {
@@ -141,23 +176,35 @@ pub fn finish(record: &BenchRecord) -> i32 {
             return 1;
         }
     }
-    match check_baseline(&manifest.join("benches/baseline.json"),
-                         &record.name, record.images_per_second) {
-        Ok(Some(msg)) => {
-            println!("perf gate      : {msg}");
-            0
-        }
-        Ok(None) => {
-            println!("perf gate      : no baseline entry for {} \
-                      (informational)",
-                     record.name);
-            0
-        }
-        Err(e) => {
-            eprintln!("perf gate      : {e:#}");
-            1
+    match prev {
+        Some(p) if p > 0.0 => println!(
+            "previous record: {p:.1} images/s -> this run {:.1} \
+             ({:.2}x)",
+            record.images_per_second,
+            record.images_per_second / p
+        ),
+        Some(p) => println!("previous record: {p:.1} images/s"),
+        None => println!("previous record: none on disk"),
+    }
+    let baseline = manifest.join("benches/baseline.json");
+    let mut code = 0;
+    let mut gates: Vec<(&str, f64)> =
+        vec![(record.name.as_str(), record.images_per_second)];
+    gates.extend_from_slice(extra_gates);
+    for (name, ips) in gates {
+        match check_baseline(&baseline, name, ips) {
+            Ok(Some(msg)) => println!("perf gate      : {msg}"),
+            Ok(None) => println!(
+                "perf gate      : no baseline entry for {name} \
+                 (informational)"
+            ),
+            Err(e) => {
+                eprintln!("perf gate      : {e:#}");
+                code = 1;
+            }
         }
     }
+    code
 }
 
 /// Measurement scaffolding shared by the scaling benches
@@ -309,6 +356,42 @@ mod tests {
     }
 
     #[test]
+    fn gate_messages_report_measured_over_floor_ratio() {
+        // the ratchet protocol (DESIGN.md) reads the headroom ratio
+        // straight out of the CI log — both verdicts must carry it.
+        // own file name: tmp_baseline keys on text length, and this
+        // payload's length collides with another test's
+        let p = std::env::temp_dir().join(format!(
+            "stratus_baseline_ratio_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&p, r#"{"rat":{"images_per_second":200.0}}"#)
+            .unwrap();
+        let ok = check_baseline(&p, "rat", 280.0).unwrap().unwrap();
+        // floor = 140.0, 280/140 = 2.00x
+        assert!(ok.contains("measured/floor 2.00x"), "{ok}");
+        let err = check_baseline(&p, "rat", 70.0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("measured/floor 0.50x"), "{msg}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn previous_record_round_trips_and_handles_absence() {
+        let dir = std::env::temp_dir()
+            .join(format!("stratus_prev_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(previous_record(&dir, "nothing_here"), None);
+        let rec = BenchRecord::new("prevtest", 321.5, true);
+        rec.write(&dir).unwrap();
+        assert_eq!(previous_record(&dir, "prevtest"), Some(321.5));
+        // a corrupt record reads as no previous record, not a panic
+        std::fs::write(dir.join("BENCH_broken.json"), "{oops").unwrap();
+        assert_eq!(previous_record(&dir, "broken"), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn gate_skips_unknown_bench() {
         let p = tmp_baseline(r#"{"other":{"images_per_second":5}}"#);
         assert!(check_baseline(&p, "eng", 1.0).unwrap().is_none());
@@ -350,7 +433,16 @@ mod tests {
             .join("benches/baseline.json");
         let json =
             Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
-        for bench in ["engine_throughput", "cluster_scaling"] {
+        for bench in [
+            "engine_throughput",
+            "cluster_scaling",
+            "hotpath",
+            "hotpath_conv_fp",
+            "hotpath_conv_bp",
+            "hotpath_conv_wu",
+            "hotpath_fc",
+            "hotpath_bn",
+        ] {
             let base = json
                 .get(bench)
                 .and_then(|e| e.get("images_per_second"))

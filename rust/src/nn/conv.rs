@@ -1,12 +1,121 @@
 //! Golden-model convolutions — the bit-exact rust mirror of
-//! `python/compile/kernels/ref.py` (Eqs. 1, 3, 4 of the paper).
+//! `python/compile/kernels/ref.py` (Eqs. 1, 3, 4 of the paper), tiled
+//! for host throughput.
 //!
 //! These run the same i32 wrap-around accumulation and round-half-up
 //! requantization as the lowered Pallas kernels, so outputs from the PJRT
 //! artifacts and from this module are identical integers.
+//!
+//! # Tiled layout (§Perf; DESIGN.md "Tiled host kernels")
+//!
+//! The software analogue of the paper's `Pox x Pof` MAC-array tiling:
+//!
+//! - **FP/BP**: register-blocked over `OFB` output channels by `TW`
+//!   output pixels.  All `Nif * K * K` taps stream through a
+//!   `[[i32; TW]; OFB]` accumulator block that lives in registers, so
+//!   each accumulator is loaded/stored once per output tile instead of
+//!   once per tap, and each padded input row is reused across the
+//!   `OFB` channels of the block.
+//! - **WU**: one pass per `(of, ci)` pair computing all `K*K` tap
+//!   accumulators simultaneously — the gradient row is read once
+//!   instead of `K*K` times, and zero gradient pixels (the common case
+//!   behind a maxpool upsampler, which leaves `1 - 1/k^2` of the plane
+//!   zero) skip all `K*K` multiplies.
+//!
+//! Every kernel preserves the scalar term order *per output element*
+//! (FP/BP: ci → ky → kx; WU: y → ox per tap), so outputs are
+//! bit-identical to [`reference`](crate::nn::reference) by
+//! construction — property-tested in `tests/kernels.rs`.  The `_s`
+//! variants reuse a per-shard [`Scratch`] for the padded plane and the
+//! per-batch `transpose_flip` cache; the plain functions allocate a
+//! transient workspace and exist for call sites without one (tests,
+//! one-shot evaluation).
 
-use crate::fixed::{requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE};
+use crate::fixed::{requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP,
+                   SHIFT_WU_STORE};
+use crate::nn::scratch::Scratch;
 use crate::nn::tensor::Tensor;
+
+/// Output-channel register-block height of the FP/BP tile.
+const OFB: usize = 4;
+/// Output-pixel register-block width of the FP/BP tile.
+const TW: usize = 16;
+
+/// Geometry of one conv invocation over the padded plane.
+struct Geom {
+    nof: usize,
+    nif: usize,
+    k: usize,
+    hp: usize,
+    wp: usize,
+    oh: usize,
+    ow: usize,
+}
+
+/// The tiled FP/BP inner loops over a pre-padded plane `xd`.
+///
+/// Per output element the taps arrive in scalar order (ci → ky → kx,
+/// zero taps skipped), so the wrapped i32 accumulator matches the
+/// reference bit for bit; only the order *across* elements differs.
+fn conv_fp_kernel(xd: &[i32], wd: &[i32], b: &[i32], od: &mut [i32],
+                  g: &Geom, relu: bool, shift: u32) {
+    let k = g.k;
+    let mut of0 = 0;
+    while of0 < g.nof {
+        let nb = OFB.min(g.nof - of0);
+        for oy in 0..g.oh {
+            let mut ox0 = 0;
+            while ox0 < g.ow {
+                let tw = TW.min(g.ow - ox0);
+                let mut acc = [[0i32; TW]; OFB];
+                for (u, a) in acc.iter_mut().enumerate().take(nb) {
+                    a[..tw].fill(b[of0 + u]);
+                }
+                for ci in 0..g.nif {
+                    for ky in 0..k {
+                        let xrow = (ci * g.hp + oy + ky) * g.wp + ox0;
+                        let xs = &xd[xrow..xrow + tw + k - 1];
+                        for (u, a) in
+                            acc.iter_mut().enumerate().take(nb)
+                        {
+                            let wrow =
+                                ((of0 + u) * g.nif + ci) * k * k + ky * k;
+                            for (kx, &wt) in
+                                wd[wrow..wrow + k].iter().enumerate()
+                            {
+                                if wt == 0 {
+                                    continue;
+                                }
+                                for (av, &xv) in a[..tw]
+                                    .iter_mut()
+                                    .zip(&xs[kx..kx + tw])
+                                {
+                                    *av = av
+                                        .wrapping_add(wt.wrapping_mul(xv));
+                                }
+                            }
+                        }
+                    }
+                }
+                for (u, a) in acc.iter().enumerate().take(nb) {
+                    let orow =
+                        (of0 + u) * g.oh * g.ow + oy * g.ow + ox0;
+                    for (o, &av) in
+                        od[orow..orow + tw].iter_mut().zip(&a[..tw])
+                    {
+                        let mut v = requant(av, shift);
+                        if relu && v < 0 {
+                            v = 0;
+                        }
+                        *o = v;
+                    }
+                }
+                ox0 += tw;
+            }
+        }
+        of0 += nb;
+    }
+}
 
 /// FP convolution, Eq. (1): stride 1, square kernel, zero padding.
 ///
@@ -14,55 +123,33 @@ use crate::nn::tensor::Tensor;
 /// FA+FW.  Returns (Nof, H, W) at FA (post-ReLU if `relu`).
 pub fn conv_fp(x: &Tensor, w: &Tensor, b: &[i32], pad: usize, relu: bool,
                shift: u32) -> Tensor {
+    let mut s = Scratch::new();
+    conv_fp_s(x, w, b, pad, relu, shift, &mut s)
+}
+
+/// [`conv_fp`] against a reusable per-shard workspace.
+pub fn conv_fp_s(x: &Tensor, w: &Tensor, b: &[i32], pad: usize,
+                 relu: bool, shift: u32, s: &mut Scratch) -> Tensor {
     let (nof, nif, k) = (w.shape()[0], w.shape()[1], w.shape()[2]);
     assert_eq!(x.shape()[0], nif, "input channel mismatch");
     assert_eq!(b.len(), nof);
-    let xp = x.pad_hw(pad);
-    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let (hp, wp) = s.pad_hw_into(x, pad);
     let (oh, ow) = (hp - k + 1, wp - k + 1);
     let mut out = Tensor::zeros(&[nof, oh, ow]);
-    let xd = xp.data();
-    let od = out.data_mut();
-    // Weight-stationary loop order (§Perf): for each scalar tap, stream a
-    // contiguous input row into a contiguous accumulator row — the inner
-    // loop auto-vectorizes, ~8x over the naive per-pixel loop nest.
-    let mut acc = vec![0i32; oh * ow];
-    for of in 0..nof {
-        acc.fill(b[of]);
-        for ci in 0..nif {
-            for ky in 0..k {
-                for kx in 0..k {
-                    let wt = w.at4(of, ci, ky, kx);
-                    if wt == 0 {
-                        continue;
-                    }
-                    for oy in 0..oh {
-                        let xrow = (ci * hp + oy + ky) * wp + kx;
-                        let arow = oy * ow;
-                        let xs = &xd[xrow..xrow + ow];
-                        let ac = &mut acc[arow..arow + ow];
-                        for (a, &xv) in ac.iter_mut().zip(xs) {
-                            *a = a.wrapping_add(wt.wrapping_mul(xv));
-                        }
-                    }
-                }
-            }
-        }
-        let orow = of * oh * ow;
-        for (o, &a) in od[orow..orow + oh * ow].iter_mut().zip(&acc) {
-            let mut v = requant(a, shift);
-            if relu && v < 0 {
-                v = 0;
-            }
-            *o = v;
-        }
-    }
+    let g = Geom { nof, nif, k, hp, wp, oh, ow };
+    conv_fp_kernel(&s.pad, w.data(), b, out.data_mut(), &g, relu, shift);
     out
 }
 
 /// Convenience: FP conv with the standard activation requantization.
 pub fn conv_fp_std(x: &Tensor, w: &Tensor, b: &[i32], relu: bool) -> Tensor {
     conv_fp(x, w, b, (w.shape()[2] - 1) / 2, relu, SHIFT_CONV_FP)
+}
+
+/// [`conv_fp_std`] against a reusable per-shard workspace.
+pub fn conv_fp_std_s(x: &Tensor, w: &Tensor, b: &[i32], relu: bool,
+                     s: &mut Scratch) -> Tensor {
+    conv_fp_s(x, w, b, (w.shape()[2] - 1) / 2, relu, SHIFT_CONV_FP, s)
 }
 
 /// The transposable-buffer access pattern (Fig. 5) in index space:
@@ -92,46 +179,77 @@ pub fn conv_bp(g: &Tensor, w: &Tensor, pad: usize) -> Tensor {
     conv_fp(g, &wt, &zeros, pad, false, SHIFT_CONV_BP)
 }
 
+/// [`conv_bp`] against a reusable workspace: the flipped kernels are
+/// cached under `key` (the conv layer name) for the rest of the batch,
+/// so the flip runs once per batch instead of once per image.  The
+/// caller owns invalidation ([`Scratch::invalidate`] on any parameter
+/// change).
+pub fn conv_bp_s(g: &Tensor, w: &Tensor, key: &str, pad: usize,
+                 s: &mut Scratch) -> Tensor {
+    let wt = s.flipped(key, w);
+    let zeros = vec![0i32; wt.shape()[0]];
+    conv_fp_s(g, wt.as_ref(), &zeros, pad, false, SHIFT_CONV_BP, s)
+}
+
 /// WU convolution, Eq. (4): kernel gradients (Nof, Nif, K, K) at FWG and
 /// bias gradients (Nof,) at FG.
 pub fn conv_wu(x: &Tensor, g: &Tensor, pad: usize) -> (Tensor, Vec<i32>) {
+    let mut s = Scratch::new();
+    conv_wu_s(x, g, pad, &mut s)
+}
+
+/// [`conv_wu`] against a reusable per-shard workspace.
+///
+/// One pass per (of, ci): all K*K tap accumulators advance together
+/// while the gradient row streams once.  Per tap the terms still
+/// arrive y → ox ascending, and zero gradient pixels contribute
+/// nothing either way, so the wrapped sums equal the reference's.
+pub fn conv_wu_s(x: &Tensor, g: &Tensor, pad: usize, s: &mut Scratch)
+                 -> (Tensor, Vec<i32>) {
     let k = 2 * pad + 1;
     let nif = x.shape()[0];
     let (nof, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
-    let xp = x.pad_hw(pad);
-    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
-    let xd = xp.data();
+    let (hp, wp) = s.pad_hw_into(x, pad);
     let gd = g.data();
     let mut dw = Tensor::zeros(&[nof, nif, k, k]);
+    let dd = dw.data_mut();
+    let mut accs = vec![0i32; k * k];
     for of in 0..nof {
         for ci in 0..nif {
-            for ky in 0..k {
-                for kx in 0..k {
-                    // row-wise dot products over contiguous slices
-                    // (auto-vectorized; §Perf)
-                    let mut acc: i32 = 0;
-                    for y in 0..oh {
-                        let grow = (of * oh + y) * ow;
-                        let xrow = (ci * hp + y + ky) * wp + kx;
-                        let gs = &gd[grow..grow + ow];
-                        let xs = &xd[xrow..xrow + ow];
-                        for (&gv, &xv) in gs.iter().zip(xs) {
-                            acc = acc.wrapping_add(gv.wrapping_mul(xv));
+            accs.fill(0);
+            for y in 0..oh {
+                let grow = (of * oh + y) * ow;
+                let gs = &gd[grow..grow + ow];
+                for ky in 0..k {
+                    let xrow = (ci * hp + y + ky) * wp;
+                    let xs = &s.pad[xrow..xrow + wp];
+                    let arow = &mut accs[ky * k..(ky + 1) * k];
+                    for (t, &gv) in gs.iter().enumerate() {
+                        if gv == 0 {
+                            continue;
+                        }
+                        for (a, &xv) in
+                            arow.iter_mut().zip(&xs[t..t + k])
+                        {
+                            *a = a.wrapping_add(gv.wrapping_mul(xv));
                         }
                     }
-                    dw.set4(of, ci, ky, kx, shift_round(acc, SHIFT_WU_STORE));
                 }
+            }
+            let base = (of * nif + ci) * k * k;
+            for (o, &a) in dd[base..base + k * k].iter_mut().zip(&accs) {
+                *o = shift_round(a, SHIFT_WU_STORE);
             }
         }
     }
     let mut db = vec![0i32; nof];
-    for of in 0..nof {
+    for (of, d) in db.iter_mut().enumerate() {
         let base = of * oh * ow;
-        let mut s: i32 = 0;
+        let mut sum: i32 = 0;
         for v in &gd[base..base + oh * ow] {
-            s = s.wrapping_add(*v);
+            sum = sum.wrapping_add(*v);
         }
-        db[of] = s;
+        *d = sum;
     }
     (dw, db)
 }
@@ -195,6 +313,18 @@ mod tests {
         let w = randi(&mut rng, &[8, 5, 3, 3], 150);
         let out = conv_bp(&g, &w, 1);
         assert_eq!(out.shape(), &[5, 4, 4]);
+    }
+
+    #[test]
+    fn conv_bp_scratch_variant_matches_and_caches() {
+        let mut rng = Lcg::new(8);
+        let g = randi(&mut rng, &[8, 4, 4], 300);
+        let w = randi(&mut rng, &[8, 5, 3, 3], 150);
+        let want = conv_bp(&g, &w, 1);
+        let mut s = Scratch::new();
+        assert_eq!(conv_bp_s(&g, &w, "c", 1, &mut s), want);
+        // second call hits the flip cache, same result
+        assert_eq!(conv_bp_s(&g, &w, "c", 1, &mut s), want);
     }
 
     #[test]

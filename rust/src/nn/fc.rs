@@ -1,9 +1,23 @@
 //! Golden-model fully-connected layer: forward, backward (transposed
 //! weights, §II) and weight update (outer product), bit-exact with the
 //! Pallas matmul kernel.
+//!
+//! Register-blocked over `RB` weight rows (§Perf; DESIGN.md "Tiled host
+//! kernels"): FP streams `x` once across `RB` row dot products, BP
+//! chains `RB` rows into the output vector per pass so each output
+//! element is loaded/stored once per block instead of once per row, and
+//! WU skips whole zero-gradient rows (`shift_round(0) == 0`).  Per
+//! output element the wrapping adds keep the scalar order (FP: k
+//! ascending; BP: rows ascending), and skipped zero operands add
+//! nothing, so results are bit-identical to
+//! [`reference`](crate::nn::reference) — property-tested in
+//! `tests/kernels.rs`.
 
 use crate::fixed::{requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE};
 use crate::nn::tensor::Tensor;
+
+/// Weight-row register-block height.
+const RB: usize = 4;
 
 /// FC forward: x (K,) at FA, w (N, K) at FW, b (N,) at FA+FW -> (N,) at FA.
 pub fn fc_fp(x: &[i32], w: &Tensor, b: &[i32]) -> Vec<i32> {
@@ -11,16 +25,30 @@ pub fn fc_fp(x: &[i32], w: &Tensor, b: &[i32]) -> Vec<i32> {
     assert_eq!(x.len(), k);
     assert_eq!(b.len(), n);
     let wd = w.data();
-    (0..n)
-        .map(|row| {
-            let mut acc = 0i32;
-            let wrow = &wd[row * k..(row + 1) * k];
-            for (xi, wi) in x.iter().zip(wrow) {
-                acc = acc.wrapping_add(xi.wrapping_mul(*wi));
+    let mut out = vec![0i32; n];
+    let mut row0 = 0;
+    while row0 < n {
+        let nb = RB.min(n - row0);
+        let mut acc = [0i32; RB];
+        for (t, &xv) in x.iter().enumerate() {
+            // post-ReLU activations are sparse; zero terms are the
+            // wrapping-add identity either way
+            if xv == 0 {
+                continue;
             }
-            requant(acc.wrapping_add(b[row]), SHIFT_CONV_FP)
-        })
-        .collect()
+            for (u, a) in acc.iter_mut().enumerate().take(nb) {
+                *a = a.wrapping_add(
+                    xv.wrapping_mul(wd[(row0 + u) * k + t]),
+                );
+            }
+        }
+        for (u, &a) in acc.iter().enumerate().take(nb) {
+            out[row0 + u] =
+                requant(a.wrapping_add(b[row0 + u]), SHIFT_CONV_FP);
+        }
+        row0 += nb;
+    }
+    out
 }
 
 /// FC backward with the transposed weight matrix: g (N,) at FG -> (K,) at FG.
@@ -29,11 +57,39 @@ pub fn fc_bp(g: &[i32], w: &Tensor) -> Vec<i32> {
     assert_eq!(g.len(), n);
     let wd = w.data();
     let mut out = vec![0i32; k];
-    for (row, &gv) in g.iter().enumerate() {
-        let wrow = &wd[row * k..(row + 1) * k];
-        for (o, wi) in out.iter_mut().zip(wrow) {
-            *o = o.wrapping_add(gv.wrapping_mul(*wi));
+    let mut row0 = 0;
+    while row0 < n {
+        let nb = RB.min(n - row0);
+        if nb == RB {
+            // full block: four row streams chained per output element
+            // (rows ascending, matching the scalar accumulation order)
+            let (g0, g1, g2, g3) =
+                (g[row0], g[row0 + 1], g[row0 + 2], g[row0 + 3]);
+            if (g0, g1, g2, g3) != (0, 0, 0, 0) {
+                let rows = &wd[row0 * k..(row0 + 4) * k];
+                let (r0, rest) = rows.split_at(k);
+                let (r1, rest) = rest.split_at(k);
+                let (r2, r3) = rest.split_at(k);
+                for (t, o) in out.iter_mut().enumerate() {
+                    let mut v = o.wrapping_add(g0.wrapping_mul(r0[t]));
+                    v = v.wrapping_add(g1.wrapping_mul(r1[t]));
+                    v = v.wrapping_add(g2.wrapping_mul(r2[t]));
+                    *o = v.wrapping_add(g3.wrapping_mul(r3[t]));
+                }
+            }
+        } else {
+            for u in row0..row0 + nb {
+                let gv = g[u];
+                if gv == 0 {
+                    continue;
+                }
+                let wrow = &wd[u * k..(u + 1) * k];
+                for (o, &wi) in out.iter_mut().zip(wrow) {
+                    *o = o.wrapping_add(gv.wrapping_mul(wi));
+                }
+            }
         }
+        row0 += nb;
     }
     out.iter().map(|&v| requant(v, SHIFT_CONV_BP)).collect()
 }
@@ -44,9 +100,12 @@ pub fn fc_wu(g: &[i32], x: &[i32]) -> (Tensor, Vec<i32>) {
     let mut dw = Tensor::zeros(&[n, k]);
     let dd = dw.data_mut();
     for (row, &gv) in g.iter().enumerate() {
-        for (col, &xv) in x.iter().enumerate() {
-            dd[row * k + col] =
-                shift_round(gv.wrapping_mul(xv), SHIFT_WU_STORE);
+        if gv == 0 {
+            // shift_round(0 * x) == 0: the zeroed row is already exact
+            continue;
+        }
+        for (o, &xv) in dd[row * k..(row + 1) * k].iter_mut().zip(x) {
+            *o = shift_round(gv.wrapping_mul(xv), SHIFT_WU_STORE);
         }
     }
     (dw, g.to_vec())
@@ -83,6 +142,24 @@ mod tests {
         let g = vec![1 << 12, 2 << 12]; // scaled so requant shift cancels
         let out = fc_bp(&g, &w);
         assert_eq!(out, vec![1 + 2 * 4, 2 + 2 * 5, 3 + 2 * 6]);
+    }
+
+    #[test]
+    fn fc_bp_remainder_rows_accumulate() {
+        // n = 6 exercises one full 4-row block plus a 2-row remainder
+        let w = Tensor::from_vec(
+            &[6, 2],
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12],
+        );
+        let g: Vec<i32> = (1..=6).map(|v| v << 12).collect();
+        let out = fc_bp(&g, &w);
+        assert_eq!(
+            out,
+            vec![
+                1 + 2 * 3 + 3 * 5 + 4 * 7 + 5 * 9 + 6 * 11,
+                2 + 2 * 4 + 3 * 6 + 4 * 8 + 5 * 10 + 6 * 12
+            ]
+        );
     }
 
     #[test]

@@ -9,10 +9,11 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Layer, Network};
 use crate::nn::bn;
-use crate::nn::conv::{conv_bp, conv_fp_std, conv_wu};
+use crate::nn::conv::{conv_bp_s, conv_fp_std_s, conv_wu_s};
 use crate::nn::fc::{fc_bp, fc_fp, fc_wu};
 use crate::nn::loss::loss_grad;
 use crate::nn::pool::{maxpool, relu_mask, scale_mask, upsample_scale};
+use crate::nn::scratch::Scratch;
 use crate::nn::tensor::Tensor;
 use crate::nn::tensorio::Bundle;
 
@@ -73,9 +74,17 @@ pub struct FwdCache {
 /// Per-image gradients, keyed like the params (`w_*` at FWG, `b_*` at FG).
 pub type Grads = HashMap<String, Tensor>;
 
-/// FP phase for one image.
+/// FP phase for one image (transient workspace; prefer [`forward_s`]
+/// in a loop).
 pub fn forward(net: &Network, params: &Params, x: &Tensor)
                -> Result<(Vec<i32>, FwdCache)> {
+    let mut sc = Scratch::new();
+    forward_s(net, params, x, &mut sc)
+}
+
+/// FP phase for one image against a reusable per-shard workspace.
+pub fn forward_s(net: &Network, params: &Params, x: &Tensor,
+                 sc: &mut Scratch) -> Result<(Vec<i32>, FwdCache)> {
     let mut cache = FwdCache {
         x: x.clone(),
         acts: HashMap::new(),
@@ -90,7 +99,7 @@ pub fn forward(net: &Network, params: &Params, x: &Tensor)
             Layer::Conv { name, relu, .. } => {
                 let w = params.get(&format!("w_{name}"))?;
                 let b = params.get(&format!("b_{name}"))?;
-                a = conv_fp_std(&a, w, b.data(), *relu);
+                a = conv_fp_std_s(&a, w, b.data(), *relu, sc);
                 cache.acts.insert(name.clone(), a.clone());
             }
             Layer::Bn { name, relu, .. } => {
@@ -126,9 +135,20 @@ pub fn forward(net: &Network, params: &Params, x: &Tensor)
     Ok((logits, cache))
 }
 
-/// BP + per-image WU phases, given the loss gradient at the logits.
+/// BP + per-image WU phases, given the loss gradient at the logits
+/// (transient workspace; prefer [`backward_s`] in a loop).
 pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
                 g_out: &[i32]) -> Result<Grads> {
+    let mut sc = Scratch::new();
+    backward_s(net, params, cache, g_out, &mut sc)
+}
+
+/// BP + per-image WU phases against a reusable per-shard workspace.
+/// The workspace caches each conv layer's flipped BP kernels (keyed by
+/// layer name) for the rest of the batch; the coordinator invalidates
+/// it whenever parameters change.
+pub fn backward_s(net: &Network, params: &Params, cache: &FwdCache,
+                  g_out: &[i32], sc: &mut Scratch) -> Result<Grads> {
     let mut grads: Grads = HashMap::new();
 
     // FC weight update + backward
@@ -218,13 +238,13 @@ pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
                     None => &cache.x,
                     Some(b) => &cache.acts[b.name()],
                 };
-                let (dw, db) = conv_wu(x_in, &g, *pad);
+                let (dw, db) = conv_wu_s(x_in, &g, *pad, sc);
                 grads.insert(format!("w_{name}"), dw);
                 grads.insert(format!("b_{name}"),
                              Tensor::from_vec(&[db.len()], db));
                 if let Some(&b) = below {
                     let w = params.get(&format!("w_{name}"))?;
-                    g = conv_bp(&g, w, *pad);
+                    g = conv_bp_s(&g, w, name, *pad, sc);
                     if b.fused_relu() {
                         g = scale_mask(&g, &fused_mask(b)?);
                     }
@@ -243,9 +263,17 @@ pub fn backward(net: &Network, params: &Params, cache: &FwdCache,
 /// and fold into the running statistics at batch end.
 pub fn train_step(net: &Network, params: &Params, x: &Tensor, y: &[i32])
                   -> Result<(i32, Vec<i32>, Grads)> {
-    let (logits, cache) = forward(net, params, x)?;
+    let mut sc = Scratch::new();
+    train_step_s(net, params, x, y, &mut sc)
+}
+
+/// [`train_step`] against a reusable per-shard workspace.
+pub fn train_step_s(net: &Network, params: &Params, x: &Tensor,
+                    y: &[i32], sc: &mut Scratch)
+                    -> Result<(i32, Vec<i32>, Grads)> {
+    let (logits, cache) = forward_s(net, params, x, sc)?;
     let (g, loss) = loss_grad(net.loss, &logits, y);
-    let mut grads = backward(net, params, &cache, &g)?;
+    let mut grads = backward_s(net, params, &cache, &g, sc)?;
     for (name, (sm, sq)) in cache.bn_stats {
         grads.insert(format!("sm_{name}"), sm);
         grads.insert(format!("sq_{name}"), sq);

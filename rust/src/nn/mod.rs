@@ -13,11 +13,14 @@ pub mod golden;
 pub mod init;
 pub mod loss;
 pub mod pool;
+pub mod reference;
+pub mod scratch;
 pub mod sgd;
 pub mod tensor;
 pub mod tensorio;
 pub mod testutil;
 
 pub use golden::{backward, forward, train_step, FwdCache, Grads, Params};
+pub use scratch::Scratch;
 pub use tensor::Tensor;
 pub use tensorio::Bundle;

@@ -1,5 +1,12 @@
 //! Golden-model pooling / upsampling / scaling units (§III-G), bit-exact
 //! with the Pallas kernels.
+//!
+//! The window walks run on flat row slices (one bounds-checked slice
+//! per window row instead of a shape lookup per element); the scan
+//! order (dy → dx, strict `>`) is exactly the scalar
+//! [`reference`](crate::nn::reference) order, so outputs and argmax
+//! tie-breaks are bit-identical — property-tested in
+//! `tests/kernels.rs`.
 
 use crate::fixed::sat16;
 use crate::nn::tensor::Tensor;
@@ -15,22 +22,27 @@ pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
     let (oh, ow) = (h / k, w / k);
     let mut out = Tensor::zeros(&[c, oh, ow]);
     let mut idx = Tensor::zeros(&[c, oh, ow]);
+    let xd = x.data();
+    let od = out.data_mut();
+    let id = idx.data_mut();
     for ci in 0..c {
         for oy in 0..oh {
+            let obase = (ci * oh + oy) * ow;
             for ox in 0..ow {
                 let mut best = i32::MIN;
                 let mut best_i = 0i32;
                 for dy in 0..k {
-                    for dx in 0..k {
-                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                    let xrow = (ci * h + oy * k + dy) * w + ox * k;
+                    for (dx, &v) in xd[xrow..xrow + k].iter().enumerate()
+                    {
                         if v > best {
                             best = v;
                             best_i = (dy * k + dx) as i32;
                         }
                     }
                 }
-                out.set3(ci, oy, ox, best);
-                idx.set3(ci, oy, ox, best_i);
+                od[obase + ox] = best;
+                id[obase + ox] = best_i;
             }
         }
     }
@@ -44,18 +56,21 @@ pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
 pub fn upsample_scale(g: &Tensor, idx: &Tensor, mask: &Tensor, k: usize)
                       -> Tensor {
     let (c, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
-    assert_eq!(mask.shape(), &[c, oh * k, ow * k]);
-    let mut out = Tensor::zeros(&[c, oh * k, ow * k]);
+    let (h, w) = (oh * k, ow * k);
+    assert_eq!(mask.shape(), &[c, h, w]);
+    let mut out = Tensor::zeros(&[c, h, w]);
+    let od = out.data_mut();
+    let gd = g.data();
+    let idxd = idx.data();
+    let md = mask.data();
     for ci in 0..c {
         for oy in 0..oh {
+            let gbase = (ci * oh + oy) * ow;
             for ox in 0..ow {
-                let i = idx.at3(ci, oy, ox) as usize;
+                let i = idxd[gbase + ox] as usize;
                 let (dy, dx) = (i / k, i % k);
-                let (y, x) = (oy * k + dy, ox * k + dx);
-                let v = sat16(
-                    g.at3(ci, oy, ox).wrapping_mul(mask.at3(ci, y, x)),
-                );
-                out.set3(ci, y, x, v);
+                let p = (ci * h + oy * k + dy) * w + ox * k + dx;
+                od[p] = sat16(gd[gbase + ox].wrapping_mul(md[p]));
             }
         }
     }

@@ -1,0 +1,232 @@
+//! Scalar reference kernels — the bit-exactness oracle for the tiled
+//! hot-path kernels in [`conv`](crate::nn::conv),
+//! [`fc`](crate::nn::fc) and [`pool`](crate::nn::pool).
+//!
+//! These are the original per-image triple-loop kernels, kept verbatim.
+//! Every optimized kernel must produce bit-identical output to its
+//! function here for all shapes — `tests/kernels.rs` sweeps randomized
+//! shapes, paddings and saturated inputs, and the per-kernel hotpath
+//! bench measures the tiled speedup against this module.  The
+//! accumulation contract both sides implement:
+//!
+//! - i32 **wrapping** adds, per output element in a **fixed term
+//!   order** (conv FP/BP: ci → ky → kx; conv WU: y → ox per tap;
+//!   fc FP: k ascending; fc BP: row ascending),
+//! - round-half-up requantization at the documented shifts,
+//! - zero operands may be skipped (adding 0 is the identity, so the
+//!   remaining adds land on the same wrapped value).
+//!
+//! Do not optimize anything in this file: its value is being obviously
+//! equivalent to Eqs. (1), (3), (4) of the paper.
+
+use crate::fixed::{
+    requant, shift_round, SHIFT_CONV_BP, SHIFT_CONV_FP, SHIFT_WU_STORE,
+};
+use crate::nn::conv::transpose_flip;
+use crate::nn::tensor::Tensor;
+
+/// Scalar FP convolution, Eq. (1): stride 1, square kernel, zero
+/// padding.  Signature and semantics identical to
+/// [`conv::conv_fp`](crate::nn::conv::conv_fp).
+pub fn conv_fp(x: &Tensor, w: &Tensor, b: &[i32], pad: usize, relu: bool,
+               shift: u32) -> Tensor {
+    let (nof, nif, k) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+    assert_eq!(x.shape()[0], nif, "input channel mismatch");
+    assert_eq!(b.len(), nof);
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let (oh, ow) = (hp - k + 1, wp - k + 1);
+    let mut out = Tensor::zeros(&[nof, oh, ow]);
+    let xd = xp.data();
+    let od = out.data_mut();
+    let mut acc = vec![0i32; oh * ow];
+    for of in 0..nof {
+        acc.fill(b[of]);
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let wt = w.at4(of, ci, ky, kx);
+                    if wt == 0 {
+                        continue;
+                    }
+                    for oy in 0..oh {
+                        let xrow = (ci * hp + oy + ky) * wp + kx;
+                        let arow = oy * ow;
+                        let xs = &xd[xrow..xrow + ow];
+                        let ac = &mut acc[arow..arow + ow];
+                        for (a, &xv) in ac.iter_mut().zip(xs) {
+                            *a = a.wrapping_add(wt.wrapping_mul(xv));
+                        }
+                    }
+                }
+            }
+        }
+        let orow = of * oh * ow;
+        for (o, &a) in od[orow..orow + oh * ow].iter_mut().zip(&acc) {
+            let mut v = requant(a, shift);
+            if relu && v < 0 {
+                v = 0;
+            }
+            *o = v;
+        }
+    }
+    out
+}
+
+/// Scalar FP conv with the standard activation requantization.
+pub fn conv_fp_std(x: &Tensor, w: &Tensor, b: &[i32], relu: bool)
+                   -> Tensor {
+    conv_fp(x, w, b, (w.shape()[2] - 1) / 2, relu, SHIFT_CONV_FP)
+}
+
+/// Scalar BP convolution, Eq. (3).
+pub fn conv_bp(g: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    let wt = transpose_flip(w);
+    let zeros = vec![0i32; wt.shape()[0]];
+    conv_fp(g, &wt, &zeros, pad, false, SHIFT_CONV_BP)
+}
+
+/// Scalar WU convolution, Eq. (4): one row-dot pass per (of, ci, ky,
+/// kx) tap.
+pub fn conv_wu(x: &Tensor, g: &Tensor, pad: usize) -> (Tensor, Vec<i32>) {
+    let k = 2 * pad + 1;
+    let nif = x.shape()[0];
+    let (nof, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
+    let xp = x.pad_hw(pad);
+    let (hp, wp) = (xp.shape()[1], xp.shape()[2]);
+    let xd = xp.data();
+    let gd = g.data();
+    let mut dw = Tensor::zeros(&[nof, nif, k, k]);
+    for of in 0..nof {
+        for ci in 0..nif {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let mut acc: i32 = 0;
+                    for y in 0..oh {
+                        let grow = (of * oh + y) * ow;
+                        let xrow = (ci * hp + y + ky) * wp + kx;
+                        let gs = &gd[grow..grow + ow];
+                        let xs = &xd[xrow..xrow + ow];
+                        for (&gv, &xv) in gs.iter().zip(xs) {
+                            acc = acc.wrapping_add(gv.wrapping_mul(xv));
+                        }
+                    }
+                    dw.set4(of, ci, ky, kx, shift_round(acc, SHIFT_WU_STORE));
+                }
+            }
+        }
+    }
+    let mut db = vec![0i32; nof];
+    for of in 0..nof {
+        let base = of * oh * ow;
+        let mut s: i32 = 0;
+        for v in &gd[base..base + oh * ow] {
+            s = s.wrapping_add(*v);
+        }
+        db[of] = s;
+    }
+    (dw, db)
+}
+
+/// Scalar FC forward: per-row dot product, k ascending.
+pub fn fc_fp(x: &[i32], w: &Tensor, b: &[i32]) -> Vec<i32> {
+    let (n, k) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(x.len(), k);
+    assert_eq!(b.len(), n);
+    let wd = w.data();
+    (0..n)
+        .map(|row| {
+            let mut acc = 0i32;
+            let wrow = &wd[row * k..(row + 1) * k];
+            for (xi, wi) in x.iter().zip(wrow) {
+                acc = acc.wrapping_add(xi.wrapping_mul(*wi));
+            }
+            requant(acc.wrapping_add(b[row]), SHIFT_CONV_FP)
+        })
+        .collect()
+}
+
+/// Scalar FC backward: rows accumulate in ascending order.
+pub fn fc_bp(g: &[i32], w: &Tensor) -> Vec<i32> {
+    let (n, k) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(g.len(), n);
+    let wd = w.data();
+    let mut out = vec![0i32; k];
+    for (row, &gv) in g.iter().enumerate() {
+        let wrow = &wd[row * k..(row + 1) * k];
+        for (o, wi) in out.iter_mut().zip(wrow) {
+            *o = o.wrapping_add(gv.wrapping_mul(*wi));
+        }
+    }
+    out.iter().map(|&v| requant(v, SHIFT_CONV_BP)).collect()
+}
+
+/// Scalar FC weight update: outer(g, x) plus bias gradients.
+pub fn fc_wu(g: &[i32], x: &[i32]) -> (Tensor, Vec<i32>) {
+    let (n, k) = (g.len(), x.len());
+    let mut dw = Tensor::zeros(&[n, k]);
+    let dd = dw.data_mut();
+    for (row, &gv) in g.iter().enumerate() {
+        for (col, &xv) in x.iter().enumerate() {
+            dd[row * k + col] =
+                shift_round(gv.wrapping_mul(xv), SHIFT_WU_STORE);
+        }
+    }
+    (dw, g.to_vec())
+}
+
+/// Scalar k x k max pooling: per-window dy → dx scan, strict `>` so
+/// ties pick the first maximum.
+// the window-local index is < k*k (k is 2 or 3), far inside i32.
+#[allow(clippy::cast_possible_truncation)]
+pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert!(h % k == 0 && w % k == 0);
+    let (oh, ow) = (h / k, w / k);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let mut idx = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = i32::MIN;
+                let mut best_i = 0i32;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let v = x.at3(ci, oy * k + dy, ox * k + dx);
+                        if v > best {
+                            best = v;
+                            best_i = (dy * k + dx) as i32;
+                        }
+                    }
+                }
+                out.set3(ci, oy, ox, best);
+                idx.set3(ci, oy, ox, best_i);
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Scalar gradient upsampling through the stored pool indices.
+// stored argmax indices are in [0, k*k) by construction in `maxpool`.
+#[allow(clippy::cast_sign_loss)]
+pub fn upsample_scale(g: &Tensor, idx: &Tensor, mask: &Tensor, k: usize)
+                      -> Tensor {
+    let (c, oh, ow) = (g.shape()[0], g.shape()[1], g.shape()[2]);
+    assert_eq!(mask.shape(), &[c, oh * k, ow * k]);
+    let mut out = Tensor::zeros(&[c, oh * k, ow * k]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let i = idx.at3(ci, oy, ox) as usize;
+                let (dy, dx) = (i / k, i % k);
+                let (y, x) = (oy * k + dy, ox * k + dx);
+                let v = crate::fixed::sat16(
+                    g.at3(ci, oy, ox).wrapping_mul(mask.at3(ci, y, x)),
+                );
+                out.set3(ci, y, x, v);
+            }
+        }
+    }
+    out
+}

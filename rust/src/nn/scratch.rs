@@ -1,0 +1,161 @@
+//! Per-shard scratch workspace for the tiled golden kernels.
+//!
+//! The scalar kernels allocated on every call: a padded input plane per
+//! conv FP/BP/WU and a fresh `transpose_flip` weight tensor per conv BP
+//! — per *image*, per *layer*.  [`Scratch`] hoists both to per-shard
+//! lifetime: the engine creates one workspace per worker shard
+//! ([`engine::run_batch`](crate::engine::run_batch)) and threads it
+//! through the step function, so steady-state training performs no
+//! per-image heap allocation in the conv hot path.
+//!
+//! # Lifetime / invalidation contract
+//!
+//! - `pad` is a reusable zero-padded plane buffer.  It holds no state
+//!   between kernel calls — each call overwrites it fully — so it never
+//!   needs invalidation, only capacity.
+//! - `flips` caches `transpose_flip(w)` per conv layer, keyed by layer
+//!   name.  Weights are frozen within a batch (updates apply at
+//!   `end_batch`), so the cache is valid for exactly one batch:
+//!   [`Scratch::invalidate`] must run whenever parameters change —
+//!   the coordinator calls it from `end_batch` and `resume_from`.
+//!   Per-shard scratches are created fresh per batch, so they never
+//!   observe a parameter change mid-life.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::Network;
+use crate::nn::conv::transpose_flip;
+use crate::nn::tensor::Tensor;
+
+/// Reusable buffers threaded through the golden step; see module docs.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Zero-padded input plane, overwritten by [`Scratch::pad_hw_into`].
+    pub(crate) pad: Vec<i32>,
+    /// Per-batch cache of 180-degree-rotated, if/of-interchanged conv
+    /// kernels (Fig. 5), keyed by conv layer name.
+    flips: HashMap<String, Arc<Tensor>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Workspace presized for `net`: the pad plane gets the largest
+    /// padded-plane footprint any layer reports via
+    /// [`LayerOps::host_scratch_words`](crate::ops::LayerOps::host_scratch_words),
+    /// so even the first image of the first batch allocates nothing
+    /// mid-kernel.
+    pub fn for_net(net: &Network) -> Scratch {
+        let words = net
+            .layers
+            .iter()
+            .map(|l| crate::ops::for_layer(l).host_scratch_words(l))
+            .max()
+            .unwrap_or(0);
+        Scratch { pad: Vec::with_capacity(words), flips: HashMap::new() }
+    }
+
+    /// Zero-pad `x` (C, H, W) by `p` into the internal plane buffer and
+    /// return the padded (Hp, Wp).  The buffer is fully overwritten;
+    /// capacity is retained across calls.
+    pub(crate) fn pad_hw_into(&mut self, x: &Tensor, p: usize)
+                              -> (usize, usize) {
+        let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (hp, wp) = (h + 2 * p, w + 2 * p);
+        self.pad.clear();
+        self.pad.resize(c * hp * wp, 0);
+        if p == 0 {
+            self.pad.copy_from_slice(x.data());
+        } else {
+            let xd = x.data();
+            for ci in 0..c {
+                for y in 0..h {
+                    let src = (ci * h + y) * w;
+                    let dst = (ci * hp + y + p) * wp + p;
+                    self.pad[dst..dst + w]
+                        .copy_from_slice(&xd[src..src + w]);
+                }
+            }
+        }
+        (hp, wp)
+    }
+
+    /// The transposed-flipped view of conv weights `w`, computed once
+    /// per `key` per batch.  The `Arc` detaches the returned tensor
+    /// from the workspace borrow so the caller can keep using the
+    /// scratch (e.g. its pad plane) while holding the weights.
+    pub(crate) fn flipped(&mut self, key: &str, w: &Tensor) -> Arc<Tensor> {
+        if let Some(t) = self.flips.get(key) {
+            return Arc::clone(t);
+        }
+        let t = Arc::new(transpose_flip(w));
+        self.flips.insert(key.to_string(), Arc::clone(&t));
+        t
+    }
+
+    /// Drop all weight-derived cache entries.  Must run whenever
+    /// parameters change (batch end, checkpoint resume).
+    pub fn invalidate(&mut self) {
+        self.flips.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::{randi, Lcg};
+
+    #[test]
+    fn pad_into_matches_tensor_pad_hw() {
+        let mut rng = Lcg::new(21);
+        let mut s = Scratch::new();
+        for p in 0..3usize {
+            let x = randi(&mut rng, &[3, 5, 4], 500);
+            let (hp, wp) = s.pad_hw_into(&x, p);
+            let want = x.pad_hw(p);
+            assert_eq!((hp, wp), (want.shape()[1], want.shape()[2]));
+            assert_eq!(s.pad, want.data());
+        }
+    }
+
+    #[test]
+    fn pad_buffer_is_fully_overwritten_between_shapes() {
+        // shrink after a larger padded plane: stale tail must not leak
+        let mut s = Scratch::new();
+        let big = randi(&mut Lcg::new(1), &[4, 8, 8], 900);
+        s.pad_hw_into(&big, 2);
+        let small = randi(&mut Lcg::new(2), &[1, 3, 3], 900);
+        s.pad_hw_into(&small, 1);
+        assert_eq!(s.pad, small.pad_hw(1).data());
+    }
+
+    #[test]
+    fn flip_cache_returns_same_result_until_invalidated() {
+        let mut rng = Lcg::new(3);
+        let w = randi(&mut rng, &[4, 3, 3, 3], 300);
+        let mut s = Scratch::new();
+        let a = s.flipped("c1", &w);
+        assert_eq!(*a, transpose_flip(&w));
+        // stale-by-design within a batch: the cache ignores new weights
+        // under the same key until invalidate()
+        let w2 = randi(&mut rng, &[4, 3, 3, 3], 300);
+        assert_eq!(*s.flipped("c1", &w2), transpose_flip(&w));
+        s.invalidate();
+        assert_eq!(*s.flipped("c1", &w2), transpose_flip(&w2));
+    }
+
+    #[test]
+    fn for_net_presizes_the_largest_conv_plane() {
+        let net = Network::parse(
+            "input 3 8 8\nconv c1 4 k3 s1 p1 relu\nconv c2 4 k3 s1 p1 \
+             relu\npool p1 2\nfc fc 10\nloss hinge",
+        )
+        .unwrap();
+        let s = Scratch::for_net(&net);
+        // widest padded plane: c2's input, 4 x (8+2) x (8+2)
+        assert!(s.pad.capacity() >= 400);
+    }
+}

@@ -253,6 +253,18 @@ pub trait LayerOps: Sync {
     /// Control-ROM word for the global control logic.
     fn control_word(&self, l: &Layer, dv: &DesignVars) -> ControlWord;
 
+    /// i32 words of host-side kernel workspace this layer needs while
+    /// one image passes through it — the zero-padded input plane for
+    /// convs (FP pads the input, BP the gradient, WU the input again;
+    /// the widest is `max(cin, cout)` padded planes deep).  Sizes the
+    /// one-time presizing in
+    /// [`Scratch::for_net`](crate::nn::scratch::Scratch::for_net);
+    /// layers whose kernels read their inputs in place report 0.
+    fn host_scratch_words(&self, l: &Layer) -> usize {
+        let _ = l;
+        0
+    }
+
     /// Worst-case range contracts for every i32 accumulator this
     /// layer's kernels drive (see [`AccContract`]); the static range
     /// analyzer propagates these through batch size and cluster merge.
@@ -319,6 +331,15 @@ impl LayerOps for ConvOps {
     fn fused_relu(&self, l: &Layer) -> bool {
         let Layer::Conv { relu, .. } = *l else { unreachable!() };
         relu
+    }
+
+    fn host_scratch_words(&self, l: &Layer) -> usize {
+        let Layer::Conv { cin, cout, h, w, pad, .. } = *l else {
+            unreachable!()
+        };
+        // FP/WU pad the cin-deep input plane, BP the cout-deep
+        // gradient plane — the workspace must hold the wider of the two
+        cin.max(cout) * (h + 2 * pad) * (w + 2 * pad)
     }
 
     fn modules(&self, l: &Layer) -> Vec<Module> {

@@ -1,0 +1,340 @@
+//! Tiled-vs-reference kernel bit-identity (ISSUE 7 tentpole).
+//!
+//! The tiled hot-path kernels in `nn::{conv, fc, pool}` claim exact
+//! bit-identity with the scalar oracles in `nn::reference` — same
+//! wrapping i32 accumulation per output element in the same term
+//! order.  This suite enforces the claim two ways:
+//!
+//! 1. property sweeps over randomized shapes, paddings, and amplitudes
+//!    (including fully saturated inputs, where wrapping actually
+//!    happens) for every kernel, and
+//! 2. a fixed-seed end-to-end pin: a whole train batch stepped by a
+//!    hand-rolled reference-kernel loop through the public engine must
+//!    leave parameters bit-identical to the tiled
+//!    [`Trainer`](stratus::coordinator) at every worker × accelerator
+//!    grouping.
+//!
+//! Stride is fixed at 1 throughout — the layer grammar admits only
+//! `s1` (config::Network::parse), so there is no stride axis to sweep.
+
+use anyhow::Result;
+use stratus::config::Network;
+use stratus::data::{Sample, Synthetic};
+use stratus::engine::{self, StepOut};
+use stratus::fixed::{SHIFT_CONV_BP, SHIFT_CONV_FP};
+use stratus::nn::init::init_params;
+use stratus::nn::loss::{encode_label, loss_grad};
+use stratus::nn::pool::{relu_mask, scale_mask};
+use stratus::nn::sgd::{ParamKind, ParamState, SgdHyper};
+use stratus::nn::tensor::Tensor;
+use stratus::nn::testutil::{randi, Lcg};
+use stratus::nn::{conv, fc, pool, reference, Scratch};
+use stratus::session::{Session, Spec};
+
+/// Kernel sizes the conv generators draw from (odd, like the grammar).
+const KS: [usize; 3] = [1, 3, 5];
+
+/// Random conv-like spatial extent guaranteeing at least one output
+/// pixel: `h + 2*pad - k + 1 >= 1`.
+fn rand_hw(rng: &mut Lcg, k: usize, pad: usize) -> usize {
+    (k.saturating_sub(2 * pad)).max(1) + rng.below(8) as usize
+}
+
+/// Every 5th case runs fully saturated so the wrapping adds actually
+/// wrap; otherwise activation-scale amplitudes.
+fn amp_for(case: usize) -> i32 {
+    if case % 5 == 0 { 32767 } else { 900 }
+}
+
+#[test]
+fn conv_fp_tiled_matches_reference_over_random_shapes() {
+    let mut rng = Lcg::new(101);
+    let mut s = Scratch::new();
+    for case in 0..60 {
+        let k = KS[rng.below(3) as usize];
+        let pad = rng.below(3) as usize;
+        let nif = 1 + rng.below(5) as usize;
+        // up to 9 output channels crosses the OFB = 4 register block
+        // boundary with a remainder
+        let nof = 1 + rng.below(9) as usize;
+        let h = rand_hw(&mut rng, k, pad);
+        let w = rand_hw(&mut rng, k, pad);
+        let amp = amp_for(case);
+        let x = randi(&mut rng, &[nif, h, w], amp);
+        let wt = randi(&mut rng, &[nof, nif, k, k], amp.min(4000));
+        let b: Vec<i32> =
+            (0..nof).map(|_| rng.int_pm(1 << 20)).collect();
+        let relu = rng.below(2) == 0;
+        let shift =
+            if case % 2 == 0 { SHIFT_CONV_FP } else { SHIFT_CONV_BP };
+        let want = reference::conv_fp(&x, &wt, &b, pad, relu, shift);
+        let got = conv::conv_fp(&x, &wt, &b, pad, relu, shift);
+        assert_eq!(got, want,
+                   "conv_fp case {case}: k={k} pad={pad} nif={nif} \
+                    nof={nof} h={h} w={w} amp={amp}");
+        // the scratch-reusing variant must agree too (dirty buffers
+        // from previous cases must be fully overwritten)
+        let got_s =
+            conv::conv_fp_s(&x, &wt, &b, pad, relu, shift, &mut s);
+        assert_eq!(got_s, want, "conv_fp_s case {case}");
+    }
+}
+
+#[test]
+fn conv_bp_tiled_matches_reference_over_random_shapes() {
+    let mut rng = Lcg::new(202);
+    let mut s = Scratch::new();
+    for case in 0..40 {
+        let k = KS[rng.below(3) as usize];
+        let pad = rng.below(3) as usize;
+        let nif = 1 + rng.below(6) as usize;
+        let nof = 1 + rng.below(6) as usize;
+        let h = rand_hw(&mut rng, k, pad);
+        let w = rand_hw(&mut rng, k, pad);
+        let amp = amp_for(case);
+        let g = randi(&mut rng, &[nof, h, w], amp);
+        let wt = randi(&mut rng, &[nof, nif, k, k], amp.min(4000));
+        let want = reference::conv_bp(&g, &wt, pad);
+        assert_eq!(conv::conv_bp(&g, &wt, pad), want,
+                   "conv_bp case {case}: k={k} pad={pad}");
+        // cached-flip variant: unique key per case, exercised twice so
+        // the second call replays the cache
+        let key = format!("w{case}");
+        assert_eq!(conv::conv_bp_s(&g, &wt, &key, pad, &mut s), want);
+        assert_eq!(conv::conv_bp_s(&g, &wt, &key, pad, &mut s), want);
+        // invalidation forces a recompute to the same result
+        s.invalidate();
+        assert_eq!(conv::conv_bp_s(&g, &wt, &key, pad, &mut s), want);
+    }
+}
+
+#[test]
+fn conv_wu_tiled_matches_reference_over_random_shapes() {
+    let mut rng = Lcg::new(303);
+    let mut s = Scratch::new();
+    for case in 0..40 {
+        // WU geometry: k = 2*pad + 1, gradient plane same spatial
+        // extent as the input
+        let pad = rng.below(3) as usize;
+        let nif = 1 + rng.below(5) as usize;
+        let nof = 1 + rng.below(5) as usize;
+        let h = 1 + rng.below(8) as usize;
+        let w = 1 + rng.below(8) as usize;
+        let amp = amp_for(case);
+        let x = randi(&mut rng, &[nif, h, w], amp);
+        let mut g = randi(&mut rng, &[nof, h, w], amp);
+        // pool-style sparsity exercises the zero-skip path
+        for v in g.data_mut() {
+            if rng.below(4) == 0 {
+                *v = 0;
+            }
+        }
+        let (dw_want, db_want) = reference::conv_wu(&x, &g, pad);
+        let (dw, db) = conv::conv_wu(&x, &g, pad);
+        assert_eq!(dw, dw_want, "conv_wu case {case}: pad={pad}");
+        assert_eq!(db, db_want, "conv_wu db case {case}");
+        let (dw_s, db_s) = conv::conv_wu_s(&x, &g, pad, &mut s);
+        assert_eq!((dw_s, db_s), (dw, db), "conv_wu_s case {case}");
+    }
+}
+
+#[test]
+fn fc_tiled_matches_reference_over_random_shapes() {
+    let mut rng = Lcg::new(404);
+    for case in 0..60 {
+        // n up to 9 crosses the RB = 4 row block with remainders
+        let n = 1 + rng.below(9) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let amp = amp_for(case);
+        let x: Vec<i32> = (0..k).map(|_| rng.int_pm(amp)).collect();
+        let w = randi(&mut rng, &[n, k], amp.min(4000));
+        let b: Vec<i32> =
+            (0..n).map(|_| rng.int_pm(1 << 20)).collect();
+        let g: Vec<i32> = (0..n).map(|_| rng.int_pm(amp)).collect();
+        assert_eq!(fc::fc_fp(&x, &w, &b), reference::fc_fp(&x, &w, &b),
+                   "fc_fp case {case}: n={n} k={k} amp={amp}");
+        assert_eq!(fc::fc_bp(&g, &w), reference::fc_bp(&g, &w),
+                   "fc_bp case {case}: n={n} k={k}");
+        assert_eq!(fc::fc_wu(&g, &x), reference::fc_wu(&g, &x),
+                   "fc_wu case {case}: n={n} k={k}");
+    }
+}
+
+#[test]
+fn pool_kernels_match_reference_including_ties() {
+    let mut rng = Lcg::new(505);
+    for case in 0..30 {
+        let k = 2 + rng.below(2) as usize;
+        let c = 1 + rng.below(4) as usize;
+        let oh = 1 + rng.below(4) as usize;
+        let ow = 1 + rng.below(4) as usize;
+        let (h, w) = (oh * k, ow * k);
+        // every 3rd case is all-constant: the strict-> first-max
+        // tie-break must pick identical indices on both sides
+        let x = if case % 3 == 0 {
+            Tensor::from_vec(&[c, h, w], vec![7; c * h * w])
+        } else {
+            randi(&mut rng, &[c, h, w], amp_for(case))
+        };
+        let (p_want, i_want) = reference::maxpool(&x, k);
+        let (p, i) = pool::maxpool(&x, k);
+        assert_eq!(p, p_want, "maxpool case {case}: k={k}");
+        assert_eq!(i, i_want, "maxpool idx case {case}: k={k}");
+        let g = randi(&mut rng, &[c, oh, ow], amp_for(case));
+        let mask = relu_mask(&randi(&mut rng, &[c, h, w], 100));
+        assert_eq!(pool::upsample_scale(&g, &i, &mask, k),
+                   reference::upsample_scale(&g, &i_want, &mask, k),
+                   "upsample case {case}: k={k}");
+    }
+}
+
+#[test]
+fn saturated_extremes_stay_bit_identical() {
+    // randi cannot emit i32::MIN-style extremes; build the worst-case
+    // alternating pattern by hand so the wrapped sums really wrap
+    let pat = |n: usize, a: i32, b: i32| -> Vec<i32> {
+        (0..n).map(|i| if i % 2 == 0 { a } else { b }).collect()
+    };
+    let x = Tensor::from_vec(&[2, 6, 6], pat(72, 32767, -32768));
+    let w = Tensor::from_vec(&[3, 2, 3, 3], pat(54, -32768, 32767));
+    let b = vec![i32::MAX, i32::MIN, 0];
+    assert_eq!(
+        conv::conv_fp(&x, &w, &b, 1, false, SHIFT_CONV_FP),
+        reference::conv_fp(&x, &w, &b, 1, false, SHIFT_CONV_FP)
+    );
+    let g = Tensor::from_vec(&[3, 6, 6], pat(108, 32767, -32768));
+    assert_eq!(conv::conv_bp(&g, &w, 1), reference::conv_bp(&g, &w, 1));
+    assert_eq!(conv::conv_wu(&x, &g, 1), reference::conv_wu(&x, &g, 1));
+    let fx = pat(33, 32767, -32768);
+    let fw = Tensor::from_vec(&[5, 33], pat(165, -32768, 32767));
+    let fb = pat(5, i32::MAX, i32::MIN);
+    let fg = pat(5, 32767, -32768);
+    assert_eq!(fc::fc_fp(&fx, &fw, &fb),
+               reference::fc_fp(&fx, &fw, &fb));
+    assert_eq!(fc::fc_bp(&fg, &fw), reference::fc_bp(&fg, &fw));
+    assert_eq!(fc::fc_wu(&fg, &fx), reference::fc_wu(&fg, &fx));
+}
+
+// ---------------------------------------------------------------------
+// End-to-end pin: reference-kernel train loop vs the tiled Trainer
+// ---------------------------------------------------------------------
+
+const NET: &str = "input 3 8 8\nconv c1 4 k3 s1 p1 relu\n\
+                   conv c2 4 k3 s1 p1 relu\npool p1 2\nfc fc 10\n\
+                   loss hinge";
+
+/// One per-image train step built *only* from the scalar reference
+/// kernels — the pre-tiling golden model, hand-rolled for `NET` (conv
+/// → conv → pool → fc, both convs with fused ReLU, pool without).
+fn reference_step(net: &Network,
+                  params: &stratus::nn::golden::Params,
+                  s: &Sample) -> Result<StepOut> {
+    let y = encode_label(s.label, net.nclass);
+    let w1 = params.get("w_c1")?;
+    let b1 = params.get("b_c1")?;
+    let w2 = params.get("w_c2")?;
+    let b2 = params.get("b_c2")?;
+    let wf = params.get("w_fc")?;
+    let bf = params.get("b_fc")?;
+    // FP
+    let a1 = reference::conv_fp_std(&s.image, w1, b1.data(), true);
+    let a2 = reference::conv_fp_std(&a1, w2, b2.data(), true);
+    let (p, idx) = reference::maxpool(&a2, 2);
+    let flat = p.data().to_vec();
+    let logits = reference::fc_fp(&flat, wf, bf.data());
+    let (g_out, loss) = loss_grad(net.loss, &logits, &y);
+    // BP + WU (the pool fuses no ReLU, so fc applies no mask; the
+    // pool's upsampler applies c2's, and c1's rides the conv-bp scale)
+    let (dw_fc, db_fc) = reference::fc_wu(&g_out, &flat);
+    let g_flat = reference::fc_bp(&g_out, wf);
+    let g3 = Tensor::from_vec(p.shape(), g_flat);
+    let g2 = reference::upsample_scale(&g3, &idx, &relu_mask(&a2), 2);
+    let (dw2, db2) = reference::conv_wu(&a1, &g2, 1);
+    let g1 = scale_mask(&reference::conv_bp(&g2, w2, 1),
+                        &relu_mask(&a1));
+    let (dw1, db1) = reference::conv_wu(&s.image, &g1, 1);
+    let mut grads = std::collections::HashMap::new();
+    grads.insert("w_c1".to_string(), dw1);
+    grads.insert("b_c1".to_string(),
+                 Tensor::from_vec(&[db1.len()], db1));
+    grads.insert("w_c2".to_string(), dw2);
+    grads.insert("b_c2".to_string(),
+                 Tensor::from_vec(&[db2.len()], db2));
+    grads.insert("w_fc".to_string(), dw_fc);
+    grads.insert("b_fc".to_string(),
+                 Tensor::from_vec(&[db_fc.len()], db_fc));
+    let gs = net
+        .param_order()
+        .iter()
+        .map(|n| grads.remove(n).expect("grad emitted"))
+        .collect();
+    Ok(StepOut { loss, grads: gs })
+}
+
+#[test]
+fn train_loop_pins_scalar_vs_tiled_across_groupings() {
+    let (batch_n, lr, momentum) = (12, 0.02, 0.9);
+    let net = Network::parse(NET).unwrap();
+    let batch = Synthetic::new(10, (3, 8, 8), 41, 0.3).batch(0, batch_n);
+
+    // reference side: sequential engine run over the scalar kernels,
+    // from the same seed-1234 init the golden Trainer uses, with the
+    // same end-of-batch SGD application
+    let mut params = init_params(&net, 1234);
+    let mut states: Vec<(String, ParamState)> = net
+        .param_order()
+        .into_iter()
+        .map(|name| {
+            let kind = if name.starts_with("w_") {
+                ParamKind::Weight
+            } else {
+                ParamKind::Bias
+            };
+            let shape =
+                params.get(&name).unwrap().shape().to_vec();
+            (name, ParamState::new(kind, &shape))
+        })
+        .collect();
+    let step = |s: &Sample, _: &mut Scratch| -> Result<StepOut> {
+        reference_step(&net, &params, s)
+    };
+    let (ref_loss, _) =
+        engine::run_batch(&batch, 1, &mut states, &step).unwrap();
+    let hyper = SgdHyper::new(lr, momentum, batch_n);
+    for (name, st) in &mut states {
+        st.apply(params.get_mut(name).unwrap(), &hyper);
+    }
+    let ref_flat: Vec<i32> = net
+        .param_order()
+        .iter()
+        .flat_map(|n| params.get(n).unwrap().data().to_vec())
+        .collect();
+
+    // tiled side: the public Session/Trainer path at every grouping
+    for workers in [1usize, 2, 4] {
+        for accelerators in [1usize, 3] {
+            let spec = Spec::builder()
+                .net_inline(NET)
+                .batch(batch_n)
+                .lr(lr)
+                .momentum(momentum)
+                .workers(workers)
+                .accelerators(accelerators)
+                .build()
+                .unwrap();
+            let mut t =
+                Session::new(spec).unwrap().trainer().unwrap();
+            let loss = t.train_batch(&batch).unwrap();
+            assert!(
+                (loss - ref_loss as f64 / batch_n as f64).abs() < 1e-9,
+                "loss diverged at {workers}w/{accelerators}a"
+            );
+            assert_eq!(
+                t.flat_params(),
+                ref_flat,
+                "params diverged from the scalar-kernel loop at \
+                 {workers} workers x {accelerators} accelerators"
+            );
+        }
+    }
+}
