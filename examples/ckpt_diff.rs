@@ -1,0 +1,109 @@
+//! `ckpt_diff A.ckpt B.ckpt` — compare two stratus checkpoints on
+//! their *deterministic* content: fingerprint, cursor, hyper, every
+//! parameter tensor, every optimizer/statistic state, and the
+//! deterministic training metrics (images, batches, bit-exact
+//! loss_sum).  Exits 0 when they match, 1 on any divergence, 2 on
+//! usage/load errors.
+//!
+//! The performance metrics (sim_cycles, host_seconds) are *reported*
+//! but never gated: different topologies and instance counts project
+//! different cycle counts and run at different host speeds by design —
+//! the bit-identity contract covers the training stream only.  CI's
+//! topology smoke step trains the same spec under `--topology ring`
+//! and `--topology hier` (and through an elastic resize) and diffs the
+//! checkpoints with this tool.
+
+use std::path::Path;
+use std::process::exit;
+
+use stratus::ckpt::Checkpoint;
+
+fn load(arg: &str) -> Checkpoint {
+    match Checkpoint::load(Path::new(arg)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("ckpt_diff: loading {arg}: {e:#}");
+            exit(2);
+        }
+    }
+}
+
+fn check(diffs: &mut Vec<String>, ok: bool, what: &str) {
+    if !ok {
+        diffs.push(what.to_string());
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [pa, pb] = args.as_slice() else {
+        eprintln!("usage: ckpt_diff <A.ckpt> <B.ckpt>");
+        exit(2);
+    };
+    let a = load(pa);
+    let b = load(pb);
+    let mut diffs: Vec<String> = Vec::new();
+
+    check(&mut diffs, a.fingerprint == b.fingerprint, "fingerprint");
+    check(&mut diffs, a.cursor == b.cursor,
+          "cursor (epoch/batch/seed/images)");
+    check(&mut diffs, a.hyper.lr_q16 == b.hyper.lr_q16, "hyper.lr_q16");
+    check(&mut diffs, a.hyper.beta_q15 == b.hyper.beta_q15,
+          "hyper.beta_q15");
+    check(&mut diffs, a.hyper.batch == b.hyper.batch, "hyper.batch");
+    check(&mut diffs, a.metrics.images == b.metrics.images,
+          "metrics.images");
+    check(&mut diffs, a.metrics.batches == b.metrics.batches,
+          "metrics.batches");
+    check(&mut diffs,
+          a.metrics.loss_sum.to_bits() == b.metrics.loss_sum.to_bits(),
+          "metrics.loss_sum (bit-exact)");
+
+    check(&mut diffs, a.params.len() == b.params.len(),
+          "params (tensor count)");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        if na != nb {
+            diffs.push(format!("params order: {na} vs {nb}"));
+        } else if ta != tb {
+            diffs.push(format!("params[{na}] data"));
+        }
+    }
+    check(&mut diffs, a.states.len() == b.states.len(),
+          "states (entry count)");
+    for ((na, sa), (nb, sb)) in a.states.iter().zip(&b.states) {
+        if na != nb {
+            diffs.push(format!("states order: {na} vs {nb}"));
+            continue;
+        }
+        if sa.kind != sb.kind {
+            diffs.push(format!("states[{na}].kind"));
+        }
+        if sa.grad_acc != sb.grad_acc {
+            diffs.push(format!("states[{na}].grad_acc"));
+        }
+        if sa.momentum != sb.momentum {
+            diffs.push(format!("states[{na}].momentum"));
+        }
+        if sa.count != sb.count {
+            diffs.push(format!("states[{na}].count"));
+        }
+    }
+
+    // informational only: these legitimately differ across topologies
+    println!("sim_cycles     : {} vs {}", a.metrics.sim_cycles,
+             b.metrics.sim_cycles);
+    println!("host_seconds   : {:.3} vs {:.3}", a.metrics.host_seconds,
+             b.metrics.host_seconds);
+
+    if diffs.is_empty() {
+        println!("ckpt_diff      : deterministic content identical \
+                  ({} params, {} states)",
+                 a.params.len(), a.states.len());
+        exit(0);
+    }
+    eprintln!("ckpt_diff      : {} divergence(s):", diffs.len());
+    for d in &diffs {
+        eprintln!("  - {d}");
+    }
+    exit(1);
+}

@@ -1,21 +1,24 @@
-//! Cluster scaling bench (ISSUE 2 tentpole): host-side images/sec of
-//! the data-parallel cluster engine at 1/2/4/8 accelerator instances —
-//! with a bit-identity check against single-instance training — plus
-//! the hardware model's cluster projection including the ring
-//! all-reduce communication.
+//! Cluster scaling bench (ISSUE 2 tentpole; topology sweep from ISSUE
+//! 8): host-side images/sec of the data-parallel cluster engine across
+//! instance counts *and* collective topologies — every configuration
+//! bit-identity-checked against single-instance training — plus the
+//! hardware model's large-N projection of ring vs hierarchical
+//! all-reduce (N = 4/16/64, where host training would be pointlessly
+//! slow but the cycle model is free).
 //!
 //! `cargo bench --bench cluster_scaling [-- --smoke]`: smoke mode (also
-//! `BENCH_SMOKE=1`) runs one batch per instance count for CI.  The
-//! bench writes `BENCH_cluster_scaling.json` and exits nonzero when the
-//! headline `images_per_second` regresses more than 30% below
-//! `benches/baseline.json`, or on a bit-identity mismatch
-//! (metrics::bench::ScalingBench).
+//! `BENCH_SMOKE=1`) runs one batch per configuration for CI.  The bench
+//! writes `BENCH_cluster_scaling.json` and exits nonzero when the
+//! headline `images_per_second` or the `cluster_hier` series regresses
+//! more than 30% below `benches/baseline.json`, or on a bit-identity
+//! mismatch (metrics::bench::ScalingBench).
 
 use std::time::Instant;
 
+use stratus::config::Topology;
 use stratus::data::Synthetic;
 use stratus::metrics::bench::{smoke_mode, ScalingBench};
-use stratus::metrics::cluster_scaling;
+use stratus::metrics::topology_scaling;
 use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
@@ -29,22 +32,33 @@ fn main() {
     let batches = if smoke { 1 } else { 4 };
     let train = data.batch(0, batch_size * batches);
 
-    println!("=== cluster engine: host throughput vs instances{} ===",
+    println!("=== cluster engine: host throughput vs instances and \
+              topology{} ===",
              if smoke { " (smoke)" } else { "" });
-    println!("{:<10} {:>10} {:>12} {:>9} {:>15}", "instances",
-             "images/s", "ms/image", "speedup", "vs 1 instance");
+    println!("{:<10} {:<9} {:>10} {:>12} {:>9} {:>15}", "instances",
+             "topology", "images/s", "ms/image", "speedup",
+             "vs 1 instance");
     let mut bench = ScalingBench::new("cluster_scaling", smoke);
-    for instances in [1usize, 2, 4, 8] {
+    let mut hier_ips = 0.0f64;
+    // the ring sweep reproduces the historical bench; the hier runs
+    // re-merge the same counts through the grouped collective (4 = 2x2
+    // groups, 8 = the compiler's best divisor) and must stay
+    // bit-identical to the 1-instance reference
+    let sweep = [(1usize, Topology::Ring), (2, Topology::Ring),
+                 (4, Topology::Ring), (8, Topology::Ring),
+                 (4, Topology::Hier), (8, Topology::Hier)];
+    for (instances, topology) in sweep {
         let spec = Spec::builder()
             .net_inline(NET_CFG)
             .batch(batch_size)
             .lr(0.02)
             .momentum(0.9)
             .accelerators(instances)
+            .topology(topology)
             .build()
             .unwrap();
         let mut t = Session::new(spec).unwrap().trainer().unwrap();
-        // warmup batch (identical across instance counts, so final
+        // warmup batch (identical across configurations, so final
         // params stay comparable); the spec compiles the cluster
         // design up front, so the all-reduce cost cache is already
         // warm — the warmup keeps the measurement protocol symmetric
@@ -57,17 +71,23 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         let n = train.len() as f64;
         let ips = n / dt;
+        if topology == Topology::Hier {
+            hier_ips = hier_ips.max(ips);
+        }
         let (speedup, verdict) = bench.observe(ips, t.flat_params());
-        println!("{:<10} {:>10.1} {:>12.3} {:>8.2}x {:>15}", instances,
-                 ips, dt / n * 1e3, speedup, verdict);
+        println!("{:<10} {:<9} {:>10.1} {:>12.3} {:>8.2}x {:>15}",
+                 instances, topology.to_string(), ips, dt / n * 1e3,
+                 speedup, verdict);
     }
 
-    println!("\n=== hardware model: cluster projection with ring \
-              all-reduce (1X @ BS 40) ===");
-    println!("{}", cluster_scaling(1, 40, &[1, 2, 4, 8, 16]));
+    println!("\n=== hardware model: ring vs hierarchical all-reduce \
+              (1X @ BS 40, N = 4/16/64) ===");
+    println!("{}", topology_scaling(1, 40, &[4, 16, 64]));
 
-    std::process::exit(bench.finish(&[
-        ("batch_size", batch_size as f64),
-        ("batches", batches as f64),
-    ]));
+    std::process::exit(bench.finish_with(
+        &[("batch_size", batch_size as f64),
+          ("batches", batches as f64),
+          ("images_per_second_hier", hier_ips)],
+        &[("cluster_hier", hier_ips)],
+    ));
 }

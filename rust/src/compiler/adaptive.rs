@@ -10,14 +10,72 @@
 //! range.  The report shows how much headroom the static Q8.8/Q4.12
 //! assignment leaves on the table for each layer — exactly the signal an
 //! adaptive-format RTL library would consume.
+//!
+//! This module also hosts the compiler's other adaptive decision:
+//! [`choose_collective`] picks the cluster all-reduce topology (flat
+//! ring vs hierarchical group reduce, and the group size) by pricing
+//! each candidate's communication plan against the link model.
 
 use anyhow::Result;
 
-use crate::config::Network;
+use crate::config::{Network, Topology};
 use crate::data::Sample;
+use crate::engine::collective::{Collective, HierCollective,
+                                RingCollective};
 use crate::fixed::{dequantize, FA, FG};
+use crate::hw::link::{plan_cost, LinkModel};
 use crate::nn::golden::{self, Params};
 use crate::nn::loss::{encode_label, loss_grad};
+
+// ---------------- topology choice ----------------
+
+/// The lowest-cost hierarchical group size for `n` instances reducing
+/// `words` i32 words, with the link model pricing each candidate's
+/// plan (including the G-way trunk contention on inter-group steps).
+/// `None` when `n` has no proper divisor (prime or <= 3), i.e. when
+/// the hierarchy cannot beat a flat ring by construction.
+fn best_hier_group(n: usize, words: u64, link: &LinkModel)
+                   -> Option<(usize, u64)> {
+    (2..n)
+        .filter(|g| n % g == 0)
+        .map(|g| {
+            let plan = HierCollective { group: g }.steps(n, words);
+            (g, plan_cost(&plan, link))
+        })
+        .min_by_key(|&(g, cycles)| (cycles, g))
+}
+
+/// Compile-time collective choice: map the requested [`Topology`] (and
+/// the link parameters) to a concrete [`Collective`] for `n` instances
+/// reducing `words` gradient words.
+///
+/// - `Ring` always yields the flat ring — the default, and the shape
+///   every pinned small-N behavior assumes.
+/// - `Hier` yields the cost-minimal hierarchical group size, falling
+///   back to the flat ring when `n` has no proper divisor.
+/// - `Auto` prices both and keeps the cheaper plan (ring on ties).
+pub fn choose_collective(topology: Topology, n: usize, words: u64,
+                         link: &LinkModel) -> Box<dyn Collective> {
+    if n <= 1 {
+        return Box::new(RingCollective);
+    }
+    match topology {
+        Topology::Ring => Box::new(RingCollective),
+        Topology::Hier => match best_hier_group(n, words, link) {
+            Some((g, _)) => Box::new(HierCollective { group: g }),
+            None => Box::new(RingCollective),
+        },
+        Topology::Auto => {
+            let ring = plan_cost(&RingCollective.steps(n, words), link);
+            match best_hier_group(n, words, link) {
+                Some((g, cycles)) if cycles < ring => {
+                    Box::new(HierCollective { group: g })
+                }
+                _ => Box::new(RingCollective),
+            }
+        }
+    }
+}
 
 /// Range statistics for one tensor kind at one layer.
 #[derive(Debug, Clone, Copy, Default)]
@@ -219,5 +277,60 @@ mod tests {
         let text = r.render();
         assert_eq!(text.lines().count(), 1 + r.layers.len());
         assert!(text.contains("c1"));
+    }
+
+    #[test]
+    fn chooser_respects_forced_topologies() {
+        use crate::config::DesignVars;
+        let link = LinkModel::new(&DesignVars::default());
+        // forced ring stays a ring at any scale
+        assert_eq!(choose_collective(Topology::Ring, 64, 1 << 20, &link)
+                       .name(),
+                   "ring");
+        // forced hier picks a grouped reduce whenever one exists ...
+        assert_eq!(choose_collective(Topology::Hier, 64, 1 << 20, &link)
+                       .name(),
+                   "hier");
+        // ... and degenerates to the ring when N is prime or tiny
+        for n in [1usize, 2, 3, 7, 13] {
+            assert_eq!(
+                choose_collective(Topology::Hier, n, 1 << 20, &link)
+                    .name(),
+                "ring",
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_prefers_hier_when_overhead_dominates() {
+        use crate::config::DesignVars;
+        let link = LinkModel::new(&DesignVars::default());
+        // a small gradient at N=64: per-step message overhead dominates
+        // and the 36-step hierarchy beats the 126-step flat ring
+        assert_eq!(choose_collective(Topology::Auto, 64, 4096, &link)
+                       .name(),
+                   "hier");
+        // at N=2 there is no hierarchy to choose
+        assert_eq!(choose_collective(Topology::Auto, 2, 4096, &link)
+                       .name(),
+                   "ring");
+    }
+
+    #[test]
+    fn best_group_minimizes_plan_cost() {
+        use crate::config::DesignVars;
+        let link = LinkModel::new(&DesignVars::default());
+        let (g, cycles) = best_hier_group(64, 1 << 16, &link).unwrap();
+        assert!(g > 1 && g < 64 && 64 % g == 0, "group {g}");
+        // the winner is no worse than every other divisor's plan
+        for other in (2..64usize).filter(|d| 64 % d == 0) {
+            let c = plan_cost(
+                &HierCollective { group: other }.steps(64, 1 << 16),
+                &link);
+            assert!(cycles <= c, "group {g} ({cycles}) beaten by \
+                                  {other} ({c})");
+        }
+        assert_eq!(best_hier_group(13, 1 << 16, &link), None);
     }
 }

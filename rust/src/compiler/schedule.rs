@@ -7,10 +7,11 @@
 //!   and WU interleaved walking the layers in reverse (WU gradients are
 //!   accumulated into DRAM tile-by-tile each image, Fig. 7);
 //! - a **per-batch** step list: for cluster designs (`dv.cluster > 1`),
-//!   the `2*(N-1)` ring steps of the gradient all-reduce, then the
-//!   weight-update passes that run once per batch (read weights +
-//!   momentum + accumulated gradients, write new weights tile-by-tile,
-//!   §III-E).
+//!   the gradient all-reduce steps of the compiler-chosen collective
+//!   topology ([`crate::compiler::choose_collective`]: flat ring or
+//!   hierarchical group reduce), then the weight-update passes that run
+//!   once per batch (read weights + momentum + accumulated gradients,
+//!   write new weights tile-by-tile, §III-E).
 //!
 //! Every step carries its phase, the key/affiliated classification
 //! (§III-B: key layers read fresh tiles from DRAM; affiliated layers
@@ -25,7 +26,10 @@
 //! [`StepCtx`](crate::ops::StepCtx).  The per-batch steps (ring
 //! all-reduce + weight update) are network-global and stay here.
 
+use crate::compiler::adaptive::choose_collective;
 use crate::config::{DesignVars, Loss, Network};
+use crate::engine::collective::CollectiveStep;
+use crate::hw::link::LinkModel;
 use crate::hw::mac_array::Phase;
 use crate::ops::{for_layer, Geom, StepCtx, W16, W32};
 
@@ -89,6 +93,12 @@ pub struct Schedule {
     pub per_image: Vec<Step>,
     /// Steps executed once per batch (weight update).
     pub per_batch: Vec<Step>,
+    /// The collective communication plan behind the per-batch AllReduce
+    /// steps, 1:1 by index (empty for single-instance designs).  Carries
+    /// per-step link sharing (`link_share`) the DRAM-byte view of a
+    /// [`Step`] cannot express; the simulator zips the two to charge
+    /// trunk contention on hierarchical cross-group steps.
+    pub collective: Vec<CollectiveStep>,
 }
 
 /// Input geometry of every layer (the geometry chain the registry
@@ -151,37 +161,35 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
 
     // ---------------- per-batch cluster all-reduce ----------------
     // With N > 1 accelerator instances the batch's gradient
-    // accumulators ring-all-reduce (reduce-scatter + all-gather,
-    // 2*(N-1) steps) before the weight update runs on the merged —
-    // bit-identical — accumulators.  Each step stages one chunk out of
-    // DRAM and writes the received chunk back.
+    // accumulators all-reduce before the weight update runs on the
+    // merged — bit-identical — accumulators.  The topology (flat ring
+    // or hierarchical group reduce) is chosen by the compiler from
+    // `dv.topology` and the link parameters; each plan step stages one
+    // chunk out of DRAM and writes the received chunk back.
     let mut per_batch = Vec::new();
+    let mut collective = Vec::new();
     if dv.cluster > 1 {
         // every accumulator the cluster engine reduces: gradient words
         // plus BN statistic words (Network::ring_words)
         let grad_words = net.ring_words() as u64;
-        let chunk_words = grad_words.div_ceil(dv.cluster as u64);
-        let chunk_bytes = chunk_words * W32;
-        let half = dv.cluster - 1;
-        let tiles = (2 * (chunk_words as usize)
-            .div_ceil(dv.pof * dv.tile_rows * 64)
-            .max(1)) as u64;
-        for s in 0..2 * half {
-            let layer = if s < half {
-                format!("ring_rs{s}")
-            } else {
-                format!("ring_ag{}", s - half)
-            };
+        collective = choose_collective(
+            dv.topology, dv.cluster, grad_words, &LinkModel::new(dv))
+            .steps(dv.cluster, grad_words);
+        for cs in &collective {
+            let chunk_bytes = cs.chunk_words * W32;
+            let tiles = (2 * (cs.chunk_words as usize)
+                .div_ceil(dv.pof * dv.tile_rows * 64)
+                .max(1)) as u64;
             per_batch.push(Step {
                 phase: Phase::Wu,
-                layer,
+                layer: cs.label.clone(),
                 op: OpKind::AllReduce,
                 key: true,
                 artifact: None, // runs on the link + update datapath
                 dram_read_bytes: chunk_bytes,
                 dram_write_bytes: chunk_bytes,
                 tiles,
-                out_shape: vec![chunk_words as usize],
+                out_shape: vec![cs.chunk_words as usize],
             });
         }
     }
@@ -212,7 +220,7 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
         });
     }
 
-    Schedule { per_image, per_batch }
+    Schedule { per_image, per_batch, collective }
 }
 
 impl Schedule {
@@ -382,6 +390,62 @@ mod tests {
         assert!(last_ring < first_wu);
         // weight updates themselves are unchanged
         assert_eq!(s.per_batch.len(), 6 + 7);
+        // and the plan mirrors the emitted steps 1:1
+        assert_eq!(s.collective.len(), ring.len());
+    }
+
+    #[test]
+    fn hier_schedule_emits_grouped_steps() {
+        use crate::config::Topology;
+        let net = Network::cifar(1);
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 16;
+        dv.topology = Topology::Hier;
+        let s = build(&net, &dv);
+        let steps: Vec<&Step> = s
+            .per_batch
+            .iter()
+            .filter(|st| st.op == OpKind::AllReduce)
+            .collect();
+        // 2*(G-1) + 2*(16/G - 1) for the compiler-chosen divisor G;
+        // recover G from the plan instead of pinning the cost model
+        let g = s
+            .collective
+            .iter()
+            .filter(|cs| cs.label.starts_with("hier_rs"))
+            .count()
+            + 1;
+        assert!(g > 1 && g < 16 && 16 % g == 0, "bad group {g}");
+        assert_eq!(steps.len(), 2 * (g - 1) + 2 * (16 / g - 1));
+        assert_eq!(steps[0].layer, "hier_rs0");
+        assert!(steps.iter().any(|st| st.layer.starts_with("hier_xrs")));
+        assert!(steps.iter().any(|st| st.layer.starts_with("hier_xag")));
+        assert_eq!(steps.last().unwrap().layer,
+                   format!("hier_ag{}", g - 2));
+        // plan and steps zip 1:1: same labels, bytes match chunk words
+        assert_eq!(s.collective.len(), steps.len());
+        for (cs, st) in s.collective.iter().zip(&steps) {
+            assert_eq!(cs.label, st.layer);
+            assert_eq!(st.dram_read_bytes, cs.chunk_words * W32);
+            assert!(cs.link_share >= 1);
+        }
+        // the all-reduce still precedes every weight update
+        let first_wu = s
+            .per_batch
+            .iter()
+            .position(|st| st.op == OpKind::WeightUpdate)
+            .unwrap();
+        assert!(s
+            .per_batch
+            .iter()
+            .rposition(|st| st.op == OpKind::AllReduce)
+            .unwrap()
+            < first_wu);
+    }
+
+    #[test]
+    fn single_instance_has_empty_collective_plan() {
+        assert!(sched1x().collective.is_empty());
     }
 
     #[test]

@@ -507,6 +507,50 @@ impl Network {
     }
 }
 
+/// All-reduce topology for cluster designs (`dv.cluster > 1`).  The
+/// gradient merge itself is wrapping-i32 addition — associative and
+/// commutative mod 2^32 — so *every* topology produces bit-identical
+/// parameters; the choice only moves communication cycles around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Flat ring all-reduce: reduce-scatter + all-gather, `2*(N-1)`
+    /// steps.  The default (and the paper's small-cluster shape): every
+    /// pinned small-N behavior in the repo assumes it.
+    #[default]
+    Ring,
+    /// Hierarchical group reduce: intra-group ring reduce-scatter,
+    /// inter-group ring all-reduce over slice owners, intra-group
+    /// all-gather — `2*(G-1) + 2*(N/G-1)` steps for group size G.
+    /// Degenerates to the flat ring when N has no proper divisor.
+    Hier,
+    /// Let the compiler pick ring vs hierarchical (and the group size)
+    /// by minimizing the link model's projected cycles.
+    Auto,
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Topology::Ring => "ring",
+            Topology::Hier => "hier",
+            Topology::Auto => "auto",
+        })
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Topology> {
+        match s {
+            "ring" => Ok(Topology::Ring),
+            "hier" => Ok(Topology::Hier),
+            "auto" => Ok(Topology::Auto),
+            other => bail!("unknown topology `{other}` (ring|hier|auto)"),
+        }
+    }
+}
+
 /// FPGA design variables (the second compiler input): unroll factors,
 /// clock, memory system parameters, optimization toggles.
 #[derive(Debug, Clone)]
@@ -548,6 +592,10 @@ pub struct DesignVars {
     /// Effective fraction of link peak bandwidth after framing/protocol
     /// overheads (see hw::link, mirroring dram_efficiency).
     pub link_efficiency: f64,
+    /// All-reduce topology for cluster designs; irrelevant at
+    /// `cluster == 1`.  Excluded from the checkpoint fingerprint (like
+    /// `cluster` itself): any topology merges bit-identically.
+    pub topology: Topology,
 }
 
 impl Default for DesignVars {
@@ -566,6 +614,7 @@ impl Default for DesignVars {
             cluster: 1,
             link_gbytes: 12.5,
             link_efficiency: 0.80,
+            topology: Topology::default(),
         }
     }
 }
@@ -624,6 +673,16 @@ mod tests {
         assert_eq!(DesignVars::for_scale(1).mac_count(), 1024);
         assert_eq!(DesignVars::for_scale(2).mac_count(), 2048);
         assert_eq!(DesignVars::for_scale(4).mac_count(), 4096);
+    }
+
+    #[test]
+    fn topology_parses_and_round_trips() {
+        for t in [Topology::Ring, Topology::Hier, Topology::Auto] {
+            assert_eq!(t.to_string().parse::<Topology>().unwrap(), t);
+        }
+        assert_eq!(DesignVars::default().topology, Topology::Ring);
+        let err = "mesh".parse::<Topology>().unwrap_err();
+        assert!(err.to_string().contains("ring|hier|auto"));
     }
 
     #[test]

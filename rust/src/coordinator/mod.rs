@@ -38,10 +38,12 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ckpt::{Checkpoint, Cursor};
-use crate::compiler::{Accelerator, OpKind, RtlCompiler};
+use crate::compiler::{choose_collective, Accelerator, OpKind,
+                      RtlCompiler};
 use crate::config::{DesignVars, Network};
 use crate::data::{Sample, Synthetic};
-use crate::engine::cluster::{run_batch_cluster, ClusterReport};
+use crate::engine::cluster::{run_batch_cluster_with, ClusterReport};
+use crate::hw::link::LinkModel;
 use crate::engine::{self, EngineReport, StepOut};
 use crate::nn::bn;
 use crate::nn::golden;
@@ -139,6 +141,20 @@ impl TrainMetrics {
     }
 }
 
+/// One scheduled elastic resize for [`Trainer::run`]: once this run
+/// has executed `after_batches` batches and the covering checkpoint is
+/// on disk, the trainer re-shards onto `accelerators` instances.  The
+/// cluster merge contract keeps the training stream bit-identical
+/// across the switch (the fingerprint deliberately excludes
+/// accelerator counts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resize {
+    /// Apply once this many batches *of this run* have executed.
+    pub after_batches: u64,
+    /// The new data-parallel instance count (0 clamps to 1).
+    pub accelerators: usize,
+}
+
 /// Checkpoint cadence for [`Trainer::run`]: write to `path` every
 /// `every_batches` trained batches (and at every epoch boundary).
 #[derive(Debug, Clone)]
@@ -147,6 +163,9 @@ pub struct CheckpointPolicy {
     pub path: PathBuf,
     /// Save after this many batches (≥ 1; epoch ends always save too).
     pub every_batches: u64,
+    /// Optional mid-run elastic resize, applied at the first
+    /// checkpoint boundary at/after its `after_batches`.
+    pub resize: Option<Resize>,
 }
 
 /// One training run's shape for [`Trainer::run`]: how far to train and
@@ -443,10 +462,12 @@ impl Trainer {
         self
     }
 
-    /// Per-batch ring all-reduce cycles for a ring of `instances`,
-    /// simulated from the compiled cluster schedule and cached until
-    /// the instance count changes (so writing
-    /// [`Trainer::accelerators`] directly stays consistent too).
+    /// Per-batch all-reduce cycles for a cluster of `instances`,
+    /// simulated from the compiled cluster schedule (which resolves
+    /// `dv.topology` at that count) and cached until the instance
+    /// count changes (so writing [`Trainer::accelerators`] directly —
+    /// e.g. through an elastic resize — stays consistent too; the
+    /// topology itself is fixed for a trainer's lifetime).
     fn cluster_allreduce_cycles(&mut self, instances: usize)
                                 -> Result<f64> {
         if let Some((n, cycles)) = self.allreduce_cache {
@@ -692,6 +713,15 @@ impl Trainer {
                 if let Some(ck) = &cfg.checkpoint {
                     if epoch_done || executed % ck.every_batches == 0 {
                         self.save_checkpoint(&ck.path, cur)?;
+                        // elastic resize: the covering checkpoint is on
+                        // disk, so re-sharding here is indistinguishable
+                        // from a kill + resume at this exact cursor
+                        if let Some(rz) = ck.resize {
+                            if executed >= rz.after_batches {
+                                self.accelerators =
+                                    rz.accelerators.max(1);
+                            }
+                        }
                     }
                 }
                 if epoch_done {
@@ -889,24 +919,31 @@ impl Trainer {
     /// Golden-backend batch through the cluster engine: the batch
     /// shards across [`Trainer::accelerators`] instances (each itself
     /// sharding across [`Trainer::workers`] threads), and the
-    /// per-instance accumulators merge with the deterministic ring
-    /// all-reduce.  Simulated cycles advance by the longest instance
-    /// shard (instances run concurrently) plus the per-batch all-reduce
+    /// per-instance accumulators merge through the collective the
+    /// compiler chose for `dv.topology` at the live instance count.
+    /// Simulated cycles advance by the longest instance shard
+    /// (instances run concurrently) plus the per-batch all-reduce
     /// communication.
     fn train_batch_cluster(&mut self, samples: &[Sample]) -> Result<f64> {
-        // the full deployed ring runs every batch (idle instances
+        // the full deployed collective runs every batch (idle instances
         // contribute zero gradients), matching the simulate projection
         let allreduce_cycles =
             self.cluster_allreduce_cycles(self.accelerators)?;
+        let coll = choose_collective(
+            self.acc.dv.topology,
+            self.accelerators,
+            self.acc.net.ring_words() as u64,
+            &LinkModel::new(&self.acc.dv),
+        );
         let net = &self.acc.net;
         let params = &self.params;
         let order = net.accum_order();
         let step = |s: &Sample, sc: &mut Scratch| {
             golden_step(net, params, &order, s, sc)
         };
-        let (loss_sum, report) = run_batch_cluster(
+        let (loss_sum, report) = run_batch_cluster_with(
             samples, self.accelerators, self.workers, &mut self.states,
-            &step)?;
+            &step, coll.as_ref())?;
         self.metrics.images += samples.len() as u64;
         self.metrics.loss_sum += loss_sum as f64;
         let max_shard =
@@ -1352,6 +1389,45 @@ mod tests {
         cl.train_batch(&batch).unwrap();
         assert_eq!(seq.flat_params(), cl.flat_params());
         assert_eq!(cl.last_cluster.as_ref().unwrap().instances, 2);
+    }
+
+    #[test]
+    fn mid_run_resize_applies_and_stays_bit_identical() {
+        // an elastic resize scheduled on the checkpoint policy switches
+        // the instance count at a checkpoint boundary without touching
+        // the training stream (cluster merge contract)
+        let dir = std::env::temp_dir().join(format!(
+            "stratus-resize-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("elastic.ckpt");
+        let data = Synthetic::new(10, (3, 8, 8), 11, 0.3);
+        let run = |resize: Option<Resize>| {
+            let mut t = tiny_trainer();
+            let cfg = TrainRun {
+                epochs: 1,
+                images: 16,
+                checkpoint: Some(CheckpointPolicy {
+                    path: path.clone(),
+                    every_batches: 1,
+                    resize,
+                }),
+                max_batches: None,
+            };
+            t.run(&data, &cfg, Cursor::start(11, 16), |_, _| Ok(()))
+                .unwrap();
+            t
+        };
+        let plain = run(None);
+        let resized = run(Some(Resize {
+            after_batches: 2,
+            accelerators: 3,
+        }));
+        assert_eq!(plain.accelerators, 1);
+        assert_eq!(resized.accelerators, 3, "resize never applied");
+        assert_eq!(resized.last_cluster.as_ref().unwrap().instances, 3);
+        assert_eq!(plain.flat_params(), resized.flat_params());
+        assert_eq!(plain.metrics.loss_sum, resized.metrics.loss_sum);
+        let _ = std::fs::remove_file(&path);
     }
 
     fn tiny_bn_net() -> Network {

@@ -31,6 +31,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::data::Sample;
+use crate::engine::collective::{Collective, RingCollective};
 use crate::engine::{self, shard_sizes, StepOut};
 use crate::nn::scratch::Scratch;
 use crate::nn::sgd::ParamState;
@@ -47,10 +48,12 @@ pub struct ClusterReport {
     /// received work, in instance order (shorter than `instances` when
     /// the batch has fewer images than the ring has members).
     pub shard_sizes: Vec<usize>,
-    /// Ring steps executed: `2 * (instances - 1)`, 0 for one instance.
+    /// Collective steps executed: `2 * (instances - 1)` for the flat
+    /// ring, `2*(G-1) + 2*(N/G-1)` for the hierarchical reduce, 0 for
+    /// one instance.
     pub ring_steps: usize,
-    /// i32 words moved across all ring links in total
-    /// (`2 * (instances - 1) * gradient_len`; divide by `instances`
+    /// i32 words moved across all links in total (for the flat ring,
+    /// `2 * (instances - 1) * gradient_len`; divide by `instances`
     /// for the average per-link traffic).
     pub ring_words: u64,
     /// Wall-clock of the cluster section (fork -> ring -> merge).
@@ -128,22 +131,41 @@ fn pair_mut(bufs: &mut [Vec<i32>], src: usize, dst: usize)
     }
 }
 
-/// Run one batch data-parallel across `instances` accelerator
-/// instances, each sharding its sub-batch across up to `workers`
-/// threads through the inner engine, then ring-all-reduce the
-/// per-instance gradient accumulators and merge the (identical)
-/// reduced result into `states`.  Every instance joins the ring even
-/// when the batch has fewer images than the ring has members — idle
-/// instances contribute zero gradients, so the simulated communication
-/// cost matches the deployed ring.  Returns the exact i64 loss sum and
-/// a [`ClusterReport`].
-///
-/// All-or-nothing like the inner engine: if any instance fails,
-/// `states` is left untouched.
+/// [`run_batch_cluster_with`] over the default flat ring — the shape
+/// every pre-topology call site (and the `Topology::Ring` default)
+/// uses.
 pub fn run_batch_cluster<F>(samples: &[Sample], instances: usize,
                             workers: usize,
                             states: &mut [(String, ParamState)], step: &F)
                             -> Result<(i64, ClusterReport)>
+where
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+{
+    run_batch_cluster_with(samples, instances, workers, states, step,
+                           &RingCollective)
+}
+
+/// Run one batch data-parallel across `instances` accelerator
+/// instances, each sharding its sub-batch across up to `workers`
+/// threads through the inner engine, then all-reduce the per-instance
+/// gradient accumulators through `collective` and merge the
+/// (identical) reduced result into `states`.  Every instance joins the
+/// collective even when the batch has fewer images than the cluster
+/// has members — idle instances contribute zero gradients, so the
+/// simulated communication cost matches the deployed topology.
+/// Returns the exact i64 loss sum and a [`ClusterReport`].
+///
+/// Any [`Collective`] yields bit-identical results (the merge is
+/// wrapping-i32 addition); only the reported step/word traffic
+/// differs.
+///
+/// All-or-nothing like the inner engine: if any instance fails,
+/// `states` is left untouched.
+pub fn run_batch_cluster_with<F>(samples: &[Sample], instances: usize,
+                                 workers: usize,
+                                 states: &mut [(String, ParamState)],
+                                 step: &F, collective: &dyn Collective)
+                                 -> Result<(i64, ClusterReport)>
 where
     F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
@@ -201,7 +223,7 @@ where
     let losses = results.into_iter().collect::<Result<Vec<i64>>>()?;
     let loss_sum: i64 = losses.iter().sum();
 
-    // flatten each instance's accumulators and run the ring
+    // flatten each instance's accumulators and run the collective
     let mut flats: Vec<Vec<i32>> = forks
         .iter()
         .map(|fork| {
@@ -212,9 +234,9 @@ where
             flat
         })
         .collect();
-    let stats = ring_all_reduce(&mut flats);
+    let stats = collective.all_reduce(&mut flats);
     debug_assert!(flats.iter().all(|f| *f == flats[0]),
-                  "ring left instances with diverged accumulators");
+                  "collective left instances with diverged accumulators");
 
     // every instance now holds the full batch sum; fold instance 0's
     // copy into the caller's accumulators (wrapping add, so a nonzero
@@ -378,6 +400,23 @@ mod tests {
         assert_eq!(rep.ring_steps, 30); // 2 * (16 - 1)
         assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc);
         assert_eq!(cl[0].1.count, 3);
+    }
+
+    #[test]
+    fn hier_collective_is_bit_identical_through_the_engine() {
+        use crate::engine::collective::HierCollective;
+        let batch = samples(10);
+        let mut seq = fresh_states();
+        engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        let mut cl = fresh_states();
+        let (_, rep) = run_batch_cluster_with(&batch, 4, 1, &mut cl,
+                                              &step,
+                                              &HierCollective { group: 2 })
+            .unwrap();
+        // 2*(G-1) + 2*(N/G-1) = 4 steps vs the flat ring's 6
+        assert_eq!(rep.ring_steps, 4);
+        assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc);
+        assert_eq!(cl[0].1.count, seq[0].1.count);
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Collective-communication topologies for the cluster engine's
+//! gradient all-reduce — the seam that lets the compiler choose *how*
+//! N accelerator instances merge their WU accumulators without
+//! touching *what* they merge.
+//!
+//! Two implementations:
+//!
+//! - [`RingCollective`] — the flat reduce-scatter + all-gather ring,
+//!   `2*(N-1)` steps (the paper's small-cluster shape; delegates to
+//!   [`super::cluster::ring_all_reduce`]).
+//! - [`HierCollective`] — a hierarchical group reduce for large N:
+//!   intra-group ring reduce-scatter (G-1 steps), an inter-group ring
+//!   all-reduce run concurrently by the G slice owners (2*(N/G-1)
+//!   steps), then an intra-group all-gather (G-1 steps) — `2*(G-1) +
+//!   2*(N/G-1)` steps in total, vs the flat ring's `2*(N-1)`.
+//!
+//! # Why every topology is bit-identical
+//!
+//! The merge operation is wrapping i32 addition — associative and
+//! commutative mod 2^32 — so *any* reduction tree over the same
+//! per-instance addends produces the identical bits.  What each
+//! implementation must still guarantee is that its traffic pattern is
+//! a pure function of `(N, len)` (never of thread scheduling), which
+//! both are: all loops below walk fixed index formulas.  The
+//! bit-identity of hierarchical vs flat vs direct summation is
+//! asserted across group shapes in the unit tests, and end-to-end at
+//! 64 instances in `rust/tests/cluster.rs`.
+
+use super::cluster::ring_all_reduce;
+
+/// One step of a collective's communication plan, as consumed by the
+/// compiler (schedule emission) and the simulator (link costing).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectiveStep {
+    /// Step label, unique within the plan (becomes the schedule step's
+    /// layer name): `ring_rs{s}`/`ring_ag{s}` for the flat ring,
+    /// `hier_rs{s}`/`hier_xrs{s}`/`hier_xag{s}`/`hier_ag{s}` for the
+    /// hierarchical phases.
+    pub label: String,
+    /// i32 words each participating link carries in this step.
+    pub chunk_words: u64,
+    /// How many concurrent messages share one physical link during
+    /// this step.  Intra-group and flat-ring steps use dedicated
+    /// neighbor links (1); inter-group steps cross a shared trunk
+    /// carrying all G slice-rings at once (G).
+    pub link_share: u64,
+}
+
+/// What a host-side all-reduce actually moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollectiveStats {
+    /// Plan steps executed (0 for a single instance).
+    pub steps: usize,
+    /// i32 words moved across all links in total.
+    pub total_words: u64,
+}
+
+/// A gradient all-reduce topology: produces the communication plan the
+/// compiler schedules and prices, and performs the host-side merge the
+/// cluster engine runs.  Implementations must keep the merge a pure
+/// function of `(N, len)` so the bit-identity contract holds.
+pub trait Collective: Send + Sync {
+    /// Topology name as accepted by `--topology` / reported in tables.
+    fn name(&self) -> &'static str;
+
+    /// The communication plan for `n` instances reducing `words` i32
+    /// words.  Empty when `n <= 1`.
+    fn steps(&self, n: usize, words: u64) -> Vec<CollectiveStep>;
+
+    /// In-place all-reduce over per-instance flat gradient buffers:
+    /// after the call every buffer holds the identical element-wise
+    /// wrapping-i32 sum of all inputs.
+    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats;
+}
+
+/// The flat reduce-scatter + all-gather ring (`2*(N-1)` steps).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RingCollective;
+
+impl Collective for RingCollective {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn steps(&self, n: usize, words: u64) -> Vec<CollectiveStep> {
+        if n <= 1 {
+            return Vec::new();
+        }
+        let chunk = words.div_ceil(n as u64);
+        let mut plan = Vec::with_capacity(2 * (n - 1));
+        for s in 0..n - 1 {
+            plan.push(CollectiveStep {
+                label: format!("ring_rs{s}"),
+                chunk_words: chunk,
+                link_share: 1,
+            });
+        }
+        for s in 0..n - 1 {
+            plan.push(CollectiveStep {
+                label: format!("ring_ag{s}"),
+                chunk_words: chunk,
+                link_share: 1,
+            });
+        }
+        plan
+    }
+
+    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats {
+        let stats = ring_all_reduce(bufs);
+        CollectiveStats { steps: stats.steps,
+                          total_words: stats.total_words }
+    }
+}
+
+/// Hierarchical group reduce: N instances in N/G groups of G members
+/// each (group q owns global indices `[q*G, (q+1)*G)`).
+///
+/// 1. **Intra-group reduce-scatter** over G slices of the full vector
+///    (G-1 steps): after it, local member `owner(c) = (c+G-1) % G` of
+///    every group holds its group's sum of slice c.
+/// 2. **Inter-group ring all-reduce** (2*(N/G-1) steps): for each
+///    slice c the N/G owners `q*G + owner(c)` run a flat ring over
+///    sub-chunks of slice c; all G slice-rings proceed concurrently
+///    across the shared inter-group trunk (`link_share = G`).
+/// 3. **Intra-group all-gather** (G-1 steps): each globally reduced
+///    slice circulates around its group until every member holds all
+///    of them.
+///
+/// Requires `1 < group < n` and `group | n`; the compiler's chooser
+/// ([`crate::compiler::choose_collective`]) falls back to the flat
+/// ring when no such group size exists (N prime or N <= 3).
+#[derive(Debug, Clone, Copy)]
+pub struct HierCollective {
+    /// Group size G.
+    pub group: usize,
+}
+
+impl HierCollective {
+    /// Panics unless `1 < group < n` and `group` divides `n` — the
+    /// shape invariant both `steps` and `all_reduce` rely on.
+    fn check(&self, n: usize) {
+        assert!(self.group > 1 && self.group < n
+                    && n % self.group == 0,
+                "hier collective: group {} does not partition {n}",
+                self.group);
+    }
+}
+
+impl Collective for HierCollective {
+    fn name(&self) -> &'static str {
+        "hier"
+    }
+
+    fn steps(&self, n: usize, words: u64) -> Vec<CollectiveStep> {
+        if n <= 1 {
+            return Vec::new();
+        }
+        self.check(n);
+        let g = self.group as u64;
+        let m = (n / self.group) as u64;
+        let slice = words.div_ceil(g);
+        let sub = slice.div_ceil(m);
+        let mut plan = Vec::new();
+        for s in 0..self.group - 1 {
+            plan.push(CollectiveStep {
+                label: format!("hier_rs{s}"),
+                chunk_words: slice,
+                link_share: 1,
+            });
+        }
+        for s in 0..n / self.group - 1 {
+            plan.push(CollectiveStep {
+                label: format!("hier_xrs{s}"),
+                chunk_words: sub,
+                link_share: g,
+            });
+        }
+        for s in 0..n / self.group - 1 {
+            plan.push(CollectiveStep {
+                label: format!("hier_xag{s}"),
+                chunk_words: sub,
+                link_share: g,
+            });
+        }
+        for s in 0..self.group - 1 {
+            plan.push(CollectiveStep {
+                label: format!("hier_ag{s}"),
+                chunk_words: slice,
+                link_share: 1,
+            });
+        }
+        plan
+    }
+
+    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats {
+        let n = bufs.len();
+        if n <= 1 {
+            return CollectiveStats { steps: 0, total_words: 0 };
+        }
+        self.check(n);
+        let g = self.group;
+        let m = n / g;
+        let len = bufs[0].len();
+        assert!(bufs.iter().all(|b| b.len() == len),
+                "hier all_reduce: ragged buffers");
+        // balanced slice ranges per intra-group slot
+        let gb = |c: usize| c * len / g;
+        let owner = |c: usize| (c + g - 1) % g;
+        let mut words = 0u64;
+
+        // phase 1: intra-group reduce-scatter (same index walk as the
+        // flat ring, restricted to each group's G members)
+        for s in 0..g - 1 {
+            for q in 0..m {
+                for c in 0..g {
+                    let src = q * g + (c + s) % g;
+                    let dst = q * g + (c + s + 1) % g;
+                    let (lo, hi) = (gb(c), gb(c + 1));
+                    let (from, to) = pair_mut(bufs, src, dst);
+                    for (d, &v) in
+                        to[lo..hi].iter_mut().zip(&from[lo..hi])
+                    {
+                        *d = d.wrapping_add(v);
+                    }
+                    words += (hi - lo) as u64;
+                }
+            }
+        }
+
+        // phase 2: per slice c, the N/G owners ring-all-reduce slice c
+        // over balanced sub-chunks (reduce-scatter then all-gather)
+        for c in 0..g {
+            let (lo, hi) = (gb(c), gb(c + 1));
+            let span = hi - lo;
+            let sb = |k: usize| lo + k * span / m;
+            let member = |q: usize| q * g + owner(c);
+            for s in 0..m - 1 {
+                for k in 0..m {
+                    let src = member((k + s) % m);
+                    let dst = member((k + s + 1) % m);
+                    let (slo, shi) = (sb(k), sb(k + 1));
+                    let (from, to) = pair_mut(bufs, src, dst);
+                    for (d, &v) in
+                        to[slo..shi].iter_mut().zip(&from[slo..shi])
+                    {
+                        *d = d.wrapping_add(v);
+                    }
+                    words += (shi - slo) as u64;
+                }
+            }
+            for s in 0..m - 1 {
+                for k in 0..m {
+                    let src = member((k + m - 1 + s) % m);
+                    let dst = member(((k + m - 1 + s) % m + 1) % m);
+                    let (slo, shi) = (sb(k), sb(k + 1));
+                    let (from, to) = pair_mut(bufs, src, dst);
+                    to[slo..shi].copy_from_slice(&from[slo..shi]);
+                    words += (shi - slo) as u64;
+                }
+            }
+        }
+
+        // phase 3: intra-group all-gather — each reduced slice
+        // circulates one hop per step from its owner
+        for s in 0..g - 1 {
+            for q in 0..m {
+                for c in 0..g {
+                    let src = q * g + (owner(c) + s) % g;
+                    let dst = q * g + ((owner(c) + s) % g + 1) % g;
+                    let (lo, hi) = (gb(c), gb(c + 1));
+                    let (from, to) = pair_mut(bufs, src, dst);
+                    to[lo..hi].copy_from_slice(&from[lo..hi]);
+                    words += (hi - lo) as u64;
+                }
+            }
+        }
+
+        CollectiveStats {
+            steps: 2 * (g - 1) + 2 * (m - 1),
+            total_words: words,
+        }
+    }
+}
+
+/// Split-borrow two distinct members: shared `src`, mutable `dst`
+/// (same shape as the cluster module's helper, local so the hier walk
+/// has no cross-module borrow gymnastics).
+fn pair_mut(bufs: &mut [Vec<i32>], src: usize, dst: usize)
+            -> (&[i32], &mut Vec<i32>) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (head, tail) = bufs.split_at_mut(dst);
+        (head[src].as_slice(), &mut tail[0])
+    } else {
+        let (head, tail) = bufs.split_at_mut(src);
+        (tail[0].as_slice(), &mut head[dst])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adversarial_bufs(n: usize, len: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|i| {
+                (0..len)
+                    .map(|j| match j % 4 {
+                        0 => i as i32 + j as i32 + 1,
+                        1 => i32::MAX - (i * 31 + j) as i32,
+                        2 => i32::MIN + (i * 17 + j) as i32,
+                        _ => -((i * 1_000_003 + j) as i32),
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn direct_sum(bufs: &[Vec<i32>]) -> Vec<i32> {
+        let mut out = vec![0i32; bufs[0].len()];
+        for b in bufs {
+            for (d, &v) in out.iter_mut().zip(b) {
+                *d = d.wrapping_add(v);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ring_collective_matches_direct_sum() {
+        for n in [2usize, 3, 4, 7, 16] {
+            let mut bufs = adversarial_bufs(n, 37);
+            let want = direct_sum(&bufs);
+            let stats = RingCollective.all_reduce(&mut bufs);
+            assert_eq!(stats.steps, 2 * (n - 1));
+            for (i, b) in bufs.iter().enumerate() {
+                assert_eq!(*b, want, "ring instance {i} diverged, n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_matches_direct_sum_across_group_shapes() {
+        // every (n, g) with g a proper divisor, over an awkward length
+        // that leaves ragged slices and sub-chunks
+        for (n, g) in [(4usize, 2usize), (6, 2), (6, 3), (8, 2), (8, 4),
+                       (9, 3), (12, 3), (12, 4), (16, 4), (64, 8)] {
+            let mut bufs = adversarial_bufs(n, 53);
+            let want = direct_sum(&bufs);
+            let hier = HierCollective { group: g };
+            let stats = hier.all_reduce(&mut bufs);
+            assert_eq!(stats.steps, 2 * (g - 1) + 2 * (n / g - 1),
+                       "n={n} g={g}");
+            for (i, b) in bufs.iter().enumerate() {
+                assert_eq!(*b, want,
+                           "hier instance {i} diverged, n={n} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn hier_matches_ring_bit_for_bit() {
+        // the two topologies reduce the same inputs to the same bits
+        let mut ring = adversarial_bufs(16, 41);
+        let mut hier = ring.clone();
+        RingCollective.all_reduce(&mut ring);
+        HierCollective { group: 4 }.all_reduce(&mut hier);
+        assert_eq!(ring, hier);
+    }
+
+    #[test]
+    fn hier_handles_fewer_elements_than_instances() {
+        let mut bufs = adversarial_bufs(8, 3);
+        let want = direct_sum(&bufs);
+        HierCollective { group: 4 }.all_reduce(&mut bufs);
+        for b in &bufs {
+            assert_eq!(*b, want);
+        }
+    }
+
+    #[test]
+    fn step_counts_and_labels() {
+        let plan = RingCollective.steps(4, 100);
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan[0].label, "ring_rs0");
+        assert_eq!(plan[3].label, "ring_ag0");
+        assert!(plan.iter().all(|s| s.chunk_words == 25
+                                    && s.link_share == 1));
+
+        let plan = HierCollective { group: 4 }.steps(64, 1 << 20);
+        // 2*(4-1) + 2*(16-1) = 36 steps vs the flat ring's 126
+        assert_eq!(plan.len(), 36);
+        assert_eq!(plan[0].label, "hier_rs0");
+        assert_eq!(plan[3].label, "hier_xrs0");
+        assert_eq!(plan[18].label, "hier_xag0");
+        assert_eq!(plan[33].label, "hier_ag0");
+        // intra steps carry words/G on dedicated links; inter steps
+        // carry words/N each but share the trunk G ways
+        assert_eq!(plan[0].chunk_words, (1u64 << 20) / 4);
+        assert_eq!(plan[0].link_share, 1);
+        assert_eq!(plan[3].chunk_words, (1u64 << 20) / 64);
+        assert_eq!(plan[3].link_share, 4);
+    }
+
+    #[test]
+    fn single_instance_plans_are_empty() {
+        assert!(RingCollective.steps(1, 100).is_empty());
+        assert!(HierCollective { group: 2 }.steps(1, 100).is_empty());
+        let mut one = vec![vec![1, 2, 3]];
+        let st = HierCollective { group: 2 }.all_reduce(&mut one);
+        assert_eq!(st.steps, 0);
+        assert_eq!(one[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not partition")]
+    fn hier_rejects_non_dividing_group() {
+        HierCollective { group: 3 }.steps(8, 100);
+    }
+}

@@ -37,10 +37,12 @@
 //!
 //! One level up, [`cluster`] shards a batch across accelerator
 //! *instances* (data parallelism between devices rather than threads)
-//! and merges per-instance accumulators with a deterministic ring
-//! all-reduce — same bit-identity contract, cluster-sized.
+//! and merges per-instance accumulators through a [`collective`]
+//! topology (flat ring or hierarchical group reduce) — same
+//! bit-identity contract, cluster-sized.
 
 pub mod cluster;
+pub mod collective;
 
 use std::time::Instant;
 

@@ -12,6 +12,7 @@
 //! ring step costs exactly one message.
 
 use crate::config::DesignVars;
+use crate::engine::collective::CollectiveStep;
 
 /// Fixed cycles charged per ring message — serial-link framing, CRC and
 /// handshake latency, ~1 us at the 240 MHz accelerator clock (the same
@@ -76,6 +77,69 @@ pub fn ring_cost(total_bytes: u64, instances: usize, link: &LinkModel)
         chunk_bytes,
         bytes_per_instance: steps * chunk_bytes,
         cycles: steps * link.message_cycles(chunk_bytes),
+    }
+}
+
+/// Link-bound cycles of one collective communication plan: each step
+/// moves `chunk_words` i32 words per message, and `link_share`
+/// concurrent messages time-share the busiest physical link (the
+/// inter-group trunk during hierarchical cross-steps), so the step's
+/// payload is charged `link_share` times over.  This is the analytic
+/// floor the scheduled-step simulation must not undercut.
+pub fn plan_cost(plan: &[CollectiveStep], link: &LinkModel) -> u64 {
+    plan.iter()
+        .map(|s| link.message_cycles(s.link_share * s.chunk_words * 4))
+        .sum()
+}
+
+/// Deterministic straggler distribution for the event-driven cluster
+/// simulation: per collective step, every instance draws a uniform
+/// slowdown in `[0, spread]` from a splitmix64 hash of `(seed, step,
+/// instance)`, and the step waits for the slowest member — the
+/// classic synchronous-SGD straggler penalty, reproducible bit-for-bit
+/// from the seed.  `spread = 0` (the default) disables it, keeping
+/// every pinned event-timeline expectation exact.
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerDist {
+    pub seed: u64,
+    /// Maximum fractional per-step slowdown (0.15 = the slowest
+    /// instance can run 15% late).
+    pub spread: f64,
+}
+
+impl Default for StragglerDist {
+    fn default() -> StragglerDist {
+        StragglerDist { seed: 0, spread: 0.0 }
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl StragglerDist {
+    /// The synchronization skew of collective step `step` across
+    /// `instances` members: the worst of the per-instance slowdown
+    /// draws, in `[0, spread]`.  Pointwise monotone in `instances`
+    /// (more members can only raise the max).
+    pub fn skew(&self, step: u64, instances: usize) -> f64 {
+        if self.spread <= 0.0 || instances <= 1 {
+            return 0.0;
+        }
+        let mut worst = 0.0f64;
+        for i in 0..instances as u64 {
+            let h = splitmix64(
+                self.seed
+                    ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ i.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+            );
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+            worst = worst.max(u);
+        }
+        worst * self.spread
     }
 }
 
@@ -150,5 +214,51 @@ mod tests {
         let ideal = 2.0 * total as f64 / m.bytes_per_cycle;
         let ratio = c4.cycles as f64 / ideal;
         assert!(ratio > 0.7 && ratio < 1.1, "ratio = {ratio}");
+    }
+
+    #[test]
+    fn plan_cost_matches_analytic_ring() {
+        use crate::engine::collective::{Collective, RingCollective};
+        let m = model();
+        // words divisible by N so plan and analytic chunking agree
+        let words = 1u64 << 18;
+        let plan = RingCollective.steps(4, words);
+        assert_eq!(plan_cost(&plan, &m),
+                   ring_cost(words * 4, 4, &m).cycles);
+    }
+
+    #[test]
+    fn hier_plan_beats_ring_on_overhead_dominated_payloads() {
+        use crate::engine::collective::{Collective, HierCollective,
+                                        RingCollective};
+        // tiny gradient at N=16: the flat ring pays 30 message
+        // overheads, the 4x4 hierarchy only 12 — fewer steps win even
+        // though inter-group steps share the trunk 4 ways
+        let m = model();
+        let words = 1024u64;
+        let ring = plan_cost(&RingCollective.steps(16, words), &m);
+        let hier = plan_cost(
+            &HierCollective { group: 4 }.steps(16, words), &m);
+        assert!(hier < ring, "{hier} !< {ring}");
+    }
+
+    #[test]
+    fn straggler_skew_is_deterministic_and_bounded() {
+        let d = StragglerDist { seed: 42, spread: 0.2 };
+        for step in 0..50u64 {
+            let s = d.skew(step, 8);
+            assert!((0.0..=0.2).contains(&s), "step {step}: skew {s}");
+            assert_eq!(s, d.skew(step, 8), "skew not deterministic");
+        }
+        // spread 0 and single instances never skew
+        assert_eq!(StragglerDist::default().skew(3, 8), 0.0);
+        assert_eq!(d.skew(3, 1), 0.0);
+        // more members can only wait longer (pointwise max over draws)
+        for step in 0..20u64 {
+            assert!(d.skew(step, 16) >= d.skew(step, 4));
+        }
+        // a different seed actually moves the draws somewhere
+        let d2 = StragglerDist { seed: 43, spread: 0.2 };
+        assert!((0..50u64).any(|s| d.skew(s, 8) != d2.skew(s, 8)));
     }
 }

@@ -126,8 +126,8 @@ fn flag_spec(cmd: &str)
     // design-point + spec-file flags shared by compile/simulate/train
     const DESIGN: &[&str] = &["net", "scale", "pox", "poy", "pof",
                               "clock-mhz", "dram-gbs", "tile-rows",
-                              "accelerators", "link-gbs", "spec",
-                              "dump-spec"];
+                              "accelerators", "link-gbs", "link-eff",
+                              "topology", "spec", "dump-spec"];
     const DESIGN_SW: &[&str] = &["no-load-balance", "no-double-buffer"];
     let (design, extra, extra_sw): (bool, &[&str], &[&str]) = match cmd {
         "compile" => (true, &["emit-verilog"], &[]),
@@ -136,7 +136,8 @@ fn flag_spec(cmd: &str)
         "train" => (true,
                     &["batch", "epochs", "images", "eval", "lr",
                       "momentum", "seed", "workers", "backend",
-                      "artifacts", "checkpoint-dir", "checkpoint-every"],
+                      "artifacts", "checkpoint-dir", "checkpoint-every",
+                      "resize-accelerators"],
                     &["resume"]),
         "report" => (false, &[], &[]),
         "calibrate" => (false, &["net", "scale", "samples", "seed"], &[]),
@@ -199,6 +200,12 @@ fn spec_builder(args: &Args) -> Result<SpecBuilder> {
     if let Some(v) = args.f64_opt("link-gbs")? {
         b = b.link_gbytes(v);
     }
+    if let Some(v) = args.f64_opt("link-eff")? {
+        b = b.link_efficiency(v);
+    }
+    if let Some(v) = args.get("topology") {
+        b = b.topology(v.parse()?);
+    }
     if args.has("no-load-balance") {
         b = b.load_balance(false);
     }
@@ -240,6 +247,9 @@ fn spec_builder(args: &Args) -> Result<SpecBuilder> {
     }
     if let Some(v) = args.u64_opt("checkpoint-every")? {
         b = b.checkpoint_every(v);
+    }
+    if let Some(v) = args.usize_opt("resize-accelerators")? {
+        b = b.resize_accelerators(v);
     }
     if args.has("resume") {
         b = b.resume(true);
@@ -341,7 +351,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let session = Session::new(spec)?;
     let (net, dv) = (session.network(), session.design());
     let bs = session.spec().batch;
-    let r = session.simulate()?;
+    let acc = session.compile()?;
+    let r = stratus::sim::simulate(&acc, bs);
     println!("== cycle simulation: {} @ BS {bs} ==", net.name);
     println!("{:<9} {:>12} {:>12} {:>12}", "phase", "logic cyc",
              "dram cyc", "latency cyc");
@@ -363,9 +374,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         // 1-instance baseline: the sharded projection at N=1 equals the
         // single-accelerator iteration (no recompile needed)
         let base = r.sharded_images_per_second(1);
-        println!("cluster        : {} instances, {} ring steps, \
-                  all-reduce {} cycles/batch",
-                 dv.cluster, 2 * (dv.cluster - 1),
+        // the compiled plan already resolved --topology (incl. auto)
+        let coll = &acc.schedule.collective;
+        let topo = coll.first().map_or("ring", |s| {
+            if s.label.starts_with("hier") { "hier" } else { "ring" }
+        });
+        println!("cluster        : {} instances, {} collective ({} \
+                  steps), all-reduce {} cycles/batch",
+                 dv.cluster, topo, coll.len(),
                  r.allreduce.latency_cycles);
         println!("iteration      : {} cycles -> {:.0} images/s \
                   ({:.2}x vs 1 instance)",
@@ -503,9 +519,15 @@ fn cmd_report(args: &Args) -> Result<()> {
                  metrics::cluster_scaling(1, 40, &[1, 2, 4, 8, 16]));
         any = true;
     }
+    if which == "topology" || which == "all" {
+        println!("== collective topologies: 1X @ BS 40, ring vs \
+                  hierarchical all-reduce ==\n{}",
+                 metrics::topology_scaling(1, 40, &[4, 16, 64]));
+        any = true;
+    }
     if !any {
         bail!("unknown report `{which}` \
-               (table2|table3|fig9|fig10|engine|cluster|all)");
+               (table2|table3|fig9|fig10|engine|cluster|topology|all)");
     }
     Ok(())
 }
@@ -529,9 +551,14 @@ COMMANDS:
             [--pox N --poy N --pof N --clock-mhz F --emit-verilog OUT]
             [--no-load-balance --no-double-buffer]
             [--accelerators N  compile an N-instance cluster: emits the
-                               ring all-reduce schedule + control-ROM
-                               word and reports aggregate resources]
+                               all-reduce schedule + control-ROM word
+                               and reports aggregate resources]
+            [--topology T      collective topology: ring (default),
+                               hier (grouped two-level all-reduce), or
+                               auto (compiler picks the cheaper plan
+                               from the link parameters)]
             [--link-gbs F      inter-accelerator link bandwidth, GB/s]
+            [--link-eff F      link efficiency derate, in (0, 1]]
   analyze   --scale .. [--batch N] [--json]  static fixed-point range
             analysis: worst-case magnitude and bit-width of every i32
             accumulator (FP/BP/WU, per-image and per-batch), with a
@@ -542,9 +569,11 @@ COMMANDS:
             time).  --json emits the machine-readable report
   simulate  --scale .. --batch N            cycle-level simulation
             [--accelerators N  project N data-parallel instances with a
-                               ring all-reduce of WU gradients between
-                               batch accumulation and weight update]
+                               gradient all-reduce between batch
+                               accumulation and weight update]
+            [--topology T      ring|hier|auto collective (see compile)]
             [--link-gbs F      inter-accelerator link bandwidth, GB/s]
+            [--link-eff F      link efficiency derate, in (0, 1]]
   train     --scale .. --backend golden|perop|fused --images N
             --epochs N --batch N --lr F [--eval N]
             [--artifacts DIR   AOT artifact bundle — required by the
@@ -555,9 +584,11 @@ COMMANDS:
             [--workers N       shard each batch across N engine threads
                                (golden backend; bit-identical results)]
             [--accelerators N  train data-parallel across N simulated
-                               accelerator instances with a deterministic
-                               ring all-reduce (golden backend;
-                               bit-identical to one instance)]
+                               accelerator instances with a
+                               deterministic collective (golden
+                               backend; bit-identical to one instance)]
+            [--topology T      ring|hier|auto collective (see compile);
+                               any topology trains bit-identically]
             [--checkpoint-dir D    write crash-safe checkpoints to
                                    D/ckpt.stratus (atomic tmp+rename,
                                    CRC-guarded; see DESIGN.md)]
@@ -568,7 +599,12 @@ COMMANDS:
                                    bit-identical to never having
                                    stopped, at any worker/accelerator
                                    count]
-  report    table2|table3|fig9|fig10|engine|cluster|all  regenerate
+            [--resize-accelerators N  elastic resize: re-shard this run
+                                   onto N instances (with --resume, at
+                                   the checkpoint boundary) —
+                                   bit-identical to never resizing;
+                                   requires --checkpoint-dir]
+  report    table2|table3|fig9|fig10|engine|cluster|topology|all
   calibrate --scale .. --samples N          adaptive fixed-point pass
 
 Flags that take a value error when the value is missing; unrecognized

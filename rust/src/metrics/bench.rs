@@ -260,6 +260,16 @@ impl ScalingBench {
     /// the perf gate, then fold in the bit-identity verdict.  Returns
     /// the process exit code.
     pub fn finish(self, extra: &[(&str, f64)]) -> i32 {
+        self.finish_with(extra, &[])
+    }
+
+    /// Like [`ScalingBench::finish`] but additionally gates every
+    /// `(name, images_per_second)` in `extra_gates` against
+    /// `benches/baseline.json` — the topology sweep gates its
+    /// `cluster_hier` series this way without giving it a separate
+    /// record file.
+    pub fn finish_with(self, extra: &[(&str, f64)],
+                       extra_gates: &[(&str, f64)]) -> i32 {
         let mut rec = BenchRecord::new(self.name, self.best_ips,
                                        self.smoke);
         rec.push("images_per_second_base", self.base_ips);
@@ -268,7 +278,7 @@ impl ScalingBench {
         for (k, v) in extra {
             rec.push(k, *v);
         }
-        let code = finish(&rec);
+        let code = finish_gated(&rec, extra_gates);
         if !self.identical {
             eprintln!("bit-identity   : FAILED (final params diverged \
                        from the reference configuration)");
@@ -436,6 +446,7 @@ mod tests {
         for bench in [
             "engine_throughput",
             "cluster_scaling",
+            "cluster_hier",
             "hotpath",
             "hotpath_conv_fp",
             "hotpath_conv_bp",

@@ -222,6 +222,57 @@ pub fn cluster_scaling(scale: usize, batch: usize, instances: &[usize])
     render_table(&header, &rows)
 }
 
+/// Per-topology cluster projections (ISSUE 8 tentpole): ring vs
+/// hierarchical all-reduce at each instance count under the same link
+/// parameters.  Both topologies train bit-identically (wrapping-i32
+/// reduction is associative), so the table is purely a performance
+/// comparison; the `auto` column shows which plan `--topology auto`
+/// resolves to.  `hier` falls back to the flat ring when no proper
+/// divisor grouping exists (N prime or < 4), where the two columns
+/// coincide.
+pub fn topology_scaling(scale: usize, batch: usize,
+                        instances: &[usize]) -> String {
+    use crate::compiler::choose_collective;
+    use crate::config::Topology;
+    use crate::hw::link::LinkModel;
+    let net = Network::cifar(scale);
+    let sim_at = |n: usize, topo: Topology| {
+        let mut dv = DesignVars::for_scale(scale);
+        dv.cluster = n.max(1);
+        dv.topology = topo;
+        let acc = RtlCompiler::default()
+            .compile(&net, &dv)
+            .expect("paper configs always compile");
+        let steps = acc.schedule.collective.len();
+        (steps, simulate(&acc, batch))
+    };
+    let header = ["instances", "ring ar-cyc", "hier ar-cyc",
+                  "hier steps", "hier speedup", "auto"];
+    let rows: Vec<Vec<String>> = instances
+        .iter()
+        .map(|&n| {
+            let (_, ring) = sim_at(n, Topology::Ring);
+            let (hsteps, hier) = sim_at(n, Topology::Hier);
+            let mut dv = DesignVars::for_scale(scale);
+            dv.cluster = n.max(1);
+            let auto = choose_collective(Topology::Auto, n.max(1),
+                                         net.ring_words() as u64,
+                                         &LinkModel::new(&dv));
+            let rc = ring.cluster_cycles_per_iteration() as f64;
+            let hc = hier.cluster_cycles_per_iteration() as f64;
+            vec![
+                format!("{n}"),
+                format!("{}", ring.allreduce.latency_cycles),
+                format!("{}", hier.allreduce.latency_cycles),
+                format!("{hsteps}"),
+                format!("{:.2}x", rc / hc.max(1.0)),
+                auto.name().to_string(),
+            ]
+        })
+        .collect();
+    render_table(&header, &rows)
+}
+
 /// Fig. 10: buffer usage breakdown of the 4X design.
 pub fn fig10() -> String {
     let net = Network::cifar(4);
@@ -337,6 +388,27 @@ mod tests {
         assert!(sp.windows(2).all(|w| w[0] < w[1]),
                 "not monotone: {sp:?}");
         assert!(sp[3] < 8.0);
+    }
+
+    #[test]
+    fn topology_scaling_shows_hier_winning_at_scale() {
+        let t = topology_scaling(1, 40, &[4, 64]);
+        assert_eq!(t.lines().count(), 4);
+        let col = |line: &str, i: usize| -> Option<String> {
+            line.split('|').nth(i).map(|c| c.trim().to_string())
+        };
+        let rows: Vec<&str> = t.lines().skip(2).collect();
+        // at N = 64 the grouped collective beats the flat ring and
+        // auto resolves to it (ISSUE 8 acceptance criterion)
+        let ring: f64 = col(rows[1], 2).unwrap().parse().unwrap();
+        let hier: f64 = col(rows[1], 3).unwrap().parse().unwrap();
+        assert!(hier < ring, "hier {hier} !< ring {ring} at N=64");
+        assert_eq!(col(rows[1], 6).unwrap(), "hier");
+        // the auto column only ever names a real collective
+        for r in &rows {
+            let a = col(r, 6).unwrap();
+            assert!(a == "ring" || a == "hier", "auto = {a}");
+        }
     }
 
     #[test]

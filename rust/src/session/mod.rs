@@ -57,7 +57,7 @@ use anyhow::{Context, Result};
 
 use crate::ckpt::Cursor;
 use crate::compiler::{Accelerator, RtlCompiler};
-use crate::config::{DesignVars, Network};
+use crate::config::{DesignVars, Network, Topology};
 use crate::coordinator::{Backend, CheckpointPolicy, EpochStats,
                          ParseBackendError, TrainRun, Trainer};
 use crate::data::{Sample, Synthetic};
@@ -104,6 +104,12 @@ pub enum SpecError {
     BnNeedsGolden { net: String, backend: Backend },
     /// A checkpoint cadence with nowhere to write checkpoints.
     CheckpointEveryWithoutDir,
+    /// A non-positive inter-accelerator link bandwidth.
+    LinkBandwidth { given: f64 },
+    /// A link efficiency derating factor outside (0, 1].
+    LinkEfficiency { given: f64 },
+    /// An elastic resize with no checkpoint directory to resize at.
+    ResizeWithoutCheckpoint,
     /// Resume requested with no checkpoint directory configured.
     ResumeWithoutCheckpoint,
     /// An explicit seed conflicting with a checkpoint's recorded seed.
@@ -165,6 +171,20 @@ impl fmt::Display for SpecError {
                 write!(f, "checkpoint-every needs checkpoint-dir \
                            (where the checkpoints go) — without it \
                            nothing would be saved")
+            }
+            SpecError::LinkBandwidth { given } => {
+                write!(f, "link-gbs must be positive (got {given}) — \
+                           the collective cost model divides by the \
+                           link bandwidth")
+            }
+            SpecError::LinkEfficiency { given } => {
+                write!(f, "link-eff must be in (0, 1] (got {given}) — \
+                           it derates the peak link bandwidth")
+            }
+            SpecError::ResizeWithoutCheckpoint => {
+                write!(f, "resize-accelerators needs checkpoint-dir \
+                           (elastic resizing happens at a checkpoint \
+                           boundary)")
             }
             SpecError::ResumeWithoutCheckpoint => {
                 write!(f, "resume needs checkpoint-dir (where the \
@@ -340,6 +360,8 @@ pub struct DesignOverrides {
     pub tile_rows: Option<usize>,
     pub cluster: Option<usize>,
     pub link_gbytes: Option<f64>,
+    pub link_efficiency: Option<f64>,
+    pub topology: Option<Topology>,
     pub load_balance: Option<bool>,
     pub double_buffer: Option<bool>,
 }
@@ -355,6 +377,10 @@ impl DesignOverrides {
         if let Some(v) = self.tile_rows { dv.tile_rows = v; }
         if let Some(v) = self.cluster { dv.cluster = v; }
         if let Some(v) = self.link_gbytes { dv.link_gbytes = v; }
+        if let Some(v) = self.link_efficiency {
+            dv.link_efficiency = v;
+        }
+        if let Some(v) = self.topology { dv.topology = v; }
         if let Some(v) = self.load_balance { dv.load_balance = v; }
         if let Some(v) = self.double_buffer { dv.double_buffer = v; }
     }
@@ -383,6 +409,11 @@ impl DesignOverrides {
         fs("clock_mhz", self.clock_mhz);
         fs("dram_gbytes", self.dram_gbytes);
         fs("link_gbytes", self.link_gbytes);
+        fs("link_efficiency", self.link_efficiency);
+        if let Some(v) = self.topology {
+            m.insert("topology".to_string(),
+                     Json::Str(v.to_string()));
+        }
         if let Some(v) = self.load_balance {
             m.insert("load_balance".to_string(), Json::Bool(v));
         }
@@ -397,8 +428,21 @@ impl DesignOverrides {
         check_keys(m,
                    &["pox", "poy", "pof", "clock_mhz", "dram_gbytes",
                      "tile_rows", "cluster", "link_gbytes",
-                     "load_balance", "double_buffer"],
+                     "link_efficiency", "topology", "load_balance",
+                     "double_buffer"],
                    "design")?;
+        let topology = match m.get("topology") {
+            None => None,
+            Some(j) => {
+                let s = str_value(j, "design.topology")?;
+                Some(s.parse::<Topology>().map_err(|_| {
+                    SpecError::FieldType {
+                        field: "design.topology".to_string(),
+                        want: "ring|hier|auto",
+                    }
+                })?)
+            }
+        };
         Ok(DesignOverrides {
             pox: usize_key(m, "pox", "design")?,
             poy: usize_key(m, "poy", "design")?,
@@ -408,6 +452,8 @@ impl DesignOverrides {
             tile_rows: usize_key(m, "tile_rows", "design")?,
             cluster: usize_key(m, "cluster", "design")?,
             link_gbytes: f64_key(m, "link_gbytes", "design")?,
+            link_efficiency: f64_key(m, "link_efficiency", "design")?,
+            topology,
             load_balance: bool_key(m, "load_balance", "design")?,
             double_buffer: bool_key(m, "double_buffer", "design")?,
         })
@@ -460,6 +506,11 @@ pub struct Spec {
     pub workers: usize,
     pub checkpoint: Option<CheckpointSpec>,
     pub resume: bool,
+    /// Re-shard the run onto this many accelerator instances at the
+    /// next checkpoint boundary (the resume point).  The fingerprint
+    /// deliberately excludes accelerator counts, so the resized run
+    /// continues bit-identically; requires a checkpoint directory.
+    pub resize_accelerators: Option<usize>,
 }
 
 impl Spec {
@@ -500,6 +551,7 @@ impl Spec {
             checkpoint_every: self.checkpoint.as_ref()
                 .map(|c| c.every_batches),
             resume: self.resume,
+            resize_accelerators: self.resize_accelerators,
         }
     }
 
@@ -549,6 +601,10 @@ impl Spec {
                      Json::Num(ck.every_batches as f64));
             if self.resume {
                 c.insert("resume".to_string(), Json::Bool(true));
+            }
+            if let Some(n) = self.resize_accelerators {
+                c.insert("resize_accelerators".to_string(),
+                         Json::Num(n as f64));
             }
             root.insert("checkpoint".to_string(), Json::Obj(c));
         }
@@ -655,7 +711,9 @@ impl Spec {
         if let Some(v) = root.get("checkpoint") {
             let m = v.as_obj()
                 .ok_or(SpecError::NotAnObject("checkpoint"))?;
-            check_keys(m, &["dir", "every_batches", "resume"],
+            check_keys(m,
+                       &["dir", "every_batches", "resume",
+                         "resize_accelerators"],
                        "checkpoint")?;
             let dir = m.get("dir")
                 .ok_or(SpecError::MissingField("checkpoint.dir"))?;
@@ -665,6 +723,11 @@ impl Spec {
             }
             if let Some(x) = bool_key(m, "resume", "checkpoint")? {
                 b = b.resume(x);
+            }
+            if let Some(x) =
+                usize_key(m, "resize_accelerators", "checkpoint")?
+            {
+                b = b.resize_accelerators(x);
             }
         }
         b.build()
@@ -771,6 +834,7 @@ pub struct SpecBuilder {
     checkpoint_dir: Option<PathBuf>,
     checkpoint_every: Option<u64>,
     resume: bool,
+    resize_accelerators: Option<usize>,
 }
 
 impl SpecBuilder {
@@ -851,6 +915,18 @@ impl SpecBuilder {
         self
     }
 
+    /// Link bandwidth derating factor, in (0, 1].
+    pub fn link_efficiency(mut self, v: f64) -> SpecBuilder {
+        self.design.link_efficiency = Some(v);
+        self
+    }
+
+    /// Collective all-reduce topology (`DesignVars::topology`).
+    pub fn topology(mut self, v: Topology) -> SpecBuilder {
+        self.design.topology = Some(v);
+        self
+    }
+
     pub fn load_balance(mut self, v: bool) -> SpecBuilder {
         self.design.load_balance = Some(v);
         self
@@ -927,6 +1003,13 @@ impl SpecBuilder {
         self
     }
 
+    /// Re-shard onto `v` accelerator instances at the next checkpoint
+    /// boundary (see [`Spec::resize_accelerators`]).
+    pub fn resize_accelerators(mut self, v: usize) -> SpecBuilder {
+        self.resize_accelerators = Some(v);
+        self
+    }
+
     /// Apply defaults, validate every constraint, and produce the
     /// [`Spec`].
     pub fn build(self) -> Result<Spec, SpecError> {
@@ -981,6 +1064,7 @@ impl SpecBuilder {
                     .unwrap_or(DEFAULT_CKPT_EVERY),
             }),
             resume: self.resume,
+            resize_accelerators: self.resize_accelerators,
         };
         Ok(spec)
     }
@@ -1062,7 +1146,9 @@ fn resolve(spec: &Spec) -> Result<(Network, DesignVars), SpecError> {
                       (Some(spec.noise), "noise"),
                       (spec.design.clock_mhz, "clock_mhz"),
                       (spec.design.dram_gbytes, "dram_gbytes"),
-                      (spec.design.link_gbytes, "link_gbytes")] {
+                      (spec.design.link_gbytes, "link_gbytes"),
+                      (spec.design.link_efficiency,
+                       "link_efficiency")] {
         if let Some(v) = v {
             if !v.is_finite() {
                 return Err(SpecError::FieldType {
@@ -1071,6 +1157,25 @@ fn resolve(spec: &Spec) -> Result<(Network, DesignVars), SpecError> {
                 });
             }
         }
+    }
+    // the collective cost model divides by the effective link
+    // bandwidth — zero/negative bandwidth or a derating factor outside
+    // (0, 1] would poison every topology decision
+    if let Some(v) = spec.design.link_gbytes {
+        if v <= 0.0 {
+            return Err(SpecError::LinkBandwidth { given: v });
+        }
+    }
+    if let Some(v) = spec.design.link_efficiency {
+        if v <= 0.0 || v > 1.0 {
+            return Err(SpecError::LinkEfficiency { given: v });
+        }
+    }
+    if spec.resize_accelerators == Some(0) {
+        return Err(SpecError::NonPositive("resize-accelerators"));
+    }
+    if spec.resize_accelerators.is_some() && spec.checkpoint.is_none() {
+        return Err(SpecError::ResizeWithoutCheckpoint);
     }
     if spec.backend != Backend::Golden && spec.artifacts.is_none() {
         return Err(SpecError::BackendNeedsArtifacts(spec.backend));
@@ -1339,6 +1444,13 @@ impl Session {
             Cursor::start(self.spec.seed.unwrap_or(DEFAULT_SEED),
                           self.spec.images.unwrap_or(DEFAULT_IMAGES))
         };
+        // elastic resize: re-shard the (possibly resumed) trainer onto
+        // the requested instance count.  The fingerprint deliberately
+        // excludes accelerator counts, so the checkpoint restores
+        // unchanged and the training stream stays bit-identical.
+        if let Some(n) = self.spec.resize_accelerators {
+            trainer = trainer.with_accelerators(n);
+        }
         let images = start.images;
         let eval_offset = self.spec.eval_offset.unwrap_or(images);
         if eval_offset < images {
@@ -1365,6 +1477,7 @@ impl Session {
                     path: ckpt_path.clone()
                         .expect("checkpoint dir implies a path"),
                     every_batches: ck.every_batches,
+                    resize: None,
                 }
             }),
             max_batches: None,

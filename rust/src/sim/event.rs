@@ -20,6 +20,7 @@
 
 use crate::compiler::{Accelerator, OpKind};
 use crate::hw::dram::{DramModel, DESCRIPTOR_OVERHEAD_CYCLES};
+use crate::hw::link::StragglerDist;
 use crate::sim::{logic_cycles_for_step, simulate, SimReport};
 
 /// Result of an event-driven run over one image's schedule.
@@ -119,8 +120,8 @@ pub struct TimelineEvent {
 
 /// Event timeline of one cluster batch iteration: per-instance compute
 /// (the event-driven per-image makespan times the shard length), the
-/// `2*(N-1)` ring all-reduce phases, then the batch weight update on the
-/// merged accumulators.
+/// collective all-reduce phases of the compiler-chosen topology, then
+/// the batch weight update on the merged accumulators.
 #[derive(Debug, Clone)]
 pub struct ClusterEventReport {
     pub instances: usize,
@@ -128,23 +129,35 @@ pub struct ClusterEventReport {
     pub makespan: u64,
     /// Compute span (longest instance shard through the event model).
     pub compute_cycles: u64,
-    /// Total cycles spent in the ring all-reduce phases.
+    /// Total cycles spent in the collective all-reduce phases.
     pub allreduce_cycles: u64,
     /// Every interval, in timeline order: one `compute` event, the
-    /// `allreduce/...` ring phases, one `weight-update` event.
+    /// `allreduce/...` collective phases, one `weight-update` event.
     pub events: Vec<TimelineEvent>,
 }
 
 /// Schedule one batch of `batch` images on the compiled cluster
 /// (`acc.dv.cluster` instances) into an event timeline.  Instances run
 /// their shards concurrently, so compute spans ceil(batch/N) images;
-/// the ring all-reduce phases then serialize (each ring step is a
-/// barrier for the whole ring), followed by the weight update.  Ring
-/// step durations come from the same per-step costs `simulate` charges,
-/// so the timeline and the analytic cluster projection agree on
+/// the collective all-reduce phases then serialize (each step is a
+/// barrier for its participants), followed by the weight update.  Step
+/// durations come from the same per-step costs `simulate` charges
+/// (which include per-link contention via the plan's `link_share`), so
+/// the timeline and the analytic cluster projection agree on
 /// communication.
 pub fn simulate_cluster_events(acc: &Accelerator, batch: usize)
                                -> ClusterEventReport {
+    simulate_cluster_events_with(acc, batch, &StragglerDist::default())
+}
+
+/// [`simulate_cluster_events`] under a straggler distribution: every
+/// collective step waits for its slowest member, stretching the step by
+/// the distribution's per-step worst-case skew.  The default
+/// (spread 0) distribution reproduces `simulate_cluster_events`
+/// exactly.
+pub fn simulate_cluster_events_with(acc: &Accelerator, batch: usize,
+                                    stragglers: &StragglerDist)
+                                    -> ClusterEventReport {
     let n = acc.dv.cluster.max(1);
     let report = simulate(acc, batch.max(1));
     let image = simulate_events(acc);
@@ -160,17 +173,21 @@ pub fn simulate_cluster_events(acc: &Accelerator, batch: usize)
     let mut ring = 0usize;
     for (_, layer, op, cost) in &report.steps {
         if *op == OpKind::AllReduce {
+            let skew = stragglers.skew(ring as u64, n);
+            let dur = cost.latency_cycles
+                + (cost.latency_cycles as f64 * skew).ceil() as u64;
             events.push(TimelineEvent {
                 label: format!("allreduce/{layer}"),
                 start: t,
-                end: t + cost.latency_cycles,
+                end: t + dur,
             });
-            t += cost.latency_cycles;
-            allreduce_cycles += cost.latency_cycles;
+            t += dur;
+            allreduce_cycles += dur;
             ring += 1;
         }
     }
-    debug_assert_eq!(ring, if n > 1 { 2 * (n - 1) } else { 0 });
+    debug_assert_eq!(ring, acc.schedule.collective.len(),
+                     "timeline must replay the whole collective plan");
     let update = report.update.latency_cycles;
     events.push(TimelineEvent {
         label: "weight-update".into(),
@@ -317,6 +334,52 @@ mod tests {
         assert_eq!(count(&e8), 14);
         assert!(e2.allreduce_cycles < e4.allreduce_cycles);
         assert!(e4.allreduce_cycles < e8.allreduce_cycles);
+    }
+
+    #[test]
+    fn hier_timeline_replays_the_grouped_plan() {
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 16;
+        dv.topology = crate::config::Topology::Hier;
+        let acc = RtlCompiler::default()
+            .compile(&Network::cifar(1), &dv)
+            .unwrap();
+        let ev = simulate_cluster_events(&acc, 40);
+        let coll: Vec<&TimelineEvent> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.starts_with("allreduce/"))
+            .collect();
+        assert_eq!(coll.len(), acc.schedule.collective.len());
+        assert!(coll[0].label.starts_with("allreduce/hier_rs"));
+        assert!(coll.iter().any(|e| e.label.contains("hier_xrs")));
+        // still contiguous between compute and the weight update
+        for pair in ev.events.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start);
+        }
+    }
+
+    #[test]
+    fn stragglers_stretch_the_collective_only() {
+        let acc = cluster_acc(8);
+        let base = simulate_cluster_events(&acc, 40);
+        let slow = simulate_cluster_events_with(
+            &acc, 40, &StragglerDist { seed: 7, spread: 0.25 });
+        assert!(slow.allreduce_cycles > base.allreduce_cycles);
+        assert!(slow.allreduce_cycles as f64
+                    <= base.allreduce_cycles as f64 * 1.25
+                        + acc.schedule.collective.len() as f64);
+        assert_eq!(slow.compute_cycles, base.compute_cycles);
+        assert_eq!(slow.makespan - base.makespan,
+                   slow.allreduce_cycles - base.allreduce_cycles);
+        // deterministic: same seed, same timeline
+        let again = simulate_cluster_events_with(
+            &acc, 40, &StragglerDist { seed: 7, spread: 0.25 });
+        assert_eq!(again.makespan, slow.makespan);
+        // spread 0 reproduces the plain timeline exactly
+        let zero = simulate_cluster_events_with(
+            &acc, 40, &StragglerDist::default());
+        assert_eq!(zero.makespan, base.makespan);
     }
 
     #[test]

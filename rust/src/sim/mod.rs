@@ -210,14 +210,20 @@ fn cost_step(acc: &Accelerator, dram: &DramModel, step: &Step) -> StepCost {
     StepCost { logic_cycles: logic, dram_cycles, latency_cycles: latency }
 }
 
-/// Cost of one ring all-reduce step: the local DRAM staging +
-/// accumulate overlaps the (full-duplex) link message, so the slower of
-/// the two bounds the step — the link shares the DRAM model's cost
-/// shape (per-message overhead + payload at derated bandwidth).
+/// Cost of one all-reduce step: the local DRAM staging + accumulate
+/// overlaps the (full-duplex) link message, so the slower of the two
+/// bounds the step — the link shares the DRAM model's cost shape
+/// (per-message overhead + payload at derated bandwidth).  `link_share`
+/// is the number of concurrent messages time-sharing the busiest
+/// physical link (1 for ring steps; the group size on hierarchical
+/// cross-group steps, whose slice rings all cross the inter-group
+/// trunk at once).
 fn cost_allreduce_step(acc: &Accelerator, dram: &DramModel,
-                       link: &LinkModel, step: &Step) -> StepCost {
+                       link: &LinkModel, step: &Step, link_share: u64)
+                       -> StepCost {
     let local = cost_step(acc, dram, step);
-    let link_cycles = link.message_cycles(step.dram_read_bytes);
+    let link_cycles =
+        link.message_cycles(link_share.max(1) * step.dram_read_bytes);
     StepCost {
         logic_cycles: local.logic_cycles,
         dram_cycles: local.dram_cycles,
@@ -248,9 +254,19 @@ pub fn simulate(acc: &Accelerator, batch_size: usize) -> SimReport {
         bucket.latency_cycles += c.latency_cycles;
         steps.push((s.phase, s.layer.clone(), s.op, c));
     }
+    // AllReduce steps zip 1:1 with the schedule's collective plan,
+    // which carries the per-step link sharing the Step cannot express
+    let mut ar_idx = 0usize;
     for s in &acc.schedule.per_batch {
         let (c, bucket) = if s.op == OpKind::AllReduce {
-            (cost_allreduce_step(acc, &dram, &link, s), &mut allreduce)
+            let share = acc
+                .schedule
+                .collective
+                .get(ar_idx)
+                .map_or(1, |cs| cs.link_share);
+            ar_idx += 1;
+            (cost_allreduce_step(acc, &dram, &link, s, share),
+             &mut allreduce)
         } else {
             (cost_step(acc, &dram, s), &mut update)
         };
@@ -475,6 +491,39 @@ mod tests {
         assert!(t4 / t1 < 4.0, "superlinear? {}", t4 / t1);
         // but compute dominates at this scale: 4 instances > 2.5x
         assert!(t4 / t1 > 2.5, "4-instance speedup only {}", t4 / t1);
+    }
+
+    #[test]
+    fn hier_projects_fewer_cluster_cycles_at_scale() {
+        // acceptance: at N >= 16 under identical link parameters the
+        // hierarchical collective finishes the batch in fewer projected
+        // cycles than the flat ring — 126 per-step message overheads vs
+        // the grouped plan's handful
+        use crate::config::Topology;
+        let net = Network::cifar(1);
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 64;
+        dv.topology = Topology::Ring;
+        let ring = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 64);
+        dv.topology = Topology::Hier;
+        let hier = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 64);
+        assert!(hier.allreduce.latency_cycles
+                    < ring.allreduce.latency_cycles,
+                "hier {} !< ring {}",
+                hier.allreduce.latency_cycles,
+                ring.allreduce.latency_cycles);
+        assert!(hier.cluster_cycles_per_iteration()
+                    < ring.cluster_cycles_per_iteration());
+        // Auto resolves to one of the two explicit plans
+        dv.topology = Topology::Auto;
+        let auto = simulate(
+            &RtlCompiler::default().compile(&net, &dv).unwrap(), 64);
+        assert!(auto.allreduce.latency_cycles
+                    == hier.allreduce.latency_cycles
+                || auto.allreduce.latency_cycles
+                    == ring.allreduce.latency_cycles);
     }
 
     #[test]

@@ -189,6 +189,7 @@ fn bn_kill_and_resume_is_bit_identical() {
             checkpoint: Some(CheckpointPolicy {
                 path: path.clone(),
                 every_batches: KILL_AFTER,
+                resize: None,
             }),
             max_batches: Some(KILL_AFTER),
             ..cfg_plain.clone()
@@ -250,6 +251,7 @@ fn bn_checkpoint_resumes_at_different_parallelism() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: KILL_AFTER,
+            resize: None,
         }),
         max_batches: Some(KILL_AFTER),
         ..cfg.clone()
@@ -287,6 +289,7 @@ fn bn_checkpoint_refuses_plain_topology() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: 1,
+            resize: None,
         }),
         max_batches: Some(1),
     };

@@ -113,6 +113,7 @@ fn kill_and_resume_is_bit_identical_across_parallelism() {
                 checkpoint: Some(CheckpointPolicy {
                     path: path.clone(),
                     every_batches: KILL_AFTER,
+                    resize: None,
                 }),
                 max_batches: Some(KILL_AFTER),
                 ..plain_run()
@@ -136,6 +137,7 @@ fn kill_and_resume_is_bit_identical_across_parallelism() {
                 checkpoint: Some(CheckpointPolicy {
                     path: path.clone(),
                     every_batches: KILL_AFTER,
+                    resize: None,
                 }),
                 ..plain_run()
             };
@@ -169,6 +171,7 @@ fn resume_composes_with_different_parallelism() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: KILL_AFTER,
+            resize: None,
         }),
         max_batches: Some(KILL_AFTER),
         ..plain_run()
@@ -207,6 +210,7 @@ fn corrupted_checkpoints_are_rejected_not_half_loaded() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: 1,
+            resize: None,
         }),
         max_batches: Some(2),
         ..plain_run()
@@ -251,6 +255,7 @@ fn resume_refuses_a_different_network_or_hyper() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: 1,
+            resize: None,
         }),
         max_batches: Some(1),
         ..plain_run()
@@ -306,6 +311,7 @@ fn checkpoint_cadence_writes_at_epoch_boundaries() {
         checkpoint: Some(CheckpointPolicy {
             path: path.clone(),
             every_batches: 100, // cadence never fires on its own
+            resize: None,
         }),
         max_batches: None,
     };

@@ -6,18 +6,19 @@
 //! rust/tests/engine.rs one level up, and checks the simulator's
 //! cluster event timeline carries the all-reduce phases.
 
+use stratus::ckpt::Cursor;
 use stratus::compiler::RtlCompiler;
-use stratus::config::{DesignVars, Network};
-use stratus::coordinator::Trainer;
+use stratus::config::{DesignVars, Network, Topology};
+use stratus::coordinator::{CheckpointPolicy, TrainRun, Trainer};
 use stratus::data::Synthetic;
 use stratus::session::{NetSource, Session, Spec};
 use stratus::sim::event::simulate_cluster_events;
 use stratus::sim::simulate;
 
-/// Session-built trainer: the accelerator-instance count rides in
-/// through the spec's design overrides (`DesignVars::cluster`).
-fn trainer(src: &NetSource, batch: usize, accelerators: usize,
-           workers: usize) -> Trainer {
+/// Session-built trainer: the accelerator-instance count and collective
+/// topology ride in through the spec's design overrides.
+fn trainer_topo(src: &NetSource, batch: usize, accelerators: usize,
+                workers: usize, topology: Topology) -> Trainer {
     let spec = Spec::builder()
         .net(src.clone())
         .batch(batch)
@@ -25,19 +26,26 @@ fn trainer(src: &NetSource, batch: usize, accelerators: usize,
         .momentum(0.9)
         .accelerators(accelerators)
         .workers(workers)
+        .topology(topology)
         .build()
         .unwrap();
     Session::new(spec).unwrap().trainer().unwrap()
 }
 
-fn assert_equivalent(src: &NetSource, batch_images: usize,
-                     batches: usize, accelerators: usize,
-                     workers: usize) {
+fn trainer(src: &NetSource, batch: usize, accelerators: usize,
+           workers: usize) -> Trainer {
+    trainer_topo(src, batch, accelerators, workers, Topology::Ring)
+}
+
+fn assert_equivalent_topo(src: &NetSource, batch_images: usize,
+                          batches: usize, accelerators: usize,
+                          workers: usize, topology: Topology) {
     let net: Network = src.resolve().unwrap();
     let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
     let stream = data.batch(0, batch_images * batches);
     let mut seq = trainer(src, batch_images, 1, 1);
-    let mut par = trainer(src, batch_images, accelerators, workers);
+    let mut par =
+        trainer_topo(src, batch_images, accelerators, workers, topology);
     for chunk in stream.chunks(batch_images) {
         let l_seq = seq.train_batch(chunk).unwrap();
         let l_par = par.train_batch(chunk).unwrap();
@@ -57,10 +65,24 @@ fn assert_equivalent(src: &NetSource, batch_images: usize,
     assert_eq!(seq.metrics.loss_sum, par.metrics.loss_sum);
 }
 
+fn assert_equivalent(src: &NetSource, batch_images: usize,
+                     batches: usize, accelerators: usize,
+                     workers: usize) {
+    assert_equivalent_topo(src, batch_images, batches, accelerators,
+                           workers, Topology::Ring);
+}
+
 fn tiny_net() -> NetSource {
     NetSource::inline(
         "input 3 8 8\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
          relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+}
+
+fn tiny_bn_net() -> NetSource {
+    NetSource::inline(
+        "input 3 8 8\nconv c1 8 k3 s1 p1\nbn n1 relu\nconv c2 8 k3 s1 \
+         p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
     )
 }
 
@@ -141,6 +163,105 @@ fn allreduce_cycles_appear_in_event_timeline_and_scale() {
     assert!(cycles[1] > 0);
     assert!(cycles.windows(2).skip(1).all(|w| w[0] < w[1]),
             "all-reduce cycles not scaling with N: {cycles:?}");
+}
+
+#[test]
+fn hier_64_instances_bit_identical_to_one() {
+    // the ISSUE 8 acceptance sweep: a 64-accelerator hierarchical
+    // all-reduce (8x8 groups, or whatever divisor the compiler picks)
+    // trains bit-identically to a single instance
+    assert_equivalent_topo(&tiny_net(), 8, 2, 64, 1, Topology::Hier);
+}
+
+#[test]
+fn hier_64_instances_bn_net_bit_identical() {
+    // bn nets merge statistic accumulators alongside gradients — the
+    // grouped collective must re-shard those identically too
+    assert_equivalent_topo(&tiny_bn_net(), 6, 1, 64, 1, Topology::Hier);
+}
+
+#[test]
+fn auto_topology_is_bit_identical_at_16() {
+    // whatever plan auto resolves to, training must not notice
+    assert_equivalent_topo(&tiny_net(), 8, 1, 16, 1, Topology::Auto);
+}
+
+#[test]
+fn hier_composes_with_workers() {
+    assert_equivalent_topo(&tiny_net(), 12, 1, 4, 2, Topology::Hier);
+}
+
+#[test]
+fn elastic_resize_chain_matches_unresized() {
+    // kill-resize-resume chain (ISSUE 8 satellite): train at 1
+    // instance, kill; resume the checkpoint at 4 (hier), kill; resume
+    // at 2 to completion.  Every stage re-shards the same batch stream,
+    // so the final state is bit-identical to the uninterrupted
+    // single-instance run.
+    let dir = std::env::temp_dir().join(format!(
+        "stratus-elastic-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("elastic.ckpt");
+    let src = tiny_net();
+    let net = src.resolve().unwrap();
+    const IMAGES: u64 = 24;
+    const BATCH: usize = 4;
+    const EPOCHS: u64 = 2;
+    let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
+    let cfg = |max_batches: Option<u64>| TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 1,
+            resize: None,
+        }),
+        max_batches,
+    };
+
+    // reference: uninterrupted, never resized, no checkpointing
+    let mut reference = trainer(&src, BATCH, 1, 1);
+    let plain = TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: None,
+        max_batches: None,
+    };
+    reference
+        .run(&data, &plain, Cursor::start(77, IMAGES), |_, _| Ok(()))
+        .unwrap();
+
+    // stage 1: single instance, 3 batches, then "killed"
+    let mut t1 = trainer(&src, BATCH, 1, 1);
+    t1.run(&data, &cfg(Some(3)), Cursor::start(77, IMAGES),
+           |_, _| Ok(()))
+        .unwrap();
+    drop(t1);
+
+    // stage 2: resume onto 4 instances with the grouped collective
+    let mut t4 =
+        trainer_topo(&src, BATCH, 1, 1, Topology::Hier)
+            .with_accelerators(4);
+    let cur = t4.resume_from(&path).unwrap();
+    assert_eq!(cur.batch, 3);
+    t4.run(&data, &cfg(Some(4)), cur, |_, _| Ok(())).unwrap();
+    drop(t4);
+
+    // stage 3: resume onto 2 instances and finish the run
+    let mut t2 = trainer(&src, BATCH, 1, 1).with_accelerators(2);
+    let cur = t2.resume_from(&path).unwrap();
+    let end = t2.run(&data, &cfg(None), cur, |_, _| Ok(())).unwrap();
+    assert_eq!(end.epoch, EPOCHS);
+
+    assert_eq!(reference.flat_params(), t2.flat_params(),
+               "elastic chain diverged from the unresized run");
+    for ((n, s), (_, p)) in
+        reference.param_states().iter().zip(t2.param_states())
+    {
+        assert_eq!(s.momentum, p.momentum, "{n} momentum");
+        assert_eq!(s.count, p.count, "{n} count");
+    }
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -8,6 +8,7 @@
 
 use std::path::PathBuf;
 
+use stratus::config::Topology;
 use stratus::coordinator::Backend;
 use stratus::data::Synthetic;
 use stratus::session::{Session, Spec, SpecBuilder};
@@ -46,8 +47,12 @@ fn spec_round_trips_with_identical_fingerprint() {
         .pox(4)
         .clock_mhz(120.5)
         .noise(0.25)
+        .topology(Topology::Hier)
+        .link_gbytes(12.5)
+        .link_efficiency(0.75)
         .checkpoint_dir("/tmp/stratus-rt")
         .checkpoint_every(2)
+        .resize_accelerators(6)
         .build()
         .unwrap();
     let text = spec.render();
@@ -110,6 +115,23 @@ fn builder_rejection_table() {
          "lr wants a finite number"),
         (Spec::builder().noise(f64::NAN),
          "noise wants a finite number"),
+        // collective link parameters (ISSUE 8 satellite): the cost
+        // model divides by bandwidth and scales by efficiency, so both
+        // are range-checked at spec-build time
+        (Spec::builder().link_gbytes(0.0),
+         "link-gbs must be positive (got 0)"),
+        (Spec::builder().link_gbytes(-2.5),
+         "link-gbs must be positive (got -2.5)"),
+        (Spec::builder().link_efficiency(0.0),
+         "link-eff must be in (0, 1] (got 0)"),
+        (Spec::builder().link_efficiency(1.5),
+         "link-eff must be in (0, 1] (got 1.5)"),
+        (Spec::builder().link_efficiency(f64::NAN),
+         "link_efficiency wants a finite number"),
+        (Spec::builder().resize_accelerators(0),
+         "resize-accelerators must be at least 1"),
+        (Spec::builder().resize_accelerators(4),
+         "resize-accelerators needs checkpoint-dir"),
     ];
     for (builder, want) in cases {
         let err = builder.build().expect_err(want);
@@ -323,6 +345,51 @@ fn resume_refuses_a_different_noise() {
     .resume(|_, _, _| Ok(()))
     .unwrap();
     assert_eq!(ok.end.epoch, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resize_accelerators_reshards_the_run() {
+    // --resize-accelerators N: the (possibly resumed) trainer is
+    // re-sharded onto N instances before the run starts, and the
+    // resumed stream stays bit-identical to the never-resized one
+    let dir = tmp_dir("resize");
+    let spec = tiny_builder()
+        .epochs(1)
+        .checkpoint_dir(&dir)
+        .resize_accelerators(3)
+        .build()
+        .unwrap();
+    let run = Session::new(spec).unwrap().begin(false).unwrap();
+    assert_eq!(run.trainer().accelerators, 3);
+
+    // full reference run, unresized and uncheckpointed
+    let full = Session::new(tiny_builder().build().unwrap())
+        .unwrap()
+        .train(|_, _, _| Ok(()))
+        .unwrap();
+    // stage 1: one epoch at 1 instance; stage 2: resume resized to 4
+    Session::new(
+        tiny_builder().epochs(1).checkpoint_dir(&dir).build().unwrap(),
+    )
+    .unwrap()
+    .train(|_, _, _| Ok(()))
+    .unwrap();
+    let resumed = Session::new(
+        tiny_builder()
+            .checkpoint_dir(&dir)
+            .resume(true)
+            .resize_accelerators(4)
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+    .resume(|_, _, _| Ok(()))
+    .unwrap();
+    assert_eq!(resumed.trainer.accelerators, 4);
+    assert_eq!(full.trainer.flat_params(),
+               resumed.trainer.flat_params(),
+               "resized resume diverged from the unresized run");
     let _ = std::fs::remove_dir_all(&dir);
 }
 
