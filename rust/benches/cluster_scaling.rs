@@ -1,24 +1,27 @@
 //! Cluster scaling bench (ISSUE 2 tentpole; topology sweep from ISSUE
-//! 8): host-side images/sec of the data-parallel cluster engine across
-//! instance counts *and* collective topologies — every configuration
-//! bit-identity-checked against single-instance training — plus the
-//! hardware model's large-N projection of ring vs hierarchical
-//! all-reduce (N = 4/16/64, where host training would be pointlessly
-//! slow but the cycle model is free).
+//! 8; bucketed overlap from ISSUE 9): host-side images/sec of the
+//! data-parallel cluster engine across instance counts, collective
+//! topologies, *and* the pipelined bucketed merge — every
+//! configuration bit-identity-checked against single-instance training
+//! — plus the hardware model's large-N projections of ring vs
+//! hierarchical all-reduce and of hidden vs exposed comm under the
+//! bucketed overlap (N = 4/16/64, where host training would be
+//! pointlessly slow but the cycle model is free).
 //!
 //! `cargo bench --bench cluster_scaling [-- --smoke]`: smoke mode (also
 //! `BENCH_SMOKE=1`) runs one batch per configuration for CI.  The bench
 //! writes `BENCH_cluster_scaling.json` and exits nonzero when the
-//! headline `images_per_second` or the `cluster_hier` series regresses
-//! more than 30% below `benches/baseline.json`, or on a bit-identity
-//! mismatch (metrics::bench::ScalingBench).
+//! headline `images_per_second`, the `cluster_hier` series, or the
+//! `cluster_overlap` series regresses more than 30% below
+//! `benches/baseline.json`, or on a bit-identity mismatch
+//! (metrics::bench::ScalingBench).
 
 use std::time::Instant;
 
 use stratus::config::Topology;
 use stratus::data::Synthetic;
 use stratus::metrics::bench::{smoke_mode, ScalingBench};
-use stratus::metrics::topology_scaling;
+use stratus::metrics::{overlap_scaling, topology_scaling};
 use stratus::session::{Session, Spec};
 
 const NET_CFG: &str = "input 3 16 16\nconv c1 8 k3 s1 p1 relu\n\
@@ -32,37 +35,43 @@ fn main() {
     let batches = if smoke { 1 } else { 4 };
     let train = data.batch(0, batch_size * batches);
 
-    println!("=== cluster engine: host throughput vs instances and \
-              topology{} ===",
+    println!("=== cluster engine: host throughput vs instances, \
+              topology, and bucketed overlap{} ===",
              if smoke { " (smoke)" } else { "" });
-    println!("{:<10} {:<9} {:>10} {:>12} {:>9} {:>15}", "instances",
-             "topology", "images/s", "ms/image", "speedup",
+    println!("{:<10} {:<12} {:>10} {:>12} {:>9} {:>15}", "instances",
+             "merge", "images/s", "ms/image", "speedup",
              "vs 1 instance");
     let mut bench = ScalingBench::new("cluster_scaling", smoke);
     let mut hier_ips = 0.0f64;
+    let mut overlap_ips = 0.0f64;
     // the ring sweep reproduces the historical bench; the hier runs
-    // re-merge the same counts through the grouped collective (4 = 2x2
-    // groups, 8 = the compiler's best divisor) and must stay
-    // bit-identical to the 1-instance reference
-    let sweep = [(1usize, Topology::Ring), (2, Topology::Ring),
-                 (4, Topology::Ring), (8, Topology::Ring),
-                 (4, Topology::Hier), (8, Topology::Hier)];
-    for (instances, topology) in sweep {
-        let spec = Spec::builder()
+    // re-merge the same counts through the grouped collective; the
+    // bucket-kwords-1 runs walk the same merge as per-layer buckets
+    // launched in reverse-BP order (the tiny net's ~6.4K-word gradient
+    // splits at a 1 KiW cap).  Every configuration must stay
+    // bit-identical to the 1-instance reference.
+    let sweep = [(1usize, Topology::Ring, 0usize), (2, Topology::Ring, 0),
+                 (4, Topology::Ring, 0), (8, Topology::Ring, 0),
+                 (4, Topology::Hier, 0), (8, Topology::Hier, 0),
+                 (4, Topology::Ring, 1), (8, Topology::Ring, 1),
+                 (8, Topology::Hier, 1)];
+    for (instances, topology, kwords) in sweep {
+        let mut b = Spec::builder()
             .net_inline(NET_CFG)
             .batch(batch_size)
             .lr(0.02)
             .momentum(0.9)
             .accelerators(instances)
-            .topology(topology)
-            .build()
-            .unwrap();
+            .topology(topology);
+        if kwords > 0 {
+            b = b.bucket_kwords(kwords);
+        }
+        let spec = b.build().unwrap();
         let mut t = Session::new(spec).unwrap().trainer().unwrap();
         // warmup batch (identical across configurations, so final
-        // params stay comparable); the spec compiles the cluster
-        // design up front, so the all-reduce cost cache is already
-        // warm — the warmup keeps the measurement protocol symmetric
-        // with the engine bench
+        // params stay comparable); it also populates the persistent
+        // worker pool, so the measured batches reuse shard scratch and
+        // forks instead of allocating
         t.train_batch(&train[..batch_size]).unwrap();
         let t0 = Instant::now();
         for chunk in train.chunks(batch_size) {
@@ -71,23 +80,33 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         let n = train.len() as f64;
         let ips = n / dt;
-        if topology == Topology::Hier {
+        if kwords > 0 {
+            overlap_ips = overlap_ips.max(ips);
+        } else if topology == Topology::Hier {
             hier_ips = hier_ips.max(ips);
         }
+        let merge = format!("{}{}", topology,
+                            if kwords > 0 { "+ovl" } else { "" });
         let (speedup, verdict) = bench.observe(ips, t.flat_params());
-        println!("{:<10} {:<9} {:>10.1} {:>12.3} {:>8.2}x {:>15}",
-                 instances, topology.to_string(), ips, dt / n * 1e3,
-                 speedup, verdict);
+        println!("{:<10} {:<12} {:>10.1} {:>12.3} {:>8.2}x {:>15}",
+                 instances, merge, ips, dt / n * 1e3, speedup,
+                 verdict);
     }
 
     println!("\n=== hardware model: ring vs hierarchical all-reduce \
               (1X @ BS 40, N = 4/16/64) ===");
     println!("{}", topology_scaling(1, 40, &[4, 16, 64]));
 
+    println!("\n=== hardware model: bucketed overlap, hidden vs \
+              exposed comm (1X @ BS 64, N = 4/16/64) ===");
+    println!("{}", overlap_scaling(1, 64, &[4, 16, 64]));
+
     std::process::exit(bench.finish_with(
         &[("batch_size", batch_size as f64),
           ("batches", batches as f64),
-          ("images_per_second_hier", hier_ips)],
-        &[("cluster_hier", hier_ips)],
+          ("images_per_second_hier", hier_ips),
+          ("images_per_second_overlap", overlap_ips)],
+        &[("cluster_hier", hier_ips),
+          ("cluster_overlap", overlap_ips)],
     ));
 }

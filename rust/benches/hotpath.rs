@@ -1,9 +1,11 @@
-//! Per-kernel hot-path bench (ISSUE 7 tentpole): tiled vs reference
-//! throughput of the golden-model kernels on the 1X workload shapes —
-//! conv FP/BP/WU across the six conv geometries, the FC triplet, and
-//! the BN per-pixel passes.  One rep of a kernel equals one image's
-//! worth of that kernel across the whole network, so every series is
-//! an images/s figure comparable with the engine benches.
+//! Per-kernel hot-path bench (ISSUE 7 tentpole; pool rows from ISSUE
+//! 9): tiled vs reference throughput of the golden-model kernels on
+//! the 1X workload shapes — conv FP/BP/WU across the six conv
+//! geometries, the FC triplet, the BN per-pixel passes, and the
+//! row-blocked maxpool FP / upsample BP pair across the three 1X pool
+//! geometries.  One rep of a kernel equals one image's worth of that
+//! kernel across the whole network, so every series is an images/s
+//! figure comparable with the engine benches.
 //!
 //! `cargo bench --bench hotpath [-- --smoke]`: smoke mode (also
 //! `BENCH_SMOKE=1`) shortens the rep counts for CI.  Writes
@@ -23,7 +25,7 @@ use stratus::fixed::{FA, FW};
 use stratus::metrics::bench::{finish_gated, smoke_mode, BenchRecord};
 use stratus::nn::tensor::Tensor;
 use stratus::nn::testutil::{randi, Lcg};
-use stratus::nn::{bn, conv, fc, reference, Scratch};
+use stratus::nn::{bn, conv, fc, pool, reference, Scratch};
 
 /// The 1X preset's conv stack: (cin, cout, spatial), k = 3, pad = 1.
 const CONVS: [(usize, usize, usize); 6] = [
@@ -228,6 +230,56 @@ fn main() {
     let bn_ips = 1.0 / bn_time;
     kernels.push(Kernel { name: "bn", ips: bn_ips, ref_ips: bn_ips });
 
+    // --- pool (row-blocked maxpool FP + upsample BP vs the scalar
+    // oracles, across the 1X pool geometries) -------------------------
+    let pool_reps = if smoke { 50 } else { 500 };
+    let pool_cases: Vec<_> = [(16usize, 32usize), (32, 16), (64, 8)]
+        .iter()
+        .map(|&(c, h)| {
+            let x = randi(&mut rng, &[c, h, h], 900);
+            let (_, idx) = pool::maxpool(&x, 2);
+            let g = randi(&mut rng, &[c, h / 2, h / 2], 900);
+            let mask = pool::relu_mask(&x);
+            (x, idx, g, mask)
+        })
+        .collect();
+    let ips = 1.0
+        / time_per_rep(pool_reps, || {
+            let mut s = 0i64;
+            for (x, _, _, _) in &pool_cases {
+                let (p, idx) = pool::maxpool(x, 2);
+                s += sum_t(&p) + sum_t(&idx);
+            }
+            s
+        });
+    let ref_ips = 1.0
+        / time_per_rep(pool_reps, || {
+            let mut s = 0i64;
+            for (x, _, _, _) in &pool_cases {
+                let (p, idx) = reference::maxpool(x, 2);
+                s += sum_t(&p) + sum_t(&idx);
+            }
+            s
+        });
+    kernels.push(Kernel { name: "pool_fp", ips, ref_ips });
+    let ips = 1.0
+        / time_per_rep(pool_reps, || {
+            let mut s = 0i64;
+            for (_, idx, g, mask) in &pool_cases {
+                s += sum_t(&pool::upsample_scale(g, idx, mask, 2));
+            }
+            s
+        });
+    let ref_ips = 1.0
+        / time_per_rep(pool_reps, || {
+            let mut s = 0i64;
+            for (_, idx, g, mask) in &pool_cases {
+                s += sum_t(&reference::upsample_scale(g, idx, mask, 2));
+            }
+            s
+        });
+    kernels.push(Kernel { name: "pool_bp", ips, ref_ips });
+
     // --- report + record ---------------------------------------------
     println!("=== per-kernel hot path (1X shapes{}) ===",
              if smoke { ", smoke" } else { "" });
@@ -248,8 +300,8 @@ fn main() {
         rec.push(&format!("{}_speedup", k.name), speedup);
         gates.push((format!("hotpath_{}", k.name), k.ips));
     }
-    println!("composite      : {:.1} images/s (harmonic over the five \
-              kernel groups)", rec.images_per_second);
+    println!("composite      : {:.1} images/s (harmonic over the {} \
+              kernel groups)", rec.images_per_second, kernels.len());
     let gate_refs: Vec<(&str, f64)> =
         gates.iter().map(|(n, v)| (n.as_str(), *v)).collect();
     std::process::exit(finish_gated(&rec, &gate_refs));

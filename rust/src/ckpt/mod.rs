@@ -288,6 +288,10 @@ impl Checkpoint {
             loss_sum: join_f64(md[4], md[5]),
             sim_cycles: join_f64(md[6], md[7]),
             host_seconds: join_f64(md[8], md[9]),
+            // the compute/comm split is session-local telemetry and is
+            // deliberately not serialized (the tensor stays 10 words,
+            // byte-compatible with every existing checkpoint)
+            ..TrainMetrics::default()
         };
 
         // params and optimizer states, preserving bundle order (which
@@ -417,6 +421,7 @@ mod tests {
                 loss_sum: 1234.5678,
                 sim_cycles: 9.87e12,
                 host_seconds: 0.25,
+                ..TrainMetrics::default()
             },
             params: vec![("w_c1".to_string(), w),
                          ("b_c1".to_string(), b)],

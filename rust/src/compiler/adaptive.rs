@@ -29,25 +29,40 @@ use crate::nn::loss::{encode_label, loss_grad};
 
 // ---------------- topology choice ----------------
 
+/// Total link-model cost of reducing every bucket in `buckets`
+/// (per-bucket i32 word counts) through `coll`: each bucket runs the
+/// collective's full plan over its own words, so fixed per-step
+/// message overhead is paid once *per bucket* — the price of
+/// pipelining that [`choose_collective_bucketed`] weighs against the
+/// overlap it buys.
+fn plan_cost_bucketed(coll: &dyn Collective, n: usize, buckets: &[u64],
+                      link: &LinkModel) -> u64 {
+    buckets
+        .iter()
+        .map(|&w| plan_cost(&coll.steps(n, w), link))
+        .sum()
+}
+
 /// The lowest-cost hierarchical group size for `n` instances reducing
-/// `words` i32 words, with the link model pricing each candidate's
-/// plan (including the G-way trunk contention on inter-group steps).
-/// `None` when `n` has no proper divisor (prime or <= 3), i.e. when
-/// the hierarchy cannot beat a flat ring by construction.
-fn best_hier_group(n: usize, words: u64, link: &LinkModel)
+/// the per-bucket word counts in `buckets`, with the link model
+/// pricing each candidate's plan (including the G-way trunk
+/// contention on inter-group steps).  `None` when `n` has no proper
+/// divisor (prime or <= 3), i.e. when the hierarchy cannot beat a
+/// flat ring by construction.
+fn best_hier_group(n: usize, buckets: &[u64], link: &LinkModel)
                    -> Option<(usize, u64)> {
     (2..n)
         .filter(|g| n % g == 0)
         .map(|g| {
-            let plan = HierCollective { group: g }.steps(n, words);
-            (g, plan_cost(&plan, link))
+            let coll = HierCollective { group: g };
+            (g, plan_cost_bucketed(&coll, n, buckets, link))
         })
         .min_by_key(|&(g, cycles)| (cycles, g))
 }
 
 /// Compile-time collective choice: map the requested [`Topology`] (and
 /// the link parameters) to a concrete [`Collective`] for `n` instances
-/// reducing `words` gradient words.
+/// reducing `words` gradient words in one monolithic piece.
 ///
 /// - `Ring` always yields the flat ring — the default, and the shape
 ///   every pinned small-N behavior assumes.
@@ -56,18 +71,32 @@ fn best_hier_group(n: usize, words: u64, link: &LinkModel)
 /// - `Auto` prices both and keeps the cheaper plan (ring on ties).
 pub fn choose_collective(topology: Topology, n: usize, words: u64,
                          link: &LinkModel) -> Box<dyn Collective> {
+    choose_collective_bucketed(topology, n, &[words], link)
+}
+
+/// [`choose_collective`] generalized to a bucketed gradient: prices
+/// each candidate topology as the *sum* of its per-bucket plans, so
+/// the per-step message overhead multiplied across buckets is charged
+/// to the candidate that suffers it.  Splitting into more buckets
+/// shifts `Auto` toward the hierarchy at large N (fewer steps per
+/// bucket means less repeated overhead); a single-element `buckets`
+/// reproduces the monolithic choice exactly.
+pub fn choose_collective_bucketed(topology: Topology, n: usize,
+                                  buckets: &[u64], link: &LinkModel)
+                                  -> Box<dyn Collective> {
     if n <= 1 {
         return Box::new(RingCollective);
     }
     match topology {
         Topology::Ring => Box::new(RingCollective),
-        Topology::Hier => match best_hier_group(n, words, link) {
+        Topology::Hier => match best_hier_group(n, buckets, link) {
             Some((g, _)) => Box::new(HierCollective { group: g }),
             None => Box::new(RingCollective),
         },
         Topology::Auto => {
-            let ring = plan_cost(&RingCollective.steps(n, words), link);
-            match best_hier_group(n, words, link) {
+            let ring = plan_cost_bucketed(&RingCollective, n, buckets,
+                                          link);
+            match best_hier_group(n, buckets, link) {
                 Some((g, cycles)) if cycles < ring => {
                     Box::new(HierCollective { group: g })
                 }
@@ -321,7 +350,8 @@ mod tests {
     fn best_group_minimizes_plan_cost() {
         use crate::config::DesignVars;
         let link = LinkModel::new(&DesignVars::default());
-        let (g, cycles) = best_hier_group(64, 1 << 16, &link).unwrap();
+        let (g, cycles) =
+            best_hier_group(64, &[1 << 16], &link).unwrap();
         assert!(g > 1 && g < 64 && 64 % g == 0, "group {g}");
         // the winner is no worse than every other divisor's plan
         for other in (2..64usize).filter(|d| 64 % d == 0) {
@@ -331,6 +361,34 @@ mod tests {
             assert!(cycles <= c, "group {g} ({cycles}) beaten by \
                                   {other} ({c})");
         }
-        assert_eq!(best_hier_group(13, 1 << 16, &link), None);
+        assert_eq!(best_hier_group(13, &[1 << 16], &link), None);
+    }
+
+    #[test]
+    fn bucketed_chooser_generalizes_the_monolithic_one() {
+        use crate::config::DesignVars;
+        let link = LinkModel::new(&DesignVars::default());
+        // single-element bucket list == monolithic choice, everywhere
+        for (topo, n, words) in [(Topology::Auto, 64, 4096u64),
+                                 (Topology::Auto, 2, 4096),
+                                 (Topology::Ring, 64, 1 << 20),
+                                 (Topology::Hier, 16, 1 << 20)] {
+            assert_eq!(
+                choose_collective_bucketed(topo, n, &[words], &link)
+                    .name(),
+                choose_collective(topo, n, words, &link).name(),
+                "topo={topo} n={n}"
+            );
+        }
+        // splitting a large-N gradient into many buckets multiplies
+        // the per-step overhead: Auto flips from ring (monolithic,
+        // bandwidth-dominated) to hier (bucketed, overhead-dominated)
+        let total = 1u64 << 20;
+        let mono = choose_collective(Topology::Auto, 64, total, &link);
+        assert_eq!(mono.name(), "ring");
+        let buckets: Vec<u64> = vec![total / 16; 16];
+        let bucketed = choose_collective_bucketed(Topology::Auto, 64,
+                                                  &buckets, &link);
+        assert_eq!(bucketed.name(), "hier");
     }
 }

@@ -17,7 +17,8 @@ use crate::hw::bram::BufferPlan;
 use crate::hw::power::{power_from_resources, PowerReport};
 use crate::hw::resources::{estimate, Device, ResourceReport, STRATIX10_GX};
 
-pub use adaptive::{calibrate, choose_collective, AdaptiveReport};
+pub use adaptive::{calibrate, choose_collective,
+                   choose_collective_bucketed, AdaptiveReport};
 pub use codegen::{control_rom, emit_verilog, ControlWord};
 pub use module_library::{select_modules, Module};
 pub use schedule::{build as build_schedule, OpKind, Schedule, Step};

@@ -11,7 +11,12 @@
 //!   topology ([`crate::compiler::choose_collective`]: flat ring or
 //!   hierarchical group reduce), then the weight-update passes that run
 //!   once per batch (read weights + momentum + accumulated gradients,
-//!   write new weights tile-by-tile, §III-E).
+//!   write new weights tile-by-tile, §III-E).  With `dv.bucket_kwords
+//!   > 0` the all-reduce is emitted per gradient *bucket* in
+//!   reverse-layer order, each run tagged ([`ScheduledBucket`]) with
+//!   the BP step after which it becomes eligible — the seam the
+//!   simulator uses to overlap communication with the remaining
+//!   backward compute.
 //!
 //! Every step carries its phase, the key/affiliated classification
 //! (§III-B: key layers read fresh tiles from DRAM; affiliated layers
@@ -26,9 +31,10 @@
 //! [`StepCtx`](crate::ops::StepCtx).  The per-batch steps (ring
 //! all-reduce + weight update) are network-global and stay here.
 
-use crate::compiler::adaptive::choose_collective;
+use crate::compiler::adaptive::{choose_collective,
+                                choose_collective_bucketed};
 use crate::config::{DesignVars, Loss, Network};
-use crate::engine::collective::CollectiveStep;
+use crate::engine::collective::{BucketPlan, CollectiveStep};
 use crate::hw::link::LinkModel;
 use crate::hw::mac_array::Phase;
 use crate::ops::{for_layer, Geom, StepCtx, W16, W32};
@@ -86,6 +92,26 @@ pub struct Step {
     pub out_shape: Vec<usize>,
 }
 
+/// One gradient bucket of a pipelined (bucketed) cluster schedule,
+/// tagging the contiguous run of per-bucket `AllReduce` steps with its
+/// eligibility point in the per-image BP walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduledBucket {
+    /// Bucket label (`b0`, `b1`, ... in reduce order); the bucket's
+    /// emitted AllReduce steps carry `{label}/`-prefixed layer names.
+    pub label: String,
+    /// i32 words the bucket reduces.
+    pub words: u64,
+    /// The bucket becomes eligible for its all-reduce the moment the
+    /// per-image schedule retires the *last* step of this layer — the
+    /// front-most layer the bucket covers, i.e. the last of its layers
+    /// the reverse BP walk reaches.
+    pub eligible_after: String,
+    /// How many consecutive entries of `Schedule::collective` (and
+    /// per-batch AllReduce steps) belong to this bucket.
+    pub steps: usize,
+}
+
 /// Complete schedule for one network + design point.
 #[derive(Debug, Clone)]
 pub struct Schedule {
@@ -99,6 +125,38 @@ pub struct Schedule {
     /// [`Step`] cannot express; the simulator zips the two to charge
     /// trunk contention on hierarchical cross-group steps.
     pub collective: Vec<CollectiveStep>,
+    /// Bucket tags for pipelined cluster designs (`dv.cluster > 1 &&
+    /// dv.bucket_kwords > 0`): partitions `collective` into contiguous
+    /// per-bucket runs in reverse-layer reduce order, each carrying its
+    /// BP eligibility point.  Empty when bucketing is off — the
+    /// monolithic serial epilogue every pinned small-N behavior
+    /// assumes.
+    pub buckets: Vec<ScheduledBucket>,
+}
+
+/// Synthesize the per-batch schedule [`Step`] for one collective plan
+/// step: stage `chunk_words` of gradient out of DRAM, move them over
+/// the link, write the received chunk back.  Shared by the monolithic
+/// and bucketed emission paths and by the overlap projector
+/// (`crate::sim::project_overlap`), so every consumer prices an
+/// AllReduce step identically.
+pub fn allreduce_step(dv: &DesignVars, label: String,
+                      chunk_words: u64) -> Step {
+    let chunk_bytes = chunk_words * W32;
+    let tiles = (2 * (chunk_words as usize)
+        .div_ceil(dv.pof * dv.tile_rows * 64)
+        .max(1)) as u64;
+    Step {
+        phase: Phase::Wu,
+        layer: label,
+        op: OpKind::AllReduce,
+        key: true,
+        artifact: None, // runs on the link + update datapath
+        dram_read_bytes: chunk_bytes,
+        dram_write_bytes: chunk_bytes,
+        tiles,
+        out_shape: vec![chunk_words as usize],
+    }
 }
 
 /// Input geometry of every layer (the geometry chain the registry
@@ -168,7 +226,39 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
     // chunk out of DRAM and writes the received chunk back.
     let mut per_batch = Vec::new();
     let mut collective = Vec::new();
-    if dv.cluster > 1 {
+    let mut buckets = Vec::new();
+    if dv.cluster > 1 && dv.bucket_kwords > 0 {
+        // pipelined emission: partition the gradient vector at layer
+        // boundaries, walk the buckets in reverse-layer (BP) order,
+        // and emit each bucket's own collective plan tagged with its
+        // eligibility point.  The topology is priced on the bucketed
+        // plan — splitting multiplies per-step message overhead, which
+        // shifts Auto toward the hierarchy at large N.
+        let plan = BucketPlan::build(&net.ring_segments(),
+                                     dv.bucket_kwords * 1024);
+        let link = LinkModel::new(dv);
+        let coll = choose_collective_bucketed(
+            dv.topology, dv.cluster, &plan.bucket_words(), &link);
+        for b in &plan.buckets {
+            let steps = coll.steps(dv.cluster, b.words());
+            for cs in &steps {
+                let label = format!("{}/{}", b.label, cs.label);
+                per_batch.push(allreduce_step(dv, label.clone(),
+                                              cs.chunk_words));
+                collective.push(CollectiveStep {
+                    label,
+                    chunk_words: cs.chunk_words,
+                    link_share: cs.link_share,
+                });
+            }
+            buckets.push(ScheduledBucket {
+                label: b.label.clone(),
+                words: b.words(),
+                eligible_after: b.eligible_after.clone(),
+                steps: steps.len(),
+            });
+        }
+    } else if dv.cluster > 1 {
         // every accumulator the cluster engine reduces: gradient words
         // plus BN statistic words (Network::ring_words)
         let grad_words = net.ring_words() as u64;
@@ -176,21 +266,8 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
             dv.topology, dv.cluster, grad_words, &LinkModel::new(dv))
             .steps(dv.cluster, grad_words);
         for cs in &collective {
-            let chunk_bytes = cs.chunk_words * W32;
-            let tiles = (2 * (cs.chunk_words as usize)
-                .div_ceil(dv.pof * dv.tile_rows * 64)
-                .max(1)) as u64;
-            per_batch.push(Step {
-                phase: Phase::Wu,
-                layer: cs.label.clone(),
-                op: OpKind::AllReduce,
-                key: true,
-                artifact: None, // runs on the link + update datapath
-                dram_read_bytes: chunk_bytes,
-                dram_write_bytes: chunk_bytes,
-                tiles,
-                out_shape: vec![cs.chunk_words as usize],
-            });
+            per_batch.push(allreduce_step(dv, cs.label.clone(),
+                                          cs.chunk_words));
         }
     }
 
@@ -220,7 +297,7 @@ pub fn build(net: &Network, dv: &DesignVars) -> Schedule {
         });
     }
 
-    Schedule { per_image, per_batch, collective }
+    Schedule { per_image, per_batch, collective, buckets }
 }
 
 impl Schedule {
@@ -446,6 +523,77 @@ mod tests {
     #[test]
     fn single_instance_has_empty_collective_plan() {
         assert!(sched1x().collective.is_empty());
+        assert!(sched1x().buckets.is_empty());
+    }
+
+    #[test]
+    fn monolithic_cluster_schedule_has_no_buckets() {
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 4;
+        let s = build(&Network::cifar(1), &dv);
+        assert!(s.buckets.is_empty());
+        assert!(!s.collective.is_empty());
+    }
+
+    #[test]
+    fn bucketed_cluster_schedule_tags_eligibility_points() {
+        let net = Network::cifar(1);
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = 4;
+        dv.bucket_kwords = 16;
+        let s = build(&net, &dv);
+        assert!(s.buckets.len() > 1,
+                "16 kwords should split the ~80 kword 1X gradient");
+        // buckets partition the full reduced vector ...
+        let total: u64 = s.buckets.iter().map(|b| b.words).sum();
+        assert_eq!(total, net.ring_words() as u64);
+        // ... and the collective plan 1:1 into contiguous runs whose
+        // labels carry the bucket prefix
+        let step_sum: usize = s.buckets.iter().map(|b| b.steps).sum();
+        assert_eq!(step_sum, s.collective.len());
+        let mut idx = 0usize;
+        for b in &s.buckets {
+            for cs in &s.collective[idx..idx + b.steps] {
+                assert!(cs.label.starts_with(&format!("{}/", b.label)),
+                        "{} not in bucket {}", cs.label, b.label);
+            }
+            idx += b.steps;
+        }
+        // per-batch AllReduce steps mirror the plan, and still precede
+        // every weight update
+        let ar: Vec<&Step> = s
+            .per_batch
+            .iter()
+            .filter(|st| st.op == OpKind::AllReduce)
+            .collect();
+        assert_eq!(ar.len(), s.collective.len());
+        for (cs, st) in s.collective.iter().zip(&ar) {
+            assert_eq!(cs.label, st.layer);
+            assert_eq!(st.dram_read_bytes, cs.chunk_words * W32);
+        }
+        let first_wu = s
+            .per_batch
+            .iter()
+            .position(|st| st.op == OpKind::WeightUpdate)
+            .unwrap();
+        assert!(s
+            .per_batch
+            .iter()
+            .rposition(|st| st.op == OpKind::AllReduce)
+            .unwrap()
+            < first_wu);
+        // reverse-layer reduce order: the first bucket retires with the
+        // tail of the net, the last with its head
+        assert_eq!(s.buckets[0].label, "b0");
+        assert_eq!(s.buckets[0].eligible_after, "fc");
+        assert_eq!(s.buckets.last().unwrap().eligible_after, "c1");
+        // every eligibility point is a real per-image BP layer
+        for b in &s.buckets {
+            assert!(s.per_image.iter().any(|st| st.layer
+                == b.eligible_after),
+                    "bucket {} eligible after unknown layer {}",
+                    b.label, b.eligible_after);
+        }
     }
 
     #[test]

@@ -316,6 +316,31 @@ impl Network {
         self.param_count() + stats
     }
 
+    /// The ring-reduced flat gradient vector as named segments, in
+    /// flat-vector order (`accum_order`: trainable parameters, then BN
+    /// statistic accumulators): one `(accumulator name, i32 words)`
+    /// pair per tensor the cluster engine concatenates.  Segment word
+    /// counts sum to [`Network::ring_words`].  This is the
+    /// layer-boundary input of the bucketed all-reduce planner
+    /// ([`crate::engine::collective::BucketPlan`]): bucket boundaries
+    /// may only fall between segments, never inside one.
+    pub fn ring_segments(&self) -> Vec<(String, usize)> {
+        let mut segs = Vec::new();
+        for l in &self.layers {
+            if l.weight_elems() > 0 {
+                segs.push((format!("w_{}", l.name()), l.weight_elems()));
+                segs.push((format!("b_{}", l.name()), l.bias_elems()));
+            }
+        }
+        for l in &self.layers {
+            for (name, shape) in crate::ops::for_layer(l).stat_tensors(l)
+            {
+                segs.push((name, shape.iter().product::<usize>()));
+            }
+        }
+        segs
+    }
+
     /// Total training operations per image, counted as the paper counts
     /// GOPS: 2 ops per MAC, over FP + BP + WU.
     pub fn ops_per_image(&self) -> u64 {
@@ -596,6 +621,17 @@ pub struct DesignVars {
     /// `cluster == 1`.  Excluded from the checkpoint fingerprint (like
     /// `cluster` itself): any topology merges bit-identically.
     pub topology: Topology,
+    /// Gradient-bucket size cap, in kibi-words (1024 i32 words), for
+    /// the pipelined cluster all-reduce: the flat gradient vector is
+    /// partitioned at layer parameter boundaries into buckets walked in
+    /// reverse-layer (BP) order, so each bucket's reduce becomes
+    /// eligible the moment BP retires its layers and overlaps the
+    /// remaining backward compute.  `0` (the default) keeps the
+    /// monolithic serial epilogue — every pinned small-N behavior
+    /// assumes it.  Excluded from the checkpoint fingerprint (like
+    /// `cluster` and `topology`): bucketing regroups the same
+    /// wrapping-i32 sums, never what they sum to.
+    pub bucket_kwords: usize,
 }
 
 impl Default for DesignVars {
@@ -615,6 +651,7 @@ impl Default for DesignVars {
             link_gbytes: 12.5,
             link_efficiency: 0.80,
             topology: Topology::default(),
+            bucket_kwords: 0,
         }
     }
 }

@@ -38,13 +38,15 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::ckpt::{Checkpoint, Cursor};
-use crate::compiler::{choose_collective, Accelerator, OpKind,
+use crate::compiler::{choose_collective_bucketed, Accelerator, OpKind,
                       RtlCompiler};
 use crate::config::{DesignVars, Network};
 use crate::data::{Sample, Synthetic};
-use crate::engine::cluster::{run_batch_cluster_with, ClusterReport};
+use crate::engine::cluster::ClusterReport;
+use crate::engine::collective::BucketPlan;
+use crate::engine::pool::ClusterPool;
 use crate::hw::link::LinkModel;
-use crate::engine::{self, EngineReport, StepOut};
+use crate::engine::{EngineReport, StepOut};
 use crate::nn::bn;
 use crate::nn::golden;
 use crate::nn::loss::encode_label;
@@ -110,10 +112,21 @@ pub struct TrainMetrics {
     pub images: u64,
     pub batches: u64,
     pub loss_sum: f64,
-    /// Simulated accelerator cycles spent (per the hw model).
+    /// Simulated accelerator cycles spent (per the hw model).  With
+    /// bucketed overlap on (`bucket_kwords > 0`) the per-batch
+    /// communication term is the projected **exposed** comm rather
+    /// than the full serial epilogue.
     pub sim_cycles: f64,
     /// Host wall-clock seconds spent in numerics.
     pub host_seconds: f64,
+    /// Portion of `host_seconds` spent computing (shard fork/join and
+    /// sequential numerics).  Session-local: not serialized into
+    /// checkpoints, so it restarts at zero on resume.
+    pub host_compute_seconds: f64,
+    /// Portion of `host_seconds` spent in the cluster collective +
+    /// gradient fold epilogue.  Session-local, like
+    /// [`TrainMetrics::host_compute_seconds`].
+    pub host_comm_seconds: f64,
 }
 
 impl TrainMetrics {
@@ -263,10 +276,17 @@ pub struct Trainer {
     /// per-BN-layer statistic bookkeeping (empty for BN-free nets)
     bn_meta: Vec<BnMeta>,
     /// Reusable kernel workspace for the sequential golden paths
-    /// (`train_image`, `step_golden`); the engine paths create one per
-    /// worker shard instead.  Invalidated whenever parameters change
-    /// (end_batch, resume) — its flip cache is weight-derived.
+    /// (`train_image`, `step_golden`); the engine paths hold one per
+    /// worker shard in [`Trainer::pool`] instead.  Invalidated
+    /// whenever parameters change (end_batch, resume) — its flip
+    /// cache is weight-derived.
     scratch: Scratch,
+    /// Persistent worker pool for the engine/cluster batch paths:
+    /// per-shard scratch workspaces, forked accumulators, and flat
+    /// collective staging buffers are allocated on the first batch and
+    /// reused for the trainer's lifetime (resized in place on
+    /// worker/accelerator changes).
+    pool: ClusterPool,
 }
 
 impl Trainer {
@@ -368,9 +388,15 @@ impl Trainer {
             + report.bp.latency_cycles
             + report.wu.latency_cycles) as f64;
         let batch_cycles = report.update.latency_cycles as f64;
-        let allreduce_cache = Some((dv.cluster.max(1),
-                                    report.allreduce.latency_cycles
-                                        as f64));
+        // with bucketed overlap the batch only pays the comm the
+        // projection leaves exposed past the backward pass
+        let comm_cycles = if dv.bucket_kwords > 0 && dv.cluster > 1 {
+            crate::sim::project_overlap(&acc, batch)
+                .exposed_comm_cycles as f64
+        } else {
+            report.allreduce.latency_cycles as f64
+        };
+        let allreduce_cache = Some((dv.cluster.max(1), comm_cycles));
 
         // below-layer maps for the per-op runtime walk: which layer's
         // cached activations feed each conv/fc/pool, and whether that
@@ -423,6 +449,7 @@ impl Trainer {
             conv_below,
             bn_meta,
             scratch: Scratch::for_net(net),
+            pool: ClusterPool::new(),
         })
     }
 
@@ -467,7 +494,10 @@ impl Trainer {
     /// `dv.topology` at that count) and cached until the instance
     /// count changes (so writing [`Trainer::accelerators`] directly —
     /// e.g. through an elastic resize — stays consistent too; the
-    /// topology itself is fixed for a trainer's lifetime).
+    /// topology itself is fixed for a trainer's lifetime).  With
+    /// bucketed overlap on, the charged cycles are the projection's
+    /// **exposed** comm — the buckets hidden under the backward pass
+    /// cost the simulated cluster nothing.
     fn cluster_allreduce_cycles(&mut self, instances: usize)
                                 -> Result<f64> {
         if let Some((n, cycles)) = self.allreduce_cache {
@@ -478,9 +508,14 @@ impl Trainer {
         let mut dv = self.acc.dv.clone();
         dv.cluster = instances;
         let acc = RtlCompiler::default().compile(&self.acc.net, &dv)?;
-        let cycles = simulate(&acc, self.hyper.batch)
-            .allreduce
-            .latency_cycles as f64;
+        let cycles = if dv.bucket_kwords > 0 && instances > 1 {
+            crate::sim::project_overlap(&acc, self.hyper.batch)
+                .exposed_comm_cycles as f64
+        } else {
+            simulate(&acc, self.hyper.batch)
+                .allreduce
+                .latency_cycles as f64
+        };
         self.allreduce_cache = Some((instances, cycles));
         Ok(cycles)
     }
@@ -781,7 +816,9 @@ impl Trainer {
             Backend::PerOp => self.step_per_op(&sample.image, &y)?,
             Backend::Fused => self.step_fused(&sample.image, &y)?,
         };
-        self.metrics.host_seconds += t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.host_seconds += dt;
+        self.metrics.host_compute_seconds += dt;
         self.metrics.images += 1;
         self.metrics.loss_sum += f64::from(loss);
         self.metrics.sim_cycles += self.image_cycles;
@@ -895,7 +932,9 @@ impl Trainer {
     }
 
     /// Golden-backend batch through the engine (any worker count; a
-    /// single worker runs inline through the same fork/merge machinery).
+    /// single worker runs inline through the same fork/merge
+    /// machinery), on the trainer's persistent worker pool — shard
+    /// scratch and forked accumulators are reused across batches.
     fn train_batch_engine(&mut self, samples: &[Sample]) -> Result<f64> {
         let net = &self.acc.net;
         let params = &self.params;
@@ -903,14 +942,14 @@ impl Trainer {
         let step = |s: &Sample, sc: &mut Scratch| {
             golden_step(net, params, &order, s, sc)
         };
-        let (loss_sum, report) =
-            engine::run_batch(samples, self.workers, &mut self.states,
-                              &step)?;
+        let (loss_sum, report) = self.pool.run_engine(
+            samples, self.workers, &mut self.states, &step)?;
         self.metrics.images += samples.len() as u64;
         self.metrics.loss_sum += loss_sum as f64;
         self.metrics.sim_cycles +=
             self.image_cycles * samples.len() as f64;
         self.metrics.host_seconds += report.wall_seconds;
+        self.metrics.host_compute_seconds += report.wall_seconds;
         self.last_engine = Some(report);
         self.last_cluster = None;
         Ok(loss_sum as f64)
@@ -929,10 +968,26 @@ impl Trainer {
         // contribute zero gradients), matching the simulate projection
         let allreduce_cycles =
             self.cluster_allreduce_cycles(self.accelerators)?;
-        let coll = choose_collective(
+        // with `--bucket-kwords` the merge walks per-layer buckets in
+        // reverse-BP order (bit-identical to the monolithic reduce by
+        // the partition argument; see engine::collective), and the
+        // topology policy prices the actual bucket sizes
+        let plan = if self.acc.dv.bucket_kwords > 0 {
+            Some(BucketPlan::build(
+                &self.acc.net.ring_segments(),
+                self.acc.dv.bucket_kwords * 1024,
+            ))
+        } else {
+            None
+        };
+        let words = plan.as_ref().map_or_else(
+            || vec![self.acc.net.ring_words() as u64],
+            |p| p.bucket_words(),
+        );
+        let coll = choose_collective_bucketed(
             self.acc.dv.topology,
             self.accelerators,
-            self.acc.net.ring_words() as u64,
+            &words,
             &LinkModel::new(&self.acc.dv),
         );
         let net = &self.acc.net;
@@ -941,9 +996,9 @@ impl Trainer {
         let step = |s: &Sample, sc: &mut Scratch| {
             golden_step(net, params, &order, s, sc)
         };
-        let (loss_sum, report) = run_batch_cluster_with(
+        let (loss_sum, report) = self.pool.run_cluster(
             samples, self.accelerators, self.workers, &mut self.states,
-            &step, coll.as_ref())?;
+            &step, coll.as_ref(), plan.as_ref())?;
         self.metrics.images += samples.len() as u64;
         self.metrics.loss_sum += loss_sum as f64;
         let max_shard =
@@ -951,6 +1006,9 @@ impl Trainer {
         self.metrics.sim_cycles += self.image_cycles * max_shard as f64
             + allreduce_cycles;
         self.metrics.host_seconds += report.wall_seconds;
+        self.metrics.host_comm_seconds += report.comm_seconds;
+        self.metrics.host_compute_seconds +=
+            (report.wall_seconds - report.comm_seconds).max(0.0);
         self.last_cluster = Some(report);
         self.last_engine = None;
         Ok(loss_sum as f64)

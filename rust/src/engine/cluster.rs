@@ -26,13 +26,12 @@
 //!   N**, and every instance ends the all-reduce with the identical
 //!   accumulator (asserted in tests).  Loss totals sum in i64, exact.
 
-use std::time::Instant;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::data::Sample;
-use crate::engine::collective::{Collective, RingCollective};
-use crate::engine::{self, shard_sizes, StepOut};
+use crate::engine::collective::{BucketPlan, Collective, RingCollective};
+use crate::engine::pool::ClusterPool;
+use crate::engine::StepOut;
 use crate::nn::scratch::Scratch;
 use crate::nn::sgd::ParamState;
 
@@ -58,6 +57,11 @@ pub struct ClusterReport {
     pub ring_words: u64,
     /// Wall-clock of the cluster section (fork -> ring -> merge).
     pub wall_seconds: f64,
+    /// Wall-clock of the communication epilogue alone (collective
+    /// all-reduce plus the fold into the caller's accumulators) —
+    /// the host-side analogue of the simulator's exposed-comm split.
+    /// Always `<= wall_seconds`.
+    pub comm_seconds: f64,
 }
 
 /// Statistics of one host-side ring all-reduce.
@@ -75,6 +79,19 @@ pub struct RingStats {
 /// all inputs.  Buffers shorter than the instance count are handled
 /// (some ring chunks are empty).  Panics on ragged buffer lengths.
 pub fn ring_all_reduce(bufs: &mut [Vec<i32>]) -> RingStats {
+    let hi = bufs.first().map_or(0, |b| b.len());
+    ring_all_reduce_range(bufs, 0, hi)
+}
+
+/// [`ring_all_reduce`] restricted to the element range `[lo, hi)` of
+/// every buffer — the bucket-reduce primitive behind the pipelined
+/// cluster merge.  Elements outside the range are untouched; the walk
+/// inside it is the identical fixed index formula, so reducing a
+/// partition of `[0, len)` bucket by bucket reproduces the full
+/// reduce bit-for-bit.
+pub fn ring_all_reduce_range(bufs: &mut [Vec<i32>],
+                             range_lo: usize, range_hi: usize)
+                             -> RingStats {
     let n = bufs.len();
     if n <= 1 {
         return RingStats { steps: 0, total_words: 0 };
@@ -82,8 +99,12 @@ pub fn ring_all_reduce(bufs: &mut [Vec<i32>]) -> RingStats {
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len),
             "ring_all_reduce: ragged buffers");
-    // balanced chunk ranges per ring slot (empty when len < n)
-    let bound = |c: usize| c * len / n;
+    assert!(range_lo <= range_hi && range_hi <= len,
+            "ring_all_reduce: range [{range_lo}, {range_hi}) outside \
+             buffers of len {len}");
+    let span = range_hi - range_lo;
+    // balanced chunk ranges per ring slot (empty when span < n)
+    let bound = |c: usize| range_lo + c * span / n;
     let mut words = 0u64;
     // reduce-scatter: at step s, instance (c+s)%n sends its partial of
     // chunk c one hop to (c+s+1)%n, which accumulates it; after n-1
@@ -112,7 +133,7 @@ pub fn ring_all_reduce(bufs: &mut [Vec<i32>]) -> RingStats {
             words += (hi - lo) as u64;
         }
     }
-    // every step moves `len` words in total across the n links
+    // every step moves the full range in total across the n links
     RingStats { steps: 2 * (n - 1), total_words: words }
 }
 
@@ -169,108 +190,36 @@ pub fn run_batch_cluster_with<F>(samples: &[Sample], instances: usize,
 where
     F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
-    if samples.is_empty() {
-        anyhow::bail!("cluster: cannot run an empty batch");
-    }
-    let t0 = Instant::now();
-    let ring = instances.max(1);
-    let sizes = shard_sizes(samples.len(), ring);
-    let n = sizes.len(); // instances that received work (≤ ring)
-    let mut slices: Vec<&[Sample]> = Vec::with_capacity(n);
-    let mut off = 0usize;
-    for &sz in &sizes {
-        slices.push(&samples[off..off + sz]);
-        off += sz;
-    }
-    // per-instance accumulator replicas (each instance's DRAM state);
-    // instances beyond the shard count stay zeroed but still ring
-    let mut forks: Vec<Vec<(String, ParamState)>> = (0..ring)
-        .map(|_| {
-            states
-                .iter()
-                .map(|(name, st)| (name.clone(), st.fork_shard()))
-                .collect()
-        })
-        .collect();
+    run_batch_cluster_bucketed(samples, instances, workers, states,
+                               step, collective, None)
+}
 
-    let results: Vec<Result<i64>> = if n == 1 {
-        vec![engine::run_batch(slices[0], workers, &mut forks[0], step)
-            .map(|(loss, _)| loss)]
-    } else {
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = slices
-                .iter()
-                .zip(forks.iter_mut())
-                .map(|(&sl, fork)| {
-                    scope.spawn(move || {
-                        engine::run_batch(sl, workers, fork, step)
-                            .map(|(loss, _)| loss)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(anyhow!("cluster: instance thread panicked"))
-                    })
-                })
-                .collect()
-        })
-    };
-    // all-or-nothing: propagate before the ring so `states` never sees
-    // a partial cluster
-    let losses = results.into_iter().collect::<Result<Vec<i64>>>()?;
-    let loss_sum: i64 = losses.iter().sum();
-
-    // flatten each instance's accumulators and run the collective
-    let mut flats: Vec<Vec<i32>> = forks
-        .iter()
-        .map(|fork| {
-            let mut flat = Vec::new();
-            for (_, st) in fork {
-                flat.extend_from_slice(st.grad_acc.data());
-            }
-            flat
-        })
-        .collect();
-    let stats = collective.all_reduce(&mut flats);
-    debug_assert!(flats.iter().all(|f| *f == flats[0]),
-                  "collective left instances with diverged accumulators");
-
-    // every instance now holds the full batch sum; fold instance 0's
-    // copy into the caller's accumulators (wrapping add, so a nonzero
-    // starting accumulator keeps bit-identity with the inner engine)
-    let images: usize = forks
-        .iter()
-        .map(|fork| fork.first().map_or(0, |(_, st)| st.count))
-        .sum();
-    let reduced = &flats[0];
-    let mut off = 0usize;
-    for (_, st) in states.iter_mut() {
-        let data = st.grad_acc.data_mut();
-        let len = data.len();
-        for (a, &v) in data.iter_mut().zip(&reduced[off..off + len]) {
-            *a = a.wrapping_add(v);
-        }
-        off += len;
-        st.count += images;
-    }
-
-    let report = ClusterReport {
-        instances: ring,
-        images: samples.len(),
-        shard_sizes: sizes,
-        ring_steps: stats.steps,
-        ring_words: stats.total_words,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-    };
-    Ok((loss_sum, report))
+/// [`run_batch_cluster_with`] with an optional gradient
+/// [`BucketPlan`]: `None` runs the monolithic all-reduce epilogue,
+/// `Some(plan)` reduces and folds each bucket in reverse-layer (BP)
+/// order as soon as it completes — bit-identical either way (each
+/// element is summed by the same fixed wrapping walk exactly once).
+///
+/// Like the other free functions this builds a throwaway
+/// [`ClusterPool`] per call; the trainer's batch loop holds a
+/// persistent pool so per-instance forks, inner worker scratch, and
+/// flat staging buffers are reused across batches.
+pub fn run_batch_cluster_bucketed<F>(
+    samples: &[Sample], instances: usize, workers: usize,
+    states: &mut [(String, ParamState)], step: &F,
+    collective: &dyn Collective, plan: Option<&BucketPlan>)
+    -> Result<(i64, ClusterReport)>
+where
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+{
+    ClusterPool::new().run_cluster(samples, instances, workers, states,
+                                   step, collective, plan)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine;
     use crate::nn::sgd::ParamKind;
     use crate::nn::tensor::Tensor;
     use anyhow::bail;

@@ -25,8 +25,20 @@
 //! bit-identity of hierarchical vs flat vs direct summation is
 //! asserted across group shapes in the unit tests, and end-to-end at
 //! 64 instances in `rust/tests/cluster.rs`.
+//!
+//! # Bucketing ([`BucketPlan`])
+//!
+//! The pipelined cluster engine partitions the flat gradient vector
+//! into contiguous *buckets* whose boundaries fall only at layer
+//! parameter boundaries, walked in reverse-layer (BP) order — the
+//! order in which the backward pass retires each layer's gradients.
+//! Every topology reduces a bucket through [`Collective::
+//! all_reduce_range`], the same fixed index walk restricted to
+//! `[lo, hi)`; concatenating the per-bucket results is *exactly* the
+//! monolithic reduce because each element is touched by exactly one
+//! bucket and summed by the identical wrapping-i32 walk.
 
-use super::cluster::ring_all_reduce;
+use super::cluster::ring_all_reduce_range;
 
 /// One step of a collective's communication plan, as consumed by the
 /// compiler (schedule emission) and the simulator (link costing).
@@ -67,10 +79,22 @@ pub trait Collective: Send + Sync {
     /// words.  Empty when `n <= 1`.
     fn steps(&self, n: usize, words: u64) -> Vec<CollectiveStep>;
 
+    /// In-place all-reduce restricted to the element range `[lo, hi)`
+    /// of every buffer: after the call the range holds the identical
+    /// element-wise wrapping-i32 sum of all inputs' ranges; elements
+    /// outside the range are untouched.  This is the bucket-reduce
+    /// primitive — the full-vector [`Collective::all_reduce`] is just
+    /// the `[0, len)` range.
+    fn all_reduce_range(&self, bufs: &mut [Vec<i32>],
+                        lo: usize, hi: usize) -> CollectiveStats;
+
     /// In-place all-reduce over per-instance flat gradient buffers:
     /// after the call every buffer holds the identical element-wise
     /// wrapping-i32 sum of all inputs.
-    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats;
+    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats {
+        let hi = bufs.first().map_or(0, |b| b.len());
+        self.all_reduce_range(bufs, 0, hi)
+    }
 }
 
 /// The flat reduce-scatter + all-gather ring (`2*(N-1)` steps).
@@ -105,8 +129,9 @@ impl Collective for RingCollective {
         plan
     }
 
-    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats {
-        let stats = ring_all_reduce(bufs);
+    fn all_reduce_range(&self, bufs: &mut [Vec<i32>],
+                        lo: usize, hi: usize) -> CollectiveStats {
+        let stats = ring_all_reduce_range(bufs, lo, hi);
         CollectiveStats { steps: stats.steps,
                           total_words: stats.total_words }
     }
@@ -192,7 +217,9 @@ impl Collective for HierCollective {
         plan
     }
 
-    fn all_reduce(&self, bufs: &mut [Vec<i32>]) -> CollectiveStats {
+    fn all_reduce_range(&self, bufs: &mut [Vec<i32>],
+                        range_lo: usize, range_hi: usize)
+                        -> CollectiveStats {
         let n = bufs.len();
         if n <= 1 {
             return CollectiveStats { steps: 0, total_words: 0 };
@@ -203,8 +230,12 @@ impl Collective for HierCollective {
         let len = bufs[0].len();
         assert!(bufs.iter().all(|b| b.len() == len),
                 "hier all_reduce: ragged buffers");
-        // balanced slice ranges per intra-group slot
-        let gb = |c: usize| c * len / g;
+        assert!(range_lo <= range_hi && range_hi <= len,
+                "hier all_reduce: range [{range_lo}, {range_hi}) \
+                 outside buffers of len {len}");
+        let range_span = range_hi - range_lo;
+        // balanced slice ranges per intra-group slot, within the range
+        let gb = |c: usize| range_lo + c * range_span / g;
         let owner = |c: usize| (c + g - 1) % g;
         let mut words = 0u64;
 
@@ -280,6 +311,123 @@ impl Collective for HierCollective {
             total_words: words,
         }
     }
+}
+
+/// One contiguous gradient bucket: an element range of the flat
+/// accumulator vector plus the layer whose backward-pass retirement
+/// makes the whole range final.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    /// Bucket label in reduce order: `b0`, `b1`, ... (`b0` covers the
+    /// tail of the vector — the first layers BP retires).
+    pub label: String,
+    /// First element (i32 word) of the bucket, inclusive.
+    pub lo: usize,
+    /// One past the last element, exclusive.
+    pub hi: usize,
+    /// Layer name after whose last per-image schedule step every
+    /// segment in the bucket is final.  Segments are laid out in
+    /// forward-layer order and BP retires layers in reverse, so this
+    /// is the layer of the bucket's front-most (lowest-offset)
+    /// segment — the last of its layers to retire.
+    pub eligible_after: String,
+}
+
+impl Bucket {
+    /// i32 words the bucket covers.
+    pub fn words(&self) -> u64 {
+        (self.hi - self.lo) as u64
+    }
+}
+
+/// A size-capped partition of the flat gradient vector into contiguous
+/// buckets with boundaries only at segment (per-layer parameter /
+/// per-stat tensor) boundaries, listed in reverse-layer reduce order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BucketPlan {
+    /// Buckets in the order they are reduced (tail of the vector
+    /// first, matching BP's reverse-layer retirement order).
+    pub buckets: Vec<Bucket>,
+}
+
+impl BucketPlan {
+    /// Partition `segments` — `(name, words)` pairs in flat-vector
+    /// (forward accumulation) order, as produced by
+    /// `Network::ring_segments` — into buckets of at most `cap_words`
+    /// each, packing greedily from the *tail* of the vector so bucket
+    /// `b0` holds the layers BP retires first.  A single segment
+    /// larger than the cap becomes its own (over-cap) bucket; a cap of
+    /// `0` means "no cap" and yields one bucket covering everything
+    /// (the degenerate monolithic plan, eligible only once BP fully
+    /// drains).
+    pub fn build(segments: &[(String, usize)], cap_words: usize)
+                 -> BucketPlan {
+        let total: usize = segments.iter().map(|s| s.1).sum();
+        let mut buckets = Vec::new();
+        if total == 0 {
+            return BucketPlan { buckets };
+        }
+        let layer_of = |name: &str| {
+            name.split_once('_')
+                .map(|(_, l)| l.to_string())
+                .unwrap_or_else(|| name.to_string())
+        };
+        let mut hi = total;
+        let mut lo = total;
+        // front-most segment currently inside the open bucket
+        let mut front: Option<&str> = None;
+        for (name, words) in segments.iter().rev() {
+            let over = cap_words > 0
+                && lo < hi
+                && (hi - lo) + words > cap_words;
+            if over {
+                buckets.push((lo, hi, front.unwrap().to_string()));
+                hi = lo;
+            }
+            lo -= words;
+            front = Some(name.as_str());
+        }
+        buckets.push((0, hi, front.unwrap().to_string()));
+        let buckets = buckets
+            .into_iter()
+            .enumerate()
+            .map(|(i, (lo, hi, seg))| Bucket {
+                label: format!("b{i}"),
+                lo,
+                hi,
+                eligible_after: layer_of(&seg),
+            })
+            .collect();
+        BucketPlan { buckets }
+    }
+
+    /// Per-bucket word counts, in reduce order.
+    pub fn bucket_words(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.words()).collect()
+    }
+
+    /// Total i32 words across all buckets.
+    pub fn total_words(&self) -> u64 {
+        self.buckets.iter().map(|b| b.words()).sum()
+    }
+}
+
+/// Reduce every bucket of `plan` in order through `coll`: walked in
+/// reverse-layer order so the host merge mirrors the schedule's
+/// pipelined reduce.  Concatenating the per-bucket results is exactly
+/// the monolithic [`Collective::all_reduce`] — each element belongs to
+/// exactly one bucket and is summed by the identical wrapping walk.
+pub fn all_reduce_bucketed(coll: &dyn Collective,
+                           bufs: &mut [Vec<i32>],
+                           plan: &BucketPlan) -> CollectiveStats {
+    let mut steps = 0usize;
+    let mut total_words = 0u64;
+    for b in &plan.buckets {
+        let st = coll.all_reduce_range(bufs, b.lo, b.hi);
+        steps += st.steps;
+        total_words += st.total_words;
+    }
+    CollectiveStats { steps, total_words }
 }
 
 /// Split-borrow two distinct members: shared `src`, mutable `dst`
@@ -416,5 +564,102 @@ mod tests {
     #[should_panic(expected = "does not partition")]
     fn hier_rejects_non_dividing_group() {
         HierCollective { group: 3 }.steps(8, 100);
+    }
+
+    fn segs(v: &[(&str, usize)]) -> Vec<(String, usize)> {
+        v.iter().map(|(n, w)| (n.to_string(), *w)).collect()
+    }
+
+    #[test]
+    fn bucket_plan_packs_from_the_tail_at_segment_boundaries() {
+        let segments = segs(&[("w_c1", 10), ("b_c1", 2),
+                              ("w_c2", 20), ("b_c2", 4),
+                              ("w_fc", 30), ("b_fc", 6)]);
+        let plan = BucketPlan::build(&segments, 25);
+        // tail-first packing at cap 25: b_fc alone (adding w_fc's 30
+        // overflows), the over-cap w_fc alone, then {w_c2, b_c2} = 24
+        // (adding b_c1 overflows), and the rest
+        assert_eq!(plan.buckets.len(), 4);
+        assert_eq!((plan.buckets[0].lo, plan.buckets[0].hi), (66, 72));
+        assert_eq!(plan.buckets[0].label, "b0");
+        assert_eq!(plan.buckets[0].eligible_after, "fc");
+        assert_eq!((plan.buckets[1].lo, plan.buckets[1].hi), (36, 66));
+        assert_eq!(plan.buckets[1].eligible_after, "fc");
+        assert_eq!((plan.buckets[2].lo, plan.buckets[2].hi), (12, 36));
+        assert_eq!(plan.buckets[2].eligible_after, "c2");
+        assert_eq!((plan.buckets[3].lo, plan.buckets[3].hi), (0, 12));
+        assert_eq!(plan.buckets[3].eligible_after, "c1");
+        assert_eq!(plan.total_words(), 72);
+        assert_eq!(plan.bucket_words(), vec![6, 30, 24, 12]);
+    }
+
+    #[test]
+    fn bucket_plan_boundary_cases() {
+        let segments = segs(&[("w_c1", 10), ("b_c1", 2),
+                              ("w_fc", 30), ("b_fc", 6)]);
+        // cap 0 = no cap: one bucket covering everything, eligible
+        // only after the front-most layer retires
+        let plan = BucketPlan::build(&segments, 0);
+        assert_eq!(plan.buckets.len(), 1);
+        assert_eq!((plan.buckets[0].lo, plan.buckets[0].hi), (0, 48));
+        assert_eq!(plan.buckets[0].eligible_after, "c1");
+        // cap smaller than the largest segment: the over-cap segment
+        // forms its own bucket, boundaries never split a segment
+        let plan = BucketPlan::build(&segments, 8);
+        assert_eq!(plan.bucket_words(), vec![6, 30, 2, 10]);
+        assert_eq!(plan.buckets[1].eligible_after, "fc");
+        assert_eq!(plan.buckets[3].eligible_after, "c1");
+        // huge cap: one bucket
+        assert_eq!(BucketPlan::build(&segments, 1 << 20)
+                       .buckets.len(), 1);
+        // empty segment list: empty plan
+        assert!(BucketPlan::build(&[], 64).buckets.is_empty());
+    }
+
+    #[test]
+    fn bucketed_reduce_matches_monolithic_bit_for_bit() {
+        // sweep bucket caps x topologies x N over adversarial data:
+        // any partition of the index space must reproduce the
+        // monolithic reduce exactly
+        let segments = segs(&[("w_c1", 11), ("b_c1", 3),
+                              ("w_c2", 17), ("b_c2", 5),
+                              ("w_fc", 13), ("b_fc", 4)]);
+        let len = 53usize;
+        let colls: Vec<(Box<dyn Collective>, usize)> = vec![
+            (Box::new(RingCollective), 4),
+            (Box::new(RingCollective), 7),
+            (Box::new(HierCollective { group: 4 }), 16),
+            (Box::new(HierCollective { group: 2 }), 6),
+        ];
+        for (coll, n) in &colls {
+            for cap in [0usize, 1, 8, 16, 21, 1 << 20] {
+                let plan = BucketPlan::build(&segments, cap);
+                assert_eq!(plan.total_words() as usize, len);
+                let mut bufs = adversarial_bufs(*n, len);
+                let want = direct_sum(&bufs);
+                all_reduce_bucketed(coll.as_ref(), &mut bufs, &plan);
+                for (i, b) in bufs.iter().enumerate() {
+                    assert_eq!(*b, want,
+                               "instance {i} diverged: {} n={n} \
+                                cap={cap}", coll.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_reduce_leaves_outside_elements_untouched() {
+        for coll in [&RingCollective as &dyn Collective,
+                     &HierCollective { group: 2 }] {
+            let mut bufs = adversarial_bufs(4, 31);
+            let orig = bufs.clone();
+            let want = direct_sum(&bufs);
+            coll.all_reduce_range(&mut bufs, 7, 20);
+            for (i, b) in bufs.iter().enumerate() {
+                assert_eq!(b[..7], orig[i][..7], "{}", coll.name());
+                assert_eq!(b[7..20], want[7..20], "{}", coll.name());
+                assert_eq!(b[20..], orig[i][20..], "{}", coll.name());
+            }
+        }
     }
 }

@@ -40,13 +40,18 @@
 //! and merges per-instance accumulators through a [`collective`]
 //! topology (flat ring or hierarchical group reduce) — same
 //! bit-identity contract, cluster-sized.
+//!
+//! Both levels execute on the persistent worker [`pool`]: per-shard
+//! scratch workspaces, forked accumulators, and flat collective
+//! staging buffers are allocated once and reused across batches
+//! (see `pool`'s module docs for the reuse contract).  The free
+//! functions here remain as transient-pool wrappers.
 
 pub mod cluster;
 pub mod collective;
+pub mod pool;
 
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
 use crate::data::Sample;
 use crate::nn::scratch::Scratch;
@@ -85,36 +90,6 @@ pub fn shard_sizes(n: usize, workers: usize) -> Vec<usize> {
     (0..w).map(|i| base + usize::from(i < extra)).collect()
 }
 
-struct ShardOut {
-    loss_sum: i64,
-    states: Vec<ParamState>,
-}
-
-fn run_shard<F>(shard: &[Sample], mut states: Vec<ParamState>, step: &F)
-                -> Result<ShardOut>
-where
-    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
-{
-    // one workspace per shard: kernel buffers live for the whole slice
-    let mut scratch = Scratch::new();
-    let mut loss_sum = 0i64;
-    for s in shard {
-        let out = step(s, &mut scratch)?;
-        if out.grads.len() != states.len() {
-            bail!(
-                "engine: step produced {} gradients for {} parameters",
-                out.grads.len(),
-                states.len()
-            );
-        }
-        for (st, g) in states.iter_mut().zip(&out.grads) {
-            st.accumulate(g);
-        }
-        loss_sum += i64::from(out.loss);
-    }
-    Ok(ShardOut { loss_sum, states })
-}
-
 /// Run one batch through `step`, sharded across up to `workers` threads,
 /// accumulating into `states` (name, accumulator) pairs whose order must
 /// match the gradient order `step` emits.  Returns the exact i64 loss
@@ -123,72 +98,20 @@ where
 /// `workers == 1` (or a single-image batch) runs inline on the calling
 /// thread through the same fork/merge machinery, so the two paths cannot
 /// drift.
+///
+/// This is the transient entry point: it builds a throwaway
+/// [`pool::WorkerPool`] per call.  Long-lived callers (the trainer's
+/// batch loop) hold a persistent pool instead so forks and scratch
+/// workspaces are allocated once and reused across batches — both
+/// paths run the identical shard/merge walk, so results are
+/// bit-identical.
 pub fn run_batch<F>(samples: &[Sample], workers: usize,
                     states: &mut [(String, ParamState)], step: &F)
                     -> Result<(i64, EngineReport)>
 where
     F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
 {
-    if samples.is_empty() {
-        bail!("engine: cannot run an empty batch");
-    }
-    let t0 = Instant::now();
-    let sizes = shard_sizes(samples.len(), workers);
-    let mut slices: Vec<&[Sample]> = Vec::with_capacity(sizes.len());
-    let mut off = 0usize;
-    for &sz in &sizes {
-        slices.push(&samples[off..off + sz]);
-        off += sz;
-    }
-    let forks: Vec<Vec<ParamState>> = slices
-        .iter()
-        .map(|_| states.iter().map(|(_, st)| st.fork_shard()).collect())
-        .collect();
-
-    let results: Vec<Result<ShardOut>> = if slices.len() == 1 {
-        let fork = forks.into_iter().next().unwrap();
-        vec![run_shard(slices[0], fork, step)]
-    } else {
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = slices
-                .iter()
-                .zip(forks)
-                .map(|(&sl, fork)| {
-                    scope.spawn(move || run_shard(sl, fork, step))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| {
-                        Err(anyhow!("engine: worker thread panicked"))
-                    })
-                })
-                .collect()
-        })
-    };
-
-    // all-or-nothing: if any shard failed, propagate before touching
-    // `states` — otherwise the caller would observe partially-merged
-    // accumulators whose content depends on the worker count
-    let shards = results
-        .into_iter()
-        .collect::<Result<Vec<ShardOut>>>()?;
-    // fixed-order merge: shard 0 first, then 1, ... (see module docs)
-    let mut loss_sum = 0i64;
-    for sh in &shards {
-        loss_sum += sh.loss_sum;
-        for ((_, st), shard_st) in states.iter_mut().zip(&sh.states) {
-            st.merge_shard(shard_st);
-        }
-    }
-    let report = EngineReport {
-        workers: sizes.len(),
-        images: samples.len(),
-        shard_sizes: sizes,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-    };
-    Ok((loss_sum, report))
+    pool::WorkerPool::new().run_batch(samples, workers, states, step)
 }
 
 #[cfg(test)]

@@ -1,0 +1,584 @@
+//! Persistent worker pool: the allocation-reuse backend behind both
+//! engine levels ([`super::run_batch`] and the cluster runners in
+//! [`super::cluster`]).
+//!
+//! The transient engines rebuilt everything every batch: per-shard
+//! forked accumulators ([`ParamState::fork_shard`]), per-shard
+//! [`Scratch`] workspaces, and (one level up) per-instance flat
+//! gradient staging buffers for the collective.  None of that state
+//! carries information across batches — forks start zeroed, flats are
+//! overwritten, scratch contents never influence results — so a pool
+//! can own all of it and reuse the allocations:
+//!
+//! - [`WorkerPool`]: one slot per worker shard, each holding a
+//!   persistent `Scratch` and a forked accumulator set.  Forks are
+//!   [`ParamState::reset`] (zeroed) at batch start, which is
+//!   bit-equivalent to a fresh `fork_shard`; scratches are
+//!   [`Scratch::invalidate`]d at batch start because the flip-kernel
+//!   cache is weight-derived and weights change at `end_batch`.
+//! - [`ClusterPool`]: one slot per accelerator instance, each holding
+//!   an inner `WorkerPool` plus the instance's named accumulator
+//!   replica, and a pool-owned flat staging vector per instance for
+//!   the collective (`clear()` keeps capacity).
+//!
+//! Threads themselves are still scoped per batch — OS thread spawn is
+//! microseconds against a multi-millisecond batch, and scoped borrows
+//! keep the pool free of channels and `unsafe`; the measurable
+//! per-batch churn was the allocations, which this module hoists.
+//!
+//! # Bucketed (pipelined) cluster merge
+//!
+//! [`ClusterPool::run_cluster`] accepts an optional
+//! [`BucketPlan`]: `None` reproduces the monolithic all-reduce
+//! epilogue byte-for-byte, while `Some(plan)` walks the buckets in
+//! reverse-layer (BP) order, reducing each bucket range through
+//! [`Collective::all_reduce_range`] and folding it into the caller's
+//! accumulators as soon as it completes — the host-side analogue of
+//! the schedule's compute/communication overlap.  Bit-identity is
+//! structural: every element belongs to exactly one bucket and is
+//! summed by the same fixed wrapping-i32 walk as the monolithic
+//! reduce (asserted across bucket sizes x topologies x N in
+//! `rust/tests/overlap.rs`).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Sample;
+use crate::engine::cluster::ClusterReport;
+use crate::engine::collective::{BucketPlan, Collective, CollectiveStats};
+use crate::engine::{shard_sizes, EngineReport, StepOut};
+use crate::nn::scratch::Scratch;
+use crate::nn::sgd::ParamState;
+
+/// One worker shard's reusable state.
+struct WorkerSlot {
+    scratch: Scratch,
+    fork: Vec<ParamState>,
+}
+
+/// Persistent per-shard state for the batch-parallel engine: forked
+/// accumulators and scratch workspaces allocated once and reused
+/// across batches.  See the module docs for the reuse contract.
+#[derive(Default)]
+pub struct WorkerPool {
+    slots: Vec<WorkerSlot>,
+}
+
+/// Accumulate `shard` into `fork` through `step`, reusing `scratch`
+/// across the slice.  The loop body is identical to the transient
+/// engine's shard runner — only the state's lifetime changed.
+fn run_shard_pooled<F>(shard: &[Sample], fork: &mut [ParamState],
+                       scratch: &mut Scratch, step: &F) -> Result<i64>
+where
+    F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+{
+    let mut loss_sum = 0i64;
+    for s in shard {
+        let out = step(s, scratch)?;
+        if out.grads.len() != fork.len() {
+            bail!(
+                "engine: step produced {} gradients for {} parameters",
+                out.grads.len(),
+                fork.len()
+            );
+        }
+        for (st, g) in fork.iter_mut().zip(&out.grads) {
+            st.accumulate(g);
+        }
+        loss_sum += i64::from(out.loss);
+    }
+    Ok(loss_sum)
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make the first `shards` slots ready for a batch against
+    /// `states`: reuse forks whose geometry still matches (zeroed via
+    /// [`ParamState::reset`], bit-equivalent to a fresh fork), rebuild
+    /// on mismatch (first use, or a changed parameter set), and
+    /// invalidate every scratch (weights changed since last batch).
+    fn ensure(&mut self, shards: usize,
+              states: &[(String, ParamState)]) {
+        for slot in self.slots.iter_mut().take(shards) {
+            let matches = slot.fork.len() == states.len()
+                && slot.fork.iter().zip(states).all(|(f, (_, st))| {
+                    f.grad_acc.data().len() == st.grad_acc.data().len()
+                });
+            if matches {
+                for f in &mut slot.fork {
+                    f.reset();
+                }
+            } else {
+                slot.fork =
+                    states.iter().map(|(_, st)| st.fork_shard()).collect();
+            }
+            slot.scratch.invalidate();
+        }
+        while self.slots.len() < shards {
+            self.slots.push(WorkerSlot {
+                scratch: Scratch::new(),
+                fork: states
+                    .iter()
+                    .map(|(_, st)| st.fork_shard())
+                    .collect(),
+            });
+        }
+    }
+
+    /// Run one batch sharded across up to `workers` threads, merging
+    /// into `states` — the pooled equivalent of [`super::run_batch`]
+    /// (same sharding, same fixed-order merge, same all-or-nothing
+    /// error contract, bit-identical results).
+    pub fn run_batch<F>(&mut self, samples: &[Sample], workers: usize,
+                        states: &mut [(String, ParamState)], step: &F)
+                        -> Result<(i64, EngineReport)>
+    where
+        F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+    {
+        if samples.is_empty() {
+            bail!("engine: cannot run an empty batch");
+        }
+        let t0 = Instant::now();
+        let sizes = shard_sizes(samples.len(), workers);
+        let mut slices: Vec<&[Sample]> = Vec::with_capacity(sizes.len());
+        let mut off = 0usize;
+        for &sz in &sizes {
+            slices.push(&samples[off..off + sz]);
+            off += sz;
+        }
+        self.ensure(sizes.len(), states);
+
+        let results: Vec<Result<i64>> = if slices.len() == 1 {
+            let slot = &mut self.slots[0];
+            vec![run_shard_pooled(slices[0], &mut slot.fork,
+                                  &mut slot.scratch, step)]
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = slices
+                    .iter()
+                    .zip(self.slots.iter_mut())
+                    .map(|(&sl, slot)| {
+                        scope.spawn(move || {
+                            run_shard_pooled(sl, &mut slot.fork,
+                                             &mut slot.scratch, step)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(anyhow!("engine: worker thread panicked"))
+                        })
+                    })
+                    .collect()
+            })
+        };
+
+        // all-or-nothing: if any shard failed, propagate before
+        // touching `states` (failed forks are zeroed at next use)
+        let losses = results.into_iter().collect::<Result<Vec<i64>>>()?;
+        let loss_sum: i64 = losses.iter().sum();
+        // fixed-order merge: shard 0 first, then 1, ...
+        for slot in self.slots.iter().take(sizes.len()) {
+            for ((_, st), f) in states.iter_mut().zip(&slot.fork) {
+                st.merge_shard(f);
+            }
+        }
+        let report = EngineReport {
+            workers: sizes.len(),
+            images: samples.len(),
+            shard_sizes: sizes,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        };
+        Ok((loss_sum, report))
+    }
+}
+
+/// One accelerator instance's reusable state.
+struct InstanceSlot {
+    /// Inner worker pool for the instance's shard.
+    pool: WorkerPool,
+    /// The instance's DRAM-resident accumulator replica (named, so
+    /// geometry checks and flattening walk the caller's order).
+    fork: Vec<(String, ParamState)>,
+}
+
+/// Persistent per-instance state for the cluster engine: inner worker
+/// pools, accumulator replicas, and flat staging buffers for the
+/// collective, all allocated once and reused across batches.
+#[derive(Default)]
+pub struct ClusterPool {
+    slots: Vec<InstanceSlot>,
+    /// Per-instance flat gradient vectors (parallel to `slots`; kept
+    /// outside `InstanceSlot` so the collective can borrow them as one
+    /// `&mut [Vec<i32>]`).
+    flats: Vec<Vec<i32>>,
+}
+
+/// Fold `reduced[lo..hi]` into the matching element range of the
+/// caller's accumulators (wrapping add) — the bucket-granular version
+/// of the cluster merge epilogue.  `states` is walked in flat-vector
+/// order; segments outside `[lo, hi)` are untouched.
+fn fold_range(states: &mut [(String, ParamState)], reduced: &[i32],
+              lo: usize, hi: usize) {
+    let mut off = 0usize;
+    for (_, st) in states.iter_mut() {
+        let data = st.grad_acc.data_mut();
+        let len = data.len();
+        let s = off.max(lo);
+        let e = (off + len).min(hi);
+        if s < e {
+            for (a, &v) in
+                data[s - off..e - off].iter_mut().zip(&reduced[s..e])
+            {
+                *a = a.wrapping_add(v);
+            }
+        }
+        off += len;
+    }
+}
+
+impl ClusterPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run a single-accelerator batch through instance slot 0's worker
+    /// pool, merging directly into `states` — the pooled equivalent of
+    /// [`super::run_batch`] for the engine-only training path.
+    pub fn run_engine<F>(&mut self, samples: &[Sample], workers: usize,
+                         states: &mut [(String, ParamState)], step: &F)
+                         -> Result<(i64, EngineReport)>
+    where
+        F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+    {
+        if self.slots.is_empty() {
+            self.slots.push(InstanceSlot { pool: WorkerPool::new(),
+                                           fork: Vec::new() });
+        }
+        self.slots[0].pool.run_batch(samples, workers, states, step)
+    }
+
+    /// Make the first `ring` instance slots (and staging buffers)
+    /// ready for a batch against `states`.
+    fn ensure(&mut self, ring: usize,
+              states: &[(String, ParamState)]) {
+        for slot in self.slots.iter_mut().take(ring) {
+            let matches = slot.fork.len() == states.len()
+                && slot.fork.iter().zip(states).all(
+                    |((fname, f), (name, st))| {
+                        fname == name
+                            && f.grad_acc.data().len()
+                                == st.grad_acc.data().len()
+                    });
+            if matches {
+                for (_, f) in &mut slot.fork {
+                    f.reset();
+                }
+            } else {
+                slot.fork = states
+                    .iter()
+                    .map(|(name, st)| (name.clone(), st.fork_shard()))
+                    .collect();
+            }
+        }
+        while self.slots.len() < ring {
+            self.slots.push(InstanceSlot {
+                pool: WorkerPool::new(),
+                fork: states
+                    .iter()
+                    .map(|(name, st)| (name.clone(), st.fork_shard()))
+                    .collect(),
+            });
+        }
+        while self.flats.len() < ring {
+            self.flats.push(Vec::new());
+        }
+    }
+
+    /// Run one batch data-parallel across `instances` accelerator
+    /// instances — the pooled core behind
+    /// [`super::cluster::run_batch_cluster_with`].  With `plan =
+    /// None` the gradient merge is the monolithic collective
+    /// all-reduce; with `Some(plan)` each bucket is reduced and folded
+    /// into `states` the moment it completes, in reverse-layer order.
+    /// Either way the result is bit-identical (see module docs).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_cluster<F>(&mut self, samples: &[Sample],
+                          instances: usize, workers: usize,
+                          states: &mut [(String, ParamState)], step: &F,
+                          collective: &dyn Collective,
+                          plan: Option<&BucketPlan>)
+                          -> Result<(i64, ClusterReport)>
+    where
+        F: Fn(&Sample, &mut Scratch) -> Result<StepOut> + Sync,
+    {
+        if samples.is_empty() {
+            bail!("cluster: cannot run an empty batch");
+        }
+        let t0 = Instant::now();
+        let ring = instances.max(1);
+        let sizes = shard_sizes(samples.len(), ring);
+        let n = sizes.len(); // instances that received work (≤ ring)
+        let mut slices: Vec<&[Sample]> = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for &sz in &sizes {
+            slices.push(&samples[off..off + sz]);
+            off += sz;
+        }
+        // idle instances (beyond the shard count) keep their zeroed
+        // replica but still join the collective, like idle members of
+        // a deployed ring
+        self.ensure(ring, states);
+
+        let results: Vec<Result<i64>> = if n == 1 {
+            let InstanceSlot { pool, fork } = &mut self.slots[0];
+            vec![pool.run_batch(slices[0], workers, fork, step)
+                     .map(|(loss, _)| loss)]
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = slices
+                    .iter()
+                    .zip(self.slots.iter_mut())
+                    .map(|(&sl, slot)| {
+                        scope.spawn(move || {
+                            let InstanceSlot { pool, fork } = slot;
+                            pool.run_batch(sl, workers, fork, step)
+                                .map(|(loss, _)| loss)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(anyhow!(
+                                "cluster: instance thread panicked"))
+                        })
+                    })
+                    .collect()
+            })
+        };
+        // all-or-nothing: propagate before the collective so `states`
+        // never sees a partial cluster
+        let losses = results.into_iter().collect::<Result<Vec<i64>>>()?;
+        let loss_sum: i64 = losses.iter().sum();
+
+        // flatten each instance's accumulators into its persistent
+        // staging buffer (clear() keeps the allocation)
+        for (slot, flat) in
+            self.slots.iter().zip(self.flats.iter_mut()).take(ring)
+        {
+            flat.clear();
+            for (_, st) in &slot.fork {
+                flat.extend_from_slice(st.grad_acc.data());
+            }
+        }
+        let flats = &mut self.flats[..ring];
+
+        let tc = Instant::now();
+        let stats = match plan {
+            Some(p) => {
+                debug_assert_eq!(
+                    p.total_words() as usize, flats[0].len(),
+                    "bucket plan does not cover the gradient vector");
+                let mut steps = 0usize;
+                let mut total_words = 0u64;
+                // pipelined merge: reduce each bucket in reverse-layer
+                // order and fold it the moment it completes
+                for b in &p.buckets {
+                    let st =
+                        collective.all_reduce_range(flats, b.lo, b.hi);
+                    steps += st.steps;
+                    total_words += st.total_words;
+                    fold_range(states, &flats[0], b.lo, b.hi);
+                }
+                CollectiveStats { steps, total_words }
+            }
+            None => {
+                let st = collective.all_reduce(flats);
+                let hi = flats[0].len();
+                fold_range(states, &flats[0], 0, hi);
+                st
+            }
+        };
+        let comm_seconds = tc.elapsed().as_secs_f64();
+        debug_assert!(
+            flats.iter().all(|f| *f == flats[0]),
+            "collective left instances with diverged accumulators");
+
+        let images: usize = self
+            .slots
+            .iter()
+            .take(ring)
+            .map(|s| s.fork.first().map_or(0, |(_, st)| st.count))
+            .sum();
+        for (_, st) in states.iter_mut() {
+            st.count += images;
+        }
+
+        let report = ClusterReport {
+            instances: ring,
+            images: samples.len(),
+            shard_sizes: sizes,
+            ring_steps: stats.steps,
+            ring_words: stats.total_words,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            comm_seconds,
+        };
+        Ok((loss_sum, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::nn::sgd::ParamKind;
+    use crate::nn::tensor::Tensor;
+
+    fn samples(count: usize) -> Vec<Sample> {
+        (0..count)
+            .map(|i| Sample {
+                image: Tensor::from_vec(
+                    &[4],
+                    vec![
+                        i as i32 + 1,
+                        -(i as i32) - 1,
+                        i32::MAX - i as i32,
+                        i32::MIN + i as i32,
+                    ],
+                ),
+                label: i % 3,
+            })
+            .collect()
+    }
+
+    fn step(s: &Sample, _: &mut Scratch) -> Result<StepOut> {
+        Ok(StepOut { loss: s.label as i32,
+                     grads: vec![s.image.clone()] })
+    }
+
+    fn fresh_states() -> Vec<(String, ParamState)> {
+        vec![("w".to_string(),
+              ParamState::new(ParamKind::Weight, &[4]))]
+    }
+
+    #[test]
+    fn pooled_engine_reuse_is_bit_identical_across_batches() {
+        // run the same batches through a fresh transient engine and a
+        // reused pool; every batch must match to the bit
+        let mut pool = WorkerPool::new();
+        for round in 0..3 {
+            let batch = samples(10 + round);
+            let mut seq = fresh_states();
+            let (l_seq, _) =
+                engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+            let mut pooled = fresh_states();
+            let (l_pool, rep) = pool
+                .run_batch(&batch, 4, &mut pooled, &step)
+                .unwrap();
+            assert_eq!(l_pool, l_seq, "round {round}");
+            assert_eq!(pooled[0].1.grad_acc, seq[0].1.grad_acc,
+                       "round {round}");
+            assert_eq!(pooled[0].1.count, seq[0].1.count);
+            assert_eq!(rep.workers, 4);
+        }
+    }
+
+    #[test]
+    fn pooled_engine_shrinking_worker_count_reuses_slots() {
+        let mut pool = WorkerPool::new();
+        let batch = samples(12);
+        let mut seq = fresh_states();
+        engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        for workers in [6, 2, 4, 1] {
+            let mut pooled = fresh_states();
+            pool.run_batch(&batch, workers, &mut pooled, &step)
+                .unwrap();
+            assert_eq!(pooled[0].1.grad_acc, seq[0].1.grad_acc,
+                       "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pooled_cluster_reuse_is_bit_identical_across_batches() {
+        use crate::engine::collective::HierCollective;
+        let mut pool = ClusterPool::new();
+        for round in 0..3 {
+            let batch = samples(9 + round);
+            let mut seq = fresh_states();
+            let (l_seq, _) =
+                engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+            let mut cl = fresh_states();
+            let (l_cl, rep) = pool
+                .run_cluster(&batch, 4, 2, &mut cl, &step,
+                             &HierCollective { group: 2 }, None)
+                .unwrap();
+            assert_eq!(l_cl, l_seq, "round {round}");
+            assert_eq!(cl[0].1.grad_acc, seq[0].1.grad_acc,
+                       "round {round}");
+            assert_eq!(cl[0].1.count, seq[0].1.count);
+            assert_eq!(rep.ring_steps, 4);
+            assert!(rep.comm_seconds <= rep.wall_seconds);
+        }
+    }
+
+    #[test]
+    fn pooled_cluster_failed_batch_leaves_states_untouched() {
+        use crate::engine::collective::RingCollective;
+        let mut pool = ClusterPool::new();
+        let batch = samples(8);
+        let failing =
+            |s: &Sample, sc: &mut Scratch| -> Result<StepOut> {
+                if s.label == 2 {
+                    bail!("injected failure");
+                }
+                step(s, sc)
+            };
+        let mut st = fresh_states();
+        let err = pool
+            .run_cluster(&batch, 4, 1, &mut st, &failing,
+                         &RingCollective, None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+        assert!(st[0].1.grad_acc.data().iter().all(|&v| v == 0));
+        assert_eq!(st[0].1.count, 0);
+        // the pool recovers: the next (clean) batch reuses the slots
+        // whose forks were left half-accumulated by the failure
+        let mut seq = fresh_states();
+        engine::run_batch(&batch, 1, &mut seq, &step).unwrap();
+        pool.run_cluster(&batch, 4, 1, &mut st, &step,
+                         &RingCollective, None)
+            .unwrap();
+        assert_eq!(st[0].1.grad_acc, seq[0].1.grad_acc);
+    }
+
+    #[test]
+    fn bucketed_cluster_merge_matches_monolithic() {
+        use crate::engine::collective::RingCollective;
+        let batch = samples(10);
+        let mut mono = fresh_states();
+        let mut pool = ClusterPool::new();
+        pool.run_cluster(&batch, 4, 1, &mut mono, &step,
+                         &RingCollective, None)
+            .unwrap();
+        // one 4-word parameter split into two 2-word buckets
+        let plan = BucketPlan::build(
+            &[("w_a".to_string(), 2), ("w_b".to_string(), 2)], 2);
+        assert_eq!(plan.buckets.len(), 2);
+        let mut bucketed = fresh_states();
+        let mut pool2 = ClusterPool::new();
+        pool2
+            .run_cluster(&batch, 4, 1, &mut bucketed, &step,
+                         &RingCollective, Some(&plan))
+            .unwrap();
+        assert_eq!(bucketed[0].1.grad_acc, mono[0].1.grad_acc);
+        assert_eq!(bucketed[0].1.count, mono[0].1.count);
+    }
+}

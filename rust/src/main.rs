@@ -125,6 +125,7 @@ fn flag_spec(cmd: &str)
              -> Option<(Vec<&'static str>, Vec<&'static str>)> {
     // design-point + spec-file flags shared by compile/simulate/train
     const DESIGN: &[&str] = &["net", "scale", "pox", "poy", "pof",
+                              "bucket-kwords",
                               "clock-mhz", "dram-gbs", "tile-rows",
                               "accelerators", "link-gbs", "link-eff",
                               "topology", "spec", "dump-spec"];
@@ -205,6 +206,9 @@ fn spec_builder(args: &Args) -> Result<SpecBuilder> {
     }
     if let Some(v) = args.get("topology") {
         b = b.topology(v.parse()?);
+    }
+    if let Some(v) = args.usize_opt("bucket-kwords")? {
+        b = b.bucket_kwords(v);
     }
     if args.has("no-load-balance") {
         b = b.load_balance(false);
@@ -525,9 +529,16 @@ fn cmd_report(args: &Args) -> Result<()> {
                  metrics::topology_scaling(1, 40, &[4, 16, 64]));
         any = true;
     }
+    if which == "overlap" || which == "all" {
+        println!("== bucketed all-reduce overlap: 1X @ BS 64, hidden \
+                  vs exposed comm ==\n{}",
+                 metrics::overlap_scaling(1, 64, &[4, 16, 64]));
+        any = true;
+    }
     if !any {
         bail!("unknown report `{which}` \
-               (table2|table3|fig9|fig10|engine|cluster|topology|all)");
+               (table2|table3|fig9|fig10|engine|cluster|topology|\
+               overlap|all)");
     }
     Ok(())
 }
@@ -574,6 +585,10 @@ COMMANDS:
             [--topology T      ring|hier|auto collective (see compile)]
             [--link-gbs F      inter-accelerator link bandwidth, GB/s]
             [--link-eff F      link efficiency derate, in (0, 1]]
+            [--bucket-kwords N cap per-layer gradient buckets at N
+                               kibi-words and overlap their all-reduce
+                               with the backward pass (0 = off; a
+                               parallelism knob, never fingerprinted)]
   train     --scale .. --backend golden|perop|fused --images N
             --epochs N --batch N --lr F [--eval N]
             [--artifacts DIR   AOT artifact bundle — required by the
@@ -589,6 +604,9 @@ COMMANDS:
                                backend; bit-identical to one instance)]
             [--topology T      ring|hier|auto collective (see compile);
                                any topology trains bit-identically]
+            [--bucket-kwords N bucket the cluster merge per layer and
+                               launch each bucket as its gradients
+                               finalize (bit-identical to monolithic)]
             [--checkpoint-dir D    write crash-safe checkpoints to
                                    D/ckpt.stratus (atomic tmp+rename,
                                    CRC-guarded; see DESIGN.md)]
@@ -604,7 +622,7 @@ COMMANDS:
                                    the checkpoint boundary) —
                                    bit-identical to never resizing;
                                    requires --checkpoint-dir]
-  report    table2|table3|fig9|fig10|engine|cluster|topology|all
+  report    table2|table3|fig9|fig10|engine|cluster|topology|overlap|all
   calibrate --scale .. --samples N          adaptive fixed-point pass
 
 Flags that take a value error when the value is missing; unrecognized

@@ -447,12 +447,15 @@ mod tests {
             "engine_throughput",
             "cluster_scaling",
             "cluster_hier",
+            "cluster_overlap",
             "hotpath",
             "hotpath_conv_fp",
             "hotpath_conv_bp",
             "hotpath_conv_wu",
             "hotpath_fc",
             "hotpath_bn",
+            "hotpath_pool_fp",
+            "hotpath_pool_bp",
         ] {
             let base = json
                 .get(bench)

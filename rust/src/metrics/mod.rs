@@ -273,6 +273,49 @@ pub fn topology_scaling(scale: usize, batch: usize,
     render_table(&header, &rows)
 }
 
+/// Bucketed-overlap projection table (`report overlap`): per instance
+/// count and topology, how much of the bucketed all-reduce hides under
+/// the backward pass and what stays exposed, against the monolithic
+/// serial epilogue — the pipelined cluster engine's headline effect.
+pub fn overlap_scaling(scale: usize, batch: usize,
+                       instances: &[usize]) -> String {
+    use crate::config::Topology;
+    use crate::sim::project_overlap;
+    let net = Network::cifar(scale);
+    let project = |n: usize, topo: Topology| {
+        let mut dv = DesignVars::for_scale(scale);
+        dv.cluster = n.max(1);
+        dv.topology = topo;
+        dv.bucket_kwords = 32;
+        let acc = RtlCompiler::default()
+            .compile(&net, &dv)
+            .expect("paper configs always compile");
+        project_overlap(&acc, batch)
+    };
+    let header = ["instances", "topology", "buckets", "serial-cyc",
+                  "hidden-cyc", "exposed-cyc", "comm saved"];
+    let mut rows = Vec::new();
+    for &n in instances {
+        for topo in [Topology::Ring, Topology::Hier] {
+            let r = project(n, topo);
+            let saved = r.serial_comm_cycles as f64
+                - r.exposed_comm_cycles as f64;
+            rows.push(vec![
+                format!("{n}"),
+                format!("{topo:?}").to_lowercase(),
+                format!("{}", r.buckets.len()),
+                format!("{}", r.serial_comm_cycles),
+                format!("{}", r.hidden_comm_cycles),
+                format!("{}", r.exposed_comm_cycles),
+                format!("{:.0}%",
+                        100.0 * saved
+                            / (r.serial_comm_cycles as f64).max(1.0)),
+            ]);
+        }
+    }
+    render_table(&header, &rows)
+}
+
 /// Fig. 10: buffer usage breakdown of the 4X design.
 pub fn fig10() -> String {
     let net = Network::cifar(4);
@@ -417,6 +460,31 @@ mod tests {
         for g in ["Input", "Output", "Weight", "WeightGradient",
                   "PoolIndex", "ActGradientMask"] {
             assert!(t.contains(g), "{g} missing");
+        }
+    }
+
+    #[test]
+    fn overlap_scaling_hides_communication() {
+        let t = overlap_scaling(1, 64, &[4, 16]);
+        // header + separator + (2 instance counts x 2 topologies)
+        assert_eq!(t.lines().count(), 6);
+        let col = |line: &str, i: usize| -> Option<f64> {
+            line.split('|').nth(i).and_then(|c| {
+                c.trim().trim_end_matches('%').parse::<f64>().ok()
+            })
+        };
+        for r in t.lines().skip(2) {
+            let buckets = col(r, 3).unwrap();
+            assert!(buckets > 1.0, "no bucketing in row: {r}");
+            let hidden = col(r, 5).unwrap();
+            assert!(hidden > 0.0, "nothing hidden in row: {r}");
+            // exposed never exceeds the serial epilogue at these
+            // scales (ring's small-N plans and hier's grouped ones
+            // both fit under the backward pass)
+            let serial = col(r, 4).unwrap();
+            let exposed = col(r, 6).unwrap();
+            assert!(exposed <= serial,
+                    "exposed {exposed} > serial {serial}: {r}");
         }
     }
 }

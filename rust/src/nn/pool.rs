@@ -1,12 +1,18 @@
 //! Golden-model pooling / upsampling / scaling units (§III-G), bit-exact
 //! with the Pallas kernels.
 //!
-//! The window walks run on flat row slices (one bounds-checked slice
-//! per window row instead of a shape lookup per element); the scan
-//! order (dy → dx, strict `>`) is exactly the scalar
+//! The hot loops are **row-blocked**: [`maxpool`] walks each input row
+//! exactly once, splitting it into `k`-wide windows with
+//! `chunks_exact` and folding every window of the row into the output
+//! row's running max/argmax (one sequential read stream per row, no
+//! per-window strided gathers); [`upsample_scale`] reads its gradient
+//! and index rows as slices and computes each scatter target from the
+//! row base.  The per-window comparison sequence (dy → dx, strict `>`,
+//! best starts at `i32::MIN` with index 0) is exactly the scalar
 //! [`reference`](crate::nn::reference) order, so outputs and argmax
 //! tie-breaks are bit-identical — property-tested in
-//! `tests/kernels.rs`.
+//! `tests/kernels.rs`, and raced against the scalar oracles in the
+//! `hotpath` bench's `pool_fp`/`pool_bp` rows.
 
 use crate::fixed::sat16;
 use crate::nn::tensor::Tensor;
@@ -28,21 +34,20 @@ pub fn maxpool(x: &Tensor, k: usize) -> (Tensor, Tensor) {
     for ci in 0..c {
         for oy in 0..oh {
             let obase = (ci * oh + oy) * ow;
-            for ox in 0..ow {
-                let mut best = i32::MIN;
-                let mut best_i = 0i32;
-                for dy in 0..k {
-                    let xrow = (ci * h + oy * k + dy) * w + ox * k;
-                    for (dx, &v) in xd[xrow..xrow + k].iter().enumerate()
-                    {
-                        if v > best {
-                            best = v;
-                            best_i = (dy * k + dx) as i32;
+            let orow = &mut od[obase..obase + ow];
+            let irow = &mut id[obase..obase + ow];
+            orow.fill(i32::MIN);
+            for dy in 0..k {
+                let xrow = (ci * h + oy * k + dy) * w;
+                let row = &xd[xrow..xrow + w];
+                for (ox, win) in row.chunks_exact(k).enumerate() {
+                    for (dx, &v) in win.iter().enumerate() {
+                        if v > orow[ox] {
+                            orow[ox] = v;
+                            irow[ox] = (dy * k + dx) as i32;
                         }
                     }
                 }
-                od[obase + ox] = best;
-                id[obase + ox] = best_i;
             }
         }
     }
@@ -66,11 +71,14 @@ pub fn upsample_scale(g: &Tensor, idx: &Tensor, mask: &Tensor, k: usize)
     for ci in 0..c {
         for oy in 0..oh {
             let gbase = (ci * oh + oy) * ow;
-            for ox in 0..ow {
-                let i = idxd[gbase + ox] as usize;
+            let grow = &gd[gbase..gbase + ow];
+            let irow = &idxd[gbase..gbase + ow];
+            let xbase = (ci * h + oy * k) * w;
+            for (ox, (&gv, &i)) in grow.iter().zip(irow).enumerate() {
+                let i = i as usize;
                 let (dy, dx) = (i / k, i % k);
-                let p = (ci * h + oy * k + dy) * w + ox * k + dx;
-                od[p] = sat16(gd[gbase + ox].wrapping_mul(md[p]));
+                let p = xbase + dy * w + ox * k + dx;
+                od[p] = sat16(gv.wrapping_mul(md[p]));
             }
         }
     }

@@ -2,11 +2,13 @@
 //!
 //! The scalar kernels allocated on every call: a padded input plane per
 //! conv FP/BP/WU and a fresh `transpose_flip` weight tensor per conv BP
-//! — per *image*, per *layer*.  [`Scratch`] hoists both to per-shard
-//! lifetime: the engine creates one workspace per worker shard
-//! ([`engine::run_batch`](crate::engine::run_batch)) and threads it
-//! through the step function, so steady-state training performs no
-//! per-image heap allocation in the conv hot path.
+//! — per *image*, per *layer*.  [`Scratch`] hoists both past per-shard
+//! lifetime: the persistent worker pool
+//! ([`engine::pool`](crate::engine::pool)) owns one workspace per
+//! worker slot and reuses it across batches, so steady-state training
+//! performs no per-image *or* per-batch heap allocation in the conv
+//! hot path — the pad plane and flip-cache capacity survive from one
+//! batch to the next.
 //!
 //! # Lifetime / invalidation contract
 //!
@@ -18,8 +20,10 @@
 //!   `end_batch`), so the cache is valid for exactly one batch:
 //!   [`Scratch::invalidate`] must run whenever parameters change —
 //!   the coordinator calls it from `end_batch` and `resume_from`.
-//!   Per-shard scratches are created fresh per batch, so they never
-//!   observe a parameter change mid-life.
+//!   Pool-owned per-shard scratches persist across batches, so the
+//!   pool invalidates every slot's flip cache at the start of each
+//!   batch before any worker touches the new weights; only the buffer
+//!   *capacity* is carried over, never weight-derived state.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -362,6 +362,11 @@ pub struct DesignOverrides {
     pub link_gbytes: Option<f64>,
     pub link_efficiency: Option<f64>,
     pub topology: Option<Topology>,
+    /// Gradient-bucket size cap in kibi-words for the overlapped
+    /// cluster all-reduce (0 = monolithic serial epilogue).  A
+    /// parallelism knob like `cluster`/`topology`: excluded from the
+    /// checkpoint fingerprint.
+    pub bucket_kwords: Option<usize>,
     pub load_balance: Option<bool>,
     pub double_buffer: Option<bool>,
 }
@@ -381,6 +386,7 @@ impl DesignOverrides {
             dv.link_efficiency = v;
         }
         if let Some(v) = self.topology { dv.topology = v; }
+        if let Some(v) = self.bucket_kwords { dv.bucket_kwords = v; }
         if let Some(v) = self.load_balance { dv.load_balance = v; }
         if let Some(v) = self.double_buffer { dv.double_buffer = v; }
     }
@@ -401,6 +407,7 @@ impl DesignOverrides {
         us("pof", self.pof);
         us("tile_rows", self.tile_rows);
         us("cluster", self.cluster);
+        us("bucket_kwords", self.bucket_kwords);
         let mut fs = |k: &str, v: Option<f64>| {
             if let Some(v) = v {
                 m.insert(k.to_string(), Json::Num(v));
@@ -428,8 +435,8 @@ impl DesignOverrides {
         check_keys(m,
                    &["pox", "poy", "pof", "clock_mhz", "dram_gbytes",
                      "tile_rows", "cluster", "link_gbytes",
-                     "link_efficiency", "topology", "load_balance",
-                     "double_buffer"],
+                     "link_efficiency", "topology", "bucket_kwords",
+                     "load_balance", "double_buffer"],
                    "design")?;
         let topology = match m.get("topology") {
             None => None,
@@ -454,6 +461,7 @@ impl DesignOverrides {
             link_gbytes: f64_key(m, "link_gbytes", "design")?,
             link_efficiency: f64_key(m, "link_efficiency", "design")?,
             topology,
+            bucket_kwords: usize_key(m, "bucket_kwords", "design")?,
             load_balance: bool_key(m, "load_balance", "design")?,
             double_buffer: bool_key(m, "double_buffer", "design")?,
         })
@@ -924,6 +932,13 @@ impl SpecBuilder {
     /// Collective all-reduce topology (`DesignVars::topology`).
     pub fn topology(mut self, v: Topology) -> SpecBuilder {
         self.design.topology = Some(v);
+        self
+    }
+
+    /// Gradient-bucket size cap in kibi-words for the overlapped
+    /// cluster all-reduce (`DesignVars::bucket_kwords`; 0 = off).
+    pub fn bucket_kwords(mut self, v: usize) -> SpecBuilder {
+        self.design.bucket_kwords = Some(v);
         self
     }
 

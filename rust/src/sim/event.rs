@@ -203,6 +203,82 @@ pub fn simulate_cluster_events_with(acc: &Accelerator, batch: usize,
     }
 }
 
+/// Event timeline of one **overlapped** cluster batch iteration: the
+/// compute span, each gradient bucket's all-reduce split into its
+/// hidden segment (under remaining backward-pass compute) and its
+/// exposed segment (past the compute span), then the weight update.
+///
+/// Anchored on the analytic model via [`crate::sim::project_overlap`]
+/// (not the event-driven per-image makespan), so the timeline and the
+/// overlap projection agree cycle-for-cycle on what is hidden.
+#[derive(Debug, Clone)]
+pub struct OverlapEventReport {
+    pub instances: usize,
+    /// Cycle at which the weight update retires.
+    pub makespan: u64,
+    /// Shard compute span (per-image latency × ceil(batch/N)).
+    pub compute_cycles: u64,
+    /// Collective cycles overlapped with compute.
+    pub hidden_cycles: u64,
+    /// Collective cycles paid past the compute span.
+    pub exposed_cycles: u64,
+    /// Timeline intervals: one `compute` event, per-bucket
+    /// `allreduce/{bucket}/hidden` and `allreduce/{bucket}/exposed`
+    /// segments (only the non-empty ones), one `weight-update` event.
+    pub events: Vec<TimelineEvent>,
+}
+
+/// Render [`crate::sim::project_overlap`]'s bucket timeline as labeled
+/// events.  With bucketing off the projection degenerates to a single
+/// fully-exposed `allreduce/all/exposed` segment — the serial epilogue
+/// [`simulate_cluster_events`] draws.
+pub fn simulate_overlap_events(acc: &Accelerator, batch: usize)
+                               -> OverlapEventReport {
+    let r = crate::sim::project_overlap(acc, batch);
+    let compute = r.compute_cycles;
+    let mut events = vec![TimelineEvent {
+        label: format!(
+            "compute x{}",
+            (batch.max(1) as u64)
+                .div_ceil(acc.dv.cluster.max(1) as u64)
+        ),
+        start: 0,
+        end: compute,
+    }];
+    let mut comm_end = compute;
+    for b in &r.buckets {
+        if b.hidden_cycles > 0 {
+            events.push(TimelineEvent {
+                label: format!("allreduce/{}/hidden", b.label),
+                start: b.start_cycles,
+                end: b.start_cycles + b.hidden_cycles,
+            });
+        }
+        if b.exposed_cycles > 0 {
+            events.push(TimelineEvent {
+                label: format!("allreduce/{}/exposed", b.label),
+                start: b.end_cycles - b.exposed_cycles,
+                end: b.end_cycles,
+            });
+        }
+        comm_end = comm_end.max(b.end_cycles);
+    }
+    let update = r.update_cycles;
+    events.push(TimelineEvent {
+        label: "weight-update".into(),
+        start: comm_end,
+        end: comm_end + update,
+    });
+    OverlapEventReport {
+        instances: r.instances,
+        makespan: comm_end + update,
+        compute_cycles: compute,
+        hidden_cycles: r.hidden_comm_cycles,
+        exposed_cycles: r.exposed_comm_cycles,
+        events,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,5 +477,80 @@ mod tests {
         let e4 = simulate_cluster_events(&cluster_acc(4), 40);
         assert_eq!(e1.compute_cycles, 4 * e4.compute_cycles);
         assert!(e4.makespan < e1.makespan);
+    }
+
+    fn bucketed_acc(instances: usize, kwords: usize)
+                    -> crate::compiler::Accelerator {
+        let mut dv = DesignVars::for_scale(1);
+        dv.cluster = instances;
+        dv.bucket_kwords = kwords;
+        RtlCompiler::default()
+            .compile(&Network::cifar(1), &dv)
+            .unwrap()
+    }
+
+    #[test]
+    fn overlap_timeline_splits_hidden_and_exposed() {
+        let acc = bucketed_acc(4, 16);
+        let ev = simulate_overlap_events(&acc, 40);
+        let hidden: Vec<&TimelineEvent> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.ends_with("/hidden"))
+            .collect();
+        let exposed: Vec<&TimelineEvent> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.ends_with("/exposed"))
+            .collect();
+        assert!(!hidden.is_empty(),
+                "bucketed run overlapped nothing");
+        // hidden segments live inside the compute span, exposed ones
+        // strictly after it
+        assert!(hidden
+            .iter()
+            .all(|e| e.end <= ev.compute_cycles));
+        assert!(exposed
+            .iter()
+            .all(|e| e.start >= ev.compute_cycles));
+        // segment sums reconcile with the projection's split
+        assert_eq!(
+            hidden.iter().map(|e| e.end - e.start).sum::<u64>(),
+            ev.hidden_cycles);
+        assert_eq!(
+            exposed.iter().map(|e| e.end - e.start).sum::<u64>(),
+            ev.exposed_cycles);
+        // the weight update is last and starts once compute and every
+        // bucket are done
+        let update = ev.events.last().unwrap();
+        assert_eq!(update.label, "weight-update");
+        assert_eq!(update.end, ev.makespan);
+        assert!(update.start >= ev.compute_cycles);
+        assert!(ev
+            .events
+            .iter()
+            .all(|e| e.end <= update.start
+                || e.label == "weight-update"));
+    }
+
+    #[test]
+    fn overlap_timeline_monolithic_is_all_exposed() {
+        // bucketing off: one fully-exposed segment, zero hidden —
+        // exactly the serial epilogue the plain cluster timeline draws
+        let acc = cluster_acc(4);
+        let ev = simulate_overlap_events(&acc, 40);
+        assert_eq!(ev.hidden_cycles, 0);
+        assert!(ev.exposed_cycles > 0);
+        let segs: Vec<&TimelineEvent> = ev
+            .events
+            .iter()
+            .filter(|e| e.label.starts_with("allreduce/"))
+            .collect();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].label, "allreduce/all/exposed");
+        assert_eq!(segs[0].end - segs[0].start, ev.exposed_cycles);
+        let analytic = simulate(&acc, 40);
+        assert_eq!(ev.exposed_cycles,
+                   analytic.allreduce.latency_cycles);
     }
 }

@@ -1,0 +1,289 @@
+//! Pipelined-overlap equivalence suite (ISSUE 9 acceptance
+//! criterion): layer-bucketed all-reduce launched in reverse-BP order
+//! on the persistent worker pool must be a pure performance transform
+//! — same seed, same batch stream, any bucket cap, any instance count,
+//! any topology => bit-identical parameters, losses, and optimizer
+//! state to the serial monolithic merge after every `end_batch`.
+//! Mirrors rust/tests/cluster.rs with the `bucket-kwords` knob turned
+//! on, and pins kill/resume across bucketing changes (the fingerprint
+//! deliberately excludes the knob).
+
+use stratus::ckpt::Cursor;
+use stratus::config::Topology;
+use stratus::coordinator::{CheckpointPolicy, TrainRun, Trainer};
+use stratus::data::Synthetic;
+use stratus::engine::collective::BucketPlan;
+use stratus::session::{NetSource, Session, Spec};
+
+/// A net whose ~5.9K-word gradient actually splits at a 1 KiW bucket
+/// cap (the 8x8 tiny net of tests/cluster.rs is a single bucket even
+/// at kwords = 1, which would make these tests vacuous).
+fn split_net() -> NetSource {
+    NetSource::inline(
+        "input 3 16 16\nconv c1 8 k3 s1 p1 relu\nconv c2 8 k3 s1 p1 \
+         relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+}
+
+fn split_bn_net() -> NetSource {
+    NetSource::inline(
+        "input 3 16 16\nconv c1 8 k3 s1 p1\nbn n1 relu\nconv c2 8 k3 \
+         s1 p1\nbn n2 relu\npool p1 2\nfc fc 10\nloss hinge",
+    )
+}
+
+/// Session-built trainer with the overlap knob: `kwords == 0` is the
+/// serial monolithic merge, anything else buckets at that cap.
+fn trainer_kw(src: &NetSource, batch: usize, accelerators: usize,
+              workers: usize, topology: Topology, kwords: usize)
+              -> Trainer {
+    let mut b = Spec::builder()
+        .net(src.clone())
+        .batch(batch)
+        .lr(0.002)
+        .momentum(0.9)
+        .accelerators(accelerators)
+        .workers(workers)
+        .topology(topology);
+    if kwords > 0 {
+        b = b.bucket_kwords(kwords);
+    }
+    Session::new(b.build().unwrap()).unwrap().trainer().unwrap()
+}
+
+/// Train `serial` (1 instance, monolithic) and `pipelined` (bucketed)
+/// on the same stream and require bit-identical everything.
+fn assert_pipelined_matches_serial(src: &NetSource, batch_images: usize,
+                                   batches: usize, accelerators: usize,
+                                   workers: usize, topology: Topology,
+                                   kwords: usize) {
+    let net = src.resolve().unwrap();
+    let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
+    let stream = data.batch(0, batch_images * batches);
+    let mut serial =
+        trainer_kw(src, batch_images, 1, 1, Topology::Ring, 0);
+    let mut pipelined = trainer_kw(src, batch_images, accelerators,
+                                   workers, topology, kwords);
+    for chunk in stream.chunks(batch_images) {
+        let l_ser = serial.train_batch(chunk).unwrap();
+        let l_pip = pipelined.train_batch(chunk).unwrap();
+        assert_eq!(l_ser, l_pip,
+                   "loss diverged: {accelerators} instances x {workers} \
+                    workers, {topology:?}, kwords {kwords}");
+    }
+    assert_eq!(serial.flat_params(), pipelined.flat_params(),
+               "parameters diverged: {accelerators} instances x \
+                {workers} workers, {topology:?}, kwords {kwords}");
+    for ((n, s), (_, p)) in
+        serial.param_states().iter().zip(pipelined.param_states())
+    {
+        assert_eq!(s.grad_acc, p.grad_acc, "{n} grad_acc");
+        assert_eq!(s.momentum, p.momentum, "{n} momentum");
+        assert_eq!(s.count, p.count, "{n} count");
+    }
+    assert_eq!(serial.metrics.images, pipelined.metrics.images);
+    assert_eq!(serial.metrics.loss_sum, pipelined.metrics.loss_sum);
+}
+
+#[test]
+fn bucket_plan_splits_the_sweep_net() {
+    // the tests below are only meaningful if kwords = 1 really buckets
+    // this net; pin the plan shape and its boundary invariants
+    let net = split_net().resolve().unwrap();
+    let plan = BucketPlan::build(&net.ring_segments(), 1024);
+    assert!(plan.buckets.len() >= 2,
+            "split_net stayed monolithic: {plan:?}");
+    assert_eq!(plan.total_words(), net.ring_words() as u64);
+    // buckets tile [0, ring_words) contiguously from the vector tail
+    let mut hi = net.ring_words();
+    for b in &plan.buckets {
+        assert_eq!(b.hi, hi, "{} not contiguous", b.label);
+        assert!(b.lo < b.hi);
+        hi = b.lo;
+    }
+    assert_eq!(hi, 0);
+    // every boundary coincides with a parameter-segment boundary
+    let mut edges = vec![0usize];
+    let mut acc = 0usize;
+    for (_, w) in net.ring_segments() {
+        acc += w;
+        edges.push(acc);
+    }
+    for b in &plan.buckets {
+        assert!(edges.contains(&b.lo) && edges.contains(&b.hi),
+                "bucket {} cuts inside a tensor", b.label);
+    }
+}
+
+#[test]
+fn bucketed_training_matches_serial_across_bucket_sizes() {
+    // cap sweep at fixed N: from every-layer-its-own-bucket up to a
+    // cap bigger than the whole gradient (degenerates to monolithic)
+    for kwords in [1usize, 2, 8, 1024] {
+        assert_pipelined_matches_serial(&split_net(), 8, 2, 4, 1,
+                                        Topology::Ring, kwords);
+    }
+}
+
+#[test]
+fn pipelined_sweep_ring_matches_serial() {
+    // ISSUE 9 acceptance sweep, ring half: {1,2,4} workers x
+    // {1,4,16} accelerators, bucketed at 1 KiW
+    for workers in [1usize, 2, 4] {
+        for accelerators in [1usize, 4, 16] {
+            assert_pipelined_matches_serial(&split_net(), 8, 2,
+                                            accelerators, workers,
+                                            Topology::Ring, 1);
+        }
+    }
+}
+
+#[test]
+fn pipelined_sweep_hier_matches_serial() {
+    // hier half of the sweep; N = 1 and 4 exercise the grouped
+    // collective's degenerate fallbacks, 16 its real 4x4 grouping
+    for workers in [1usize, 2, 4] {
+        for accelerators in [1usize, 4, 16] {
+            assert_pipelined_matches_serial(&split_net(), 8, 2,
+                                            accelerators, workers,
+                                            Topology::Hier, 1);
+        }
+    }
+}
+
+#[test]
+fn bucketed_bn_net_merges_stat_tensors_identically() {
+    // bn nets append statistic accumulators to the gradient vector;
+    // the bucket walk must re-shard those exactly like the monolith
+    assert_pipelined_matches_serial(&split_bn_net(), 6, 2, 4, 1,
+                                    Topology::Hier, 1);
+    assert_pipelined_matches_serial(&split_bn_net(), 6, 1, 16, 1,
+                                    Topology::Auto, 1);
+}
+
+#[test]
+fn uneven_shards_and_odd_caps_stay_bit_identical() {
+    // boundary cases: shards of unequal size, more instances than
+    // images, and a cap that forces one oversized single-tensor bucket
+    assert_pipelined_matches_serial(&split_net(), 10, 1, 4, 1,
+                                    Topology::Ring, 1);
+    assert_pipelined_matches_serial(&split_net(), 3, 1, 16, 1,
+                                    Topology::Ring, 2);
+    assert_pipelined_matches_serial(&split_net(), 8, 1, 4, 2,
+                                    Topology::Auto, 1);
+}
+
+#[test]
+fn fingerprint_excludes_bucket_kwords_but_not_hyper() {
+    let spec = |kwords: usize, lr: f64| {
+        let mut b = Spec::builder()
+            .net(split_net())
+            .batch(8)
+            .lr(lr)
+            .momentum(0.9);
+        if kwords > 0 {
+            b = b.bucket_kwords(kwords);
+        }
+        Session::new(b.build().unwrap()).unwrap().fingerprint()
+    };
+    // bucketing is a parallelism knob: resume must compose across it
+    assert_eq!(spec(0, 0.002), spec(8, 0.002),
+               "bucket_kwords leaked into the fingerprint");
+    // ...while real run parameters still bind
+    assert_ne!(spec(0, 0.002), spec(0, 0.02));
+}
+
+#[test]
+fn kill_resume_under_overlap_matches_uninterrupted() {
+    // kill mid-run under the pipelined merge, resume with different
+    // bucketing AND different instance count; final state must match
+    // the uninterrupted serial run (and the resume itself proves the
+    // fingerprint ignores bucket_kwords)
+    let dir = std::env::temp_dir().join(format!(
+        "stratus-overlap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("overlap.ckpt");
+    let src = split_net();
+    let net = src.resolve().unwrap();
+    const IMAGES: u64 = 16;
+    const BATCH: usize = 4;
+    const EPOCHS: u64 = 2;
+    let data = Synthetic::new(net.nclass, net.input, 77, 0.3);
+    let cfg = |max_batches: Option<u64>| TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: Some(CheckpointPolicy {
+            path: path.clone(),
+            every_batches: 1,
+            resize: None,
+        }),
+        max_batches,
+    };
+
+    // reference: uninterrupted serial monolithic run
+    let mut reference =
+        trainer_kw(&src, BATCH, 1, 1, Topology::Ring, 0);
+    let plain = TrainRun {
+        epochs: EPOCHS,
+        images: IMAGES,
+        checkpoint: None,
+        max_batches: None,
+    };
+    reference
+        .run(&data, &plain, Cursor::start(77, IMAGES), |_, _| Ok(()))
+        .unwrap();
+
+    // stage 1: pipelined bucketed merge at 4 instances, then "killed"
+    let mut t4 = trainer_kw(&src, BATCH, 4, 1, Topology::Ring, 1);
+    t4.run(&data, &cfg(Some(3)), Cursor::start(77, IMAGES),
+           |_, _| Ok(()))
+        .unwrap();
+    drop(t4);
+
+    // stage 2: resume with bucketing OFF at 2 instances and finish
+    let mut t2 = trainer_kw(&src, BATCH, 1, 1, Topology::Ring, 0)
+        .with_accelerators(2);
+    let cur = t2.resume_from(&path).unwrap();
+    assert_eq!(cur.batch, 3);
+    let end = t2.run(&data, &cfg(None), cur, |_, _| Ok(())).unwrap();
+    assert_eq!(end.epoch, EPOCHS);
+
+    assert_eq!(reference.flat_params(), t2.flat_params(),
+               "overlap kill/resume chain diverged from serial run");
+    for ((n, s), (_, p)) in
+        reference.param_states().iter().zip(t2.param_states())
+    {
+        assert_eq!(s.momentum, p.momentum, "{n} momentum");
+        assert_eq!(s.count, p.count, "{n} count");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn metrics_split_host_time_into_compute_and_comm() {
+    let src = split_net();
+    let net = src.resolve().unwrap();
+    let data = Synthetic::new(net.nclass, net.input, 5, 0.3);
+    let batch = data.batch(0, 8);
+    // cluster path: wall time splits exactly into compute + comm
+    let mut t = trainer_kw(&src, 8, 4, 1, Topology::Ring, 1);
+    t.train_batch(&batch).unwrap();
+    let m = &t.metrics;
+    assert!(m.host_seconds > 0.0);
+    assert!(m.host_compute_seconds > 0.0);
+    assert!(m.host_comm_seconds >= 0.0);
+    assert!((m.host_compute_seconds + m.host_comm_seconds
+             - m.host_seconds)
+                .abs()
+            < 1e-9 * m.host_seconds.max(1.0),
+            "compute {} + comm {} != wall {}", m.host_compute_seconds,
+            m.host_comm_seconds, m.host_seconds);
+    // engine path (no collective): all host time is compute
+    let mut t1 = trainer_kw(&src, 8, 1, 1, Topology::Ring, 0);
+    t1.train_batch(&batch).unwrap();
+    assert_eq!(t1.metrics.host_comm_seconds, 0.0);
+    assert!((t1.metrics.host_compute_seconds
+             - t1.metrics.host_seconds)
+                .abs()
+            < 1e-12);
+}
