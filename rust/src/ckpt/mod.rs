@@ -399,6 +399,14 @@ impl Checkpoint {
     }
 }
 
+/// Load just the cursor of the checkpoint at `path`.  Full validation
+/// still applies — a torn or corrupt file is rejected, never half
+/// read.  The serve queue-recovery scan uses this to report where
+/// each interrupted run will resume without restoring a trainer.
+pub fn peek_cursor(path: &Path) -> Result<Cursor> {
+    Ok(Checkpoint::load(path)?.cursor)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -545,6 +553,25 @@ mod tests {
         assert_eq!(r.cursor, ck.cursor);
         assert!(!path.with_file_name("ckpt.stratus.tmp").exists(),
                 "tmp file left behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peek_cursor_reads_and_still_validates() {
+        let dir = std::env::temp_dir()
+            .join(format!("stratus_peek_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.stratus");
+        let ck = sample_checkpoint();
+        let want = ck.cursor;
+        ck.save_atomic(&path).unwrap();
+        assert_eq!(peek_cursor(&path).unwrap(), want);
+        // corruption is rejected, not half-read
+        let mut blob = std::fs::read(&path).unwrap();
+        let last = blob.len() - 1;
+        blob[last] ^= 0xFF;
+        std::fs::write(&path, &blob).unwrap();
+        assert!(peek_cursor(&path).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -96,6 +96,52 @@ impl Json {
         out
     }
 
+    /// Render on a single line with the same strict escaping as
+    /// [`Json::pretty`] — one value per line, always re-parseable.
+    /// This is the JSON-lines form the serve event stream appends to
+    /// `events.jsonl` (unlike [`fmt::Display`], which reuses Rust's
+    /// debug escapes and is for human eyes only).
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.compact_into(&mut out);
+        out
+    }
+
+    fn compact_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else {
+                "false"
+            }),
+            // same inf/NaN fallback as pretty_into
+            Json::Num(n) if !n.is_finite() => out.push_str("null"),
+            Json::Num(n) => out.push_str(&n.to_string()),
+            Json::Str(s) => escape_json(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.compact_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_json(k, out);
+                    out.push(':');
+                    x.compact_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn pretty_into(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -437,6 +483,19 @@ mod tests {
         // readable: indented, one key per line
         assert!(text.contains("\n  \"a\": ["));
         assert!(text.ends_with("}\n"));
+    }
+
+    #[test]
+    fn compact_is_one_strict_reparseable_line() {
+        let j = Json::parse(
+            r#"{"event":"slice","run":"r0001-a","n":2,"note":"a\nb"}"#,
+        )
+        .unwrap();
+        let line = j.compact();
+        assert!(!line.contains('\n'), "{line}");
+        assert_eq!(Json::parse(&line).unwrap(), j);
+        assert_eq!(line,
+                   r#"{"event":"slice","n":2,"note":"a\nb","run":"r0001-a"}"#);
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!   threads with bit-identical results ([`engine`]), the validated,
 //!   serializable experiment description that drives the CLI, library,
 //!   benches, and checkpoints ([`session`]), crash-safe
-//!   checkpoint/resume with bit-identical restarts ([`ckpt`]), a
+//!   checkpoint/resume with bit-identical restarts ([`ckpt`]), the
+//!   preemptive multi-tenant experiment service that queues and
+//!   time-slices submitted specs ([`serve`]), a
 //!   cycle-accurate hardware model of the generated accelerator ([`hw`],
 //!   [`sim`]), and a PJRT runtime that executes the AOT-compiled
 //!   numerics ([`runtime`]).
@@ -41,5 +43,6 @@ pub mod metrics;
 pub mod nn;
 pub mod ops;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;

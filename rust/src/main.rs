@@ -5,6 +5,8 @@
 //!   analyze   static fixed-point range analysis of every accumulator
 //!   simulate  cycle-simulate a design point (Table II style numbers)
 //!   train     train a CNN through the coordinator (golden/perop/fused)
+//!   serve     crash-safe multi-tenant experiment service: watch a
+//!             submission dir, time-slice queued runs by priority
 //!   report    regenerate a paper table/figure (table2|table3|fig9|fig10)
 //!
 //! Every experiment-shaped subcommand (compile/analyze/simulate/
@@ -31,6 +33,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use stratus::analysis;
 use stratus::compiler::{calibrate, RtlCompiler};
 use stratus::metrics;
+use stratus::serve::{Scheduler, ServeConfig};
 use stratus::session::{Session, Spec, SpecBuilder, DEFAULT_SEED};
 
 /// Parsed arguments: `--key value` pairs, `--switch`es, positionals.
@@ -140,7 +143,11 @@ fn flag_spec(cmd: &str)
                       "artifacts", "checkpoint-dir", "checkpoint-every",
                       "resize-accelerators"],
                     &["resume"]),
-        "report" => (false, &[], &[]),
+        "report" => (false, &["root"], &[]),
+        "serve" => (false,
+                    &["root", "watch", "slice-batches", "active",
+                      "workers-budget", "poll-ms"],
+                    &["drain", "stdin", "status"]),
         "calibrate" => (false, &["net", "scale", "samples", "seed"], &[]),
         _ => return None,
     };
@@ -485,6 +492,36 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = args.get("root").ok_or_else(|| {
+        anyhow!("serve needs --root DIR (the serve root holding the \
+                 queue, checkpoints, and event log)")
+    })?;
+    let root = std::path::PathBuf::from(root);
+    if args.has("status") {
+        print!("{}", metrics::serve_report(&root)?);
+        return Ok(());
+    }
+    let mut cfg = ServeConfig::new(root);
+    cfg.watch = args.get("watch").map(std::path::PathBuf::from);
+    if let Some(v) = args.u64_opt("slice-batches")? {
+        cfg.slice_batches = v;
+    }
+    if let Some(v) = args.usize_opt("active")? {
+        cfg.max_active = v;
+    }
+    if let Some(v) = args.usize_opt("workers-budget")? {
+        cfg.worker_budget = v;
+    }
+    if let Some(v) = args.u64_opt("poll-ms")? {
+        cfg.poll_ms = v;
+    }
+    cfg.drain = args.has("drain");
+    cfg.stdin = args.has("stdin");
+    cfg.echo = true;
+    Scheduler::open(cfg)?.run_loop()
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args
         .positional
@@ -535,10 +572,20 @@ fn cmd_report(args: &Args) -> Result<()> {
                  metrics::overlap_scaling(1, 64, &[4, 16, 64]));
         any = true;
     }
+    if which == "serve" {
+        // not part of `all`: it reads a serve root, not the paper's
+        // models
+        let root = args.get("root").ok_or_else(|| {
+            anyhow!("report serve needs --root DIR (the serve root \
+                     to summarize)")
+        })?;
+        print!("{}", metrics::serve_report(Path::new(root))?);
+        any = true;
+    }
     if !any {
         bail!("unknown report `{which}` \
                (table2|table3|fig9|fig10|engine|cluster|topology|\
-               overlap|all)");
+               overlap|all, or serve --root DIR)");
     }
     Ok(())
 }
@@ -622,7 +669,34 @@ COMMANDS:
                                    the checkpoint boundary) —
                                    bit-identical to never resizing;
                                    requires --checkpoint-dir]
+  serve     --root DIR                 crash-safe experiment service:
+            maintains a durable priority queue of submitted specs
+            under DIR and time-slices them (each run trains for a
+            slice, checkpoints, and swaps out; `kill -9` recovers the
+            exact queue, and interrupted runs resume bit-identically)
+            [--watch DIR        watched submission dir (default
+                                DIR/inbox); drop spec JSONs there,
+                                optionally with a top-level
+                                \"priority\" integer (higher first)]
+            [--stdin            also accept one spec JSON per stdin
+                                line]
+            [--slice-batches N  batches per time slice (default 8) —
+                                the preemption granularity]
+            [--active N         runs time-sharing at once (default 2)]
+            [--workers-budget N engine-thread budget per slice; specs
+                                asking for more are capped
+                                (bit-identical — workers are never
+                                fingerprinted) (default 4)]
+            [--poll-ms N        idle poll interval (default 200)]
+            [--drain            exit when queue + inbox are empty]
+            [--status           print the queue snapshot and exit]
+            Progress streams as JSON lines (also appended to
+            DIR/events.jsonl); malformed submissions move to
+            DIR/failed/ with a .reason file, never crashing the
+            daemon.
   report    table2|table3|fig9|fig10|engine|cluster|topology|overlap|all
+            serve --root DIR     summarize a serve root (per-run
+                                 phases + aggregate throughput)
   calibrate --scale .. --samples N          adaptive fixed-point pass
 
 Flags that take a value error when the value is missing; unrecognized
@@ -647,6 +721,7 @@ fn run_cli(argv: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         "calibrate" => cmd_calibrate(&args),
         _ => unreachable!("flag_spec gates the command set"),

@@ -337,6 +337,71 @@ pub fn fig10() -> String {
     render_table(&header, &rows)
 }
 
+/// The `report serve` / `stratus serve --status` snapshot: every run
+/// in the serve root (phase, priority, slice/batch accounting,
+/// cursor), aggregate phase counts, and — when the event log spans
+/// wall-clock time — the service's overall batch throughput.  Reads
+/// only; a status query never mutates the root it inspects.
+pub fn serve_report(root: &std::path::Path)
+                    -> anyhow::Result<String> {
+    use crate::jsonx::Json;
+    use crate::serve::{read_events, scan_states, RunPhase};
+
+    let runs = scan_states(root)?;
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|r| {
+            vec![r.id.clone(),
+                 r.priority.to_string(),
+                 r.phase.name().to_string(),
+                 r.slices.to_string(),
+                 r.batches.to_string(),
+                 format!("{}.{}", r.epoch, r.batch),
+                 r.epochs.to_string(),
+                 r.source.clone()]
+        })
+        .collect();
+    let mut out = render_table(&["run", "pri", "phase", "slices",
+                                 "batches", "cursor", "epochs",
+                                 "source"],
+                               &rows);
+    let count = |p: RunPhase| {
+        runs.iter().filter(|r| r.phase == p).count()
+    };
+    out.push_str(&format!(
+        "runs           : {} queued / {} running / {} done / {} \
+         failed\n",
+        count(RunPhase::Queued), count(RunPhase::Running),
+        count(RunPhase::Done), count(RunPhase::Failed)));
+    let batches: u64 = runs.iter().map(|r| r.batches).sum();
+    out.push_str(&format!(
+        "progress       : {} slices, {batches} batches\n",
+        runs.iter().map(|r| r.slices).sum::<u64>()));
+    let events = read_events(root)?;
+    let stamps: Vec<f64> = events
+        .iter()
+        .filter_map(|e| e.get("unix_ms").and_then(Json::as_f64))
+        .collect();
+    if let (Some(first), Some(last)) = (stamps.first(),
+                                        stamps.last()) {
+        let span_s = (last - first) / 1e3;
+        let mut line = format!(
+            "events         : {} over {span_s:.1} s", events.len());
+        if span_s > 0.0 {
+            line.push_str(&format!(" ({:.1} batches/s)",
+                                   batches as f64 / span_s));
+        }
+        line.push('\n');
+        out.push_str(&line);
+    }
+    for r in runs.iter().filter(|r| r.phase == RunPhase::Failed) {
+        out.push_str(&format!(
+            "failed         : {}: {}\n", r.id,
+            r.error.as_deref().unwrap_or("(no reason recorded)")));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,5 +551,46 @@ mod tests {
             assert!(exposed <= serial,
                     "exposed {exposed} > serial {serial}: {r}");
         }
+    }
+
+    #[test]
+    fn serve_report_renders_runs_and_aggregates() {
+        use crate::serve::{RunPhase, RunState, ServeRoot};
+        let root = std::env::temp_dir().join(format!(
+            "stratus_mreport_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let sr = ServeRoot::open(&root).unwrap();
+        for (id, seq, phase, err) in [
+            ("r0001-a", 1, RunPhase::Done, None),
+            ("r0002-b", 2, RunPhase::Failed,
+             Some("batch 128 can wrap".to_string())),
+        ] {
+            let dir = sr.run_dir(id);
+            std::fs::create_dir_all(&dir).unwrap();
+            RunState {
+                id: id.to_string(),
+                seq,
+                priority: 1,
+                source: format!("{id}.json"),
+                phase,
+                slices: 2,
+                batches: 6,
+                epoch: 2,
+                batch: 0,
+                epochs: 2,
+                error: err,
+            }
+            .save_atomic(&dir)
+            .unwrap();
+        }
+        let t = serve_report(&root).unwrap();
+        assert!(t.contains("| r0001-a |"), "{t}");
+        assert!(t.contains("| done "), "{t}");
+        assert!(t.contains("1 done / 1 failed"), "{t}");
+        assert!(t.contains("4 slices, 12 batches"), "{t}");
+        assert!(t.contains("r0002-b: batch 128 can wrap"), "{t}");
+        // a directory that is not a serve root is refused
+        assert!(serve_report(&root.join("nope")).is_err());
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -1,0 +1,166 @@
+//! Append-only JSON-lines event stream for the experiment service.
+//!
+//! Every scheduling decision the daemon makes lands as one strict
+//! JSON object per line in `<serve-root>/events.jsonl` (rendered with
+//! [`Json::compact`], so every line re-parses) and, when the daemon
+//! runs interactively, is echoed to stdout.  The log is the audit
+//! trail the fairness and chaos tests assert slice ordering from, so
+//! appends are fsync'd: an event that was observed was durably
+//! recorded.
+//!
+//! Schema: every record carries `event` (the kind), `seq` (the
+//! 0-based line number, monotone across daemon restarts) and
+//! `unix_ms`; the remaining keys are per-kind (see DESIGN.md
+//! §Experiment service for the full schema).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write as _};
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::jsonx::Json;
+
+/// The event log's file name under the serve root.
+pub const EVENTS_FILE: &str = "events.jsonl";
+
+/// An open (append-mode) event stream.
+pub struct EventLog {
+    path: PathBuf,
+    seq: u64,
+    echo: bool,
+}
+
+impl EventLog {
+    /// Open (or create) the log under `root`; `echo` additionally
+    /// streams every line to stdout.  The next sequence number
+    /// continues from the existing line count, so `seq` stays
+    /// monotone across daemon restarts.
+    pub fn open(root: &Path, echo: bool) -> Result<EventLog> {
+        let path = root.join(EVENTS_FILE);
+        let seq = match File::open(&path) {
+            Ok(f) => BufReader::new(f).lines().count() as u64,
+            Err(_) => 0,
+        };
+        Ok(EventLog { path, seq, echo })
+    }
+
+    /// Append one event. `fields` ride alongside the standard
+    /// `event`/`seq`/`unix_ms` keys.
+    pub fn emit(&mut self, event: &str, fields: &[(&str, Json)])
+                -> Result<()> {
+        let mut m = BTreeMap::new();
+        m.insert("event".to_string(), Json::Str(event.to_string()));
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        let ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map_or(0.0, |d| d.as_millis() as f64);
+        m.insert("unix_ms".to_string(), Json::Num(ms));
+        for (k, v) in fields {
+            m.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(m).compact();
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| {
+                format!("opening {}", self.path.display())
+            })?;
+        writeln!(f, "{line}").with_context(|| {
+            format!("appending to {}", self.path.display())
+        })?;
+        f.sync_all().with_context(|| {
+            format!("syncing {}", self.path.display())
+        })?;
+        self.seq += 1;
+        if self.echo {
+            println!("{line}");
+        }
+        Ok(())
+    }
+}
+
+/// Parse every event recorded under `root` (a missing log is an empty
+/// history, not an error — a serve root that never scheduled anything
+/// has no events yet).
+pub fn read_events(root: &Path) -> Result<Vec<Json>> {
+    let path = root.join(EVENTS_FILE);
+    let f = match File::open(&path) {
+        Ok(f) => f,
+        Err(_) => return Ok(Vec::new()),
+    };
+    let mut out = Vec::new();
+    for line in BufReader::new(f).lines() {
+        let line = line.with_context(|| {
+            format!("reading {}", path.display())
+        })?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(Json::parse(&line).with_context(|| {
+            format!("parsing event line in {}", path.display())
+        })?);
+    }
+    Ok(out)
+}
+
+/// Shorthand used across the serve modules for event fields.
+pub(crate) fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+/// Shorthand: a numeric event field (u64 counters fit f64 exactly up
+/// to 2^53, far beyond any slice count).
+pub(crate) fn n(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("stratus_ev_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn events_append_and_read_back() {
+        let root = tmp("rw");
+        let mut log = EventLog::open(&root, false).unwrap();
+        log.emit("submit", &[("run", s("r0001-a")), ("priority", n(3))])
+            .unwrap();
+        log.emit("slice", &[("run", s("r0001-a")), ("batches", n(8))])
+            .unwrap();
+        let ev = read_events(&root).unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].get("event").and_then(Json::as_str),
+                   Some("submit"));
+        assert_eq!(ev[1].get("batches").and_then(Json::as_f64),
+                   Some(8.0));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn seq_continues_across_reopen() {
+        let root = tmp("seq");
+        let mut log = EventLog::open(&root, false).unwrap();
+        log.emit("daemon-start", &[]).unwrap();
+        drop(log);
+        let mut log = EventLog::open(&root, false).unwrap();
+        log.emit("daemon-start", &[]).unwrap();
+        let ev = read_events(&root).unwrap();
+        let seqs: Vec<f64> = ev
+            .iter()
+            .map(|e| e.get("seq").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(seqs, vec![0.0, 1.0]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

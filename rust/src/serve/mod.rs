@@ -1,0 +1,42 @@
+//! The experiment service behind `stratus serve` — a crash-safe,
+//! preemptive, multi-tenant queue of training runs.
+//!
+//! The paper's compiler turns one spec into one accelerator run; this
+//! layer turns a *stream* of specs into scheduled runs.  Submissions
+//! (spec JSON, plus an optional top-level `"priority"`) arrive
+//! through a watched inbox directory or stdin lines ([`watch`]),
+//! enter a durable priority queue of per-run state files
+//! ([`queue`]), and are time-sliced by the scheduler ([`scheduler`]):
+//! each admitted run trains for `slice_batches` batches
+//! ([`crate::session::Session::begin_slice`] — `max_batches` as the
+//! preemption point, checkpoint cadence pinned to the slice), then
+//! the next queued run swaps in.  Every decision is streamed as one
+//! strict JSON line ([`event`]).
+//!
+//! The whole service state lives on disk under one *serve root*:
+//!
+//! ```text
+//! <root>/
+//!   inbox/                    default watched submission dir
+//!   runs/<id>/spec.json       normalized spec (ckpt dir redirected)
+//!   runs/<id>/state.json      durable queue record (atomic writes)
+//!   runs/<id>/ckpt/           the run's SCKP checkpoints
+//!   failed/<name>[.reason]    rejected submissions + why
+//!   events.jsonl              append-only JSON-lines audit trail
+//! ```
+//!
+//! so `kill -9` of the daemon loses nothing: re-opening the root
+//! requeues every mid-slice run and resumes it from its newest
+//! checkpoint, bit-identically to a run that was never interrupted
+//! (the same fingerprint machinery as `--resume`; asserted by
+//! `tests/serve.rs` and the CI serve smoke step).
+
+pub mod event;
+pub mod queue;
+pub mod scheduler;
+pub mod watch;
+
+pub use event::{read_events, EventLog, EVENTS_FILE};
+pub use queue::{scan_states, RunPhase, RunState, ServeRoot};
+pub use scheduler::{Scheduler, ServeConfig, Tick};
+pub use watch::{list_submissions, parse_submission, SubmitError};

@@ -1,0 +1,354 @@
+//! The durable run queue: one directory per run under
+//! `<serve-root>/runs/`, each holding the normalized spec, a small
+//! JSON state file, and the run's checkpoint directory.
+//!
+//! Durability contract: `state.json` is the *only* queue metadata and
+//! it is written atomically (tmp + fsync + rename + parent fsync,
+//! the same discipline as [`crate::ckpt::Checkpoint::save_atomic`]),
+//! so a `kill -9` at any instant leaves every run with either its
+//! previous state or its new one — never a torn file.  Numeric truth
+//! (params, optimizer state, cursor) lives in the checkpoint, which
+//! has its own atomicity; the state file only has to be *consistent
+//! enough to requeue*: a run found `running` at recovery simply
+//! becomes `queued` again and resumes from its newest checkpoint.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::Json;
+use crate::session::CKPT_FILE;
+
+/// Per-run state file name (under `runs/<id>/`).
+pub const STATE_FILE: &str = "state.json";
+/// Normalized spec file name (under `runs/<id>/`).
+pub const SPEC_FILE: &str = "spec.json";
+/// Checkpoint subdirectory name (under `runs/<id>/`).
+pub const CKPT_SUBDIR: &str = "ckpt";
+/// Run directories live here.
+pub const RUNS_DIR: &str = "runs";
+/// Rejected submissions (plus `<name>.reason` files) land here.
+pub const FAILED_DIR: &str = "failed";
+/// Default watched submission directory.
+pub const INBOX_DIR: &str = "inbox";
+
+/// Where a run is in its lifecycle.  `Running` is only ever observed
+/// on disk after a crash (the daemon marks a run `running` before its
+/// slice and back to `queued`/`done`/`failed` after); recovery
+/// demotes it to `Queued`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl RunPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            RunPhase::Queued => "queued",
+            RunPhase::Running => "running",
+            RunPhase::Done => "done",
+            RunPhase::Failed => "failed",
+        }
+    }
+
+    fn parse(s: &str) -> Option<RunPhase> {
+        match s {
+            "queued" => Some(RunPhase::Queued),
+            "running" => Some(RunPhase::Running),
+            "done" => Some(RunPhase::Done),
+            "failed" => Some(RunPhase::Failed),
+            _ => None,
+        }
+    }
+}
+
+/// One run's durable queue record.
+#[derive(Debug, Clone)]
+pub struct RunState {
+    /// Directory name under `runs/`: `r<seq:04>-<sanitized stem>`.
+    pub id: String,
+    /// Admission order (monotone per serve root; the fairness
+    /// tie-break).
+    pub seq: u64,
+    /// Higher runs first; equal priorities share slices fairly.
+    pub priority: i64,
+    /// The submission file name this run was admitted from (dedup key
+    /// for the crash window between run-dir creation and inbox
+    /// unlink).
+    pub source: String,
+    pub phase: RunPhase,
+    /// Completed (recorded) slices.
+    pub slices: u64,
+    /// Batches executed across all recorded slices.
+    pub batches: u64,
+    /// Cursor snapshot after the last recorded slice (display /
+    /// accounting only — the checkpoint is the numeric truth).
+    pub epoch: u64,
+    pub batch: u64,
+    /// Target epoch count, denormalized from the spec for status
+    /// rendering without a spec parse.
+    pub epochs: u64,
+    /// Failure reason, when `phase == Failed`.
+    pub error: Option<String>,
+}
+
+impl RunState {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        put("id", Json::Str(self.id.clone()));
+        put("seq", Json::Num(self.seq as f64));
+        put("priority", Json::Num(self.priority as f64));
+        put("source", Json::Str(self.source.clone()));
+        put("phase", Json::Str(self.phase.name().to_string()));
+        put("slices", Json::Num(self.slices as f64));
+        put("batches", Json::Num(self.batches as f64));
+        put("epoch", Json::Num(self.epoch as f64));
+        put("batch", Json::Num(self.batch as f64));
+        put("epochs", Json::Num(self.epochs as f64));
+        if let Some(e) = &self.error {
+            put("error", Json::Str(e.clone()));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunState> {
+        let m = j.as_obj().ok_or_else(|| {
+            anyhow!("run state is not a JSON object")
+        })?;
+        let str_of = |k: &str| -> Result<String> {
+            m.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("run state missing `{k}`"))
+        };
+        let num_of = |k: &str| -> Result<f64> {
+            m.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("run state missing `{k}`"))
+        };
+        let phase_name = str_of("phase")?;
+        let phase = RunPhase::parse(&phase_name).ok_or_else(|| {
+            anyhow!("unknown run phase `{phase_name}`")
+        })?;
+        Ok(RunState {
+            id: str_of("id")?,
+            seq: num_of("seq")? as u64,
+            priority: num_of("priority")? as i64,
+            source: str_of("source")?,
+            phase,
+            slices: num_of("slices")? as u64,
+            batches: num_of("batches")? as u64,
+            epoch: num_of("epoch")? as u64,
+            batch: num_of("batch")? as u64,
+            epochs: num_of("epochs")? as u64,
+            error: m.get("error")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        })
+    }
+
+    /// Atomically persist this record as `dir/state.json` (see the
+    /// module docs for the durability contract).
+    pub fn save_atomic(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(STATE_FILE);
+        let tmp = dir.join(format!("{STATE_FILE}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp).with_context(|| {
+                format!("creating {}", tmp.display())
+            })?;
+            f.write_all(self.to_json().pretty().as_bytes())
+                .with_context(|| {
+                    format!("writing {}", tmp.display())
+                })?;
+            f.sync_all().with_context(|| {
+                format!("syncing {}", tmp.display())
+            })?;
+        }
+        fs::rename(&tmp, &path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), path.display())
+        })?;
+        fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("syncing {}", dir.display()))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<RunState> {
+        let path = dir.join(STATE_FILE);
+        let text = fs::read_to_string(&path).with_context(|| {
+            format!("reading {}", path.display())
+        })?;
+        let j = Json::parse(&text).with_context(|| {
+            format!("parsing {}", path.display())
+        })?;
+        RunState::from_json(&j).with_context(|| {
+            format!("loading {}", path.display())
+        })
+    }
+}
+
+/// The serve-root directory layout (see DESIGN.md §Experiment
+/// service).  Opening creates the skeleton; every path accessor is a
+/// pure join.
+pub struct ServeRoot {
+    root: PathBuf,
+}
+
+impl ServeRoot {
+    pub fn open(root: &Path) -> Result<ServeRoot> {
+        for sub in [RUNS_DIR, FAILED_DIR, INBOX_DIR] {
+            let d = root.join(sub);
+            fs::create_dir_all(&d).with_context(|| {
+                format!("creating {}", d.display())
+            })?;
+        }
+        Ok(ServeRoot { root: root.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn inbox_dir(&self) -> PathBuf {
+        self.root.join(INBOX_DIR)
+    }
+
+    pub fn failed_dir(&self) -> PathBuf {
+        self.root.join(FAILED_DIR)
+    }
+
+    pub fn run_dir(&self, id: &str) -> PathBuf {
+        self.root.join(RUNS_DIR).join(id)
+    }
+
+    pub fn spec_path(&self, id: &str) -> PathBuf {
+        self.run_dir(id).join(SPEC_FILE)
+    }
+
+    pub fn ckpt_dir(&self, id: &str) -> PathBuf {
+        self.run_dir(id).join(CKPT_SUBDIR)
+    }
+
+    pub fn ckpt_path(&self, id: &str) -> PathBuf {
+        self.ckpt_dir(id).join(CKPT_FILE)
+    }
+
+    /// Every run record under `runs/`, sorted by admission order.
+    /// A run directory without a state file (a crash between `mkdir`
+    /// and the first state write) is skipped: its submission was
+    /// still in the inbox at that point, so it is re-admitted rather
+    /// than lost.
+    pub fn scan(&self) -> Result<Vec<RunState>> {
+        scan_states(&self.root)
+    }
+}
+
+/// Scan `root/runs/*/state.json` without creating anything — shared
+/// by the scheduler's recovery pass and `report serve` / `--status`
+/// (which must not mutate a root they merely inspect).
+pub fn scan_states(root: &Path) -> Result<Vec<RunState>> {
+    let runs = root.join(RUNS_DIR);
+    if !runs.is_dir() {
+        bail!("{} is not a serve root (no {RUNS_DIR}/ directory)",
+              root.display());
+    }
+    let mut out = Vec::new();
+    for entry in fs::read_dir(&runs).with_context(|| {
+        format!("reading {}", runs.display())
+    })? {
+        let dir = entry?.path();
+        if !dir.is_dir() {
+            continue;
+        }
+        if !dir.join(STATE_FILE).is_file() {
+            // crash window between run-dir creation and the first
+            // state write: the submission file was still in the
+            // inbox (it is unlinked only after the state lands), so
+            // the half-made dir is inert leftovers, not a lost run
+            continue;
+        }
+        out.push(RunState::load(&dir)?);
+    }
+    out.sort_by_key(|r| r.seq);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("stratus_q_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn state(id: &str, seq: u64) -> RunState {
+        RunState {
+            id: id.to_string(),
+            seq,
+            priority: -2,
+            source: format!("{id}.json"),
+            phase: RunPhase::Running,
+            slices: 3,
+            batches: 24,
+            epoch: 1,
+            batch: 2,
+            epochs: 4,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn state_round_trips_and_writes_atomically() {
+        let d = tmp("rt");
+        let st = state("r0001-a", 1);
+        st.save_atomic(&d).unwrap();
+        assert!(!d.join(format!("{STATE_FILE}.tmp")).exists());
+        let r = RunState::load(&d).unwrap();
+        assert_eq!(r.id, st.id);
+        assert_eq!(r.priority, -2);
+        assert_eq!(r.phase, RunPhase::Running);
+        assert_eq!((r.slices, r.batches, r.epoch, r.batch, r.epochs),
+                   (3, 24, 1, 2, 4));
+        assert_eq!(r.error, None);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn scan_sorts_by_seq_and_skips_stateless_dirs() {
+        let root = tmp("scan");
+        let sr = ServeRoot::open(&root).unwrap();
+        for (id, seq) in [("r0002-b", 2), ("r0001-a", 1)] {
+            let dir = sr.run_dir(id);
+            std::fs::create_dir_all(&dir).unwrap();
+            state(id, seq).save_atomic(&dir).unwrap();
+        }
+        // a half-created run dir (no state file yet) is skipped
+        std::fs::create_dir_all(sr.run_dir("r0003-half")).unwrap();
+        let runs = sr.scan().unwrap();
+        let ids: Vec<&str> =
+            runs.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, vec!["r0001-a", "r0002-b"]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn scan_refuses_a_non_serve_root() {
+        let root = tmp("nonroot");
+        let err = scan_states(&root).unwrap_err();
+        assert!(format!("{err:#}").contains("not a serve root"),
+                "{err:#}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,561 @@
+//! The time-slicing scheduler: the daemon's control loop.
+//!
+//! One `tick` = admit pending submissions, pick the next runnable
+//! run, and train it for one slice (`max_batches` as the preemption
+//! point, via [`Session::begin_slice`]) before writing its state back
+//! and returning.  Scheduling policy, in order:
+//!
+//! 1. the *admitted set* is the top `max_active` runnable runs by
+//!    (priority desc, admission order) — at most N sessions share
+//!    the machine, everyone else waits in line;
+//! 2. within the admitted set the next slice goes to the
+//!    least-served run (fewest recorded slices), ties to the
+//!    earliest submission — equal priorities interleave and neither
+//!    starves;
+//! 3. a higher-priority submission enters the admitted set on the
+//!    very next tick and, sorting first, wins the next slice — it
+//!    preempts at the slice boundary, never mid-batch.
+//!
+//! Crash safety: a run is marked `running` (durably) before its
+//! slice and written back after, so a `kill -9` mid-slice is visible
+//! at recovery; the slice's own checkpoints are atomic, and
+//! [`Session::begin_slice`] pins the checkpoint cadence to the slice
+//! length, so the recovered run resumes from its newest checkpoint
+//! bit-identically — at worst replaying the killed slice's batches.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::{self, Cursor};
+use crate::session::{Session, Spec};
+
+use super::event::{n, s, EventLog};
+use super::queue::{RunPhase, RunState, ServeRoot, CKPT_SUBDIR};
+use super::watch::{self, SubmitError};
+
+/// Daemon knobs (CLI flags map 1:1; see `stratus serve` usage).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The serve root: queue state, checkpoints, event log.
+    pub root: PathBuf,
+    /// Watched submission directory (default `<root>/inbox`).
+    pub watch: Option<PathBuf>,
+    /// Batches per slice — the preemption granularity.
+    pub slice_batches: u64,
+    /// How many runs time-share the machine at once.
+    pub max_active: usize,
+    /// Worker-thread budget: each slice trains with
+    /// `min(spec.workers, worker_budget)` engine threads (worker
+    /// count is excluded from the fingerprint, so capping is always
+    /// bit-identical).
+    pub worker_budget: usize,
+    /// Idle sleep between polls, in milliseconds.
+    pub poll_ms: u64,
+    /// Exit once the queue and inbox are empty (and stdin, when
+    /// enabled, has reached EOF) instead of waiting for more work.
+    pub drain: bool,
+    /// Also accept one submission per stdin line.
+    pub stdin: bool,
+    /// Echo every event line to stdout.
+    pub echo: bool,
+}
+
+impl ServeConfig {
+    /// Defaults used by the tests: quiet, no stdin, no drain.
+    pub fn new(root: impl Into<PathBuf>) -> ServeConfig {
+        ServeConfig {
+            root: root.into(),
+            watch: None,
+            slice_batches: 8,
+            max_active: 2,
+            worker_budget: 4,
+            poll_ms: 200,
+            drain: false,
+            stdin: false,
+            echo: false,
+        }
+    }
+}
+
+/// What one tick did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tick {
+    /// Nothing runnable (queue empty or everything done/failed).
+    Idle,
+    /// Ran one slice of `id`; `done` when the run completed.
+    Sliced { id: String, done: bool },
+    /// The run's slice errored; the run is now `failed`.
+    Failed { id: String },
+    /// Chaos hook only: the slice was abandoned mid-flight as a
+    /// `kill -9` would — nothing was recorded, and the run's durable
+    /// state still says `running`.  The scheduler must be dropped
+    /// and re-opened (recovery) before that run can make progress.
+    Killed { id: String },
+}
+
+struct StdinFeed {
+    rx: Receiver<String>,
+    done: bool,
+    count: u64,
+}
+
+/// The daemon state: a durable queue mirror plus the event stream.
+pub struct Scheduler {
+    cfg: ServeConfig,
+    root: ServeRoot,
+    watch_dir: PathBuf,
+    log: EventLog,
+    runs: Vec<RunState>,
+    next_seq: u64,
+    stdin: Option<StdinFeed>,
+}
+
+impl Scheduler {
+    /// Open (or recover) the serve root.  Runs found `running` —
+    /// i.e. the previous daemon died mid-slice — are requeued; they
+    /// resume from their newest checkpoint.
+    pub fn open(cfg: ServeConfig) -> Result<Scheduler> {
+        if cfg.slice_batches == 0 {
+            bail!("slice-batches must be at least 1");
+        }
+        if cfg.max_active == 0 {
+            bail!("active must be at least 1");
+        }
+        if cfg.worker_budget == 0 {
+            bail!("workers-budget must be at least 1");
+        }
+        let root = ServeRoot::open(&cfg.root)?;
+        let watch_dir =
+            cfg.watch.clone().unwrap_or_else(|| root.inbox_dir());
+        let mut log = EventLog::open(&cfg.root, cfg.echo)?;
+        let mut runs = root.scan()?;
+        let mut recovered = 0u64;
+        for st in &mut runs {
+            if st.phase != RunPhase::Running {
+                continue;
+            }
+            st.phase = RunPhase::Queued;
+            // refresh the display cursor from the checkpoint: the
+            // killed slice may have saved epoch-boundary checkpoints
+            // past the last recorded state
+            let ck = root.ckpt_path(&st.id);
+            if let Ok(cur) = ckpt::peek_cursor(&ck) {
+                st.epoch = cur.epoch;
+                st.batch = cur.batch;
+            }
+            st.save_atomic(&root.run_dir(&st.id))?;
+            log.emit("recover",
+                     &[("run", s(st.id.as_str())),
+                       ("epoch", n(st.epoch)),
+                       ("batch", n(st.batch))])?;
+            recovered += 1;
+        }
+        let next_seq =
+            runs.iter().map(|r| r.seq).max().map_or(1, |m| m + 1);
+        log.emit("daemon-start",
+                 &[("runs", n(runs.len() as u64)),
+                   ("recovered", n(recovered)),
+                   ("slice_batches", n(cfg.slice_batches)),
+                   ("max_active", n(cfg.max_active as u64))])?;
+        let stdin = if cfg.stdin {
+            Some(spawn_stdin_feed())
+        } else {
+            None
+        };
+        Ok(Scheduler {
+            cfg,
+            root,
+            watch_dir,
+            log,
+            runs,
+            next_seq,
+            stdin,
+        })
+    }
+
+    /// The serve root this scheduler drives.
+    pub fn root(&self) -> &Path {
+        self.root.path()
+    }
+
+    /// In-memory queue snapshot (sorted by admission order).
+    pub fn runs(&self) -> &[RunState] {
+        &self.runs
+    }
+
+    /// Admit everything pending: inbox files, then stdin lines.
+    /// Malformed submissions are moved to `failed/` with a reason
+    /// file and a `reject` event — they never take the daemon down.
+    pub fn poll_submissions(&mut self) -> Result<usize> {
+        let mut admitted = 0;
+        for path in watch::list_submissions(&self.watch_dir)? {
+            if self.ingest_file(&path)? {
+                admitted += 1;
+            }
+        }
+        while let Some(line) = self.try_stdin_line() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let feed = self.stdin.as_mut().expect("line implies feed");
+            feed.count += 1;
+            let name = format!("stdin-{}.json", feed.count);
+            if self.ingest_text(&name, &line)? {
+                admitted += 1;
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// Run the daemon until the queue drains (with `cfg.drain`) or
+    /// forever (a service: killing it is the shutdown path, and
+    /// recovery on the next open is the restart path).
+    pub fn run_loop(&mut self) -> Result<()> {
+        loop {
+            if self.tick()? == Tick::Idle {
+                if self.cfg.drain && self.drained()? {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(
+                    self.cfg.poll_ms.max(1),
+                ));
+            }
+        }
+        self.log.emit("daemon-drain",
+                      &[("runs", n(self.runs.len() as u64))])?;
+        Ok(())
+    }
+
+    /// One scheduling step (see module docs for the policy).
+    pub fn tick(&mut self) -> Result<Tick> {
+        self.tick_with_kill(None)
+    }
+
+    /// `tick`, with the chaos-test kill hook: `Some(k)` with `k`
+    /// below the slice length abandons the slice after `k` batches
+    /// exactly as a `kill -9` would — the durable state keeps saying
+    /// `running`, nothing is recorded, and only the checkpoints the
+    /// cadence already saved exist.  See [`Tick::Killed`] for the
+    /// mandatory drop-and-reopen that follows.
+    pub fn tick_with_kill(&mut self, kill_after: Option<u64>)
+                          -> Result<Tick> {
+        self.poll_submissions()?;
+        let Some(i) = self.pick_next() else {
+            return Ok(Tick::Idle);
+        };
+        let id = self.runs[i].id.clone();
+        let dir = self.root.run_dir(&id);
+        let first = self.runs[i].slices == 0
+            && !self.root.ckpt_path(&id).exists();
+        // durably mark the slice in flight *before* any numerics: a
+        // daemon killed from here on is detectable at recovery
+        self.runs[i].phase = RunPhase::Running;
+        self.runs[i].save_atomic(&dir)?;
+        if first {
+            self.log.emit("start",
+                          &[("run", s(id.as_str())),
+                            ("epochs", n(self.runs[i].epochs))])?;
+        }
+        let killed =
+            kill_after.is_some_and(|k| k < self.cfg.slice_batches);
+        match self.run_slice(&id, kill_after) {
+            Ok(_) if killed => Ok(Tick::Killed { id }),
+            Ok((start, end, batch)) => {
+                let executed = batches_between(start, end, batch);
+                let done = end.epoch >= self.runs[i].epochs;
+                let st = &mut self.runs[i];
+                st.slices += 1;
+                st.batches += executed;
+                st.epoch = end.epoch;
+                st.batch = end.batch;
+                st.phase = if done {
+                    RunPhase::Done
+                } else {
+                    RunPhase::Queued
+                };
+                let (slices, batches) = (st.slices, st.batches);
+                st.save_atomic(&dir)?;
+                self.log.emit("slice",
+                              &[("run", s(id.as_str())),
+                                ("slice", n(slices)),
+                                ("batches", n(executed)),
+                                ("epoch", n(end.epoch)),
+                                ("batch", n(end.batch))])?;
+                self.log.emit(
+                    "checkpoint",
+                    &[("run", s(id.as_str())),
+                      ("epoch", n(end.epoch)),
+                      ("batch", n(end.batch)),
+                      ("path",
+                       s(self.root
+                           .ckpt_path(&id)
+                           .display()
+                           .to_string()))],
+                )?;
+                if done {
+                    self.log.emit("complete",
+                                  &[("run", s(id.as_str())),
+                                    ("slices", n(slices)),
+                                    ("batches", n(batches))])?;
+                }
+                Ok(Tick::Sliced { id, done })
+            }
+            Err(e) => {
+                let reason = format!("{e:#}");
+                let st = &mut self.runs[i];
+                st.phase = RunPhase::Failed;
+                st.error = Some(reason.clone());
+                st.save_atomic(&dir)?;
+                self.log.emit("fail",
+                              &[("run", s(id.as_str())),
+                                ("reason", s(reason))])?;
+                Ok(Tick::Failed { id })
+            }
+        }
+    }
+
+    /// True when nothing can ever become runnable without outside
+    /// input: no queued runs, an empty inbox, and (in stdin mode)
+    /// EOF on stdin.
+    pub fn drained(&self) -> Result<bool> {
+        let runnable = self.runs.iter().any(|r| {
+            matches!(r.phase, RunPhase::Queued | RunPhase::Running)
+        });
+        let pending =
+            !watch::list_submissions(&self.watch_dir)?.is_empty();
+        let stdin_open =
+            self.stdin.as_ref().is_some_and(|f| !f.done);
+        Ok(!runnable && !pending && !stdin_open)
+    }
+
+    // ---------------- internals ----------------
+
+    fn pick_next(&self) -> Option<usize> {
+        let mut runnable: Vec<usize> = (0..self.runs.len())
+            .filter(|&i| self.runs[i].phase == RunPhase::Queued)
+            .collect();
+        // the admitted set: top max_active by (priority, seniority)
+        runnable.sort_by_key(|&i| {
+            (std::cmp::Reverse(self.runs[i].priority),
+             self.runs[i].seq)
+        });
+        runnable.truncate(self.cfg.max_active);
+        // within it: highest priority, then least served, then oldest
+        runnable.into_iter().min_by_key(|&i| {
+            let r = &self.runs[i];
+            (std::cmp::Reverse(r.priority), r.slices, r.seq)
+        })
+    }
+
+    /// Train `id` for one slice; returns (start, end, batch size).
+    fn run_slice(&self, id: &str, kill_after: Option<u64>)
+                 -> Result<(Cursor, Cursor, usize)> {
+        let stored = Spec::load(&self.root.spec_path(id))?;
+        // worker_budget >= 1 is enforced at open; spec workers >= 1
+        // by build validation
+        let workers = stored.workers.clamp(1, self.cfg.worker_budget);
+        let spec = stored
+            .to_builder()
+            .workers(workers)
+            .build()
+            .context("re-validating the stored run spec")?;
+        let batch = spec.batch;
+        let epochs = spec.epochs;
+        let resume = self.root.ckpt_path(id).exists();
+        let session = Session::new(spec)?;
+        let mut run =
+            session.begin_slice(resume, self.cfg.slice_batches)?;
+        if let Some(k) = kill_after {
+            if k < self.cfg.slice_batches {
+                run = run.cap_batches(k);
+            }
+        }
+        let out = run.execute(|_, _, _| Ok(()))?;
+        debug_assert!(out.end.epoch <= epochs);
+        Ok((out.start, out.end, batch))
+    }
+
+    fn ingest_file(&mut self, path: &Path) -> Result<bool> {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "submission.json".to_string());
+        // crash window between run-dir creation and inbox unlink:
+        // the run already exists — drop the duplicate, don't retrain
+        if self.runs.iter().any(|r| r.source == name) {
+            fs::remove_file(path).with_context(|| {
+                format!("removing {}", path.display())
+            })?;
+            self.log.emit("submit-dup",
+                          &[("source", s(name))])?;
+            return Ok(false);
+        }
+        let text = fs::read_to_string(path).with_context(|| {
+            format!("reading {}", path.display())
+        })?;
+        match watch::parse_submission(&text) {
+            Ok((spec, priority)) => {
+                let id = self.admit(&name, &spec, priority)?;
+                fs::remove_file(path).with_context(|| {
+                    format!("removing {}", path.display())
+                })?;
+                self.emit_submit(&id, &name, priority)?;
+                Ok(true)
+            }
+            Err(e) => {
+                let dst = self.root.failed_dir().join(&name);
+                if fs::rename(path, &dst).is_err() {
+                    // the watch dir may sit on another filesystem
+                    fs::copy(path, &dst).with_context(|| {
+                        format!("copying {} -> {}", path.display(),
+                                dst.display())
+                    })?;
+                    fs::remove_file(path)?;
+                }
+                self.write_reason(&name, &e)?;
+                Ok(false)
+            }
+        }
+    }
+
+    fn ingest_text(&mut self, name: &str, text: &str)
+                   -> Result<bool> {
+        match watch::parse_submission(text) {
+            Ok((spec, priority)) => {
+                let id = self.admit(name, &spec, priority)?;
+                self.emit_submit(&id, name, priority)?;
+                Ok(true)
+            }
+            Err(e) => {
+                fs::write(self.root.failed_dir().join(name), text)
+                    .context("preserving the rejected submission")?;
+                self.write_reason(name, &e)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Create the run directory: normalized spec (checkpointing
+    /// redirected into the run dir, cadence pinned to the slice,
+    /// resume normalized off — the scheduler decides resumption per
+    /// slice), then the durable state record.
+    fn admit(&mut self, source: &str, spec: &Spec, priority: i64)
+             -> Result<String> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let id =
+            format!("r{seq:04}-{}", watch::sanitize_stem(source));
+        let dir = self.root.run_dir(&id);
+        fs::create_dir_all(dir.join(CKPT_SUBDIR)).with_context(
+            || format!("creating {}", dir.display()),
+        )?;
+        let normalized = spec
+            .to_builder()
+            .checkpoint_dir(self.root.ckpt_dir(&id))
+            .checkpoint_every(self.cfg.slice_batches)
+            .resume(false)
+            .build()
+            .context("normalizing the submitted spec")?;
+        normalized.save(&self.root.spec_path(&id))?;
+        let st = RunState {
+            id: id.clone(),
+            seq,
+            priority,
+            source: source.to_string(),
+            phase: RunPhase::Queued,
+            slices: 0,
+            batches: 0,
+            epoch: 0,
+            batch: 0,
+            epochs: normalized.epochs,
+            error: None,
+        };
+        st.save_atomic(&dir)?;
+        self.runs.push(st);
+        Ok(id)
+    }
+
+    fn emit_submit(&mut self, id: &str, source: &str, priority: i64)
+                   -> Result<()> {
+        self.log.emit("submit",
+                      &[("run", s(id)),
+                        ("source", s(source)),
+                        ("priority",
+                         crate::jsonx::Json::Num(priority as f64))])
+    }
+
+    fn write_reason(&mut self, name: &str, e: &SubmitError)
+                    -> Result<()> {
+        let reason_path =
+            self.root.failed_dir().join(format!("{name}.reason"));
+        fs::write(&reason_path, format!("{e}\n")).with_context(
+            || format!("writing {}", reason_path.display()),
+        )?;
+        self.log.emit("reject",
+                      &[("source", s(name)),
+                        ("reason", s(e.to_string()))])?;
+        Ok(())
+    }
+
+    fn try_stdin_line(&mut self) -> Option<String> {
+        let feed = self.stdin.as_mut()?;
+        if feed.done {
+            return None;
+        }
+        match feed.rx.try_recv() {
+            Ok(line) => Some(line),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                feed.done = true;
+                None
+            }
+        }
+    }
+}
+
+/// Batches between two cursors of the same run (`end` is never
+/// before `start`; an epoch is `ceil(images / batch)` batches).
+fn batches_between(start: Cursor, end: Cursor, batch: usize) -> u64 {
+    let bpe = start.images.div_ceil((batch as u64).max(1));
+    (end.epoch * bpe + end.batch) - (start.epoch * bpe + start.batch)
+}
+
+fn spawn_stdin_feed() -> StdinFeed {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        use std::io::BufRead as _;
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+        // dropping tx disconnects the channel: that is EOF
+    });
+    StdinFeed { rx, done: false, count: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_between_counts_across_epoch_boundaries() {
+        let c = |epoch, batch| Cursor {
+            epoch,
+            batch,
+            seed: 7,
+            images: 12,
+        };
+        // 12 images at batch 4 -> 3 batches/epoch
+        assert_eq!(batches_between(c(0, 0), c(0, 2), 4), 2);
+        assert_eq!(batches_between(c(0, 2), c(1, 0), 4), 1);
+        assert_eq!(batches_between(c(0, 2), c(2, 0), 4), 4);
+        assert_eq!(batches_between(c(1, 1), c(1, 1), 4), 0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Submission intake for the experiment service.
+//!
+//! Both intake modes — the watched inbox directory and the stdin
+//! line mode — funnel through one strict parser: a submission is a
+//! spec JSON object (the exact [`crate::session::Spec`] schema) plus
+//! at most one extra top-level key, `"priority"` (an integer; higher
+//! runs first; default 0).  The priority key is stripped *before*
+//! the spec parse, so the spec schema itself stays closed — an
+//! unknown key is still a typed rejection, never a silent no-op.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::jsonx::Json;
+use crate::session::{Spec, SpecError};
+
+/// Largest integer JSON numbers represent exactly (2^53); priorities
+/// beyond it would not round-trip through the state files.
+const MAX_EXACT_PRIORITY: f64 = 9_007_199_254_740_992.0;
+
+/// Why a submission was rejected.  Rejections move the file to
+/// `failed/` with a `<name>.reason` sidecar and emit a `reject`
+/// event — they never crash the daemon.  The Display strings are
+/// part of the service contract and pinned by `tests/serve.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// The file was not JSON at all.
+    NotJson(String),
+    /// The top-level value was JSON, but not an object.
+    NotAnObject,
+    /// A `"priority"` that is not an exactly-representable integer.
+    BadPriority,
+    /// The remaining object failed the strict spec parse.
+    Spec(SpecError),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            SubmitError::NotJson(msg) => {
+                write!(f, "submission is not valid JSON: {msg}")
+            }
+            SubmitError::NotAnObject => {
+                write!(f, "submission must be a JSON object (a spec, \
+                           plus an optional top-level \"priority\")")
+            }
+            SubmitError::BadPriority => {
+                write!(f, "priority wants an integer with magnitude \
+                           at most 2^53")
+            }
+            SubmitError::Spec(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Parse one submission into its spec and priority.
+pub fn parse_submission(text: &str)
+                        -> Result<(Spec, i64), SubmitError> {
+    let j = Json::parse(text)
+        .map_err(|e| SubmitError::NotJson(format!("{e:#}")))?;
+    let Json::Obj(mut m) = j else {
+        return Err(SubmitError::NotAnObject);
+    };
+    let priority = match m.remove("priority") {
+        None => 0,
+        Some(Json::Num(p))
+            if p.fract() == 0.0 && p.abs() <= MAX_EXACT_PRIORITY =>
+        {
+            p as i64
+        }
+        Some(_) => return Err(SubmitError::BadPriority),
+    };
+    let spec =
+        Spec::from_json(&Json::Obj(m)).map_err(SubmitError::Spec)?;
+    Ok((spec, priority))
+}
+
+/// Pending submission files in `dir` (`*.json`, sorted by name for a
+/// deterministic admission order).  A missing directory means
+/// nothing is pending — the watcher must tolerate the inbox being
+/// created late or removed out from under it.
+pub fn list_submissions(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out),
+    };
+    for entry in rd {
+        let path = entry
+            .with_context(|| format!("reading {}", dir.display()))?
+            .path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json")
+            && path.is_file()
+        {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// A submission-derived directory-name stem: the file stem with
+/// anything outside `[A-Za-z0-9_-]` folded to `-`, capped at 40
+/// chars, never empty.
+pub fn sanitize_stem(name: &str) -> String {
+    let stem = name.strip_suffix(".json").unwrap_or(name);
+    let mut s: String = stem
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    s.truncate(40);
+    if s.is_empty() {
+        s.push_str("run");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY_SPEC: &str = r#"{
+      "version": 1,
+      "net": {"preset": "1x"},
+      "hyper": {"batch": 4},
+      "run": {"epochs": 2, "images": 12}
+    }"#;
+
+    fn with_priority(p: &str) -> String {
+        TINY_SPEC.replacen('{', &format!("{{\"priority\": {p},"), 1)
+    }
+
+    #[test]
+    fn priority_is_stripped_before_the_strict_spec_parse() {
+        let (spec, pri) =
+            parse_submission(&with_priority("5")).unwrap();
+        assert_eq!(pri, 5);
+        assert_eq!(spec.batch, 4);
+        assert_eq!(spec.epochs, 2);
+        // no priority key -> default 0
+        let (_, pri) = parse_submission(TINY_SPEC).unwrap();
+        assert_eq!(pri, 0);
+        // negative priorities are allowed (background work)
+        let (_, pri) =
+            parse_submission(&with_priority("-3")).unwrap();
+        assert_eq!(pri, -3);
+    }
+
+    #[test]
+    fn rejections_are_typed_with_pinned_messages() {
+        let e = parse_submission("{nope").unwrap_err();
+        assert!(matches!(e, SubmitError::NotJson(_)));
+        assert!(e.to_string().starts_with(
+            "submission is not valid JSON:"), "{e}");
+
+        let e = parse_submission("[1,2]").unwrap_err();
+        assert_eq!(e, SubmitError::NotAnObject);
+        assert_eq!(e.to_string(),
+                   "submission must be a JSON object (a spec, plus \
+                    an optional top-level \"priority\")");
+
+        let e =
+            parse_submission(&with_priority("1.5")).unwrap_err();
+        assert_eq!(e, SubmitError::BadPriority);
+        assert_eq!(e.to_string(),
+                   "priority wants an integer with magnitude at \
+                    most 2^53");
+
+        // an unknown spec key passes through as the spec's own
+        // typed error
+        let bad = TINY_SPEC.replacen("\"run\"", "\"runn\"", 1);
+        let e = parse_submission(&bad).unwrap_err();
+        let SubmitError::Spec(se) = &e else {
+            panic!("want Spec(..), got {e:?}");
+        };
+        assert_eq!(se.to_string(),
+                   "unknown field `runn` in the spec");
+    }
+
+    #[test]
+    fn stems_sanitize_and_never_empty() {
+        assert_eq!(sanitize_stem("a.json"), "a");
+        assert_eq!(sanitize_stem("my run (v2).json"), "my-run--v2-");
+        assert_eq!(sanitize_stem(".json"), "run");
+        assert_eq!(sanitize_stem("x".repeat(80).as_str()).len(), 40);
+    }
+}

@@ -112,6 +112,10 @@ pub enum SpecError {
     ResizeWithoutCheckpoint,
     /// Resume requested with no checkpoint directory configured.
     ResumeWithoutCheckpoint,
+    /// A slice-bounded run ([`Session::begin_slice`]) with no
+    /// checkpoint directory — the slice boundary must land on a
+    /// checkpoint or the swapped-out run would lose its progress.
+    SliceWithoutCheckpoint,
     /// An explicit seed conflicting with a checkpoint's recorded seed.
     SeedConflict { given: u64, recorded: u64 },
     /// An explicit epoch width conflicting with a checkpoint's.
@@ -189,6 +193,11 @@ impl fmt::Display for SpecError {
             SpecError::ResumeWithoutCheckpoint => {
                 write!(f, "resume needs checkpoint-dir (where the \
                            checkpoint lives)")
+            }
+            SpecError::SliceWithoutCheckpoint => {
+                write!(f, "a slice-bounded run needs checkpoint-dir \
+                           (the slice boundary must land on a \
+                           checkpoint so the next slice can resume)")
             }
             SpecError::SeedConflict { given, recorded } => {
                 write!(f, "seed {given} conflicts with the \
@@ -1345,6 +1354,18 @@ impl Run {
         &self.eval_set
     }
 
+    /// Lower the batch bound without touching the checkpoint cadence.
+    /// This is the chaos-test hook for `stratus serve`: a run capped
+    /// below its slice length stops where a `kill -9` would have,
+    /// with only whatever checkpoints the cadence (and epoch
+    /// boundaries) already put on disk — recovery then replays from
+    /// the newest one, bit-identically.
+    pub fn cap_batches(mut self, n: u64) -> Run {
+        let cap = self.cfg.max_batches.map_or(n, |m| m.min(n));
+        self.cfg.max_batches = Some(cap);
+        self
+    }
+
     /// Train to completion, invoking `on_epoch` at every epoch
     /// boundary (after that epoch's checkpoint is on disk).
     pub fn execute(
@@ -1498,6 +1519,34 @@ impl Session {
             max_batches: None,
         };
         Ok(Run { trainer, start, data, cfg, train_set, eval_set })
+    }
+
+    /// Like [`Session::begin`], but bounded to a time slice of
+    /// `slice_batches` batches — the preemption contract `stratus
+    /// serve` schedules runs with.  The checkpoint cadence is pinned
+    /// to the slice length, so when [`Run::execute`] returns (at the
+    /// slice bound, or earlier at the final epoch boundary) a
+    /// checkpoint covering the returned cursor is always on disk:
+    /// swapping in another run loses nothing, and the next
+    /// `begin_slice(true, ..)` resumes bit-identically.  Requires a
+    /// checkpoint section in the spec
+    /// ([`SpecError::SliceWithoutCheckpoint`]).
+    pub fn begin_slice(&self, resume: bool, slice_batches: u64)
+                       -> Result<Run> {
+        if slice_batches == 0 {
+            return Err(SpecError::NonPositive("slice-batches").into());
+        }
+        if self.spec.checkpoint.is_none() {
+            return Err(SpecError::SliceWithoutCheckpoint.into());
+        }
+        let mut run = self.begin(resume)?;
+        run.cfg.max_batches = Some(slice_batches);
+        if let Some(ck) = &mut run.cfg.checkpoint {
+            // epoch ends still save unconditionally; the tightened
+            // cadence only guarantees the slice end is covered too
+            ck.every_batches = slice_batches;
+        }
+        Ok(run)
     }
 
     /// Train a fresh run to completion.

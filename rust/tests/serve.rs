@@ -1,0 +1,383 @@
+//! Experiment-service integration tests (ISSUE 10): scheduler
+//! fairness and priority preemption asserted from the event log,
+//! chaos kills (drop the scheduler mid-slice, re-open the serve
+//! root) ending bit-identical to uninterrupted solo runs, the typed
+//! rejection path for malformed submissions (pinned messages, daemon
+//! survives), and the `serve`/`report serve` CLI surface.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use stratus::ckpt::Checkpoint;
+use stratus::jsonx::Json;
+use stratus::metrics;
+use stratus::serve::{read_events, RunPhase, Scheduler, ServeConfig,
+                     Tick};
+use stratus::session::{Session, Spec, SpecError};
+
+const TINY_CFG: &str = "name tiny\ninput 3 8 8\nconv c1 8 k3 s1 p1 \
+                        relu\nconv c2 8 k3 s1 p1 relu\npool p1 2\n\
+                        fc fc 10\nloss hinge";
+const BATCH: usize = 4;
+const IMAGES: u64 = 12; // 3 batches per epoch
+const EPOCHS: u64 = 2; // -> 6 batches per run
+const SLICE: u64 = 2; // -> 3 slices per run
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("stratus_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny_spec(seed: u64) -> Spec {
+    Spec::builder()
+        .net_inline(TINY_CFG)
+        .batch(BATCH)
+        .lr(0.02)
+        .momentum(0.9)
+        .images(IMAGES)
+        .epochs(EPOCHS)
+        .seed(seed)
+        .eval(4)
+        .build()
+        .unwrap()
+}
+
+/// A submission file body: the spec JSON plus an optional top-level
+/// priority key.
+fn submission(seed: u64, priority: Option<i64>) -> String {
+    let Json::Obj(mut m) = tiny_spec(seed).to_json() else {
+        panic!("spec JSON is always an object");
+    };
+    if let Some(p) = priority {
+        m.insert("priority".to_string(), Json::Num(p as f64));
+    }
+    Json::Obj(m).pretty()
+}
+
+fn cfg(root: &Path) -> ServeConfig {
+    let mut cfg = ServeConfig::new(root);
+    cfg.slice_batches = SLICE;
+    cfg
+}
+
+fn slice_order(root: &Path) -> Vec<String> {
+    read_events(root)
+        .unwrap()
+        .iter()
+        .filter(|e| {
+            e.get("event").and_then(Json::as_str) == Some("slice")
+        })
+        .map(|e| {
+            e.get("run").and_then(Json::as_str).unwrap().to_string()
+        })
+        .collect()
+}
+
+fn event_count(root: &Path, kind: &str) -> usize {
+    read_events(root)
+        .unwrap()
+        .iter()
+        .filter(|e| {
+            e.get("event").and_then(Json::as_str) == Some(kind)
+        })
+        .count()
+}
+
+/// The `examples/ckpt_diff` deterministic-content gate, as asserts:
+/// fingerprint, cursor, hyper, every param tensor, every optimizer
+/// state, and the deterministic metrics.
+fn assert_ckpt_identical(a: &Path, b: &Path) {
+    let a = Checkpoint::load(a).unwrap();
+    let b = Checkpoint::load(b).unwrap();
+    assert_eq!(a.fingerprint, b.fingerprint, "fingerprint");
+    assert_eq!(a.cursor, b.cursor, "cursor");
+    assert_eq!(a.hyper.lr_q16, b.hyper.lr_q16, "hyper.lr_q16");
+    assert_eq!(a.hyper.beta_q15, b.hyper.beta_q15, "hyper.beta_q15");
+    assert_eq!(a.hyper.batch, b.hyper.batch, "hyper.batch");
+    assert_eq!(a.metrics.images, b.metrics.images, "metrics.images");
+    assert_eq!(a.metrics.batches, b.metrics.batches,
+               "metrics.batches");
+    assert_eq!(a.metrics.loss_sum.to_bits(),
+               b.metrics.loss_sum.to_bits(),
+               "metrics.loss_sum bits");
+    assert_eq!(a.params.len(), b.params.len(), "param count");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        assert_eq!(na, nb, "param order");
+        assert_eq!(ta, tb, "params[{na}] data");
+    }
+    assert_eq!(a.states.len(), b.states.len(), "state count");
+    for ((na, sa), (nb, sb)) in a.states.iter().zip(&b.states) {
+        assert_eq!(na, nb, "state order");
+        assert_eq!(sa.kind, sb.kind, "states[{na}].kind");
+        assert_eq!(sa.grad_acc, sb.grad_acc,
+                   "states[{na}].grad_acc");
+        assert_eq!(sa.momentum, sb.momentum,
+                   "states[{na}].momentum");
+        assert_eq!(sa.count, sb.count, "states[{na}].count");
+    }
+}
+
+/// Train `spec` solo (no serve) to completion, returning its final
+/// checkpoint path.
+fn solo_reference(seed: u64, dir: &Path) -> PathBuf {
+    let spec = tiny_spec(seed)
+        .to_builder()
+        .checkpoint_dir(dir)
+        .checkpoint_every(100) // epoch ends still always save
+        .build()
+        .unwrap();
+    let session = Session::new(spec).unwrap();
+    let out = session.train(|_, _, _| Ok(())).unwrap();
+    assert_eq!(out.end.epoch, EPOCHS);
+    session.checkpoint_path().unwrap()
+}
+
+#[test]
+fn equal_priority_runs_interleave_slices() {
+    let root = tmp_dir("fair");
+    std::fs::write(root.join("inbox/a.json"), submission(7, None))
+        .unwrap();
+    std::fs::write(root.join("inbox/b.json"), submission(11, None))
+        .unwrap();
+    let mut sched = Scheduler::open(cfg(&root)).unwrap();
+    let mut done = 0;
+    for _ in 0..16 {
+        match sched.tick().unwrap() {
+            Tick::Sliced { done: true, .. } => done += 1,
+            Tick::Idle => break,
+            Tick::Failed { id } => panic!("run {id} failed"),
+            _ => {}
+        }
+    }
+    assert_eq!(done, 2, "both runs complete");
+    // strict alternation: with equal priorities the least-served run
+    // always goes next, so neither ever gets two slices in a row
+    // while the other still has work
+    assert_eq!(slice_order(&root),
+               vec!["r0001-a", "r0002-b", "r0001-a", "r0002-b",
+                    "r0001-a", "r0002-b"]);
+    assert_eq!(event_count(&root, "complete"), 2);
+    // the queue records agree with the event log
+    for r in sched.runs() {
+        assert_eq!(r.phase, RunPhase::Done, "{}", r.id);
+        assert_eq!(r.slices, 3, "{}", r.id);
+        assert_eq!(r.batches, 6, "{}", r.id);
+        assert_eq!((r.epoch, r.batch), (EPOCHS, 0), "{}", r.id);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn higher_priority_preempts_at_the_next_slice_boundary() {
+    let root = tmp_dir("preempt");
+    std::fs::write(root.join("inbox/a.json"), submission(7, None))
+        .unwrap();
+    let mut sched = Scheduler::open(cfg(&root)).unwrap();
+    // a gets one slice...
+    assert_eq!(sched.tick().unwrap(),
+               Tick::Sliced { id: "r0001-a".to_string(),
+                              done: false });
+    // ...then a priority-5 submission lands; it must win every slice
+    // from the very next boundary until it finishes
+    std::fs::write(root.join("inbox/c.json"), submission(11, Some(5)))
+        .unwrap();
+    for _ in 0..16 {
+        if sched.tick().unwrap() == Tick::Idle {
+            break;
+        }
+    }
+    assert_eq!(slice_order(&root),
+               vec!["r0001-a", "r0002-c", "r0002-c", "r0002-c",
+                    "r0001-a", "r0001-a"]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn chaos_kills_and_restarts_resume_bit_identically() {
+    let solo_a = solo_reference(7, &tmp_dir("chaos_solo_a"));
+    let solo_b = solo_reference(11, &tmp_dir("chaos_solo_b"));
+    let root = tmp_dir("chaos");
+    std::fs::write(root.join("inbox/a.json"), submission(7, None))
+        .unwrap();
+    std::fs::write(root.join("inbox/b.json"), submission(11, None))
+        .unwrap();
+    let mut sched = Scheduler::open(cfg(&root)).unwrap();
+    // deterministic LCG picks the kill points (no wall-clock, no OS
+    // randomness: the test replays identically).  This seed's draw
+    // sequence mod 3 is 1,0,1,0,1,1,1,2,0,... — kills land between
+    // clean slices, including one during a run's first slice (no
+    // checkpoint on disk yet) and one mid-epoch after an
+    // epoch-boundary save
+    let mut rng: u64 = 30;
+    let mut step = || {
+        rng = rng
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        rng >> 33
+    };
+    let mut kills = 0;
+    let mut guard = 0;
+    loop {
+        guard += 1;
+        assert!(guard < 300, "chaos loop did not converge");
+        if step() % 3 == 0 {
+            // kill -9 one batch into the slice: nothing recorded,
+            // durable state still says `running`; recovery (a fresh
+            // open of the same root) must requeue and resume it
+            match sched.tick_with_kill(Some(1)).unwrap() {
+                Tick::Killed { .. } => {
+                    kills += 1;
+                    sched = Scheduler::open(cfg(&root)).unwrap();
+                }
+                Tick::Idle => break,
+                Tick::Failed { id } => panic!("run {id} failed"),
+                _ => {}
+            }
+        } else {
+            match sched.tick().unwrap() {
+                Tick::Idle => break,
+                Tick::Failed { id } => panic!("run {id} failed"),
+                _ => {}
+            }
+        }
+    }
+    assert!(kills >= 2, "the chaos schedule must actually kill \
+                         (got {kills})");
+    assert_eq!(event_count(&root, "recover"), kills);
+    for r in sched.runs() {
+        assert_eq!(r.phase, RunPhase::Done, "{}", r.id);
+    }
+    // the whole point: every run's final checkpoint — params,
+    // optimizer state, deterministic metrics — is bit-identical to
+    // the solo run that was never interrupted
+    assert_ckpt_identical(
+        &root.join("runs/r0001-a/ckpt/ckpt.stratus"), &solo_a);
+    assert_ckpt_identical(
+        &root.join("runs/r0002-b/ckpt/ckpt.stratus"), &solo_b);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn rejected_submissions_move_to_failed_and_never_crash() {
+    let root = tmp_dir("reject");
+    std::fs::write(root.join("inbox/garbage.json"), "{nope").unwrap();
+    std::fs::write(root.join("inbox/unknown.json"),
+                   submission(7, None).replacen("\"run\"", "\"runn\"",
+                                                1))
+        .unwrap();
+    std::fs::write(root.join("inbox/badpri.json"),
+                   submission(7, None).replacen(
+                       '{', "{\"priority\": 1.5,", 1))
+        .unwrap();
+    // a good submission rides along: rejections must not starve it
+    let mut ok = submission(7, None);
+    ok = ok.replacen("\"epochs\": 2", "\"epochs\": 1", 1);
+    std::fs::write(root.join("inbox/ok.json"), ok).unwrap();
+    let mut sched = Scheduler::open(cfg(&root)).unwrap();
+    for _ in 0..8 {
+        if sched.tick().unwrap() == Tick::Idle {
+            break;
+        }
+    }
+    // the daemon survived, the good run completed
+    assert_eq!(sched.runs().len(), 1);
+    assert_eq!(sched.runs()[0].id, "r0001-ok");
+    assert_eq!(sched.runs()[0].phase, RunPhase::Done);
+    // rejects moved out of the inbox with pinned reasons
+    assert_eq!(stratus::serve::list_submissions(
+                   &root.join("inbox")).unwrap(),
+               Vec::<PathBuf>::new());
+    let reason = |name: &str| {
+        std::fs::read_to_string(
+            root.join(format!("failed/{name}.reason")))
+            .unwrap()
+    };
+    assert!(root.join("failed/garbage.json").exists());
+    assert!(reason("garbage.json")
+                .starts_with("submission is not valid JSON:"),
+            "{}", reason("garbage.json"));
+    assert_eq!(reason("unknown.json").trim(),
+               "unknown field `runn` in the spec");
+    assert_eq!(reason("badpri.json").trim(),
+               "priority wants an integer with magnitude at most \
+                2^53");
+    assert_eq!(event_count(&root, "reject"), 3);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn slice_bounded_runs_require_a_checkpoint_dir() {
+    // the session-layer contract serve is built on, with its pinned
+    // message
+    let session = Session::new(tiny_spec(7)).unwrap();
+    let err = session.begin_slice(false, SLICE).unwrap_err();
+    assert_eq!(format!("{err:#}"),
+               SpecError::SliceWithoutCheckpoint.to_string());
+    assert_eq!(SpecError::SliceWithoutCheckpoint.to_string(),
+               "a slice-bounded run needs checkpoint-dir (the slice \
+                boundary must land on a checkpoint so the next slice \
+                can resume)");
+    let err = session.begin_slice(false, 0).unwrap_err();
+    assert_eq!(format!("{err:#}"),
+               "slice-batches must be at least 1");
+}
+
+#[test]
+fn status_report_summarizes_a_serve_root() {
+    let root = tmp_dir("status");
+    std::fs::write(root.join("inbox/a.json"), submission(7, None))
+        .unwrap();
+    let mut sched = Scheduler::open(cfg(&root)).unwrap();
+    sched.tick().unwrap(); // one slice: queued again, mid-flight
+    let t = metrics::serve_report(&root).unwrap();
+    assert!(t.contains("| r0001-a |"), "{t}");
+    assert!(t.contains("| queued "), "{t}");
+    assert!(t.contains("1 queued / 0 running / 0 done / 0 failed"),
+            "{t}");
+    assert!(t.contains("1 slices, 2 batches"), "{t}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------- the CLI surface ----------------
+
+fn stratus(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_stratus"))
+        .args(args)
+        .output()
+        .expect("spawning stratus");
+    (out.status.success(),
+     String::from_utf8_lossy(&out.stdout).into_owned(),
+     String::from_utf8_lossy(&out.stderr).into_owned())
+}
+
+#[test]
+fn cli_serve_drains_the_queue_and_reports_status() {
+    let root = tmp_dir("cli");
+    std::fs::write(root.join("inbox/one.json"), submission(7, None))
+        .unwrap();
+    let rootarg = root.display().to_string();
+    let (ok, out, err) = stratus(&["serve", "--root", &rootarg,
+                                   "--drain", "--slice-batches", "4",
+                                   "--poll-ms", "10"]);
+    assert!(ok, "serve --drain failed: {err}");
+    // progress streamed as JSON lines
+    assert!(out.contains("\"event\":\"submit\""), "{out}");
+    assert!(out.contains("\"event\":\"complete\""), "{out}");
+    let (ok, out, _) = stratus(&["serve", "--root", &rootarg,
+                                 "--status"]);
+    assert!(ok);
+    assert!(out.contains("| r0001-one |"), "{out}");
+    assert!(out.contains("| done "), "{out}");
+    let (ok, out, _) = stratus(&["report", "serve", "--root",
+                                 &rootarg]);
+    assert!(ok);
+    assert!(out.contains("1 done"), "{out}");
+    // pinned: serve without a root is an error, not a panic
+    let (ok, _, err) = stratus(&["serve"]);
+    assert!(!ok);
+    assert!(err.contains("serve needs --root DIR"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
